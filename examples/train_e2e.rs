@@ -1,0 +1,98 @@
+//! End-to-end validation: train the ~91M-parameter transformer (AOT
+//! compiled from JAX, executed via PJRT — Python is not on this path)
+//! with per-interval DataStates-LLM checkpoints, and log the loss curve.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_e2e -- [steps] [interval]
+//! ```
+//!
+//! The full 200-step run recorded in EXPERIMENTS.md used
+//! `datastates train --steps 200 --interval 20`.
+
+use datastates::baselines::EngineKind;
+use datastates::config::EngineConfig;
+use datastates::metrics::{human_bps, human_bytes};
+use datastates::runtime::TrainSession;
+use datastates::train::TrainLoop;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let interval: u64 =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    let artifacts = std::path::Path::new("artifacts");
+    println!("compiling AOT artifacts from {artifacts:?} ...");
+    let mut session = TrainSession::new(artifacts, 42)?;
+    println!(
+        "transformer: {:.1}M params, d_model={}, layers={}, batch={}, \
+         seq={}",
+        session.manifest.num_params as f64 / 1e6,
+        session.manifest.d_model,
+        session.manifest.n_layers,
+        session.manifest.batch,
+        session.manifest.seq_len,
+    );
+
+    let ckpt_dir = std::env::temp_dir().join("datastates-train-e2e");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let mut cfg = EngineConfig::with_dir(&ckpt_dir);
+    cfg.host_cache_bytes = 1400 << 20; // one full ~1.1 GB snapshot
+    let mut engine = EngineKind::DataStatesLlm.build(cfg)?;
+
+    let mut curve: Vec<(u64, f32)> = Vec::new();
+    {
+        let session_cell = std::cell::RefCell::new(&mut session);
+        let curve_cell = std::cell::RefCell::new(&mut curve);
+        let mut tl = TrainLoop::new(engine.as_mut(), interval);
+        let report = tl.run(
+            steps,
+            |it| {
+                let mut s = session_cell.borrow_mut();
+                let tokens = s.sample_tokens(it);
+                let loss = s.step(&tokens)?;
+                curve_cell.borrow_mut().push((it + 1, loss));
+                println!("iter {:>4}  loss {loss:.4}", it + 1);
+                Ok(Some(loss))
+            },
+            |_| Ok(()), // Adam update is fused into the AOT train_step
+            |_| Ok(session_cell.borrow_mut().checkpoint_state()),
+        )?;
+        println!(
+            "\n{} iters in {:.1}s ({:.2}s/iter), {} checkpoints, gate \
+             wait {:.3}s",
+            steps,
+            report.wall_s,
+            report.mean_iteration_s(),
+            report.checkpoints,
+            report.total_gate_wait_s()
+        );
+    }
+    session.gc();
+
+    for (i, m) in engine.metrics().iter().enumerate() {
+        println!(
+            "ckpt {i}: {} blocked {:.4}s persist {:.2}s eff {}",
+            human_bytes(m.bytes as f64),
+            m.blocked_s,
+            m.persist_s,
+            human_bps(m.effective_bps())
+        );
+    }
+
+    // write the loss curve for EXPERIMENTS.md
+    let mut csv = String::from("iter,loss\n");
+    for (it, loss) in &curve {
+        csv.push_str(&format!("{it},{loss}\n"));
+    }
+    std::fs::write("loss_curve.csv", &csv)?;
+    println!("\nloss curve written to loss_curve.csv");
+    if curve.len() >= 2 {
+        let first = curve[0].1;
+        let last = curve[curve.len() - 1].1;
+        println!("loss: {first:.4} -> {last:.4} ({})",
+                 if last < first { "decreasing ✓" } else { "check run" });
+    }
+    Ok(())
+}

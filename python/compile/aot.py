@@ -1,0 +1,184 @@
+"""AOT compile path: lower the L2/L1 computations to HLO **text**.
+
+Interchange format is HLO text, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (``make artifacts``):
+
+- ``train_step.hlo.txt``  — fwd+bwd+Adam over the e2e ModelConfig
+- ``fwd_loss.hlo.txt``    — forward loss only (restore verification)
+- ``init_state.hlo.txt``  — deterministic state init from a seed scalar
+- ``attn_pallas.hlo.txt`` — the L1 Pallas attention kernel (parity tests)
+- ``adam_pallas.hlo.txt`` — the L1 fused-Adam kernel (parity tests)
+- ``read_tail.hlo.txt``   — (step, loss) scalar readback slice
+- ``manifest.json``       — leaf names/shapes/offsets + calling convention
+
+Python runs once, at build time; the rust binary is self-contained after
+artifacts exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import adam as adam_kernel
+from .kernels import attention as attn_kernel
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """stablehlo -> XlaComputation -> HLO text.
+
+    ``return_tuple=False`` is used for the packed train/init/loss
+    computations whose single array result must come back as a plain
+    buffer (device-resident state loop in rust); the Pallas parity
+    artifacts keep tuple results and are unwrapped with ``to_tuple``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_train_step(cfg: model.ModelConfig, batch: int):
+    n = model.packed_len(cfg)
+    tok_spec = _spec((batch, cfg.seq_len + 1), jnp.int32)
+
+    def fn(flat, tokens):
+        return model.train_step_packed(flat, tokens, cfg)
+
+    return jax.jit(fn).lower(_spec((n,)), tok_spec)
+
+
+def lower_fwd_loss(cfg: model.ModelConfig, batch: int):
+    n = model.packed_len(cfg)
+    tok_spec = _spec((batch, cfg.seq_len + 1), jnp.int32)
+
+    def fn(flat, tokens):
+        return model.fwd_loss_packed(flat, tokens, cfg)
+
+    return jax.jit(fn).lower(_spec((n,)), tok_spec)
+
+
+def lower_init_state(cfg: model.ModelConfig):
+    def fn(seed):
+        return model.init_state_packed(seed, cfg)
+
+    return jax.jit(fn).lower(_spec((), jnp.int32))
+
+
+def lower_read_tail(cfg: model.ModelConfig):
+    """Slice out [step, loss] — the CPU PJRT plugin lacks raw-offset
+    D2H copies, so the scalar readback is its own tiny computation."""
+    n = model.packed_len(cfg)
+
+    def fn(flat):
+        return jax.lax.dynamic_slice(flat, (n - 2,), (2,))
+
+    return jax.jit(fn).lower(_spec((n,)))
+
+
+def lower_attn_pallas(b=1, h=4, t=64, dh=32):
+    s = _spec((b, h, t, dh))
+
+    def fn(q, k, v):
+        return (attn_kernel.attention(q, k, v, causal=True,
+                                      block_q=32, block_k=32),)
+
+    return jax.jit(fn).lower(s, s, s), dict(b=b, h=h, t=t, dh=dh)
+
+
+def lower_adam_pallas(n=4096):
+    s = _spec((n,))
+
+    def fn(p, m, v, g, step):
+        return adam_kernel.adam_update(p, m, v, g, step, block=1024)
+
+    return jax.jit(fn).lower(s, s, s, s, _spec((), jnp.float32)), dict(n=n)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tiny", action="store_true",
+                    help="use the TINY config (CI / quick tests)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.TINY if args.tiny else model.ModelConfig()
+    nparams = cfg.num_params()
+    print(f"model config: {cfg} ({nparams/1e6:.1f}M params)")
+
+    outputs = {}
+
+    def emit(name, lowered, return_tuple=True):
+        text = to_hlo_text(lowered, return_tuple=return_tuple)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outputs[name] = len(text)
+        print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+    # packed computations: single array results, no tuple wrapper
+    emit("train_step", lower_train_step(cfg, args.batch),
+         return_tuple=False)
+    emit("fwd_loss", lower_fwd_loss(cfg, args.batch), return_tuple=False)
+    emit("init_state", lower_init_state(cfg), return_tuple=False)
+    emit("read_tail", lower_read_tail(cfg), return_tuple=False)
+    attn_lowered, attn_shape = lower_attn_pallas()
+    emit("attn_pallas", attn_lowered)
+    adam_lowered, adam_shape = lower_adam_pallas()
+    emit("adam_pallas", adam_lowered)
+
+    manifest = {
+        "config": dataclasses.asdict(cfg),
+        "batch": args.batch,
+        "num_params": int(nparams),
+        "packed_len": int(model.packed_len(cfg)),
+        "leaves": [
+            {"name": n, "shape": list(s), "offset": int(off),
+             "size": int(sz)}
+            for (n, s, off, sz) in model.leaf_offsets(cfg)
+        ],
+        "calling_convention": {
+            "train_step": {
+                "inputs": "flat(f32[N]) + tokens(i32[batch,seq+1])",
+                "outputs": "flat'(f32[N]); N = 3P+2, layout "
+                           "[params|m|v|step|loss]",
+            },
+            "fwd_loss": {
+                "inputs": "flat(f32[N]) + tokens(i32[batch,seq+1])",
+                "outputs": "loss(f32[])",
+            },
+            "init_state": {
+                "inputs": "seed(i32[])",
+                "outputs": "flat(f32[N])",
+            },
+        },
+        "attn_pallas": attn_shape,
+        "adam_pallas": adam_shape,
+        "hlo_text_bytes": outputs,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: fused Adam optimizer update.
+
+This is the *mutation* step of the training iteration — the phase during
+which the model/optimizer state stops being immutable and the lazy
+checkpoint capture of DataStates-LLM must have completed (§V-A2 of the
+paper). Fusing the four elementwise streams (p, m, v, g) into one kernel
+makes the update phase short, which is exactly the regime the paper's
+Figure 3 shows (update ≪ forward+backward) and which maximizes the
+immutability window available for D2H staging.
+
+TPU mapping: a 1-D grid over contiguous chunks of the flattened parameter
+tensor; each grid point holds four ``[BLOCK]`` tiles in VMEM, performs the
+Adam recurrence on the VPU, and writes back p/m/v. The bias-correction
+scalar (step) is passed as a tiny operand broadcast to every grid point.
+``interpret=True`` as required on CPU PJRT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 16384
+
+
+def _adam_kernel(step_ref, p_ref, m_ref, v_ref, g_ref,
+                 po_ref, mo_ref, vo_ref, *,
+                 lr: float, beta1: float, beta2: float, eps: float):
+    step = step_ref[0]
+    p = p_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    m_hat = m_new / (1.0 - beta1 ** step)
+    v_hat = v_new / (1.0 - beta2 ** step)
+    po_ref[...] = (p - lr * m_hat / (jnp.sqrt(v_hat) + eps)).astype(po_ref.dtype)
+    mo_ref[...] = m_new.astype(mo_ref.dtype)
+    vo_ref[...] = v_new.astype(vo_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "beta1", "beta2", "eps", "block")
+)
+def adam_update(p, m, v, g, step, lr=1e-3, beta1=0.9, beta2=0.999,
+                eps=1e-8, block=DEFAULT_BLOCK):
+    """Fused Adam over a flat fp32 tensor. Returns ``(p', m', v')``.
+
+    ``step`` is a float32 scalar (1-based, post-update step index).
+    Length must divide evenly by the clamped block size; the flat length of
+    every real parameter leaf is padded upstream by the caller if needed.
+    """
+    n = p.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    step_arr = jnp.reshape(step.astype(jnp.float32), (1,))
+    grid = (n // block,)
+    kernel = functools.partial(
+        _adam_kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps
+    )
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct((n,), x.dtype) for x in (p, m, v)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # step: broadcast
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=list(out_shapes),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(step_arr, p, m, v, g)

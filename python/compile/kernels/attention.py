@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: fused causal attention (flash-attention-style).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the original
+flash-attention schedule assigns one CUDA threadblock per (head, q-block)
+and streams K/V tiles through shared memory. On TPU the analogous schedule
+is expressed with a Pallas grid over ``(batch*heads, q_blocks)`` and a
+``BlockSpec`` that keeps a ``[BLOCK_Q, Dh]`` query tile resident in VMEM
+while K/V tiles of shape ``[BLOCK_K, Dh]`` are streamed via an inner
+``fori_loop`` with online-softmax accumulation (the HBM->VMEM pipeline
+replaces the shared-memory pipeline; the MXU consumes the
+``[BLOCK_Q, Dh] x [Dh, BLOCK_K]`` tiles).
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO for correctness
+validation. TPU efficiency is estimated analytically in EXPERIMENTS.md
+(VMEM footprint / MXU utilization from the block shapes below).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool,
+                 scale: float):
+    """One grid point: a [block_q, dh] query tile against all K/V tiles.
+
+    Online softmax: running max ``m``, running denominator ``l`` and a
+    running weighted accumulator are carried across K tiles, exactly the
+    flash-attention recurrence.
+    """
+    block_q, dh = q_ref.shape
+    seq_k = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_block_idx = pl.program_id(1)
+    q_offs = q_block_idx * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+
+    num_k_blocks = seq_k // block_k
+
+    def body(kb, carry):
+        acc, m_prev, l_prev = carry
+        k_tile = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # [block_q, block_k] on the MXU
+        if causal:
+            k_offs = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1
+            )
+            s = jnp.where(q_offs >= k_offs, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k_blocks, body, (acc0, m0, l0))
+    # Rows with no unmasked keys cannot occur under causal masking (the
+    # diagonal is always visible), so l > 0 here.
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def attention(q, k, v, causal: bool = True,
+              block_q: int = DEFAULT_BLOCK_Q,
+              block_k: int = DEFAULT_BLOCK_K):
+    """Fused causal attention. Shapes ``[B, H, T, Dh]`` -> ``[B, H, T, Dh]``.
+
+    ``T`` must be divisible by both block sizes (pad upstream otherwise);
+    block sizes are clamped to ``T``.
+    """
+    b, h, t, dh = q.shape
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+    scale = 1.0 / math.sqrt(dh)
+
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+
+    grid = (b * h, t // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, block_k=block_k, causal=causal, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, t: int, dh: int,
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid point (for the §Perf estimate).
+
+    Resident tiles: Q block, full-K and full-V windows as scheduled by the
+    BlockSpec above, the score tile, and the fp32 accumulator/stat rows.
+    """
+    q_tile = block_q * dh * dtype_bytes
+    kv_tiles = 2 * t * dh * dtype_bytes
+    score = block_q * block_k * 4
+    acc = block_q * dh * 4 + 2 * block_q * 4
+    return q_tile + kv_tiles + score + acc

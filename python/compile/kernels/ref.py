@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+These are the ground truth the Pallas kernels are validated against in
+``python/tests/test_kernels.py`` (pytest + hypothesis). They are also the
+fast path used by the lowered training artifacts: interpret-mode Pallas is
+an interpreter loop on CPU, so the AOT ``train_step`` uses these reference
+implementations while the Pallas kernels are lowered into their own
+artifacts for rust-side parity checks.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Reference scaled-dot-product attention.
+
+    Shapes: q, k, v are ``[B, H, T, Dh]``; returns ``[B, H, T, Dh]``.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=jnp.float32))
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk",
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) * scale
+    if causal:
+        t_q, t_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((t_q, t_k), dtype=bool))
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)
+    ).astype(q.dtype)
+
+
+def adam_ref(p, m, v, g, step, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Reference fused Adam update for one tensor.
+
+    ``step`` is the 1-based step index *after* this update.
+    Returns ``(p_new, m_new, v_new)``.
+    """
+    step = jnp.asarray(step, dtype=jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

@@ -1,0 +1,282 @@
+"""L2: GPT-style transformer LM — forward, loss, backward, Adam update.
+
+This is the *training payload* whose state the rust checkpoint engine
+captures. It is authored in JAX, lowered ONCE to HLO text by
+``compile/aot.py`` and executed from rust via PJRT; Python never runs on
+the training path.
+
+Design notes:
+
+- Layers are **stacked** and iterated with ``jax.lax.scan`` so the lowered
+  HLO stays compact (one rolled layer body instead of L unrolled copies)
+  and the parameter pytree has a small, fixed number of leaves — this is
+  what the rust side binds to (see ``manifest.json``).
+- The parameter pytree is an ordered list of named leaves
+  (:func:`param_specs`); rust constructs PJRT buffers in exactly this
+  order and keeps state device-resident between steps (``execute_b``),
+  mirroring GPU-resident training state in the paper. D2H staging for
+  checkpoints is ``PjRtBuffer::to_literal_sync`` on the rust side.
+- ``use_pallas=True`` swaps the reference attention for the L1 Pallas
+  kernel (interpret mode); the AOT path uses the reference for speed and
+  lowers a separate Pallas artifact for parity testing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels import attention as attn_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyperparameters (e2e default is ~91M params)."""
+
+    vocab: int = 8192
+    d_model: int = 768
+    n_layers: int = 12
+    n_heads: int = 12
+    seq_len: int = 128
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_specs(self))
+
+
+TINY = ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=4, seq_len=32)
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the contract with the rust runtime."""
+    L, d, v, t = cfg.n_layers, cfg.d_model, cfg.vocab, cfg.seq_len
+    return [
+        ("wte", (v, d)),
+        ("wpe", (t, d)),
+        ("ln1_w", (L, d)),
+        ("ln1_b", (L, d)),
+        ("qkv_w", (L, d, 3 * d)),
+        ("qkv_b", (L, 3 * d)),
+        ("proj_w", (L, d, d)),
+        ("proj_b", (L, d)),
+        ("ln2_w", (L, d)),
+        ("ln2_b", (L, d)),
+        ("fc1_w", (L, d, 4 * d)),
+        ("fc1_b", (L, 4 * d)),
+        ("fc2_w", (L, 4 * d, d)),
+        ("fc2_b", (L, d)),
+        ("lnf_w", (d,)),
+        ("lnf_b", (d,)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed) -> List[jnp.ndarray]:
+    """GPT-2-style init, deterministic in ``seed`` (a scalar int32)."""
+    key = jax.random.PRNGKey(seed)
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for k, (name, shape) in zip(keys, specs):
+        if name.endswith("_b") or name in ("ln1_w", "ln2_w", "lnf_w"):
+            init = (
+                jnp.ones(shape, jnp.float32)
+                if name.endswith("_w")
+                else jnp.zeros(shape, jnp.float32)
+            )
+        elif name in ("wte", "wpe"):
+            init = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            # residual-scaled init for projection matrices
+            scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+            base = 0.02 if name in ("qkv_w", "fc1_w") else scale
+            init = base * jax.random.normal(k, shape, jnp.float32)
+        out.append(init)
+    return out
+
+
+def _layernorm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * w + b
+
+
+def _block(x, lp, cfg: ModelConfig, use_pallas: bool):
+    """One transformer block; ``lp`` is the per-layer slice of the stack."""
+    (ln1_w, ln1_b, qkv_w, qkv_b, proj_w, proj_b,
+     ln2_w, ln2_b, fc1_w, fc1_b, fc2_w, fc2_b) = lp
+    b_, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    y = _layernorm(x, ln1_w, ln1_b)
+    qkv = y @ qkv_w + qkv_b
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b_, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b_, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b_, t, h, dh).transpose(0, 2, 1, 3)
+    if use_pallas:
+        o = attn_kernel.attention(q, k, v, causal=True)
+    else:
+        o = ref.attention_ref(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b_, t, d)
+    x = x + o @ proj_w + proj_b
+
+    y = _layernorm(x, ln2_w, ln2_b)
+    y = jax.nn.gelu(y @ fc1_w + fc1_b)
+    x = x + y @ fc2_w + fc2_b
+    return x
+
+
+def forward_loss(params: List[jnp.ndarray], tokens: jnp.ndarray,
+                 cfg: ModelConfig, use_pallas: bool = False) -> jnp.ndarray:
+    """Causal-LM cross-entropy loss. ``tokens``: int32 ``[B, T+1]``."""
+    (wte, wpe, ln1_w, ln1_b, qkv_w, qkv_b, proj_w, proj_b,
+     ln2_w, ln2_b, fc1_w, fc1_b, fc2_w, fc2_b, lnf_w, lnf_b) = params
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    b_, t = inp.shape
+    x = wte[inp] + wpe[:t]
+
+    stack = (ln1_w, ln1_b, qkv_w, qkv_b, proj_w, proj_b,
+             ln2_w, ln2_b, fc1_w, fc1_b, fc2_w, fc2_b)
+
+    def scan_body(x, lp):
+        return _block(x, lp, cfg, use_pallas), None
+
+    x, _ = jax.lax.scan(scan_body, x, stack)
+    x = _layernorm(x, lnf_w, lnf_b)
+    logits = x @ wte.T  # tied embeddings
+    logits = logits - jax.scipy.special.logsumexp(logits, axis=-1,
+                                                  keepdims=True)
+    nll = -jnp.take_along_axis(logits, tgt[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def adam_apply(params, m, v, grads, step, cfg: ModelConfig):
+    """Adam over the whole pytree (reference path used in the artifact)."""
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        pn, mn, vn = ref.adam_ref(p, mi, vi, g, step, lr=cfg.lr,
+                                  beta1=cfg.beta1, beta2=cfg.beta2,
+                                  eps=cfg.eps)
+        new_p.append(pn)
+        new_m.append(mn)
+        new_v.append(vn)
+    return new_p, new_m, new_v
+
+
+def train_step(params, m, v, step, tokens, cfg: ModelConfig,
+               use_pallas: bool = False):
+    """One full iteration: forward + backward + Adam update.
+
+    Returns ``(new_params, new_m, new_v, new_step, loss)``; ``step`` is a
+    float32 scalar counting completed updates.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: forward_loss(p, tokens, cfg, use_pallas)
+    )(params)
+    new_step = step + 1.0
+    new_p, new_m, new_v = adam_apply(params, m, v, grads, new_step, cfg)
+    return new_p, new_m, new_v, new_step, loss
+
+
+def init_state(seed, cfg: ModelConfig):
+    """Initial (params, m, v, step) — lowered into its own artifact."""
+    params = init_params(cfg, seed)
+    zeros = [jnp.zeros_like(p) for p in params]
+    zeros2 = [jnp.zeros_like(p) for p in params]
+    return params, zeros, zeros2, jnp.asarray(0.0, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Packed ("flat") calling convention.
+#
+# The rust runtime keeps the whole training state device-resident between
+# steps as ONE flat f32 buffer, because the published `xla` crate cannot
+# split a tuple output back into per-leaf device buffers. Layout:
+#
+#   [ params (P) | m (P) | v (P) | step (1) | loss (1) ]   N = 3P + 2
+#
+# `train_step_packed` consumes and produces this layout; the rust side
+# feeds the output buffer straight back into the next `execute_b` call and
+# reads the loss scalar with a 4-byte raw D2H copy. Checkpoint shards are
+# per-leaf slices of the same buffer (offsets in the manifest).
+# --------------------------------------------------------------------------
+
+def leaf_offsets(cfg: ModelConfig):
+    """(name, shape, offset, size) for each param leaf in the flat params
+    region; offsets are in f32 elements."""
+    out = []
+    off = 0
+    for name, shape in param_specs(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        out.append((name, shape, off, size))
+        off += size
+    return out
+
+
+def packed_len(cfg: ModelConfig) -> int:
+    p = sum(sz for _, _, _, sz in leaf_offsets(cfg))
+    return 3 * p + 2
+
+
+def pack_state(params, m, v, step, loss=0.0):
+    flat = [jnp.reshape(t, (-1,)) for t in params + m + v]
+    flat.append(jnp.reshape(jnp.asarray(step, jnp.float32), (1,)))
+    flat.append(jnp.reshape(jnp.asarray(loss, jnp.float32), (1,)))
+    return jnp.concatenate(flat)
+
+
+def unpack_state(flat, cfg: ModelConfig):
+    offs = leaf_offsets(cfg)
+    p_total = sum(sz for _, _, _, sz in offs)
+
+    def region(base):
+        return [
+            jnp.reshape(
+                jax.lax.dynamic_slice(flat, (base + off,), (size,)), shape
+            )
+            for _, shape, off, size in offs
+        ]
+
+    params = region(0)
+    m = region(p_total)
+    v = region(2 * p_total)
+    step = flat[3 * p_total]
+    loss = flat[3 * p_total + 1]
+    return params, m, v, step, loss
+
+
+def train_step_packed(flat, tokens, cfg: ModelConfig,
+                      use_pallas: bool = False):
+    """One iteration over the packed state; returns the new packed state
+    (with the realized loss in the trailing slot)."""
+    params, m, v, step, _ = unpack_state(flat, cfg)
+    new_p, new_m, new_v, new_step, loss = train_step(
+        params, m, v, step, tokens, cfg, use_pallas)
+    return pack_state(new_p, new_m, new_v, new_step, loss)
+
+
+def fwd_loss_packed(flat, tokens, cfg: ModelConfig):
+    """Forward loss over the packed state's parameter region (restore
+    verification)."""
+    params, _, _, _, _ = unpack_state(flat, cfg)
+    return forward_loss(params, tokens, cfg)
+
+
+def init_state_packed(seed, cfg: ModelConfig):
+    params, m, v, step = init_state(seed, cfg)
+    return pack_state(params, m, v, step)

@@ -1,0 +1,97 @@
+"""L2 model tests: shapes, determinism, training-step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.TINY
+
+
+def make_state(seed=0):
+    params, m, v, step = model.init_state(seed, CFG)
+    return params, m, v, step
+
+
+def make_tokens(key=0, batch=2):
+    return jax.random.randint(
+        jax.random.PRNGKey(key), (batch, CFG.seq_len + 1), 0, CFG.vocab,
+        dtype=jnp.int32)
+
+
+def test_param_specs_match_init():
+    params = model.init_params(CFG, 0)
+    specs = model.param_specs(CFG)
+    assert len(params) == len(specs) == 16
+    for p, (name, shape) in zip(params, specs):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_num_params_tiny():
+    # embed 256*64 + pos 32*64 + 2 layers * 12*64^2 + lnf
+    n = CFG.num_params()
+    assert n == sum(int(np.prod(s)) for _, s in model.param_specs(CFG))
+
+
+def test_default_config_is_about_100m():
+    n = model.ModelConfig().num_params()
+    assert 80e6 < n < 120e6, n
+
+
+def test_forward_loss_near_uniform_at_init():
+    params, *_ = make_state()
+    loss = model.forward_loss(params, make_tokens(), CFG)
+    # embeddings are tiny at init -> logits near uniform -> loss ~ ln(V)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_init_deterministic_in_seed():
+    a = model.init_params(CFG, 7)
+    b = model.init_params(CFG, 7)
+    c = model.init_params(CFG, 8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_train_step_decreases_loss():
+    params, m, v, step = make_state()
+    tokens = make_tokens()
+    losses = []
+    for _ in range(8):
+        params, m, v, step, loss = model.train_step(
+            params, m, v, step, tokens, CFG)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+    assert float(step) == 8.0
+
+
+def test_train_step_grads_finite():
+    params, m, v, step = make_state()
+    p2, m2, v2, step2, loss = model.train_step(
+        params, m, v, step, make_tokens(), CFG)
+    assert np.isfinite(float(loss))
+    for t in p2 + m2 + v2:
+        assert bool(jnp.all(jnp.isfinite(t)))
+
+
+def test_pallas_and_ref_model_paths_agree():
+    params, *_ = make_state()
+    tokens = make_tokens()
+    l_ref = model.forward_loss(params, tokens, CFG, use_pallas=False)
+    l_pal = model.forward_loss(params, tokens, CFG, use_pallas=True)
+    np.testing.assert_allclose(float(l_ref), float(l_pal), atol=1e-4,
+                               rtol=1e-5)
+
+
+def test_immutability_of_inputs():
+    """train_step must be functional: inputs unchanged (the property the
+    paper's lazy snapshotting relies on at the framework level)."""
+    params, m, v, step = make_state()
+    before = [np.asarray(p).copy() for p in params]
+    model.train_step(params, m, v, step, make_tokens(), CFG)
+    for p, b in zip(params, before):
+        np.testing.assert_array_equal(np.asarray(p), b)

@@ -1,0 +1,152 @@
+//! Engine micro-benchmarks: the hot paths of the DataStates pipeline in
+//! isolation, used by the §Perf pass (pool allocation, provider
+//! chunking, serializer, writer scaling).
+//!
+//! Run: `cargo bench --bench engine_micro`
+
+use std::sync::Arc;
+
+use datastates::engine::flush::{FlushFile, FlushPool, WriteJob};
+use datastates::engine::pool::PinnedPool;
+use datastates::metrics::{human_bps, Timeline};
+use datastates::provider::layout::LogCursor;
+use datastates::provider::{
+    Bytes, CompositeProvider, ObjectProvider, Poll, SerializerPool,
+    StateProvider, TensorProvider,
+};
+use datastates::state::tensor::DType;
+use datastates::state::PyObj;
+use datastates::util::bench::{black_box, report, report_bps, Bencher};
+use datastates::util::TempDir;
+
+fn bench_pool() {
+    let b = Bencher::quick();
+    let pool = PinnedPool::new(64 << 20);
+    let r = b.run("pool: 1024 alloc/free cycles (64KB)", || {
+        let mut segs = Vec::with_capacity(64);
+        for _ in 0..16 {
+            for _ in 0..64 {
+                segs.push(pool.try_alloc(64 << 10).unwrap());
+            }
+            segs.clear();
+        }
+    });
+    report(&r);
+}
+
+fn bench_provider_chunking() {
+    let b = Bencher::quick();
+    let data = Bytes::from_vec(vec![1u8; 256 << 20]);
+    for chunk in [256 << 10, 4 << 20, 64 << 20] {
+        let r = b.run(
+            &format!("tensor provider drain, chunk={}KB", chunk >> 10),
+            || {
+                let mut p = TensorProvider::new(
+                    "t", DType::U8, vec![data.len()], data.clone(), 0,
+                    chunk);
+                let mut n = 0usize;
+                while let Poll::Ready(c) = p.poll_chunk().unwrap() {
+                    n += c.data.len();
+                }
+                black_box(n)
+            },
+        );
+        report_bps(&r, (256u64) << 20);
+    }
+}
+
+fn bench_serializer() {
+    let b = Bencher::quick();
+    let obj = PyObj::synthetic_metadata(5 << 20, 3);
+    let bytes = obj.to_bytes().len() as u64;
+    let r = b.run("serialize 5MB metadata object", || {
+        black_box(obj.to_bytes().len())
+    });
+    report_bps(&r, bytes);
+
+    let pool = SerializerPool::new(2);
+    let objs: Vec<PyObj> = (0..16)
+        .map(|i| PyObj::synthetic_metadata(64 << 10, i))
+        .collect();
+    let r = b.run("serializer pool: 16 x 64KB objects", || {
+        let rxs: Vec<_> =
+            objs.iter().map(|o| pool.submit(o.clone())).collect();
+        for rx in rxs {
+            black_box(rx.recv().unwrap().len());
+        }
+    });
+    report(&r);
+}
+
+fn bench_writers() {
+    let b = Bencher { warmup: 1, min_iters: 3, max_iters: 6,
+                      budget: std::time::Duration::from_secs(6) };
+    let payload = Bytes::from_vec(vec![7u8; 64 << 20]);
+    for threads in [1usize, 2, 4, 8] {
+        let dir = TempDir::new("em-writers").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(threads, tl);
+        let r = b.run(&format!("flush 64MB, {threads} writers"), || {
+            let f = FlushFile::create(&dir.join("w.bin"), "w").unwrap();
+            for (i, c) in payload.chunks(4 << 20).into_iter().enumerate()
+            {
+                pool.submit(WriteJob {
+                    file: f.clone(),
+                    offset: (i * (4 << 20)) as u64,
+                    data: c,
+                    label: "w".into(),
+                });
+            }
+            f.finish_issuing();
+            f.wait_quiescent().unwrap();
+            f.sync().unwrap();
+        });
+        report_bps(&r, 64 << 20);
+    }
+}
+
+fn bench_composite_overlap() {
+    let b = Bencher::quick();
+    let r = b.run("composite: 8 tensors + 4 lazy objects drain", || {
+        let cursor = Arc::new(LogCursor::new(8 * (1 << 20)));
+        let ser = SerializerPool::new(2);
+        let mut children: Vec<Box<dyn StateProvider>> = Vec::new();
+        for i in 0..8 {
+            children.push(Box::new(TensorProvider::new(
+                format!("t{i}"),
+                DType::U8,
+                vec![1 << 20],
+                Bytes::from_vec(vec![i as u8; 1 << 20]),
+                (i as u64) << 20,
+                256 << 10,
+            )));
+        }
+        for i in 0..4 {
+            let rx =
+                ser.submit(PyObj::synthetic_metadata(32 << 10, i));
+            children.push(Box::new(ObjectProvider::new(
+                format!("o{i}"), 32 << 10, rx, cursor.clone(),
+                256 << 10)));
+        }
+        let mut comp = CompositeProvider::new("f", 8 << 20, children);
+        let mut total = 0usize;
+        loop {
+            match comp.poll_chunk().unwrap() {
+                Poll::Ready(c) => total += c.data.len(),
+                Poll::Done => break,
+                Poll::Pending => std::hint::spin_loop(),
+            }
+        }
+        black_box(total)
+    });
+    report_bps(&r, 8 << 20);
+}
+
+fn main() {
+    println!("# engine micro-benchmarks (§Perf)");
+    bench_pool();
+    bench_provider_chunking();
+    bench_serializer();
+    bench_writers();
+    bench_composite_overlap();
+}

@@ -1,0 +1,88 @@
+//! Fig 14 (real plane): checkpoint flush throughput vs tensor size for
+//! each engine, with 4 concurrent "ranks" sharing this machine's storage
+//! (the paper's node-level microbenchmark), plus the host-only ideal.
+//!
+//! Run: `cargo bench --bench fig14_flush`
+
+use datastates::baselines::EngineKind;
+use datastates::config::EngineConfig;
+use datastates::metrics::human_bps;
+use datastates::state::tensor::{DType, SimDeviceTensor, TensorShard};
+use datastates::state::{FileKind, RankState, ShardFile, StateItem};
+use datastates::util::bench::Bencher;
+use datastates::util::{Rng, TempDir};
+
+fn rank_state(bytes: usize, seed: u64) -> RankState {
+    let mut data = vec![0u8; bytes];
+    Rng::new(seed).fill_bytes(&mut data);
+    RankState {
+        rank: seed as usize,
+        files: vec![ShardFile {
+            name: format!("tensor_r{seed}.pt"),
+            kind: FileKind::Optimizer,
+            items: vec![StateItem::Tensor(TensorShard::device(
+                "t",
+                DType::U8,
+                vec![bytes],
+                SimDeviceTensor::new(data),
+            ))],
+        }],
+    }
+}
+
+/// One engine, 4 concurrent ranks, one tensor each: returns elapsed s.
+fn run_node(kind: EngineKind, bytes: usize, dir: &std::path::Path) -> f64 {
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for r in 0..4u64 {
+            let dir = dir.join(format!("rank{r}"));
+            s.spawn(move || {
+                let mut eng =
+                    kind.build(EngineConfig::with_dir(dir)).unwrap();
+                let state = rank_state(bytes, r);
+                eng.checkpoint(0, &state).unwrap();
+                eng.wait_snapshot_complete().unwrap();
+                eng.drain().unwrap();
+            });
+        }
+    });
+    start.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("# Fig 14 (real plane): node-level flush throughput, \
+              4 concurrent ranks");
+    println!("{:<10}{:>18}{:>18}{:>18}{:>18}{:>18}", "size/rank",
+             "deepspeed", "torchsnapshot", "datastates-old",
+             "datastates-llm", "ideal(host)");
+    let b = Bencher { warmup: 1, min_iters: 3, max_iters: 5,
+                      budget: std::time::Duration::from_secs(8) };
+    // paper sweeps 0.25-8 GB/GPU; scaled to MB here
+    for mb in [4usize, 16, 64] {
+        let bytes = mb << 20;
+        print!("{:<10}", format!("{mb} MB"));
+        for kind in EngineKind::all() {
+            let dir = TempDir::new("fig14").unwrap();
+            let r = b.run(kind.label(), || {
+                run_node(kind, bytes, dir.path())
+            });
+            print!("{:>18}", human_bps(4.0 * bytes as f64 / r.median_s));
+        }
+        // ideal: plain sequential writes of already-host bytes, 4 files
+        let dir = TempDir::new("fig14-ideal").unwrap();
+        let blob = vec![7u8; bytes];
+        let ideal = b.run("ideal", || {
+            std::thread::scope(|s| {
+                for r in 0..4 {
+                    let p = dir.join(&format!("i{r}.bin"));
+                    let blob = &blob;
+                    s.spawn(move || {
+                        std::fs::write(&p, blob).unwrap();
+                    });
+                }
+            });
+        });
+        println!("{:>18}",
+                 human_bps(4.0 * bytes as f64 / ideal.median_s));
+    }
+}

@@ -1,0 +1,41 @@
+//! Table III (real plane): per-checkpoint sub-operation breakdown on one
+//! rank of the (scaled) 7B composition — metadata/serialize, GPU→Host
+//! staging, Host→File persistence — for all four engines.
+//!
+//! Run: `cargo bench --bench table3_breakdown`
+
+use datastates::baselines::EngineKind;
+use datastates::config::{EngineConfig, LlmConfig, Parallelism};
+use datastates::metrics::Tier;
+use datastates::state::partition::{census, materialize};
+use datastates::util::TempDir;
+
+fn main() {
+    println!("# Table III (real plane): sub-operation breakdown, \
+              7B rank 0 scaled 1e-3");
+    println!("{:<22}{:>16}{:>14}{:>14}{:>14}", "engine",
+             "serialize s", "D2H s", "H2F s", "blocked s");
+    let cfg = LlmConfig::by_name("7B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = census(&cfg, &par);
+
+    for kind in EngineKind::all() {
+        // fresh payload per engine (~12 MB of shards across ~21 files)
+        let state = materialize(&cs.ranks[0], 1e-3, 0.2, 17);
+        let dir = TempDir::new("t3").unwrap();
+        let mut eng =
+            kind.build(EngineConfig::with_dir(dir.path())).unwrap();
+        eng.checkpoint(0, &state).unwrap();
+        eng.wait_snapshot_complete().unwrap();
+        eng.drain().unwrap();
+        let tl = eng.timeline();
+        let (_, ser) = tl.tier_summary(Tier::Serialize);
+        let (_, d2h) = tl.tier_summary(Tier::D2H);
+        let (_, h2f) = tl.tier_summary(Tier::H2F);
+        let blocked = eng.metrics()[0].blocked_s;
+        println!("{:<22}{:>16.4}{:>14.4}{:>14.4}{:>14.4}",
+                 kind.label(), ser, d2h, h2f, blocked);
+    }
+    println!("\n(times are busy-union per tier; for lazy engines D2H/H2F \
+              run in the background — compare the blocked column)");
+}

@@ -1,0 +1,342 @@
+//! DataStates-LLM-Old baseline: the authors' HPDC'24 engine (§VI-B3).
+//!
+//! Shares the *lazy* half of the design with the new engine — pinned-pool
+//! D2H staging overlapped with forward/backward, consistency gate before
+//! the update — but keeps the state-of-the-art ordering the new engine
+//! removes:
+//!
+//! - **metadata-first**: all non-tensor objects are serialized INLINE on
+//!   the critical path at request time (to precompute the persistent
+//!   layout up front),
+//! - **snapshot-then-flush per file**: a file's flush begins only after
+//!   every tensor of that file has been staged (no chunk streaming), and
+//! - **single background writer**: files are persisted one at a time.
+//!
+//! The deltas to `DataStatesEngine` are exactly the paper's §V-A3/§V-A5
+//! contributions, making this pair an ablation of the state-provider
+//! design.
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::EngineConfig;
+use crate::engine::pool::PinnedPool;
+use crate::engine::stager::{SnapshotTracker, StageJob, Stager};
+use crate::engine::CheckpointEngine;
+use crate::metrics::{CkptMetrics, Tier, Timeline};
+use crate::provider::layout::{plan_fixed_region, EntryKind, FileLayout,
+                              LayoutEntry};
+use crate::provider::Bytes;
+use crate::state::{RankState, StateItem, TensorData};
+use crate::util::channel::{unbounded, Receiver, Sender};
+
+/// One file's flush work: staged tensor bytes (await on channels) and the
+/// pre-serialized objects.
+struct FileTask {
+    name: String,
+    fixed_region: u64,
+    /// (entry, base offset, expected bytes, channel with staged bytes)
+    tensors: Vec<(LayoutEntry, u64, Receiver<Bytes>)>,
+    /// (entry with final extents, serialized bytes)
+    objects: Vec<(LayoutEntry, Vec<u8>)>,
+}
+
+struct FlushTask {
+    dir: std::path::PathBuf,
+    files: Vec<FileTask>,
+    requested: Instant,
+}
+
+pub struct DataStatesOldEngine {
+    cfg: EngineConfig,
+    timeline: Arc<Timeline>,
+    stager: Stager,
+    flush_tx: Sender<FlushTask>,
+    done_rx: Receiver<f64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    pending_snapshot: Option<Arc<SnapshotTracker>>,
+    in_flight: usize,
+    metrics: Vec<CkptMetrics>,
+}
+
+impl DataStatesOldEngine {
+    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(&cfg.ckpt_dir)?;
+        let timeline = Arc::new(Timeline::new());
+        let pool = PinnedPool::new(cfg.host_cache_bytes);
+        let stager = Stager::new(pool, timeline.clone());
+        let (flush_tx, flush_rx) = unbounded::<FlushTask>();
+        let (done_tx, done_rx) = unbounded::<f64>();
+        let tl = timeline.clone();
+        // single background writer: files persisted one at a time
+        let worker = std::thread::Builder::new()
+            .name("ds-old-flush".into())
+            .spawn(move || {
+                while let Ok(task) = flush_rx.recv() {
+                    if let Err(e) = Self::flush_task(&task, &tl) {
+                        eprintln!("[datastates-old] flush failed: {e:#}");
+                    }
+                    let _ = done_tx
+                        .send(task.requested.elapsed().as_secs_f64());
+                }
+            })
+            .expect("spawn ds-old-flush");
+        Ok(DataStatesOldEngine {
+            cfg,
+            timeline,
+            stager,
+            flush_tx,
+            done_rx,
+            worker: Some(worker),
+            pending_snapshot: None,
+            in_flight: 0,
+            metrics: Vec::new(),
+        })
+    }
+
+    fn flush_task(task: &FlushTask, tl: &Timeline) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&task.dir)?;
+        for file in &task.files {
+            // snapshot-then-flush: wait for ALL tensors of this file
+            let mut staged = Vec::with_capacity(file.tensors.len());
+            for (entry, base, rx) in &file.tensors {
+                let bytes = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("stager dropped"))?;
+                staged.push((entry.clone(), *base, bytes));
+            }
+            // whole-file sequential write (no positioned parallelism)
+            let start = tl.now_s();
+            let mut f =
+                std::fs::File::create(task.dir.join(&file.name))?;
+            let mut entries = Vec::new();
+            let mut buf: Vec<u8> = Vec::new();
+            for (entry, base, bytes) in &staged {
+                if buf.len() < (*base as usize + bytes.len()) {
+                    buf.resize(*base as usize + bytes.len(), 0);
+                }
+                buf[*base as usize..*base as usize + bytes.len()]
+                    .copy_from_slice(bytes.as_slice());
+                entries.push(entry.clone());
+            }
+            buf.resize(file.fixed_region as usize, 0);
+            let mut log_off = file.fixed_region;
+            for (entry, bytes) in &file.objects {
+                let mut e = entry.clone();
+                e.extents = vec![(log_off, bytes.len() as u64)];
+                log_off += bytes.len() as u64;
+                buf.extend_from_slice(bytes);
+                entries.push(e);
+            }
+            f.write_all(&buf)?;
+            let layout = FileLayout {
+                file_name: file.name.clone(),
+                fixed_region: file.fixed_region,
+                entries,
+            };
+            let trailer = layout.encode_trailer();
+            f.write_all(&trailer)?;
+            f.write_all(&FileLayout::encode_footer(log_off,
+                                                   trailer.len() as u64))?;
+            f.sync_all()?;
+            tl.record(Tier::H2F, &file.name, buf.len() as u64, start,
+                      tl.now_s());
+        }
+        Ok(())
+    }
+}
+
+impl CheckpointEngine for DataStatesOldEngine {
+    fn name(&self) -> &'static str {
+        "datastates-old"
+    }
+
+    fn checkpoint(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let n_device: usize = state
+            .files
+            .iter()
+            .flat_map(|f| f.items.iter())
+            .filter(|i| matches!(i, StateItem::Tensor(t)
+                                 if t.data.is_device()))
+            .count();
+        let tracker = SnapshotTracker::new(n_device);
+        let mut files = Vec::with_capacity(state.files.len());
+        for file in &state.files {
+            let tensor_sizes: Vec<u64> = file
+                .items
+                .iter()
+                .filter_map(|i| match i {
+                    StateItem::Tensor(t) => Some(t.size_bytes() as u64),
+                    _ => None,
+                })
+                .collect();
+            let (offsets, fixed_end) = plan_fixed_region(&tensor_sizes, 64);
+            let mut tensors = Vec::new();
+            let mut objects = Vec::new();
+            let mut ti = 0usize;
+            for item in &file.items {
+                match item {
+                    StateItem::Tensor(t) => {
+                        let base = offsets[ti];
+                        ti += 1;
+                        let entry = LayoutEntry {
+                            name: t.name.clone(),
+                            kind: EntryKind::Tensor {
+                                dtype: t.dtype,
+                                shape: t.shape.clone(),
+                            },
+                            extents: vec![(base,
+                                           t.size_bytes() as u64)],
+                        };
+                        let (tx, rx) = crate::util::channel::bounded(1);
+                        match &t.data {
+                            TensorData::Device(dev) => {
+                                // lazy D2H, same as the new engine
+                                self.stager.submit(StageJob {
+                                    name: t.name.clone(),
+                                    tensor: dev.clone(),
+                                    out: tx,
+                                    tracker: tracker.clone(),
+                                });
+                            }
+                            TensorData::Host(b) => {
+                                let _ = tx.send(Bytes::from_arc(b.clone()));
+                            }
+                        }
+                        tensors.push((entry, base, rx));
+                    }
+                    StateItem::Object { name, obj } => {
+                        // METADATA-FIRST: serialize inline, blocking —
+                        // the ordering the new engine's providers remove
+                        let start = self.timeline.now_s();
+                        let bytes = obj.to_bytes();
+                        self.timeline.record(Tier::Serialize, name,
+                                             bytes.len() as u64, start,
+                                             self.timeline.now_s());
+                        objects.push((
+                            LayoutEntry {
+                                name: name.clone(),
+                                kind: EntryKind::Object,
+                                extents: Vec::new(),
+                            },
+                            bytes,
+                        ));
+                    }
+                }
+            }
+            files.push(FileTask {
+                name: file.name.clone(),
+                fixed_region: fixed_end,
+                tensors,
+                objects,
+            });
+        }
+        let total: u64 = state.total_bytes() as u64;
+        self.flush_tx
+            .send(FlushTask {
+                dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
+                files,
+                requested: t0,
+            })
+            .map_err(|_| anyhow::anyhow!("flush worker dead"))?;
+        self.pending_snapshot = Some(tracker);
+        self.in_flight += 1;
+        self.metrics.push(CkptMetrics {
+            blocked_s: t0.elapsed().as_secs_f64(),
+            bytes: total,
+            ..Default::default()
+        });
+        Ok(())
+    }
+
+    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
+        let waited = match self.pending_snapshot.take() {
+            Some(t) => t.wait()?,
+            None => 0.0,
+        };
+        if let Some(m) = self.metrics.last_mut() {
+            m.blocked_s += waited;
+            m.d2h_s += waited;
+        }
+        Ok(waited)
+    }
+
+    fn drain(&mut self) -> anyhow::Result<()> {
+        self.wait_snapshot_complete()?;
+        while self.in_flight > 0 {
+            let persist = self.done_rx.recv()?;
+            if let Some(m) =
+                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
+            {
+                m.persist_s = persist;
+            }
+            self.in_flight -= 1;
+        }
+        Ok(())
+    }
+
+    fn metrics(&self) -> Vec<CkptMetrics> {
+        self.metrics.clone()
+    }
+
+    fn timeline(&self) -> Arc<Timeline> {
+        self.timeline.clone()
+    }
+}
+
+impl Drop for DataStatesOldEngine {
+    fn drop(&mut self) {
+        let _ = self.drain();
+        let (tx, _rx) = unbounded();
+        self.flush_tx = tx;
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::shard::FileKind;
+    use crate::state::tensor::{DType, SimDeviceTensor, TensorShard};
+    use crate::state::{PyObj, ShardFile};
+    use crate::util::TempDir;
+
+    #[test]
+    fn lazy_capture_then_restore_roundtrip() {
+        let dir = TempDir::new("ds-old").unwrap();
+        let mut eng = DataStatesOldEngine::new(
+            EngineConfig::with_dir(dir.path())).unwrap();
+        let payload: Vec<u8> = (0..4096u32).map(|i| i as u8).collect();
+        let state = RankState {
+            rank: 0,
+            files: vec![ShardFile {
+                name: "layer_00.pt".into(),
+                kind: FileKind::ParamLayer,
+                items: vec![
+                    StateItem::Tensor(TensorShard::device(
+                        "w", DType::U8, vec![4096],
+                        SimDeviceTensor::new(payload.clone()))),
+                    StateItem::Object {
+                        name: "meta".into(),
+                        obj: PyObj::synthetic_metadata(300, 5),
+                    },
+                ],
+            }],
+        };
+        eng.checkpoint(0, &state).unwrap();
+        let waited = eng.wait_snapshot_complete().unwrap();
+        assert!(waited >= 0.0);
+        eng.drain().unwrap();
+        crate::restore::verify_against(&dir.path().join("v000000"),
+                                       &state)
+            .unwrap();
+        // metadata-first: serializer time charged on the critical path
+        let (ser_bytes, _) = eng.timeline().tier_summary(Tier::Serialize);
+        assert!(ser_bytes > 0);
+    }
+}

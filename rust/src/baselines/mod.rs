@@ -1,0 +1,81 @@
+//! Faithful re-implementations of the checkpoint engines the paper
+//! compares against (§VI-B), behind the same [`CheckpointEngine`] trait:
+//!
+//! - [`deepspeed_default::DeepSpeedDefaultEngine`] — `torch.save`-style:
+//!   fully blocking, type-agnostic serialization of the entire object
+//!   graph (tensors deep-copied through the serializer), single-threaded
+//!   sequential writes.
+//! - [`torchsnapshot::TorchSnapshotEngine`] — blocking snapshot
+//!   (synchronous D2H into freshly-allocated buffers), then background
+//!   multi-threaded flushing of *chunk files* (chunk-to-file mapping
+//!   inflates file counts / metadata ops, §IV-D).
+//! - [`datastates_old::DataStatesOldEngine`] — the authors' HPDC'24
+//!   engine: lazy pinned-pool D2H overlapped with fwd/bwd (like the new
+//!   engine) but metadata-first blocking serialization, per-file
+//!   snapshot-then-flush (no chunk streaming), single writer thread.
+//!
+//! [`CheckpointEngine`]: crate::engine::CheckpointEngine
+
+pub mod common;
+pub mod datastates_old;
+pub mod deepspeed_default;
+pub mod torchsnapshot;
+
+pub use datastates_old::DataStatesOldEngine;
+pub use deepspeed_default::DeepSpeedDefaultEngine;
+pub use torchsnapshot::TorchSnapshotEngine;
+
+use crate::config::EngineConfig;
+use crate::engine::{CheckpointEngine, DataStatesEngine};
+
+/// Engine selector used by the CLI, benches, and examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    DeepSpeedDefault,
+    TorchSnapshot,
+    DataStatesOld,
+    DataStatesLlm,
+}
+
+impl EngineKind {
+    pub fn all() -> [EngineKind; 4] {
+        [
+            EngineKind::DeepSpeedDefault,
+            EngineKind::TorchSnapshot,
+            EngineKind::DataStatesOld,
+            EngineKind::DataStatesLlm,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::DeepSpeedDefault => "deepspeed-default",
+            EngineKind::TorchSnapshot => "torchsnapshot",
+            EngineKind::DataStatesOld => "datastates-old",
+            EngineKind::DataStatesLlm => "datastates-llm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Self::all().into_iter().find(|k| k.label() == s)
+    }
+
+    /// Instantiate the engine.
+    pub fn build(&self, cfg: EngineConfig)
+        -> anyhow::Result<Box<dyn CheckpointEngine>> {
+        Ok(match self {
+            EngineKind::DeepSpeedDefault => {
+                Box::new(DeepSpeedDefaultEngine::new(cfg)?)
+            }
+            EngineKind::TorchSnapshot => {
+                Box::new(TorchSnapshotEngine::new(cfg)?)
+            }
+            EngineKind::DataStatesOld => {
+                Box::new(DataStatesOldEngine::new(cfg)?)
+            }
+            EngineKind::DataStatesLlm => {
+                Box::new(DataStatesEngine::new(cfg)?)
+            }
+        })
+    }
+}

@@ -1,0 +1,417 @@
+//! TorchSnapshot-like baseline (§VI-B2, Figure 6(b)).
+//!
+//! Two phases:
+//!
+//! 1. **Blocking snapshot**: every tensor is staged D2H synchronously
+//!    into a *freshly allocated* host buffer (no pool reuse, no overlap
+//!    with training), and the residual non-tensor objects are serialized
+//!    inline (they are small, so this is cheap — the paper's Table III
+//!    shows 0.0258 s).
+//! 2. **Background flush**: a writer pool persists the snapshot as
+//!    *chunk files* — TorchSnapshot's chunk-to-file mapping — plus one
+//!    manifest per logical file. This inflates file counts and PFS
+//!    metadata operations (§IV-D), which the simulator charges for at
+//!    paper scale and which shows up here as per-file create/fsync
+//!    overhead.
+//!
+//! A subsequent `checkpoint()` call blocks until the previous flush
+//! completed (the engine keeps only one snapshot buffer), reproducing the
+//! back-to-back behaviour in Figure 6(b).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::common::stage_sync;
+use crate::config::EngineConfig;
+use crate::engine::flush::{FlushFile, FlushPool, WriteJob};
+use crate::engine::CheckpointEngine;
+use crate::metrics::{CkptMetrics, Tier, Timeline};
+use crate::provider::layout::{EntryKind, FileLayout, LayoutEntry};
+use crate::provider::Bytes;
+use crate::state::{RankState, StateItem};
+use crate::util::channel::{unbounded, Receiver, Sender};
+
+struct FlushTask {
+    dir: std::path::PathBuf,
+    /// (logical file name, entries of (entry name, kind, bytes))
+    files: Vec<(String, Vec<(String, EntryKind, Vec<u8>)>)>,
+    requested: Instant,
+}
+
+pub struct TorchSnapshotEngine {
+    cfg: EngineConfig,
+    timeline: Arc<Timeline>,
+    flush_tx: Sender<FlushTask>,
+    done_rx: Receiver<f64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    in_flight: usize,
+    metrics: Vec<CkptMetrics>,
+}
+
+impl TorchSnapshotEngine {
+    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(&cfg.ckpt_dir)?;
+        let timeline = Arc::new(Timeline::new());
+        let (flush_tx, flush_rx) = unbounded::<FlushTask>();
+        let (done_tx, done_rx) = unbounded::<f64>();
+        let pool = FlushPool::new(cfg.writer_threads, timeline.clone());
+        let chunk_bytes = cfg.chunk_bytes;
+        let worker = std::thread::Builder::new()
+            .name("ts-flush".into())
+            .spawn(move || {
+                while let Ok(task) = flush_rx.recv() {
+                    if let Err(e) =
+                        Self::flush_task(&task, &pool, chunk_bytes)
+                    {
+                        eprintln!("[torchsnapshot] flush failed: {e:#}");
+                    }
+                    let _ = done_tx
+                        .send(task.requested.elapsed().as_secs_f64());
+                }
+            })
+            .expect("spawn ts-flush");
+        Ok(TorchSnapshotEngine {
+            cfg,
+            timeline,
+            flush_tx,
+            done_rx,
+            worker: Some(worker),
+            in_flight: 0,
+            metrics: Vec::new(),
+        })
+    }
+
+    /// Write each logical file as N chunk files + 1 manifest file.
+    fn flush_task(task: &FlushTask, pool: &Arc<FlushPool>,
+                  chunk_bytes: usize) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&task.dir)?;
+        for (logical, entries) in &task.files {
+            let mut manifest_entries = Vec::new();
+            let mut open_files = Vec::new();
+            let mut chunk_id = 0usize;
+            for (name, kind, bytes) in entries {
+                // chunk-to-file mapping: every chunk is its own file
+                let mut extents = Vec::new();
+                for chunk in bytes.chunks(chunk_bytes.max(1)) {
+                    let chunk_name =
+                        format!("{logical}.chunk{chunk_id:04}");
+                    chunk_id += 1;
+                    let f = FlushFile::create(&task.dir.join(&chunk_name),
+                                              &chunk_name)?;
+                    pool.submit(WriteJob {
+                        file: f.clone(),
+                        offset: 0,
+                        data: Bytes::from_vec(chunk.to_vec()),
+                        label: name.clone(),
+                    });
+                    f.finish_issuing();
+                    extents.push((chunk_name.clone(),
+                                  chunk.len() as u64));
+                    open_files.push(f);
+                }
+                manifest_entries.push((name.clone(), kind.clone(),
+                                       extents));
+            }
+            for f in &open_files {
+                f.wait_quiescent()?;
+            }
+            // each chunk file is raw payload; it still pays its own
+            // durability round-trip (the metadata-op explosion)
+            for f in &open_files {
+                f.sync()?;
+            }
+            // manifest: reuse the crate layout with named chunk refs
+            // encoded in the object payload.
+            let manifest = encode_manifest(&manifest_entries);
+            let mf = FlushFile::create(
+                &task.dir.join(format!("{logical}.manifest")),
+                format!("{logical}.manifest"),
+            )?;
+            pool.submit(WriteJob {
+                file: mf.clone(),
+                offset: 0,
+                data: Bytes::from_vec(manifest.clone()),
+                label: format!("{logical}.manifest"),
+            });
+            mf.finish_issuing();
+            mf.wait_quiescent()?;
+            let layout = FileLayout {
+                file_name: format!("{logical}.manifest"),
+                fixed_region: 0,
+                entries: vec![LayoutEntry {
+                    name: "manifest".into(),
+                    kind: EntryKind::Object,
+                    extents: vec![(0, manifest.len() as u64)],
+                }],
+            };
+            mf.finalize(&layout, manifest.len() as u64)?;
+        }
+        Ok(())
+    }
+}
+
+/// Manifest payload: entry name, kind, ordered (chunk file, len) refs.
+fn encode_manifest(
+    entries: &[(String, EntryKind, Vec<(String, u64)>)],
+) -> Vec<u8> {
+    use crate::util::codec::Encoder;
+    let mut e = Encoder::new();
+    e.u64(entries.len() as u64);
+    for (name, kind, chunks) in entries {
+        e.str(name);
+        match kind {
+            EntryKind::Tensor { dtype, shape } => {
+                e.u8(0).u8(match dtype {
+                    crate::state::DType::F16 => 0,
+                    crate::state::DType::BF16 => 1,
+                    crate::state::DType::F32 => 2,
+                    crate::state::DType::I32 => 3,
+                    crate::state::DType::U8 => 4,
+                });
+                e.u64(shape.len() as u64);
+                for &s in shape {
+                    e.u64(s as u64);
+                }
+            }
+            EntryKind::Object => {
+                e.u8(1);
+            }
+        }
+        e.u64(chunks.len() as u64);
+        for (c, l) in chunks {
+            e.str(c).u64(*l);
+        }
+    }
+    e.finish()
+}
+
+/// Decode a manifest back to (entry name, chunk refs).
+pub fn decode_manifest(bytes: &[u8])
+    -> anyhow::Result<Vec<(String, Vec<(String, u64)>)>> {
+    use crate::util::codec::Decoder;
+    let mut d = Decoder::new(bytes);
+    let n = d.u64()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = d.str()?;
+        match d.u8()? {
+            0 => {
+                let _dtype = d.u8()?;
+                let ndim = d.u64()? as usize;
+                for _ in 0..ndim {
+                    let _ = d.u64()?;
+                }
+            }
+            1 => {}
+            t => anyhow::bail!("bad manifest kind {t}"),
+        }
+        let nc = d.u64()? as usize;
+        let mut chunks = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            chunks.push((d.str()?, d.u64()?));
+        }
+        out.push((name, chunks));
+    }
+    Ok(out)
+}
+
+/// Reassemble an entry from a TorchSnapshot-style checkpoint directory.
+pub fn restore_entry(dir: &std::path::Path, logical: &str, entry: &str)
+    -> anyhow::Result<Vec<u8>> {
+    let mf = crate::restore::read_file(
+        &dir.join(format!("{logical}.manifest")))?;
+    let manifest = decode_manifest(
+        mf.payloads.get("manifest")
+            .ok_or_else(|| anyhow::anyhow!("no manifest payload"))?,
+    )?;
+    let (_, chunks) = manifest
+        .into_iter()
+        .find(|(n, _)| n == entry)
+        .ok_or_else(|| anyhow::anyhow!("entry {entry} not in manifest"))?;
+    let mut out = Vec::new();
+    for (chunk_file, len) in chunks {
+        let bytes = std::fs::read(dir.join(&chunk_file))?;
+        anyhow::ensure!(bytes.len() as u64 >= len, "chunk short");
+        out.extend_from_slice(&bytes[..len as usize]);
+    }
+    Ok(out)
+}
+
+impl CheckpointEngine for TorchSnapshotEngine {
+    fn name(&self) -> &'static str {
+        "torchsnapshot"
+    }
+
+    fn checkpoint(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        // one outstanding snapshot: wait for the previous flush
+        while self.in_flight > 0 {
+            let persist = self.done_rx.recv()?;
+            if let Some(m) =
+                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
+            {
+                m.persist_s = persist;
+            }
+            self.in_flight -= 1;
+        }
+        // blocking snapshot: D2H everything + serialize residual objects
+        let mut files = Vec::with_capacity(state.files.len());
+        let mut total = 0u64;
+        for file in &state.files {
+            let mut entries = Vec::with_capacity(file.items.len());
+            for item in &file.items {
+                match item {
+                    StateItem::Tensor(t) => {
+                        let staged = stage_sync(t, &self.timeline)?;
+                        total += staged.len() as u64;
+                        entries.push((
+                            t.name.clone(),
+                            EntryKind::Tensor {
+                                dtype: t.dtype,
+                                shape: t.shape.clone(),
+                            },
+                            staged,
+                        ));
+                    }
+                    StateItem::Object { name, obj } => {
+                        let start = self.timeline.now_s();
+                        let bytes = obj.to_bytes();
+                        self.timeline.record(Tier::Serialize, name,
+                                             bytes.len() as u64, start,
+                                             self.timeline.now_s());
+                        total += bytes.len() as u64;
+                        entries.push((name.clone(), EntryKind::Object,
+                                      bytes));
+                    }
+                }
+            }
+            files.push((file.name.clone(), entries));
+        }
+        // background flush of the snapshot
+        self.flush_tx
+            .send(FlushTask {
+                dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
+                files,
+                requested: t0,
+            })
+            .map_err(|_| anyhow::anyhow!("flush worker dead"))?;
+        self.in_flight += 1;
+        self.metrics.push(CkptMetrics {
+            blocked_s: t0.elapsed().as_secs_f64(),
+            bytes: total,
+            ..Default::default()
+        });
+        Ok(())
+    }
+
+    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
+        Ok(0.0) // snapshot was captured synchronously in checkpoint()
+    }
+
+    fn drain(&mut self) -> anyhow::Result<()> {
+        while self.in_flight > 0 {
+            let persist = self.done_rx.recv()?;
+            if let Some(m) =
+                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
+            {
+                m.persist_s = persist;
+            }
+            self.in_flight -= 1;
+        }
+        Ok(())
+    }
+
+    fn metrics(&self) -> Vec<CkptMetrics> {
+        self.metrics.clone()
+    }
+
+    fn timeline(&self) -> Arc<Timeline> {
+        self.timeline.clone()
+    }
+}
+
+impl Drop for TorchSnapshotEngine {
+    fn drop(&mut self) {
+        let _ = self.drain();
+        let (tx, _rx) = unbounded();
+        self.flush_tx = tx;
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::shard::FileKind;
+    use crate::state::tensor::{DType, SimDeviceTensor, TensorShard};
+    use crate::state::{PyObj, ShardFile};
+    use crate::util::TempDir;
+
+    #[test]
+    fn snapshot_then_flush_restores_chunked_entries() {
+        let dir = TempDir::new("ds-ts").unwrap();
+        let mut cfg = EngineConfig::with_dir(dir.path());
+        cfg.chunk_bytes = 100; // force multiple chunk files
+        let mut eng = TorchSnapshotEngine::new(cfg).unwrap();
+
+        let payload: Vec<u8> = (0..=254u8).cycle().take(1000).collect();
+        let state = RankState {
+            rank: 0,
+            files: vec![ShardFile {
+                name: "layer_00.pt".into(),
+                kind: FileKind::ParamLayer,
+                items: vec![
+                    StateItem::Tensor(TensorShard::device(
+                        "w", DType::U8, vec![1000],
+                        SimDeviceTensor::new(payload.clone()))),
+                    StateItem::Object {
+                        name: "meta".into(),
+                        obj: PyObj::Int(11),
+                    },
+                ],
+            }],
+        };
+        eng.checkpoint(3, &state).unwrap();
+        eng.drain().unwrap();
+
+        let vdir = dir.path().join("v000003");
+        // chunk-file explosion: 10 chunks + 1 object chunk + manifest
+        let n_files = std::fs::read_dir(&vdir).unwrap().count();
+        assert!(n_files >= 11, "expected many chunk files, got {n_files}");
+
+        let got = restore_entry(&vdir, "layer_00.pt", "w").unwrap();
+        assert_eq!(got, payload);
+        let obj = PyObj::from_bytes(
+            &restore_entry(&vdir, "layer_00.pt", "meta").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(obj, PyObj::Int(11));
+    }
+
+    #[test]
+    fn second_checkpoint_waits_for_first_flush() {
+        let dir = TempDir::new("ds-ts2").unwrap();
+        let mut eng =
+            TorchSnapshotEngine::new(EngineConfig::with_dir(dir.path()))
+                .unwrap();
+        let state = RankState {
+            rank: 0,
+            files: vec![ShardFile {
+                name: "f.pt".into(),
+                kind: FileKind::Optimizer,
+                items: vec![StateItem::Tensor(TensorShard::synthetic(
+                    "o", DType::F32, vec![1 << 16], 3))],
+            }],
+        };
+        eng.checkpoint(0, &state).unwrap();
+        eng.checkpoint(1, &state).unwrap(); // must block on flush of v0
+        eng.drain().unwrap();
+        let m = eng.metrics();
+        assert_eq!(m.len(), 2);
+        assert!(m[0].persist_s > 0.0);
+        assert!(dir.path().join("v000001").exists());
+    }
+}

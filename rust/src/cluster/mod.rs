@@ -1,0 +1,96 @@
+//! Calibrated model of the evaluation testbed (ALCF Polaris, §VI-A).
+//!
+//! The paper's headline claims are *ratios between checkpointing
+//! approaches under shared bandwidth constraints*; this module captures
+//! those constraints with the constants the paper itself publishes, so
+//! the discrete-event simulator (`sim/`) can regenerate the paper-scale
+//! figures. Engine-efficiency factors (how much of each physical peak a
+//! given engine achieves) live with the approaches in `sim/approaches.rs`.
+
+/// Physical constants of one testbed.
+#[derive(Debug, Clone)]
+pub struct Testbed {
+    pub name: String,
+    /// GPUs per node (Polaris: 4×A100-40GB).
+    pub gpus_per_node: usize,
+    /// GPU HBM capacity per GPU, bytes.
+    pub hbm_bytes: u64,
+    /// Host DRAM per node, bytes.
+    pub dram_bytes: u64,
+    /// Pinned D2H/H2D PCIe bandwidth per GPU, bytes/s (paper: 25 GB/s).
+    pub pcie_pinned_bps: f64,
+    /// Pageable D2H bandwidth per GPU (unpinned staging), bytes/s.
+    pub pcie_pageable_bps: f64,
+    /// Intra-node NVLink D2D, bytes/s (85 GB/s; used by TP collectives).
+    pub nvlink_bps: f64,
+    /// Inter-node fabric per node (Slingshot: ~25 GB/s), bytes/s.
+    pub nic_bps: f64,
+    /// Peak node-level write bandwidth to the PFS (paper Fig 14: ≈10 GB/s).
+    pub node_write_bps: f64,
+    /// Aggregate PFS bandwidth, bytes/s (650 GB/s).
+    pub pfs_aggregate_bps: f64,
+    /// Fixed cost of one PFS metadata operation (file create/close), s.
+    /// Lustre MDT ops are ~1ms; contention amplifies this in the sim.
+    pub pfs_metadata_op_s: f64,
+    /// Host-side object-graph serialization throughput (pickle-like),
+    /// bytes/s of *output*; drives the torch.save cost of Fig 4.
+    pub serialize_bps: f64,
+    /// Per-object-graph-node serialization cost, s (traversal overhead).
+    pub serialize_per_node_s: f64,
+    /// Host memcpy bandwidth (pinned-pool packing), bytes/s.
+    pub host_memcpy_bps: f64,
+    /// GPU bf16 peak, FLOP/s (A100: 312e12) — drives phase durations.
+    pub gpu_flops: f64,
+    /// Achieved model FLOPs utilization for transformer training.
+    pub mfu: f64,
+}
+
+impl Testbed {
+    /// ALCF Polaris constants, from §VI-A and Figure 14 of the paper.
+    pub fn polaris() -> Self {
+        Testbed {
+            name: "polaris".into(),
+            gpus_per_node: 4,
+            hbm_bytes: 40 << 30,
+            dram_bytes: 512 << 30,
+            pcie_pinned_bps: 25e9,
+            pcie_pageable_bps: 8e9,
+            nvlink_bps: 85e9,
+            nic_bps: 25e9,
+            node_write_bps: 10e9,
+            pfs_aggregate_bps: 650e9,
+            pfs_metadata_op_s: 1.5e-3,
+            serialize_bps: 3.0e9, // Table III: 3.9 s for ~12 GB under torch.save
+            serialize_per_node_s: 1.2e-6,
+            host_memcpy_bps: 20e9,
+            gpu_flops: 312e12,
+            mfu: 0.42,
+        }
+    }
+
+    /// Per-rank share of node write bandwidth with `n` concurrent writers.
+    pub fn write_share_bps(&self, concurrent: usize) -> f64 {
+        self.node_write_bps / concurrent.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polaris_constants_match_paper() {
+        let t = Testbed::polaris();
+        assert_eq!(t.gpus_per_node, 4);
+        assert!((t.pcie_pinned_bps - 25e9).abs() < 1.0);
+        assert!((t.nvlink_bps - 85e9).abs() < 1.0);
+        assert!((t.pfs_aggregate_bps - 650e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn write_share_divides() {
+        let t = Testbed::polaris();
+        assert!(t.write_share_bps(4) < t.write_share_bps(1));
+        assert!((t.write_share_bps(4) * 4.0 - t.node_write_bps).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,352 @@
+//! The DataStates-LLM checkpoint engine (paper §V) and the engine trait
+//! shared with the baselines.
+//!
+//! `checkpoint()` performs ONLY the blocking work the paper attributes to
+//! the critical path: building the capture plan (fixed-region offsets,
+//! providers, staging/serialization submissions) and launching the
+//! asynchronous pipeline. Everything else — D2H copies, serialization,
+//! chunk flushing, trailer construction — happens in the background,
+//! overlapped with the next iteration's forward/backward passes. The
+//! trainer calls [`CheckpointEngine::wait_snapshot_complete`] right
+//! before its optimizer update: that is the lazy-capture consistency
+//! gate (§V-A2).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::channel::{Receiver, Sender};
+
+use super::flush::{FlushFile, FlushPool, WriteJob};
+use super::pool::PinnedPool;
+use super::stager::{SnapshotTracker, StageJob, Stager};
+use crate::config::EngineConfig;
+use crate::metrics::{CkptMetrics, Timeline};
+use crate::provider::layout::{plan_fixed_region, LogCursor};
+use crate::provider::{
+    Bytes, CompositeProvider, ObjectProvider, Poll, SerializerPool,
+    StagedTensorProvider, StateProvider, TensorProvider,
+};
+use crate::state::{RankState, StateItem, TensorData};
+
+/// Uniform interface over DataStates-LLM and the three baselines.
+pub trait CheckpointEngine: Send {
+    fn name(&self) -> &'static str;
+
+    /// Request a checkpoint of `state` as `version`. Returns after the
+    /// engine's *blocking* portion only.
+    fn checkpoint(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<()>;
+
+    /// Consistency gate before the optimizer update: block until the
+    /// pending snapshot's device state has been fully captured. Returns
+    /// seconds waited (0 for engines that capture synchronously).
+    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64>;
+
+    /// Block until every requested checkpoint is fully persistent.
+    fn drain(&mut self) -> anyhow::Result<()>;
+
+    /// Per-checkpoint metrics, in request order.
+    fn metrics(&self) -> Vec<CkptMetrics>;
+
+    /// Transfer timeline (Fig 15).
+    fn timeline(&self) -> Arc<Timeline>;
+}
+
+/// One background checkpoint in flight.
+struct PumpJob {
+    version: u64,
+    dir: PathBuf,
+    composites: Vec<(CompositeProvider, Arc<LogCursor>)>,
+    requested: Instant,
+}
+
+struct Completion {
+    version: u64,
+    persist_s: f64,
+}
+
+/// The full DataStates-LLM engine.
+pub struct DataStatesEngine {
+    cfg: EngineConfig,
+    stager: Stager,
+    serializer: Arc<SerializerPool>,
+    timeline: Arc<Timeline>,
+    pump_tx: Sender<PumpJob>,
+    pump: Option<JoinHandle<()>>,
+    done_rx: Receiver<Completion>,
+    pending_snapshot: Option<Arc<SnapshotTracker>>,
+    in_flight: usize,
+    metrics: Vec<CkptMetrics>,
+}
+
+impl DataStatesEngine {
+    pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
+        let timeline = Arc::new(Timeline::new());
+        let pool = PinnedPool::new(cfg.host_cache_bytes);
+        let stager = Stager::new(pool, timeline.clone());
+        let serializer =
+            SerializerPool::with_timeline(2, Some(timeline.clone()));
+        let flush = FlushPool::new(cfg.writer_threads, timeline.clone());
+        let (pump_tx, pump_rx) = crate::util::channel::unbounded::<PumpJob>();
+        let (done_tx, done_rx) = crate::util::channel::unbounded();
+        let pump = std::thread::Builder::new()
+            .name("ds-pump".into())
+            .spawn(move || Self::pump_loop(pump_rx, flush, done_tx))
+            .expect("spawn pump");
+        std::fs::create_dir_all(&cfg.ckpt_dir)?;
+        Ok(DataStatesEngine {
+            cfg,
+            stager,
+            serializer,
+            timeline,
+            pump_tx,
+            pump: Some(pump),
+            done_rx,
+            pending_snapshot: None,
+            in_flight: 0,
+            metrics: Vec::new(),
+        })
+    }
+
+    /// Background driver: drains provider streams into the flush pool and
+    /// finalizes files as their streams complete. Never touches the
+    /// training thread.
+    fn pump_loop(rx: Receiver<PumpJob>, flush: Arc<FlushPool>,
+                 done: Sender<Completion>) {
+        while let Ok(mut job) = rx.recv() {
+            let (version, requested) = (job.version, job.requested);
+            if let Err(e) = Self::pump_one(&mut job, &flush) {
+                eprintln!(
+                    "[datastates] checkpoint v{version} failed: {e:#}");
+            }
+            let _ = done.send(Completion {
+                version,
+                persist_s: requested.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    fn pump_one(job: &mut PumpJob, flush: &Arc<FlushPool>)
+        -> anyhow::Result<()> {
+        std::fs::create_dir_all(&job.dir)?;
+        let mut files = Vec::with_capacity(job.composites.len());
+        for (comp, _) in job.composites.iter() {
+            files.push(FlushFile::create(&job.dir.join(comp.file_name()),
+                                         comp.file_name())?);
+        }
+        // Round-robin across files so their streams share the writers —
+        // "competing checkpoint data streamed ... by concurrent state
+        // providers" (§V-A3).
+        let mut finalized = vec![false; job.composites.len()];
+        loop {
+            let mut made_progress = false;
+            for (fi, (comp, cursor)) in job.composites.iter_mut().enumerate()
+            {
+                if finalized[fi] {
+                    continue;
+                }
+                if comp.is_done() {
+                    // stream exhausted: wait for writes, then finalize
+                    files[fi].finish_issuing();
+                    files[fi].wait_quiescent()?;
+                    files[fi].finalize(&comp.file_layout(), cursor.end())?;
+                    finalized[fi] = true;
+                    made_progress = true;
+                    continue;
+                }
+                match comp.poll_chunk()? {
+                    Poll::Ready(chunk) => {
+                        flush.submit(WriteJob {
+                            file: files[fi].clone(),
+                            offset: chunk.offset,
+                            data: chunk.data,
+                            label: chunk.label,
+                        });
+                        made_progress = true;
+                    }
+                    Poll::Pending => {}
+                    Poll::Done => {
+                        // finalized on the next visit via is_done()
+                        made_progress = true;
+                    }
+                }
+            }
+            if finalized.iter().all(|&f| f) {
+                break;
+            }
+            if !made_progress {
+                // every stream pending on D2H/serialization
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl CheckpointEngine for DataStatesEngine {
+    fn name(&self) -> &'static str {
+        "datastates-llm"
+    }
+
+    fn checkpoint(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<()> {
+        let t0 = Instant::now();
+        let align = if self.cfg.direct_io { 4096 } else { 64 };
+        let n_device: usize = state
+            .files
+            .iter()
+            .flat_map(|f| f.items.iter())
+            .filter(|i| matches!(i, StateItem::Tensor(t)
+                                 if t.data.is_device()))
+            .count();
+        let tracker = SnapshotTracker::new(n_device);
+        let mut composites = Vec::with_capacity(state.files.len());
+        let mut total_bytes = 0u64;
+
+        for file in &state.files {
+            // Fixed region: offsets for every tensor, known a priori.
+            let tensor_sizes: Vec<u64> = file
+                .items
+                .iter()
+                .filter_map(|i| match i {
+                    StateItem::Tensor(t) => Some(t.size_bytes() as u64),
+                    _ => None,
+                })
+                .collect();
+            let (offsets, fixed_end) =
+                plan_fixed_region(&tensor_sizes, align);
+            let cursor = Arc::new(LogCursor::new(fixed_end));
+            let mut children: Vec<Box<dyn StateProvider>> = Vec::new();
+            let mut ti = 0usize;
+            for item in &file.items {
+                match item {
+                    StateItem::Tensor(t) => {
+                        let base = offsets[ti];
+                        ti += 1;
+                        total_bytes += t.size_bytes() as u64;
+                        match &t.data {
+                            TensorData::Host(bytes) => {
+                                // zero-copy: no staging, no serialization
+                                children.push(Box::new(TensorProvider::new(
+                                    &t.name,
+                                    t.dtype,
+                                    t.shape.clone(),
+                                    Bytes::from_arc(bytes.clone()),
+                                    base,
+                                    self.cfg.chunk_bytes,
+                                )));
+                            }
+                            TensorData::Device(dev) => {
+                                let (tx, rx) =
+                                    crate::util::channel::bounded(1);
+                                self.stager.submit(StageJob {
+                                    name: t.name.clone(),
+                                    tensor: dev.clone(),
+                                    out: tx,
+                                    tracker: tracker.clone(),
+                                });
+                                children.push(Box::new(
+                                    StagedTensorProvider::new(
+                                        &t.name,
+                                        t.dtype,
+                                        t.shape.clone(),
+                                        t.size_bytes() as u64,
+                                        base,
+                                        self.cfg.chunk_bytes,
+                                        rx,
+                                    ),
+                                ));
+                            }
+                        }
+                    }
+                    StateItem::Object { name, obj } => {
+                        let est = obj.approx_size() as u64;
+                        total_bytes += est;
+                        let rx = self
+                            .serializer
+                            .submit_named(name.clone(), obj.clone());
+                        children.push(Box::new(ObjectProvider::new(
+                            name,
+                            est,
+                            rx,
+                            cursor.clone(),
+                            self.cfg.chunk_bytes,
+                        )));
+                    }
+                }
+            }
+            composites.push((
+                CompositeProvider::new(&file.name, fixed_end, children),
+                cursor,
+            ));
+        }
+
+        let dir = self.cfg.ckpt_dir.join(format!("v{version:06}"));
+        self.pump_tx
+            .send(PumpJob {
+                version,
+                dir,
+                composites,
+                requested: t0,
+            })
+            .map_err(|_| anyhow::anyhow!("pump thread dead"))?;
+        self.pending_snapshot = Some(tracker);
+        self.in_flight += 1;
+        self.metrics.push(CkptMetrics {
+            blocked_s: t0.elapsed().as_secs_f64(),
+            bytes: total_bytes,
+            ..Default::default()
+        });
+        Ok(())
+    }
+
+    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
+        let waited = match self.pending_snapshot.take() {
+            Some(tracker) => tracker.wait()?,
+            None => 0.0,
+        };
+        if let Some(m) = self.metrics.last_mut() {
+            m.blocked_s += waited;
+            m.d2h_s += waited;
+        }
+        Ok(waited)
+    }
+
+    fn drain(&mut self) -> anyhow::Result<()> {
+        // Make sure the gate is resolved first.
+        self.wait_snapshot_complete()?;
+        while self.in_flight > 0 {
+            let c = self.done_rx.recv()?;
+            if let Some(m) =
+                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
+            {
+                m.persist_s = c.persist_s;
+            }
+            let _ = c.version;
+            self.in_flight -= 1;
+        }
+        Ok(())
+    }
+
+    fn metrics(&self) -> Vec<CkptMetrics> {
+        self.metrics.clone()
+    }
+
+    fn timeline(&self) -> Arc<Timeline> {
+        self.timeline.clone()
+    }
+}
+
+impl Drop for DataStatesEngine {
+    fn drop(&mut self) {
+        let _ = self.drain();
+        // closing the channel stops the pump
+        let (tx, _rx) = crate::util::channel::unbounded();
+        self.pump_tx = tx;
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,269 @@
+//! Host→storage flush pool (paper §V-A4, §V-B).
+//!
+//! Multi-threaded positioned writes drain the chunk queue produced by the
+//! state providers. The paper uses liburing + O_DIRECT; the structural
+//! equivalents here are a writer-thread pool issuing `pwrite`-style
+//! `write_at` calls at provider-assigned offsets (no seeking, no shared
+//! file cursor, writers never contend on position). Each file tracks
+//! outstanding chunks so finalization (trailer + footer + fsync) runs
+//! exactly once, after the last payload byte landed.
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::channel::{Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+
+use crate::metrics::{Tier, Timeline};
+use crate::provider::layout::FileLayout;
+use crate::provider::Bytes;
+
+/// An open checkpoint file accepting concurrent positioned writes.
+pub struct FlushFile {
+    pub name: String,
+    file: File,
+    /// chunks issued vs completed, to detect quiescence.
+    issued: AtomicU64,
+    written: AtomicU64,
+    done_issuing: Mutex<bool>,
+    cv: Condvar,
+    err: Mutex<Option<String>>,
+}
+
+impl FlushFile {
+    pub fn create(path: &Path, name: impl Into<String>) -> anyhow::Result<Arc<Self>> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = File::create(path)?;
+        Ok(Arc::new(FlushFile {
+            name: name.into(),
+            file,
+            issued: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+            done_issuing: Mutex::new(false),
+            cv: Condvar::new(),
+            err: Mutex::new(None),
+        }))
+    }
+
+    fn record_written(&self) {
+        self.written.fetch_add(1, Ordering::AcqRel);
+        self.cv.notify_all();
+    }
+
+    fn record_error(&self, e: String) {
+        *self.err.lock().unwrap() = Some(e);
+        self.cv.notify_all();
+    }
+
+    /// Mark that no more payload chunks will be issued for this file.
+    pub fn finish_issuing(&self) {
+        *self.done_issuing.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Wait until every issued chunk has been written.
+    pub fn wait_quiescent(&self) -> anyhow::Result<()> {
+        let mut done = self.done_issuing.lock().unwrap();
+        loop {
+            if let Some(e) = self.err.lock().unwrap().clone() {
+                anyhow::bail!("flush {} failed: {e}", self.name);
+            }
+            if *done
+                && self.written.load(Ordering::Acquire)
+                    == self.issued.load(Ordering::Acquire)
+            {
+                return Ok(());
+            }
+            // timed wait: `written` is bumped outside this mutex, so a
+            // pure wait could race the final notify.
+            let (g, _) = self
+                .cv
+                .wait_timeout(done, std::time::Duration::from_millis(10))
+                .unwrap();
+            done = g;
+        }
+    }
+
+    /// fsync without a trailer (raw payload files, e.g. TorchSnapshot
+    /// chunk files).
+    pub fn sync(&self) -> anyhow::Result<()> {
+        self.file.sync_all()?;
+        Ok(())
+    }
+
+    /// Write the trailer + footer and fsync — makes the file
+    /// self-describing and durable. Must be called after
+    /// `wait_quiescent`.
+    pub fn finalize(&self, layout: &FileLayout, log_end: u64) -> anyhow::Result<u64> {
+        let trailer = layout.encode_trailer();
+        let trailer_off = log_end.max(layout.fixed_region);
+        self.file.write_all_at(&trailer, trailer_off)?;
+        let footer =
+            FileLayout::encode_footer(trailer_off, trailer.len() as u64);
+        self.file.write_all_at(&footer, trailer_off + trailer.len() as u64)?;
+        self.file.sync_all()?;
+        Ok(trailer_off + trailer.len() as u64 + footer.len() as u64)
+    }
+}
+
+/// One queued write.
+pub struct WriteJob {
+    pub file: Arc<FlushFile>,
+    pub offset: u64,
+    pub data: Bytes,
+    pub label: String,
+}
+
+enum Msg {
+    Job(WriteJob),
+    Stop,
+}
+
+/// The writer-thread pool, shared across checkpoints of a rank.
+pub struct FlushPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl FlushPool {
+    pub fn new(threads: usize, timeline: Arc<Timeline>) -> Arc<Self> {
+        let (tx, rx) = crate::util::channel::unbounded::<Msg>();
+        let rx = Arc::new(rx);
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx: Arc<Receiver<Msg>> = rx.clone();
+                let tl = timeline.clone();
+                std::thread::Builder::new()
+                    .name(format!("ds-flush-{i}"))
+                    .spawn(move || {
+                        while let Ok(Msg::Job(job)) = rx.recv() {
+                            let start = tl.now_s();
+                            match job
+                                .file
+                                .file
+                                .write_all_at(job.data.as_slice(), job.offset)
+                            {
+                                Ok(()) => {
+                                    tl.record(
+                                        Tier::H2F,
+                                        &job.label,
+                                        job.data.len() as u64,
+                                        start,
+                                        tl.now_s(),
+                                    );
+                                    job.file.record_written();
+                                }
+                                Err(e) => {
+                                    job.file.record_error(e.to_string())
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn flusher")
+            })
+            .collect();
+        Arc::new(FlushPool { tx, workers })
+    }
+
+    /// Enqueue a chunk write. The file's issued counter is bumped here so
+    /// quiescence detection can never observe written > issued.
+    pub fn submit(&self, job: WriteJob) {
+        job.file.issued.fetch_add(1, Ordering::AcqRel);
+        self.tx.send(Msg::Job(job)).expect("flush pool alive");
+    }
+}
+
+impl Drop for FlushPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provider::layout::{EntryKind, LayoutEntry};
+    use crate::state::tensor::DType;
+
+    #[test]
+    fn concurrent_disjoint_writes_then_finalize() {
+        let dir = crate::util::TempDir::new("ds-test").unwrap();
+        let path = dir.path().join("f.ds");
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(4, tl);
+        let file = FlushFile::create(&path, "f.ds").unwrap();
+
+        let n = 64;
+        let chunk = 1024;
+        for i in 0..n {
+            pool.submit(WriteJob {
+                file: file.clone(),
+                offset: (i * chunk) as u64,
+                data: Bytes::from_vec(vec![i as u8; chunk]),
+                label: format!("c{i}"),
+            });
+        }
+        file.finish_issuing();
+        file.wait_quiescent().unwrap();
+
+        let layout = FileLayout {
+            file_name: "f.ds".into(),
+            fixed_region: (n * chunk) as u64,
+            entries: vec![LayoutEntry {
+                name: "t".into(),
+                kind: EntryKind::Tensor {
+                    dtype: DType::U8,
+                    shape: vec![n * chunk],
+                },
+                extents: vec![(0, (n * chunk) as u64)],
+            }],
+        };
+        file.finalize(&layout, (n * chunk) as u64).unwrap();
+
+        let bytes = std::fs::read(&path).unwrap();
+        for i in 0..n {
+            assert!(bytes[i * chunk..(i + 1) * chunk]
+                .iter()
+                .all(|&b| b == i as u8));
+        }
+        // footer parses back
+        let (toff, tlen) =
+            FileLayout::decode_footer(&bytes[bytes.len() - 24..]).unwrap();
+        let got = FileLayout::decode_trailer(
+            &bytes[toff as usize..(toff + tlen) as usize],
+        )
+        .unwrap();
+        assert_eq!(got, layout);
+    }
+
+    #[test]
+    fn quiescence_requires_finish_issuing() {
+        let dir = crate::util::TempDir::new("ds-test").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(2, tl);
+        let file = FlushFile::create(&dir.path().join("g.ds"), "g").unwrap();
+        pool.submit(WriteJob {
+            file: file.clone(),
+            offset: 0,
+            data: Bytes::from_vec(vec![7; 128]),
+            label: "x".into(),
+        });
+        let f2 = file.clone();
+        let h = std::thread::spawn(move || f2.wait_quiescent());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!h.is_finished(), "must wait for finish_issuing");
+        file.finish_issuing();
+        h.join().unwrap().unwrap();
+    }
+}

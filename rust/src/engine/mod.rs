@@ -1,0 +1,13 @@
+//! The data-movement engine (paper §V-A4): pinned host pool, D2H staging
+//! stream, multi-threaded flush pool, and the checkpoint engine that
+//! pipelines them.
+
+pub mod checkpoint;
+pub mod flush;
+pub mod pool;
+pub mod stager;
+
+pub use checkpoint::{CheckpointEngine, DataStatesEngine};
+pub use flush::{FlushFile, FlushPool, WriteJob};
+pub use pool::{PinnedPool, Segment};
+pub use stager::{SnapshotTracker, StageJob, Stager};

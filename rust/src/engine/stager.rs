@@ -1,0 +1,208 @@
+//! D2H staging stream (paper §V-A2, §V-B).
+//!
+//! One dedicated thread per rank plays the role of the GPU's D2H copy
+//! engine / dedicated CUDA stream: it drains staging jobs FIFO, allocates
+//! a pinned-pool segment (blocking on backpressure), copies the device
+//! tensor into it, and publishes the bytes to the waiting
+//! `StagedTensorProvider`. A [`SnapshotTracker`] counts outstanding
+//! copies per checkpoint so the trainer's update phase can gate on
+//! snapshot completion — the "lazy non-blocking capture" consistency
+//! rule.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::util::channel::{Receiver, Sender};
+use std::sync::{Condvar, Mutex};
+
+use super::pool::PinnedPool;
+use crate::metrics::{Tier, Timeline};
+use crate::provider::Bytes;
+use crate::state::tensor::DeviceTensor;
+
+/// Tracks the outstanding D2H copies of one snapshot (checkpoint
+/// version). `wait()` is the consistency gate before the optimizer
+/// update.
+pub struct SnapshotTracker {
+    remaining: Mutex<usize>,
+    failed: Mutex<Option<String>>,
+    cv: Condvar,
+}
+
+impl SnapshotTracker {
+    pub fn new(count: usize) -> Arc<Self> {
+        Arc::new(SnapshotTracker {
+            remaining: Mutex::new(count),
+            failed: Mutex::new(None),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn complete_one(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    pub fn fail(&self, err: String) {
+        *self.failed.lock().unwrap() = Some(err);
+        let mut r = self.remaining.lock().unwrap();
+        *r = 0;
+        self.cv.notify_all();
+    }
+
+    /// Block until every D2H copy of this snapshot completed. Returns the
+    /// seconds waited.
+    pub fn wait(&self) -> anyhow::Result<f64> {
+        let start = Instant::now();
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+        drop(r);
+        if let Some(e) = self.failed.lock().unwrap().take() {
+            anyhow::bail!("snapshot failed: {e}");
+        }
+        Ok(start.elapsed().as_secs_f64())
+    }
+
+    pub fn is_complete(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+}
+
+/// A single D2H staging request.
+pub struct StageJob {
+    pub name: String,
+    pub tensor: Arc<dyn DeviceTensor>,
+    /// Where the staged bytes are delivered (the StagedTensorProvider).
+    pub out: Sender<Bytes>,
+    pub tracker: Arc<SnapshotTracker>,
+}
+
+enum Msg {
+    Job(StageJob),
+    Stop,
+}
+
+/// The copy-stream thread.
+pub struct Stager {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Stager {
+    pub fn new(pool: PinnedPool, timeline: Arc<Timeline>) -> Self {
+        let (tx, rx) = crate::util::channel::unbounded::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("ds-d2h-stager".into())
+            .spawn(move || Self::run(rx, pool, timeline))
+            .expect("spawn stager");
+        Stager { tx, handle: Some(handle) }
+    }
+
+    fn run(rx: Receiver<Msg>, pool: PinnedPool, timeline: Arc<Timeline>) {
+        while let Ok(Msg::Job(job)) = rx.recv() {
+            let len = job.tensor.size_bytes();
+            // Blocking allocation = cache-full backpressure (§V-A2): the
+            // copy stream stalls until flushed segments are evicted.
+            let seg = match pool.alloc_blocking(len) {
+                Ok((seg, _waited)) => seg,
+                Err(e) => {
+                    job.tracker.fail(format!("{}: {e}", job.name));
+                    continue;
+                }
+            };
+            let start = timeline.now_s();
+            let res = seg.with_mut(|dst| job.tensor.stage_into(dst));
+            match res {
+                Ok(()) => {
+                    timeline.record(Tier::D2H, &job.name, len as u64,
+                                    start, timeline.now_s());
+                    // Receiver may have been dropped on abort; harmless.
+                    let _ = job.out.send(Bytes::from_segment(seg));
+                    job.tracker.complete_one();
+                }
+                Err(e) => job.tracker.fail(format!("{}: {e}", job.name)),
+            }
+        }
+    }
+
+    pub fn submit(&self, job: StageJob) {
+        self.tx.send(Msg::Job(job)).expect("stager alive");
+    }
+}
+
+impl Drop for Stager {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::tensor::SimDeviceTensor;
+
+    #[test]
+    fn stages_fifo_and_tracks_completion() {
+        let pool = PinnedPool::new(1 << 16);
+        let tl = Arc::new(Timeline::new());
+        let stager = Stager::new(pool, tl.clone());
+        let tracker = SnapshotTracker::new(3);
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (tx, rx) = crate::util::channel::bounded(1);
+            let data = vec![i as u8; 1024];
+            stager.submit(StageJob {
+                name: format!("t{i}"),
+                tensor: SimDeviceTensor::new(data),
+                out: tx,
+                tracker: tracker.clone(),
+            });
+            rxs.push(rx);
+        }
+        let waited = tracker.wait().unwrap();
+        assert!(waited >= 0.0);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let b = rx.recv().unwrap();
+            assert_eq!(b.as_slice(), &vec![i as u8; 1024][..]);
+        }
+        let (bytes, _) = tl.tier_summary(Tier::D2H);
+        assert_eq!(bytes, 3 * 1024);
+    }
+
+    #[test]
+    fn tracker_gate_blocks_until_done() {
+        let tracker = SnapshotTracker::new(1);
+        let t2 = tracker.clone();
+        let h = std::thread::spawn(move || t2.wait().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(!tracker.is_complete());
+        tracker.complete_one();
+        let waited = h.join().unwrap();
+        assert!(waited >= 0.015);
+    }
+
+    #[test]
+    fn oversized_tensor_fails_snapshot() {
+        let pool = PinnedPool::new(64);
+        let tl = Arc::new(Timeline::new());
+        let stager = Stager::new(pool, tl);
+        let tracker = SnapshotTracker::new(1);
+        let (tx, _rx) = crate::util::channel::bounded(1);
+        stager.submit(StageJob {
+            name: "huge".into(),
+            tensor: SimDeviceTensor::new(vec![0; 128]),
+            out: tx,
+            tracker: tracker.clone(),
+        });
+        assert!(tracker.wait().is_err());
+    }
+}

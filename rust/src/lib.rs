@@ -1,0 +1,54 @@
+//! # DataStates-LLM (reproduction)
+//!
+//! A scalable checkpointing runtime for transformer training using
+//! **composable state providers**, reproducing
+//! *DataStates-LLM: Scalable Checkpointing for Transformer Models Using
+//! Composable State Providers* (CS.DC 2026).
+//!
+//! The crate is organized as the Layer-3 coordinator of a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! - [`state`] — the checkpoint payload model: tensor shards, Python-like
+//!   control objects, and the 3D (TP/PP/DP + ZeRO-1) partitioner that
+//!   reproduces the paper's "3D checkpoint heterogeneity" (Table I).
+//! - [`provider`] — the paper's core contribution: the
+//!   [`provider::StateProvider`] chunk-stream abstraction, zero-copy
+//!   tensor providers, lazily-serializing object providers, hierarchical
+//!   composition, and the hybrid fixed-offset / log-append file layout.
+//! - [`engine`] — the data-movement engine: pinned host pool, D2H staging
+//!   stream, multi-threaded flush pool, lazy-capture consistency gate.
+//! - [`baselines`] — faithful re-implementations of the compared engines:
+//!   DeepSpeed-default (`torch.save`-style), TorchSnapshot-like, and
+//!   DataStates-LLM-Old (HPDC'24).
+//! - [`train`] — the training orchestrator: iteration phases with
+//!   immutability windows, real PJRT-backed steps and analytic phase
+//!   models.
+//! - [`runtime`] — PJRT wrapper: loads the AOT HLO-text artifacts
+//!   produced by `python/compile/aot.py` and keeps training state
+//!   device-resident between steps.
+//! - [`cluster`] + [`sim`] — a calibrated discrete-event model of the
+//!   Polaris testbed used to regenerate the paper-scale figures.
+//! - [`restore`] — checkpoint parsing, verification and resume.
+//! - [`metrics`] — throughput/blocked-time accounting and the per-tensor
+//!   multi-tier timelines of Fig 15.
+//! - [`harness`] — one driver per paper table/figure.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod harness;
+pub mod metrics;
+pub mod provider;
+pub mod restore;
+pub mod runtime;
+pub mod sim;
+pub mod state;
+pub mod train;
+pub mod util;
+
+pub use engine::checkpoint::{CheckpointEngine, DataStatesEngine};
+pub use provider::StateProvider;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,307 @@
+//! `datastates` CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
+//!            fig12|fig13|table3|fig14|fig15|files>
+//!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
+//!         [--ckpt-dir DIR] [--seed S] [--resume]
+//!   fsck <checkpoint-file>
+//!   partition <model> [--dp D]     (print one rank's composition)
+//!   bench-io [--dir DIR]           (quick real-plane flush sweep)
+
+use datastates::baselines::EngineKind;
+use datastates::config::{EngineConfig, LlmConfig, Parallelism};
+use datastates::harness;
+use datastates::metrics::{human_bps, human_bytes};
+use datastates::runtime::TrainSession;
+use datastates::train::TrainLoop;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("figures") => figures(&args),
+        Some("train") => train(&args),
+        Some("fsck") => fsck(&args),
+        Some("partition") => partition(&args),
+        Some("bench-io") => bench_io(&args),
+        Some("world") => world(&args),
+        _ => {
+            eprintln!(
+                "usage: datastates <figures|train|world|fsck|partition|\
+                 bench-io> [options]\n  see rust/src/main.rs for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn figures(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match which {
+        "all" => harness::all()?,
+        "table1" => harness::table1(),
+        "fig2" => harness::fig2(),
+        "fig3" => harness::fig3(),
+        "fig4" => harness::fig4(),
+        "fig7" => harness::fig7(),
+        "fig8" => harness::fig8(),
+        "fig9" => harness::fig9(),
+        "fig10" => harness::fig10_11("7B"),
+        "fig11" => harness::fig10_11("13B"),
+        "fig12" => harness::fig12(),
+        "fig13" => harness::fig13(),
+        "table3" => harness::table3(),
+        "fig14" => harness::fig14(),
+        "fig15" => harness::fig15()?,
+        "files" => harness::files_summary(),
+        "ablation" => harness::ablations(),
+        other => anyhow::bail!("unknown figure {other}"),
+    }
+    Ok(())
+}
+
+/// Real training over the AOT artifacts with checkpointing.
+fn train(args: &Args) -> anyhow::Result<()> {
+    let steps: u64 = args.num("steps", 20);
+    let interval: u64 = args.num("interval", 5);
+    let seed: i32 = args.num("seed", 42);
+    let artifacts = std::path::PathBuf::from(
+        args.get("artifacts").unwrap_or("artifacts"));
+    let ckpt_dir = std::path::PathBuf::from(
+        args.get("ckpt-dir").unwrap_or("/tmp/datastates-train"));
+    let kind = EngineKind::parse(
+        args.get("engine").unwrap_or("datastates-llm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown engine"))?;
+
+    println!("loading artifacts from {artifacts:?} ...");
+    let mut session = TrainSession::new(&artifacts, seed)?;
+    println!(
+        "model: {} params ({} leaves), batch {}, seq {}",
+        session.manifest.num_params,
+        session.manifest.leaves.len(),
+        session.manifest.batch,
+        session.manifest.seq_len
+    );
+
+    if args.get("resume").is_some() {
+        if let Some((v, dir)) =
+            datastates::restore::latest_version(&ckpt_dir)?
+        {
+            let it = session.restore_from(&dir)?;
+            println!("resumed from v{v} (iteration {it})");
+        } else {
+            println!("no checkpoint found; starting fresh");
+        }
+    }
+
+    let mut cfg = EngineConfig::with_dir(&ckpt_dir);
+    // e2e state is ~1.1 GB; keep a full snapshot resident
+    cfg.host_cache_bytes = 1400 << 20;
+    let mut engine = kind.build(cfg)?;
+
+    let base_iter = session.iteration;
+    let mut losses = Vec::new();
+    {
+        let session_cell = std::cell::RefCell::new(&mut session);
+        let losses_cell = std::cell::RefCell::new(&mut losses);
+        let mut tl = TrainLoop::new(engine.as_mut(), interval);
+        let report = tl.run(
+            steps,
+            |it| {
+                let mut s = session_cell.borrow_mut();
+                let tokens = s.sample_tokens(base_iter + it);
+                let loss = s.step(&tokens)?;
+                losses_cell.borrow_mut().push(loss);
+                println!("iter {:>4}  loss {loss:.4}",
+                         base_iter + it + 1);
+                Ok(Some(loss))
+            },
+            |_| Ok(()), // update happens inside the fused train_step
+            |_| Ok(session_cell.borrow_mut().checkpoint_state()),
+        )?;
+        println!(
+            "\n{} iters in {:.2}s ({:.2}s/iter), {} checkpoints, \
+             gate wait {:.3}s, launch {:.3}s",
+            steps,
+            report.wall_s,
+            report.mean_iteration_s(),
+            report.checkpoints,
+            report.total_gate_wait_s(),
+            report.total_launch_s(),
+        );
+    }
+    session.gc();
+    for m in engine.metrics() {
+        println!(
+            "ckpt: {} blocked {:.3}s persist {:.2}s eff {}",
+            human_bytes(m.bytes as f64),
+            m.blocked_s,
+            m.persist_s,
+            human_bps(m.effective_bps()),
+        );
+    }
+    if losses.len() >= 2 {
+        println!("loss: first {:.4} last {:.4}", losses[0],
+                 losses[losses.len() - 1]);
+    }
+    Ok(())
+}
+
+fn fsck(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: fsck <file>"))?;
+    let n = datastates::restore::fsck(std::path::Path::new(path))?;
+    println!("{path}: OK ({n} entries)");
+    Ok(())
+}
+
+fn partition(args: &Args) -> anyhow::Result<()> {
+    let model = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: partition <model>"))?;
+    let cfg = LlmConfig::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let mut par = Parallelism::paper_default(&cfg);
+    par.dp = args.num("dp", 1);
+    let cs = datastates::state::census(&cfg, &par);
+    println!("{model} TP={} PP={} DP={} -> {} ranks", par.tp, par.pp,
+             par.dp, par.world());
+    let rc = &cs.ranks[0];
+    println!("rank 0 ({} files, {}):", rc.files.len(),
+             human_bytes(rc.total_bytes() as f64));
+    for f in &rc.files {
+        println!(
+            "  {:<44} {:>12} tensors({}) + {:>10} objects  [{}]",
+            f.name,
+            human_bytes(f.tensor_bytes as f64),
+            f.n_tensors,
+            human_bytes(f.object_bytes as f64),
+            if f.on_device { "device" } else { "host" },
+        );
+    }
+    Ok(())
+}
+
+/// Quick real-plane I/O sweep (Fig 14 counterpart on this machine).
+fn bench_io(args: &Args) -> anyhow::Result<()> {
+    use datastates::state::census as mk_census;
+    use datastates::state::partition::materialize;
+    let dir = std::path::PathBuf::from(
+        args.get("dir").unwrap_or("/tmp/datastates-bench-io"));
+    let cfg = LlmConfig::by_name("7B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = mk_census(&cfg, &par);
+    println!("{:<22}{:>14}{:>16}", "engine", "blocked s", "eff tput");
+    for kind in EngineKind::all() {
+        let state = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut eng = kind.build(EngineConfig::with_dir(&dir))?;
+        eng.checkpoint(0, &state)?;
+        eng.wait_snapshot_complete()?;
+        eng.drain()?;
+        let m = &eng.metrics()[0];
+        println!("{:<22}{:>14.4}{:>16}", kind.label(), m.blocked_s,
+                 human_bps(m.effective_bps()));
+    }
+    Ok(())
+}
+
+/// Multi-rank synchronized checkpointing demo (threads as ranks).
+fn world(args: &Args) -> anyhow::Result<()> {
+    use datastates::state::partition::{census, materialize};
+    use datastates::train::distributed::{run_world, latest_committed,
+                                         WorldConfig};
+    let world_size: usize = args.num("ranks", 4);
+    let iterations: u64 = args.num("steps", 6);
+    let interval: u64 = args.num("interval", 2);
+    let root = std::path::PathBuf::from(
+        args.get("ckpt-dir").unwrap_or("/tmp/datastates-world"));
+    let _ = std::fs::remove_dir_all(&root);
+    let model = args.get("model").unwrap_or("3B");
+    let cfg = LlmConfig::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let par = Parallelism::new(world_size.min(4), world_size.div_ceil(4), 1);
+    let cs = census(&cfg, &par);
+    let kind = EngineKind::parse(
+        args.get("engine").unwrap_or("datastates-llm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown engine"))?;
+    println!("world: {world_size} ranks x {iterations} iters, ckpt \
+              every {interval}, engine {}", kind.label());
+    let report = run_world(
+        &WorldConfig {
+            world: world_size,
+            iterations,
+            interval,
+            engine: kind,
+            ckpt_root: root.clone(),
+            engine_cfg: EngineConfig::default(),
+        },
+        |rank, it| {
+            materialize(&cs.ranks[rank % cs.ranks.len()], 5e-5, 0.05,
+                        ((rank as u64) << 32) | it)
+        },
+        |_, _| std::thread::sleep(std::time::Duration::from_millis(20)),
+    )?;
+    for r in &report.ranks {
+        println!("  rank {:>2}: gate {:.4}s launch {:.4}s", r.rank,
+                 r.gate_wait_s, r.launch_s);
+    }
+    println!("wall {:.2}s; slowest rank blocked {:.4}s; committed \
+              versions {:?}; latest committed = {:?}",
+             report.wall_s, report.slowest_blocked_s(),
+             report.committed_versions, latest_committed(&root)?);
+    Ok(())
+}

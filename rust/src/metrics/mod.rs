@@ -1,0 +1,210 @@
+//! Measurement plumbing: throughput accounting, blocked-time attribution
+//! and the per-tensor multi-tier timelines behind Figure 15.
+
+use std::time::Instant;
+
+use std::sync::Mutex;
+/// Which physical path a transfer used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// GPU → host staging (PCIe in the paper; `to_literal_sync`/memcpy
+    /// here).
+    D2H,
+    /// Host → persistent storage flush.
+    H2F,
+    /// Serialization of non-tensor objects.
+    Serialize,
+}
+
+/// One interval on the Fig 15 timeline.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub tier: Tier,
+    /// Object name (tensor or file).
+    pub name: String,
+    pub bytes: u64,
+    /// Seconds since the timeline epoch.
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+
+    pub fn throughput_bps(&self) -> f64 {
+        if self.duration_s() <= 0.0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.duration_s()
+        }
+    }
+}
+
+/// Thread-safe collector of transfer spans (one per checkpoint run).
+#[derive(Debug)]
+pub struct Timeline {
+    epoch: Instant,
+    spans: Mutex<Vec<Span>>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline { epoch: Instant::now(), spans: Mutex::new(Vec::new()) }
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a span with explicit timestamps (virtual-time friendly).
+    pub fn record(&self, tier: Tier, name: impl Into<String>, bytes: u64,
+                  start_s: f64, end_s: f64) {
+        self.spans.lock().unwrap().push(Span {
+            tier,
+            name: name.into(),
+            bytes,
+            start_s,
+            end_s,
+        });
+    }
+
+    /// Time a closure and record it.
+    pub fn timed<T>(&self, tier: Tier, name: &str, bytes: u64,
+                    f: impl FnOnce() -> T) -> T {
+        let start = self.now_s();
+        let out = f();
+        self.record(tier, name, bytes, start, self.now_s());
+        out
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Aggregate bytes and busy-time per tier.
+    pub fn tier_summary(&self, tier: Tier) -> (u64, f64) {
+        let spans = self.spans.lock().unwrap();
+        let bytes = spans
+            .iter()
+            .filter(|s| s.tier == tier)
+            .map(|s| s.bytes)
+            .sum();
+        let busy = union_time(
+            spans.iter().filter(|s| s.tier == tier)
+                 .map(|s| (s.start_s, s.end_s)),
+        );
+        (bytes, busy)
+    }
+}
+
+/// Total covered time of a set of (possibly overlapping) intervals.
+pub fn union_time(iter: impl Iterator<Item = (f64, f64)>) -> f64 {
+    let mut iv: Vec<(f64, f64)> = iter.collect();
+    iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    let mut cur: Option<(f64, f64)> = None;
+    for (s, e) in iv {
+        match cur {
+            None => cur = Some((s, e)),
+            Some((cs, ce)) => {
+                if s <= ce {
+                    cur = Some((cs, ce.max(e)));
+                } else {
+                    total += ce - cs;
+                    cur = Some((s, e));
+                }
+            }
+        }
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Blocking/throughput metrics for one checkpoint (paper §VI-C3).
+#[derive(Debug, Clone, Default)]
+pub struct CkptMetrics {
+    /// Seconds training was blocked by this checkpoint (launch +
+    /// consistency-gate waits).
+    pub blocked_s: f64,
+    /// Total checkpoint payload bytes.
+    pub bytes: u64,
+    /// Wall seconds until fully persistent.
+    pub persist_s: f64,
+    pub serialize_s: f64,
+    pub d2h_s: f64,
+    pub h2f_s: f64,
+}
+
+impl CkptMetrics {
+    /// Paper's "effective checkpoint throughput": size / blocked time.
+    pub fn effective_bps(&self) -> f64 {
+        if self.blocked_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.bytes as f64 / self.blocked_s
+        }
+    }
+}
+
+/// Pretty-print helpers shared by the harness drivers.
+pub fn human_bytes(b: f64) -> String {
+    const U: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = b;
+    let mut i = 0;
+    while v >= 1000.0 && i < U.len() - 1 {
+        v /= 1000.0;
+        i += 1;
+    }
+    format!("{v:.2} {}", U[i])
+}
+
+pub fn human_bps(b: f64) -> String {
+    format!("{}/s", human_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_time_merges_overlaps() {
+        let t = union_time(
+            vec![(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)].into_iter(),
+        );
+        assert!((t - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_records_and_summarizes() {
+        let tl = Timeline::new();
+        tl.record(Tier::D2H, "t0", 1000, 0.0, 1.0);
+        tl.record(Tier::D2H, "t1", 1000, 0.5, 1.5);
+        tl.record(Tier::H2F, "t0", 1000, 1.0, 3.0);
+        let (bytes, busy) = tl.tier_summary(Tier::D2H);
+        assert_eq!(bytes, 2000);
+        assert!((busy - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_throughput() {
+        let m = CkptMetrics { blocked_s: 2.0, bytes: 4_000_000_000,
+                              ..Default::default() };
+        assert!((m.effective_bps() - 2e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_bytes(1500.0), "1.50 KB");
+        assert_eq!(human_bps(2.5e9), "2.50 GB/s");
+    }
+}

@@ -1,0 +1,112 @@
+//! Zero-copy byte views.
+//!
+//! [`Bytes`] is a cheaply-cloneable view into reference-counted storage —
+//! either an owned buffer or a segment of the pinned host pool. This is
+//! what lets tensor providers expose checkpoint payloads *without any
+//! serialization or copy* (§IV-D: "contiguous tensors already expose
+//! byte-addressable buffers that can be written directly").
+
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Backing storage of a [`Bytes`] view.
+#[derive(Clone)]
+pub enum Backing {
+    /// Plain reference-counted heap buffer.
+    Owned(Arc<Vec<u8>>),
+    /// A segment of the pinned host pool; freeing is tied to the
+    /// segment's lifetime (all clones dropped → segment returns to pool).
+    Pool(Arc<crate::engine::pool::Segment>),
+}
+
+/// A cheaply-cloneable `[u8]` view with zero-copy sub-slicing.
+#[derive(Clone)]
+pub struct Bytes {
+    backing: Backing,
+    range: Range<usize>,
+}
+
+impl Bytes {
+    pub fn from_vec(v: Vec<u8>) -> Self {
+        let len = v.len();
+        Bytes { backing: Backing::Owned(Arc::new(v)), range: 0..len }
+    }
+
+    pub fn from_arc(v: Arc<Vec<u8>>) -> Self {
+        let len = v.len();
+        Bytes { backing: Backing::Owned(v), range: 0..len }
+    }
+
+    pub fn from_segment(seg: Arc<crate::engine::pool::Segment>) -> Self {
+        let len = seg.len();
+        Bytes { backing: Backing::Pool(seg), range: 0..len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.range.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    /// Zero-copy sub-slice (relative to this view).
+    pub fn slice(&self, range: Range<usize>) -> Bytes {
+        assert!(range.end <= self.len(), "slice out of range");
+        Bytes {
+            backing: self.backing.clone(),
+            range: self.range.start + range.start
+                ..self.range.start + range.end,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.backing {
+            Backing::Owned(v) => &v[self.range.clone()],
+            Backing::Pool(s) => &s.as_slice()[self.range.clone()],
+        }
+    }
+
+    /// Split into chunks of at most `chunk` bytes (zero-copy).
+    pub fn chunks(&self, chunk: usize) -> Vec<Bytes> {
+        assert!(chunk > 0);
+        let mut out = Vec::with_capacity(self.len().div_ceil(chunk));
+        let mut off = 0;
+        while off < self.len() {
+            let end = (off + chunk).min(self.len());
+            out.push(self.slice(off..end));
+            off = end;
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_chunks() {
+        let b = Bytes::from_vec((0..100u8).collect());
+        let s = b.slice(10..20);
+        assert_eq!(s.as_slice(), &(10..20u8).collect::<Vec<_>>()[..]);
+        let cs = b.chunks(30);
+        assert_eq!(cs.len(), 4);
+        assert_eq!(cs[3].len(), 10);
+        let total: usize = cs.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn clones_share_storage() {
+        let b = Bytes::from_vec(vec![1, 2, 3, 4]);
+        let c = b.clone();
+        assert_eq!(b.as_slice().as_ptr(), c.as_slice().as_ptr());
+    }
+}

@@ -1,0 +1,198 @@
+//! Composite provider: hierarchical merge of chunk streams (§V-A3).
+//!
+//! A composite presents one stream per checkpoint file. Fair round-robin
+//! polling over children gives the engine the paper's scheduling for
+//! free: at request time the tensor providers are `Ready` immediately
+//! (zero-copy) or become ready as the copy stream delivers them, while
+//! object providers stay `Pending` until the serializer pool finishes —
+//! so large tensor chunks flow first and serialization overlaps I/O.
+
+use super::layout::FileLayout;
+use super::{Poll, StateProvider};
+
+pub struct CompositeProvider {
+    file_name: String,
+    fixed_region: u64,
+    children: Vec<Box<dyn StateProvider>>,
+    next: usize,
+}
+
+impl CompositeProvider {
+    pub fn new(file_name: impl Into<String>, fixed_region: u64,
+               children: Vec<Box<dyn StateProvider>>) -> Self {
+        CompositeProvider {
+            file_name: file_name.into(),
+            fixed_region,
+            children,
+            next: 0,
+        }
+    }
+
+    pub fn file_name(&self) -> &str {
+        &self.file_name
+    }
+
+    /// Final file layout; call only when `is_done()`.
+    pub fn file_layout(&self) -> FileLayout {
+        debug_assert!(self.is_done());
+        FileLayout {
+            file_name: self.file_name.clone(),
+            fixed_region: self.fixed_region,
+            entries: self
+                .children
+                .iter()
+                .flat_map(|c| c.layout_entries())
+                .collect(),
+        }
+    }
+}
+
+impl StateProvider for CompositeProvider {
+    fn size_hint(&self) -> u64 {
+        self.children.iter().map(|c| c.size_hint()).sum()
+    }
+
+    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+        if self.children.is_empty() {
+            return Ok(Poll::Done);
+        }
+        let n = self.children.len();
+        let mut any_pending = false;
+        for i in 0..n {
+            let idx = (self.next + i) % n;
+            if self.children[idx].is_done() {
+                continue;
+            }
+            match self.children[idx].poll_chunk()? {
+                Poll::Ready(c) => {
+                    // resume after this child next time (fairness)
+                    self.next = (idx + 1) % n;
+                    return Ok(Poll::Ready(c));
+                }
+                Poll::Pending => any_pending = true,
+                Poll::Done => {}
+            }
+        }
+        if any_pending {
+            Ok(Poll::Pending)
+        } else {
+            Ok(Poll::Done)
+        }
+    }
+
+    fn layout_entries(&self) -> Vec<super::layout::LayoutEntry> {
+        self.children.iter().flat_map(|c| c.layout_entries()).collect()
+    }
+
+    fn is_done(&self) -> bool {
+        self.children.iter().all(|c| c.is_done())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::provider::layout::LogCursor;
+    use crate::provider::{Bytes, ObjectProvider, TensorProvider};
+    use crate::state::object::PyObj;
+    use crate::state::tensor::DType;
+
+    /// Drain a composite, recording (label, offset, bytes) in arrival
+    /// order; delayed serialization is delivered after `delay_polls`.
+    fn drain(
+        composite: &mut CompositeProvider,
+        feed: Option<(crate::util::channel::Sender<Vec<u8>>, Vec<u8>, usize)>,
+    ) -> Vec<(String, u64, usize)> {
+        let mut order = Vec::new();
+        let mut polls = 0usize;
+        let mut feed = feed;
+        loop {
+            if let Some((tx, bytes, at)) = &feed {
+                if polls >= *at {
+                    tx.send(bytes.clone()).unwrap();
+                    feed = None;
+                }
+            }
+            polls += 1;
+            match composite.poll_chunk().unwrap() {
+                Poll::Ready(c) => {
+                    order.push((c.label.clone(), c.offset, c.data.len()))
+                }
+                Poll::Done => break,
+                Poll::Pending => {}
+            }
+            assert!(polls < 10_000, "livelock");
+        }
+        order
+    }
+
+    #[test]
+    fn tensors_flow_while_object_pends() {
+        // 2 tensors ready now; 1 object serialized only after 5 polls.
+        let cursor = Arc::new(LogCursor::new(200));
+        let t0 = TensorProvider::new("t0", DType::U8, vec![100],
+                                     Bytes::from_vec(vec![1; 100]), 0, 40);
+        let t1 = TensorProvider::new("t1", DType::U8, vec![100],
+                                     Bytes::from_vec(vec![2; 100]), 100,
+                                     40);
+        let (tx, rx) = crate::util::channel::bounded(1);
+        let obj_bytes = PyObj::synthetic_metadata(128, 5).to_bytes();
+        let o = ObjectProvider::new("meta", 128, rx, cursor, 64);
+        let mut comp = CompositeProvider::new(
+            "f.pt", 200,
+            vec![Box::new(t0), Box::new(t1), Box::new(o)],
+        );
+        let order = drain(&mut comp, Some((tx, obj_bytes.clone(), 5)));
+
+        // all tensor chunks come before any object chunk
+        let first_obj =
+            order.iter().position(|(l, _, _)| l == "meta").unwrap();
+        let last_tensor = order
+            .iter()
+            .rposition(|(l, _, _)| l.starts_with('t'))
+            .unwrap();
+        assert!(last_tensor < first_obj,
+                "tensor I/O should precede serialized chunks: {order:?}");
+
+        // layout covers every byte exactly once
+        assert!(comp.is_done());
+        let layout = comp.file_layout();
+        let mut extents: Vec<(u64, u64)> = layout
+            .entries
+            .iter()
+            .flat_map(|e| e.extents.iter().copied())
+            .collect();
+        extents.sort();
+        let mut cur = 0;
+        for (off, len) in &extents {
+            assert_eq!(*off, cur, "gap/overlap at {off}");
+            cur = off + len;
+        }
+        assert_eq!(cur, 200 + obj_bytes.len() as u64);
+    }
+
+    #[test]
+    fn empty_composite_is_done() {
+        let mut c = CompositeProvider::new("e.pt", 0, vec![]);
+        assert!(matches!(c.poll_chunk().unwrap(), Poll::Done));
+    }
+
+    #[test]
+    fn round_robin_is_fair_across_tensors() {
+        let mk = |name: &str, base| {
+            Box::new(TensorProvider::new(
+                name, DType::U8, vec![60],
+                Bytes::from_vec(vec![0; 60]), base, 20,
+            )) as Box<dyn StateProvider>
+        };
+        let mut comp = CompositeProvider::new(
+            "f.pt", 120, vec![mk("a", 0), mk("b", 60)]);
+        let order = drain(&mut comp, None);
+        // strict alternation a,b,a,b,...
+        let labels: Vec<&str> =
+            order.iter().map(|(l, _, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["a", "b", "a", "b", "a", "b"]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Lightweight LZ-style compression (paper §VII future work, paired with
+//! differential checkpointing in `delta.rs`).
+//!
+//! Greedy hash-chain LZ with a 64 KB window and byte-aligned token
+//! stream: `literal-run | match(offset, len)`. Not a zstd competitor —
+//! the point is an in-tree, dependency-free transform whose throughput
+//! and ratio the ablation bench can measure against checkpoint payload
+//! classes (fp32 noise compresses ~0%, control state and zero-heavy
+//! buffers compress well), quantifying §VII's claim that data reduction
+//! must be selective.
+
+use crate::util::codec::{Decoder, Encoder};
+
+pub const LZ_MAGIC: u32 = 0x4C5A_4453; // "LZDS"
+const WINDOW: usize = 64 << 10;
+const MIN_MATCH: usize = 6;
+const MAX_MATCH: usize = 255 + MIN_MATCH;
+const HASH_BITS: u32 = 15;
+
+fn hash(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(0x9E3779B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `src`. Output grows at most ~1/128 over the input for
+/// incompressible data.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(src.len() / 2 + 32);
+    e.u32(LZ_MAGIC);
+    e.u64(src.len() as u64);
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    let mut out: Vec<u8> = Vec::with_capacity(src.len() / 2 + 16);
+
+    let flush_literals = |out: &mut Vec<u8>, lits: &[u8]| {
+        let mut rest = lits;
+        while !rest.is_empty() {
+            let take = rest.len().min(127);
+            out.push(take as u8); // 0xxxxxxx: literal run
+            out.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+        }
+    };
+
+    while i + 4 <= src.len() {
+        let h = hash(&src[i..]);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX && i - cand <= WINDOW {
+            // extend the match
+            let mut len = 0usize;
+            let max = (src.len() - i).min(MAX_MATCH);
+            while len < max && src[cand + len] == src[i + len] {
+                len += 1;
+            }
+            if len >= MIN_MATCH {
+                flush_literals(&mut out, &src[lit_start..i]);
+                let offset = (i - cand) as u16;
+                out.push(0x80 | 0); // match token
+                out.push((len - MIN_MATCH) as u8);
+                out.extend_from_slice(&offset.to_le_bytes());
+                i += len;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    flush_literals(&mut out, &src[lit_start..]);
+    e.bytes(&out);
+    e.finish()
+}
+
+/// Decompress a buffer produced by [`compress`].
+pub fn decompress(src: &[u8]) -> anyhow::Result<Vec<u8>> {
+    let mut d = Decoder::new(src);
+    anyhow::ensure!(d.u32()? == LZ_MAGIC, "bad lz magic");
+    let orig_len = d.u64()? as usize;
+    let stream = d.bytes()?;
+    anyhow::ensure!(d.done(), "trailing bytes");
+    let mut out = Vec::with_capacity(orig_len);
+    let mut i = 0usize;
+    while i < stream.len() {
+        let tok = stream[i];
+        i += 1;
+        if tok & 0x80 == 0 {
+            // literal run
+            let n = tok as usize;
+            anyhow::ensure!(i + n <= stream.len(), "truncated literals");
+            out.extend_from_slice(&stream[i..i + n]);
+            i += n;
+        } else {
+            anyhow::ensure!(i + 3 <= stream.len(), "truncated match");
+            let len = stream[i] as usize + MIN_MATCH;
+            let offset = u16::from_le_bytes([stream[i + 1],
+                                             stream[i + 2]]) as usize;
+            i += 3;
+            anyhow::ensure!(offset != 0 && offset <= out.len(),
+                            "bad match offset");
+            let start = out.len() - offset;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    anyhow::ensure!(out.len() == orig_len,
+                    "length mismatch: {} vs {orig_len}", out.len());
+    Ok(out)
+}
+
+/// Compression ratio helper: output/input.
+pub fn ratio(src: &[u8]) -> f64 {
+    compress(src).len() as f64 / src.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_text_like() {
+        let src = "the quick brown fox jumps over the lazy dog. "
+            .repeat(500)
+            .into_bytes();
+        let c = compress(&src);
+        assert!(c.len() < src.len() / 4, "{} vs {}", c.len(), src.len());
+        assert_eq!(decompress(&c).unwrap(), src);
+    }
+
+    #[test]
+    fn roundtrip_zeros_and_random() {
+        let zeros = vec![0u8; 100_000];
+        let c = compress(&zeros);
+        assert!(c.len() < zeros.len() / 20);
+        assert_eq!(decompress(&c).unwrap(), zeros);
+
+        let mut noise = vec![0u8; 100_000];
+        Rng::new(1).fill_bytes(&mut noise);
+        let c = compress(&noise);
+        assert!(c.len() < noise.len() + noise.len() / 64 + 64);
+        assert_eq!(decompress(&c).unwrap(), noise);
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        for src in [vec![], vec![1u8], vec![2u8; 5]] {
+            assert_eq!(decompress(&compress(&src)).unwrap(), src);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_arbitrary() {
+        crate::util::proptest::check(0x12F, 60, |rng| {
+            let n = rng.range(0, 20_000);
+            let mut v = vec![0u8; n];
+            // mix of runs and noise
+            let mut i = 0;
+            while i < n {
+                let run = rng.range(1, 400).min(n - i);
+                if rng.bool() {
+                    let b = rng.next_u64() as u8;
+                    v[i..i + run].iter_mut().for_each(|x| *x = b);
+                } else {
+                    rng.fill_bytes(&mut v[i..i + run]);
+                }
+                i += run;
+            }
+            let back = decompress(&compress(&v))?;
+            anyhow::ensure!(back == v, "roundtrip mismatch (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_is_detected_or_differs() {
+        let src = b"abcabcabcabcabcabcabcabc".repeat(100);
+        let mut c = compress(&src);
+        let last = c.len() - 1;
+        c[last] ^= 0xFF;
+        match decompress(&c) {
+            Ok(out) => assert_ne!(out, src),
+            Err(_) => {}
+        }
+    }
+}

@@ -1,0 +1,257 @@
+//! The hybrid fixed-offset / log-structured-append checkpoint file layout
+//! (paper §V-A5).
+//!
+//! ```text
+//! ┌────────────────────────────────────────────────────────────┐
+//! │ tensor region: offsets PRECOMPUTED from known tensor sizes │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ log region: serialized-object chunks, CONCURRENT APPEND    │
+//! │   (sizes unknown a priori; offsets claimed from a cursor)  │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ trailer: encoded FileLayout (names, kinds, offsets, sizes) │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ footer: trailer_offset u64 | trailer_len u64 | MAGIC u64   │
+//! └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Tensors are written at fixed offsets *while* objects are still being
+//! serialized; object chunks land wherever the log cursor was when their
+//! bytes became available. The trailer — written last — is what makes the
+//! file self-describing, so metadata construction never blocks bulk I/O
+//! (the inversion of the state-of-the-art order that §V-A5 describes).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::state::tensor::DType;
+use crate::util::codec::{Decoder, Encoder};
+
+pub const MAGIC: u64 = 0x4453_4C4C_4D30_3031; // "DSLLM001"
+pub const FOOTER_BYTES: u64 = 24;
+
+/// What one layout entry describes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EntryKind {
+    Tensor { dtype: DType, shape: Vec<usize> },
+    /// A serialized object; may span several log chunks, recorded in
+    /// order.
+    Object,
+}
+
+fn dtype_tag(d: DType) -> u8 {
+    match d {
+        DType::F16 => 0,
+        DType::BF16 => 1,
+        DType::F32 => 2,
+        DType::I32 => 3,
+        DType::U8 => 4,
+    }
+}
+
+fn dtype_from_tag(t: u8) -> anyhow::Result<DType> {
+    Ok(match t {
+        0 => DType::F16,
+        1 => DType::BF16,
+        2 => DType::F32,
+        3 => DType::I32,
+        4 => DType::U8,
+        _ => anyhow::bail!("bad dtype tag {t}"),
+    })
+}
+
+/// One logical object in the file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub kind: EntryKind,
+    /// (offset, len) extents, in logical order. Tensors have exactly one
+    /// extent in the fixed region; objects may have several in the log
+    /// region (concurrent append interleaves producers).
+    pub extents: Vec<(u64, u64)>,
+}
+
+impl LayoutEntry {
+    pub fn total_len(&self) -> u64 {
+        self.extents.iter().map(|(_, l)| l).sum()
+    }
+}
+
+/// The self-describing trailer of one checkpoint file.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FileLayout {
+    pub file_name: String,
+    /// Bytes in the fixed (tensor) region.
+    pub fixed_region: u64,
+    pub entries: Vec<LayoutEntry>,
+}
+
+impl FileLayout {
+    pub fn encode_trailer(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.str(&self.file_name).u64(self.fixed_region)
+            .u64(self.entries.len() as u64);
+        for entry in &self.entries {
+            e.str(&entry.name);
+            match &entry.kind {
+                EntryKind::Tensor { dtype, shape } => {
+                    e.u8(0).u8(dtype_tag(*dtype))
+                        .u64(shape.len() as u64);
+                    for &s in shape {
+                        e.u64(s as u64);
+                    }
+                }
+                EntryKind::Object => {
+                    e.u8(1);
+                }
+            }
+            e.u64(entry.extents.len() as u64);
+            for (off, len) in &entry.extents {
+                e.u64(*off).u64(*len);
+            }
+        }
+        e.finish()
+    }
+
+    pub fn decode_trailer(bytes: &[u8]) -> anyhow::Result<FileLayout> {
+        let mut d = Decoder::new(bytes);
+        let file_name = d.str()?;
+        let fixed_region = d.u64()?;
+        let n_entries = d.u64()? as usize;
+        anyhow::ensure!(n_entries <= bytes.len(), "entry count too big");
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let name = d.str()?;
+            let kind = match d.u8()? {
+                0 => {
+                    let dtype = dtype_from_tag(d.u8()?)?;
+                    let ndim = d.u64()? as usize;
+                    anyhow::ensure!(ndim <= 16, "too many dims");
+                    let mut shape = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        shape.push(d.u64()? as usize);
+                    }
+                    EntryKind::Tensor { dtype, shape }
+                }
+                1 => EntryKind::Object,
+                t => anyhow::bail!("bad entry kind {t}"),
+            };
+            let n_ext = d.u64()? as usize;
+            anyhow::ensure!(n_ext <= bytes.len(), "extent count too big");
+            let mut extents = Vec::with_capacity(n_ext);
+            for _ in 0..n_ext {
+                extents.push((d.u64()?, d.u64()?));
+            }
+            entries.push(LayoutEntry { name, kind, extents });
+        }
+        anyhow::ensure!(d.done(), "trailing bytes in trailer");
+        Ok(FileLayout { file_name, fixed_region, entries })
+    }
+
+    /// Encode the 24-byte footer.
+    pub fn encode_footer(trailer_offset: u64, trailer_len: u64) -> [u8; 24] {
+        let mut f = [0u8; 24];
+        f[0..8].copy_from_slice(&trailer_offset.to_le_bytes());
+        f[8..16].copy_from_slice(&trailer_len.to_le_bytes());
+        f[16..24].copy_from_slice(&MAGIC.to_le_bytes());
+        f
+    }
+
+    /// Parse a footer; returns (trailer_offset, trailer_len).
+    pub fn decode_footer(f: &[u8]) -> anyhow::Result<(u64, u64)> {
+        anyhow::ensure!(f.len() == 24, "footer must be 24 bytes");
+        let magic = u64::from_le_bytes(f[16..24].try_into()?);
+        anyhow::ensure!(magic == MAGIC, "bad magic {magic:#x}");
+        Ok((
+            u64::from_le_bytes(f[0..8].try_into()?),
+            u64::from_le_bytes(f[8..16].try_into()?),
+        ))
+    }
+}
+
+/// Concurrent log-region cursor: producers claim disjoint extents with a
+/// single atomic add (the "concurrent-log-structured append" of §V-A5).
+#[derive(Debug)]
+pub struct LogCursor {
+    next: AtomicU64,
+}
+
+impl LogCursor {
+    /// Starts at the end of the fixed tensor region.
+    pub fn new(fixed_region_end: u64) -> Self {
+        LogCursor { next: AtomicU64::new(fixed_region_end) }
+    }
+
+    /// Claim `len` bytes; returns the extent's start offset.
+    pub fn claim(&self, len: u64) -> u64 {
+        self.next.fetch_add(len, Ordering::Relaxed)
+    }
+
+    /// Current end of the log region.
+    pub fn end(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+}
+
+/// Plan the fixed region: assign offsets to known-size tensors.
+/// Returns (offsets aligned to `align`, end of fixed region).
+pub fn plan_fixed_region(sizes: &[u64], align: u64) -> (Vec<u64>, u64) {
+    let mut offsets = Vec::with_capacity(sizes.len());
+    let mut cur = 0u64;
+    for &s in sizes {
+        cur = cur.div_ceil(align) * align;
+        offsets.push(cur);
+        cur += s;
+    }
+    (offsets, cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailer_roundtrip() {
+        let l = FileLayout {
+            file_name: "layer_00.pt".into(),
+            fixed_region: 4096,
+            entries: vec![LayoutEntry {
+                name: "w".into(),
+                kind: EntryKind::Tensor {
+                    dtype: DType::F16,
+                    shape: vec![64, 32],
+                },
+                extents: vec![(0, 4096)],
+            }],
+        };
+        let t = l.encode_trailer();
+        assert_eq!(FileLayout::decode_trailer(&t).unwrap(), l);
+    }
+
+    #[test]
+    fn footer_roundtrip() {
+        let f = FileLayout::encode_footer(123, 456);
+        assert_eq!(FileLayout::decode_footer(&f).unwrap(), (123, 456));
+        let mut bad = f;
+        bad[20] ^= 0xFF;
+        assert!(FileLayout::decode_footer(&bad).is_err());
+    }
+
+    #[test]
+    fn fixed_region_is_disjoint_and_aligned() {
+        let (offs, end) = plan_fixed_region(&[100, 200, 50], 64);
+        assert_eq!(offs, vec![0, 128, 384]);
+        assert_eq!(end, 434);
+        for w in offs.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn log_cursor_claims_disjoint() {
+        let c = LogCursor::new(1000);
+        let a = c.claim(10);
+        let b = c.claim(20);
+        let d = c.claim(5);
+        assert_eq!((a, b, d), (1000, 1010, 1030));
+        assert_eq!(c.end(), 1035);
+    }
+}

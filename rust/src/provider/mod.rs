@@ -1,0 +1,74 @@
+//! Composable state providers (paper §V-A3) — the core contribution.
+//!
+//! A [`StateProvider`] sits between the training runtime and the data
+//! movement engine. It encapsulates *per-data-structure* knowledge —
+//! residency, layout, (de)serialization needs — and presents a uniform
+//! stream-oriented view: a sequence of [`Chunk`]s, each "N bytes that
+//! belong at offset O of the checkpoint file". The engine stays agnostic
+//! to 3D heterogeneity and simply drains competing chunk streams.
+//!
+//! The three implementations mirror the paper:
+//!
+//! - [`tensor_provider::TensorProvider`] — zero-copy memory views over
+//!   host-resident tensors (no serialization at all, §IV-D),
+//! - [`tensor_provider::StagedTensorProvider`] — device tensors whose
+//!   bytes arrive asynchronously from the D2H copy stream,
+//! - [`object_provider::ObjectProvider`] — Python-like object graphs
+//!   serialized *lazily on a worker pool*, claiming log-region extents as
+//!   bytes materialize,
+//! - [`composite::CompositeProvider`] — hierarchical merge producing one
+//!   stream per file, tensors naturally first (§V-A5 overlap).
+
+pub mod bytes;
+pub mod composite;
+pub mod compress;
+pub mod delta;
+pub mod layout;
+pub mod object_provider;
+pub mod serializer;
+pub mod tensor_provider;
+
+pub use bytes::Bytes;
+pub use composite::CompositeProvider;
+pub use layout::{FileLayout, LayoutEntry, LogCursor};
+pub use object_provider::ObjectProvider;
+pub use serializer::SerializerPool;
+pub use tensor_provider::{StagedTensorProvider, TensorProvider};
+
+/// One unit of I/O: bytes destined for a file offset.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    /// Absolute offset within the checkpoint file.
+    pub offset: u64,
+    pub data: Bytes,
+    /// Originating object, for the Fig 15 timeline.
+    pub label: String,
+}
+
+/// Result of polling a provider for its next chunk.
+pub enum Poll {
+    /// A chunk is ready for I/O.
+    Ready(Chunk),
+    /// More chunks will arrive later (D2H or serialization in flight);
+    /// poll other providers meanwhile — this is exactly the freedom the
+    /// engine uses to overlap serialization with bulk I/O.
+    Pending,
+    /// Stream exhausted; layout entries are final.
+    Done,
+}
+
+/// A stream-oriented producer of checkpoint chunks.
+pub trait StateProvider: Send {
+    /// Best-known total payload size (exact for tensors; an estimate for
+    /// not-yet-serialized objects). Used for scheduling hints only.
+    fn size_hint(&self) -> u64;
+
+    /// Pull the next chunk.
+    fn poll_chunk(&mut self) -> anyhow::Result<Poll>;
+
+    /// Layout entries for the trailer. Only complete after `Done`.
+    fn layout_entries(&self) -> Vec<LayoutEntry>;
+
+    /// True once the provider has returned `Done`.
+    fn is_done(&self) -> bool;
+}

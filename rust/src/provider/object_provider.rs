@@ -1,0 +1,173 @@
+//! Object provider: lazy serialization into the log-append region.
+
+use std::sync::Arc;
+
+use crate::util::channel::Receiver;
+
+use super::layout::{EntryKind, LayoutEntry, LogCursor};
+use super::{Bytes, Chunk, Poll, StateProvider};
+
+/// Provider for a Python-like object graph.
+///
+/// Serialization was submitted to the [`super::SerializerPool`] when the
+/// provider was constructed; until the bytes arrive the provider reports
+/// `Pending`, letting the engine drain tensor streams meanwhile. Once
+/// serialized, the provider claims log-region extents *chunk by chunk*
+/// from the shared [`LogCursor`], so concurrent object providers
+/// interleave in the log region — the "concurrent-log-structured append"
+/// of §V-A5.
+pub struct ObjectProvider {
+    name: String,
+    estimate: u64,
+    rx: Receiver<Vec<u8>>,
+    cursor: Arc<LogCursor>,
+    chunk_bytes: usize,
+    data: Option<Bytes>,
+    sent: usize,
+    extents: Vec<(u64, u64)>,
+    done: bool,
+}
+
+impl ObjectProvider {
+    pub fn new(name: impl Into<String>, estimate: u64,
+               rx: Receiver<Vec<u8>>, cursor: Arc<LogCursor>,
+               chunk_bytes: usize) -> Self {
+        ObjectProvider {
+            name: name.into(),
+            estimate,
+            rx,
+            cursor,
+            chunk_bytes: chunk_bytes.max(1),
+            data: None,
+            sent: 0,
+            extents: Vec::new(),
+            done: false,
+        }
+    }
+}
+
+impl StateProvider for ObjectProvider {
+    fn size_hint(&self) -> u64 {
+        self.data
+            .as_ref()
+            .map(|d| d.len() as u64)
+            .unwrap_or(self.estimate)
+    }
+
+    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+        if self.data.is_none() {
+            match self.rx.try_recv() {
+                Ok(bytes) => self.data = Some(Bytes::from_vec(bytes)),
+                Err(crate::util::channel::TryRecvError::Empty) => {
+                    return Ok(Poll::Pending)
+                }
+                Err(crate::util::channel::TryRecvError::Disconnected) => {
+                    anyhow::bail!("{}: serializer dropped", self.name)
+                }
+            }
+        }
+        let data = self.data.as_ref().unwrap();
+        if self.sent >= data.len() {
+            self.done = true;
+            return Ok(Poll::Done);
+        }
+        let end = (self.sent + self.chunk_bytes).min(data.len());
+        let len = (end - self.sent) as u64;
+        // Claim a log extent only when the bytes are in hand.
+        let offset = self.cursor.claim(len);
+        self.extents.push((offset, len));
+        let chunk = Chunk {
+            offset,
+            data: data.slice(self.sent..end),
+            label: self.name.clone(),
+        };
+        self.sent = end;
+        Ok(Poll::Ready(chunk))
+    }
+
+    fn layout_entries(&self) -> Vec<LayoutEntry> {
+        vec![LayoutEntry {
+            name: self.name.clone(),
+            kind: EntryKind::Object,
+            extents: self.extents.clone(),
+        }]
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::object::PyObj;
+
+    #[test]
+    fn pending_until_serialized_then_claims_log_extents() {
+        let cursor = Arc::new(LogCursor::new(1000));
+        let (tx, rx) = crate::util::channel::bounded(1);
+        let mut p = ObjectProvider::new("meta", 64, rx, cursor.clone(), 16);
+        assert!(matches!(p.poll_chunk().unwrap(), Poll::Pending));
+
+        let obj = PyObj::Dict(vec![("k".into(),
+                                    PyObj::Str("v".repeat(40)))]);
+        let bytes = obj.to_bytes();
+        tx.send(bytes.clone()).unwrap();
+
+        let mut collected = vec![0u8; bytes.len()];
+        loop {
+            match p.poll_chunk().unwrap() {
+                Poll::Ready(c) => {
+                    let log_rel = (c.offset - 1000) as usize;
+                    collected[log_rel..log_rel + c.data.len()]
+                        .copy_from_slice(c.data.as_slice());
+                }
+                Poll::Done => break,
+                Poll::Pending => panic!("no longer pending"),
+            }
+        }
+        assert_eq!(collected, bytes);
+        let e = &p.layout_entries()[0];
+        assert_eq!(e.total_len(), bytes.len() as u64);
+        assert!(e.extents.len() >= 2, "chunked into multiple extents");
+    }
+
+    #[test]
+    fn two_providers_interleave_disjointly() {
+        let cursor = Arc::new(LogCursor::new(0));
+        let mk = |seed: u64| {
+            let (tx, rx) = crate::util::channel::bounded(1);
+            tx.send(PyObj::synthetic_metadata(256, seed).to_bytes())
+                .unwrap();
+            ObjectProvider::new(format!("o{seed}"), 256, rx,
+                                cursor.clone(), 32)
+        };
+        let mut a = mk(1);
+        let mut b = mk(2);
+        let mut extents = Vec::new();
+        // alternate polling to force interleaving
+        let mut done = 0;
+        while done < 2 {
+            done = 0;
+            for p in [&mut a, &mut b] {
+                match p.poll_chunk().unwrap() {
+                    Poll::Ready(c) => {
+                        extents.push((c.offset, c.data.len() as u64))
+                    }
+                    Poll::Done => done += 1,
+                    Poll::Pending => {}
+                }
+            }
+        }
+        // extents must be pairwise disjoint
+        extents.sort();
+        for w in extents.windows(2) {
+            assert!(w[0].0 + w[0].1 <= w[1].0, "overlap: {w:?}");
+        }
+        // and interleaved (a's extents are not all contiguous)
+        let ea = a.layout_entries()[0].extents.clone();
+        assert!(ea.windows(2).any(|w| w[0].0 + w[0].1 != w[1].0),
+                "expected interleaving, got contiguous {ea:?}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Background serializer pool.
+//!
+//! Object serialization happens OFF the critical path, on worker threads,
+//! so that it overlaps with bulk tensor I/O (§V-A5). State-of-the-art
+//! engines do the opposite — serialize metadata first, blocking, to
+//! precompute the persistent layout; the hybrid layout (layout.rs) is
+//! what removes that ordering constraint.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::channel::{Receiver, Sender};
+
+use crate::state::object::PyObj;
+
+enum Job {
+    Serialize { name: String, obj: PyObj, out: Sender<Vec<u8>> },
+    Stop,
+}
+
+/// A pool of serialization workers shared by all object providers of a
+/// rank.
+pub struct SerializerPool {
+    tx: Sender<Job>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SerializerPool {
+    pub fn new(threads: usize) -> Arc<Self> {
+        Self::with_timeline(threads, None)
+    }
+
+    /// Build with an optional timeline to record `Tier::Serialize` spans
+    /// (used by the engine for Table III attribution).
+    pub fn with_timeline(
+        threads: usize,
+        timeline: Option<Arc<crate::metrics::Timeline>>,
+    ) -> Arc<Self> {
+        let (tx, rx) = crate::util::channel::unbounded::<Job>();
+        let rx = Arc::new(rx);
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let rx: Arc<Receiver<Job>> = rx.clone();
+                let tl = timeline.clone();
+                std::thread::Builder::new()
+                    .name(format!("ds-serializer-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            match job {
+                                Job::Serialize { name, obj, out } => {
+                                    let start =
+                                        tl.as_ref().map(|t| t.now_s());
+                                    let bytes = obj.to_bytes();
+                                    if let (Some(t), Some(s)) =
+                                        (tl.as_ref(), start)
+                                    {
+                                        t.record(
+                                            crate::metrics::Tier::Serialize,
+                                            &name,
+                                            bytes.len() as u64,
+                                            s,
+                                            t.now_s(),
+                                        );
+                                    }
+                                    // Receiver may be gone if the
+                                    // checkpoint was aborted; ignore.
+                                    let _ = out.send(bytes);
+                                }
+                                Job::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("spawn serializer")
+            })
+            .collect();
+        Arc::new(SerializerPool { tx, workers })
+    }
+
+    /// Submit an object; its serialized bytes arrive on the returned
+    /// channel.
+    pub fn submit(&self, obj: PyObj) -> Receiver<Vec<u8>> {
+        self.submit_named(String::new(), obj)
+    }
+
+    /// Submit with a name for timeline attribution.
+    pub fn submit_named(&self, name: String, obj: PyObj)
+        -> Receiver<Vec<u8>> {
+        let (out_tx, out_rx) = crate::util::channel::bounded(1);
+        self.tx
+            .send(Job::Serialize { name, obj, out: out_tx })
+            .expect("serializer pool alive");
+        out_rx
+    }
+}
+
+impl Drop for SerializerPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_in_background() {
+        let pool = SerializerPool::new(2);
+        let obj = PyObj::synthetic_metadata(4096, 1);
+        let want = obj.to_bytes();
+        let rx = pool.submit(obj);
+        let got = rx.recv().unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn many_concurrent_jobs() {
+        let pool = SerializerPool::new(4);
+        let rxs: Vec<_> = (0..32)
+            .map(|i| pool.submit(PyObj::synthetic_metadata(1024, i)))
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let bytes = rx.recv().unwrap();
+            assert_eq!(bytes,
+                       PyObj::synthetic_metadata(1024, i as u64).to_bytes());
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Tensor providers: zero-copy chunk streams over tensor payloads.
+
+use crate::util::channel::Receiver;
+
+use super::layout::{EntryKind, LayoutEntry};
+use super::{Bytes, Chunk, Poll, StateProvider};
+use crate::state::tensor::DType;
+
+/// Host-resident tensor: bytes are byte-addressable *now*; the provider
+/// is a pure window iterator — no copy, no serialization (§IV-D).
+pub struct TensorProvider {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Bytes,
+    /// Precomputed fixed-region offset of this tensor.
+    base_offset: u64,
+    chunk_bytes: usize,
+    cursor: usize,
+    done: bool,
+}
+
+impl TensorProvider {
+    pub fn new(name: impl Into<String>, dtype: DType, shape: Vec<usize>,
+               data: Bytes, base_offset: u64, chunk_bytes: usize) -> Self {
+        TensorProvider {
+            name: name.into(),
+            dtype,
+            shape,
+            data,
+            base_offset,
+            chunk_bytes: chunk_bytes.max(1),
+            cursor: 0,
+            done: false,
+        }
+    }
+}
+
+impl StateProvider for TensorProvider {
+    fn size_hint(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+        if self.cursor >= self.data.len() {
+            self.done = true;
+            return Ok(Poll::Done);
+        }
+        let end = (self.cursor + self.chunk_bytes).min(self.data.len());
+        let chunk = Chunk {
+            offset: self.base_offset + self.cursor as u64,
+            data: self.data.slice(self.cursor..end),
+            label: self.name.clone(),
+        };
+        self.cursor = end;
+        Ok(Poll::Ready(chunk))
+    }
+
+    fn layout_entries(&self) -> Vec<LayoutEntry> {
+        vec![LayoutEntry {
+            name: self.name.clone(),
+            kind: EntryKind::Tensor {
+                dtype: self.dtype,
+                shape: self.shape.clone(),
+            },
+            extents: vec![(self.base_offset, self.data.len() as u64)],
+        }]
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
+/// Device-resident tensor: bytes arrive asynchronously from the D2H copy
+/// stream (a pool segment filled by the stager). `Pending` until then —
+/// which is what lets the engine flush host-resident state *while* GPU
+/// state is still in flight (§V-A1).
+pub struct StagedTensorProvider {
+    name: String,
+    dtype: DType,
+    shape: Vec<usize>,
+    expect_bytes: u64,
+    base_offset: u64,
+    chunk_bytes: usize,
+    rx: Receiver<Bytes>,
+    inner: Option<TensorProvider>,
+    done: bool,
+}
+
+impl StagedTensorProvider {
+    pub fn new(name: impl Into<String>, dtype: DType, shape: Vec<usize>,
+               expect_bytes: u64, base_offset: u64, chunk_bytes: usize,
+               rx: Receiver<Bytes>) -> Self {
+        StagedTensorProvider {
+            name: name.into(),
+            dtype,
+            shape,
+            expect_bytes,
+            base_offset,
+            chunk_bytes,
+            rx,
+            inner: None,
+            done: false,
+        }
+    }
+}
+
+impl StateProvider for StagedTensorProvider {
+    fn size_hint(&self) -> u64 {
+        self.expect_bytes
+    }
+
+    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+        if self.inner.is_none() {
+            match self.rx.try_recv() {
+                Ok(bytes) => {
+                    anyhow::ensure!(
+                        bytes.len() as u64 == self.expect_bytes,
+                        "{}: staged {} bytes, expected {}",
+                        self.name,
+                        bytes.len(),
+                        self.expect_bytes
+                    );
+                    self.inner = Some(TensorProvider::new(
+                        self.name.clone(),
+                        self.dtype,
+                        self.shape.clone(),
+                        bytes,
+                        self.base_offset,
+                        self.chunk_bytes,
+                    ));
+                }
+                Err(crate::util::channel::TryRecvError::Empty) => {
+                    return Ok(Poll::Pending)
+                }
+                Err(crate::util::channel::TryRecvError::Disconnected) => {
+                    anyhow::bail!(
+                        "{}: D2H stager dropped before staging", self.name
+                    )
+                }
+            }
+        }
+        let poll = self.inner.as_mut().unwrap().poll_chunk()?;
+        if matches!(poll, Poll::Done) {
+            self.done = true;
+        }
+        Ok(poll)
+    }
+
+    fn layout_entries(&self) -> Vec<LayoutEntry> {
+        vec![LayoutEntry {
+            name: self.name.clone(),
+            kind: EntryKind::Tensor {
+                dtype: self.dtype,
+                shape: self.shape.clone(),
+            },
+            extents: vec![(self.base_offset, self.expect_bytes)],
+        }]
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_provider_streams_all_bytes_in_order() {
+        let data = Bytes::from_vec((0..100u8).collect());
+        let mut p = TensorProvider::new("w", DType::U8, vec![100],
+                                        data.clone(), 64, 32);
+        let mut seen = Vec::new();
+        let mut next_off = 64;
+        loop {
+            match p.poll_chunk().unwrap() {
+                Poll::Ready(c) => {
+                    assert_eq!(c.offset, next_off);
+                    next_off += c.data.len() as u64;
+                    seen.extend_from_slice(c.data.as_slice());
+                }
+                Poll::Done => break,
+                Poll::Pending => panic!("host tensor never pends"),
+            }
+        }
+        assert_eq!(seen, data.as_slice());
+        assert!(p.is_done());
+        assert_eq!(p.layout_entries()[0].extents, vec![(64, 100)]);
+    }
+
+    #[test]
+    fn staged_provider_pends_until_staged() {
+        let (tx, rx) = crate::util::channel::bounded(1);
+        let mut p = StagedTensorProvider::new(
+            "opt", DType::U8, vec![8], 8, 0, 4, rx);
+        assert!(matches!(p.poll_chunk().unwrap(), Poll::Pending));
+        tx.send(Bytes::from_vec(vec![9; 8])).unwrap();
+        let Poll::Ready(c) = p.poll_chunk().unwrap() else { panic!() };
+        assert_eq!(c.data.len(), 4);
+        let Poll::Ready(c2) = p.poll_chunk().unwrap() else { panic!() };
+        assert_eq!(c2.offset, 4);
+        assert!(matches!(p.poll_chunk().unwrap(), Poll::Done));
+    }
+
+    #[test]
+    fn staged_provider_size_mismatch_errors() {
+        let (tx, rx) = crate::util::channel::bounded(1);
+        let mut p = StagedTensorProvider::new(
+            "opt", DType::U8, vec![8], 8, 0, 4, rx);
+        tx.send(Bytes::from_vec(vec![1; 4])).unwrap();
+        assert!(p.poll_chunk().is_err());
+    }
+}

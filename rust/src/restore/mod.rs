@@ -1,0 +1,277 @@
+//! Checkpoint restore: parse the hybrid layout, reconstruct state, verify
+//! integrity (the recovery half of the paper's consistency story).
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::Read;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+use crate::provider::layout::{EntryKind, FileLayout, FOOTER_BYTES};
+use crate::state::{PyObj, RankState, StateItem, TensorData};
+
+/// A fully parsed checkpoint file.
+#[derive(Debug)]
+pub struct RestoredFile {
+    pub layout: FileLayout,
+    /// name -> reassembled payload bytes (tensors and serialized
+    /// objects).
+    pub payloads: HashMap<String, Vec<u8>>,
+}
+
+impl RestoredFile {
+    /// Deserialize a restored object entry.
+    pub fn object(&self, name: &str) -> anyhow::Result<PyObj> {
+        let bytes = self
+            .payloads
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no entry {name}"))?;
+        PyObj::from_bytes(bytes)
+    }
+}
+
+/// Read one checkpoint file written by any engine using the hybrid
+/// layout: footer → trailer → entries → extents.
+pub fn read_file(path: &Path) -> anyhow::Result<RestoredFile> {
+    let file = File::open(path)?;
+    let len = file.metadata()?.len();
+    anyhow::ensure!(len >= FOOTER_BYTES, "{path:?}: too short");
+    let mut footer = [0u8; FOOTER_BYTES as usize];
+    file.read_exact_at(&mut footer, len - FOOTER_BYTES)?;
+    let (toff, tlen) = FileLayout::decode_footer(&footer)?;
+    anyhow::ensure!(toff + tlen + FOOTER_BYTES <= len,
+                    "{path:?}: trailer out of range");
+    let mut trailer = vec![0u8; tlen as usize];
+    file.read_exact_at(&mut trailer, toff)?;
+    let layout = FileLayout::decode_trailer(&trailer)?;
+
+    let mut payloads = HashMap::new();
+    for entry in &layout.entries {
+        let mut buf = Vec::with_capacity(entry.total_len() as usize);
+        for (off, elen) in &entry.extents {
+            let mut part = vec![0u8; *elen as usize];
+            file.read_exact_at(&mut part, *off)?;
+            buf.extend_from_slice(&part);
+        }
+        payloads.insert(entry.name.clone(), buf);
+    }
+    Ok(RestoredFile { layout, payloads })
+}
+
+/// Read every file of a checkpoint version directory.
+pub fn read_version_dir(dir: &Path)
+    -> anyhow::Result<HashMap<String, RestoredFile>> {
+    let mut out = HashMap::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if entry.file_type()?.is_file() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            out.insert(name, read_file(&entry.path())?);
+        }
+    }
+    Ok(out)
+}
+
+/// Latest version directory under a checkpoint root (`v000042/`...).
+pub fn latest_version(root: &Path) -> anyhow::Result<Option<(u64, PathBuf)>> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    if !root.exists() {
+        return Ok(None);
+    }
+    for entry in std::fs::read_dir(root)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(v) = name.strip_prefix('v')
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            if best.as_ref().map(|(b, _)| v > *b).unwrap_or(true) {
+                best = Some((v, entry.path()));
+            }
+        }
+    }
+    Ok(best)
+}
+
+/// Verify that a restored checkpoint version matches the original rank
+/// state bit-for-bit (used by tests and the failure_recovery example).
+pub fn verify_against(dir: &Path, state: &RankState) -> anyhow::Result<()> {
+    let restored = read_version_dir(dir)?;
+    anyhow::ensure!(
+        restored.len() == state.files.len(),
+        "file count mismatch: {} vs {}",
+        restored.len(),
+        state.files.len()
+    );
+    for shard in &state.files {
+        let rf = restored
+            .get(&shard.name)
+            .ok_or_else(|| anyhow::anyhow!("missing file {}", shard.name))?;
+        for item in &shard.items {
+            match item {
+                StateItem::Tensor(t) => {
+                    let got = rf.payloads.get(&t.name).ok_or_else(|| {
+                        anyhow::anyhow!("missing tensor {}", t.name)
+                    })?;
+                    let want: Vec<u8> = match &t.data {
+                        TensorData::Host(b) => b.as_ref().clone(),
+                        TensorData::Device(d) => {
+                            let mut v = vec![0u8; d.size_bytes()];
+                            d.stage_into(&mut v)?;
+                            v
+                        }
+                    };
+                    anyhow::ensure!(
+                        *got == want,
+                        "tensor {} content mismatch ({} vs {} bytes)",
+                        t.name,
+                        got.len(),
+                        want.len()
+                    );
+                }
+                StateItem::Object { name, obj } => {
+                    let got = rf.object(name)?;
+                    anyhow::ensure!(got == *obj,
+                                    "object {name} mismatch");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Integrity check without reference state: footer magic, trailer parse,
+/// extent bounds. Returns the number of entries validated.
+pub fn fsck(path: &Path) -> anyhow::Result<usize> {
+    let rf = read_file(path)?;
+    let file_len = std::fs::metadata(path)?.len();
+    for e in &rf.layout.entries {
+        for (off, elen) in &e.extents {
+            anyhow::ensure!(off + elen <= file_len,
+                            "{}: extent beyond EOF", e.name);
+        }
+        if matches!(e.kind, EntryKind::Object) {
+            // objects must deserialize
+            rf.object(&e.name)?;
+        }
+    }
+    Ok(rf.layout.entries.len())
+}
+
+/// Read one checkpoint file sequentially (used to measure read-side
+/// throughput; exercises a different I/O path than `read_file`).
+pub fn read_raw(path: &Path) -> anyhow::Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+/// Parallel restore: read a version directory with a reader-thread pool,
+/// one file per worker — the restart-path counterpart of the write-side
+/// flush pool (restart speed matters as much as checkpoint speed for the
+/// resilience scenarios in §I).
+pub fn read_version_dir_parallel(dir: &Path, threads: usize)
+    -> anyhow::Result<HashMap<String, RestoredFile>> {
+    let mut paths = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if entry.file_type()?.is_file() {
+            paths.push((
+                entry.file_name().to_string_lossy().into_owned(),
+                entry.path(),
+            ));
+        }
+    }
+    let (tx, rx) = crate::util::channel::unbounded::<(String, PathBuf)>();
+    let (out_tx, out_rx) =
+        crate::util::channel::unbounded::<anyhow::Result<(String, RestoredFile)>>();
+    for (name, path) in paths.drain(..) {
+        tx.send((name, path)).ok();
+    }
+    drop(tx);
+    std::thread::scope(|s| {
+        for _ in 0..threads.max(1) {
+            let rx = rx.clone();
+            let out_tx = out_tx.clone();
+            s.spawn(move || {
+                while let Ok((name, path)) = rx.recv() {
+                    let res = read_file(&path).map(|rf| (name, rf));
+                    if out_tx.send(res).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(out_tx);
+        drop(rx);
+        let mut out = HashMap::new();
+        while let Ok(res) = out_rx.recv() {
+            let (name, rf) = res?;
+            out.insert(name, rf);
+        }
+        Ok(out)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::engine::CheckpointEngine;
+    use crate::state::partition::{census, materialize};
+    use crate::config::{LlmConfig, Parallelism};
+    use crate::util::TempDir;
+
+    fn write_one(dir: &Path) -> crate::state::RankState {
+        let cfg = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::paper_default(&cfg);
+        let cs = census(&cfg, &par);
+        let state = materialize(&cs.ranks[0], 2e-5, 0.02, 99);
+        let mut eng = crate::engine::DataStatesEngine::new(
+            EngineConfig::with_dir(dir)).unwrap();
+        eng.checkpoint(0, &state).unwrap();
+        eng.wait_snapshot_complete().unwrap();
+        eng.drain().unwrap();
+        state
+    }
+
+    #[test]
+    fn parallel_restore_matches_serial() {
+        let dir = TempDir::new("restore-par").unwrap();
+        let state = write_one(dir.path());
+        let vdir = dir.path().join("v000000");
+        let serial = read_version_dir(&vdir).unwrap();
+        let parallel = read_version_dir_parallel(&vdir, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (name, rf) in &serial {
+            let pf = parallel.get(name).unwrap();
+            assert_eq!(rf.payloads, pf.payloads, "{name}");
+        }
+        verify_against(&vdir, &state).unwrap();
+    }
+
+    #[test]
+    fn latest_version_picks_max() {
+        let dir = TempDir::new("restore-latest").unwrap();
+        for v in [1u64, 7, 3] {
+            std::fs::create_dir_all(
+                dir.path().join(format!("v{v:06}"))).unwrap();
+        }
+        let (v, _) = latest_version(dir.path()).unwrap().unwrap();
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn fsck_rejects_truncated_file() {
+        let dir = TempDir::new("restore-fsck").unwrap();
+        write_one(dir.path());
+        let vdir = dir.path().join("v000000");
+        let victim = std::fs::read_dir(&vdir).unwrap().next()
+            .unwrap().unwrap().path();
+        let len = std::fs::metadata(&victim).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true)
+            .open(&victim).unwrap();
+        f.set_len(len / 2).unwrap();
+        assert!(fsck(&victim).is_err());
+    }
+}

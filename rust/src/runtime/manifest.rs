@@ -1,0 +1,173 @@
+//! Parse `artifacts/manifest.json` — the contract between the JAX compile
+//! path (L2) and the rust runtime (L3).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One parameter leaf in the flat packed state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Leaf {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset into the params region, in f32 elements.
+    pub offset: usize,
+    /// Element count.
+    pub size: usize,
+}
+
+/// The AOT manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub num_params: usize,
+    /// Total flat state length: 3P + 2 (params|m|v|step|loss).
+    pub packed_len: usize,
+    pub leaves: Vec<Leaf>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!("{path:?}: {e} — run `make artifacts` first")
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let need = |v: Option<usize>, what: &str| {
+            v.ok_or_else(|| anyhow::anyhow!("manifest missing {what}"))
+        };
+        let cfg = j
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing config"))?;
+        let num = |obj: &Json, k: &str| {
+            need(obj.get(k).and_then(|x| x.as_usize()), k)
+        };
+        let mut leaves = Vec::new();
+        for l in j
+            .get("leaves")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing leaves"))?
+        {
+            leaves.push(Leaf {
+                name: l
+                    .get("name")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("leaf missing name"))?
+                    .to_string(),
+                shape: l
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("leaf missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: num(l, "offset")?,
+                size: num(l, "size")?,
+            });
+        }
+        let m = Manifest {
+            vocab: num(cfg, "vocab")?,
+            d_model: num(cfg, "d_model")?,
+            n_layers: num(cfg, "n_layers")?,
+            n_heads: num(cfg, "n_heads")?,
+            seq_len: num(cfg, "seq_len")?,
+            batch: num(&j, "batch")?,
+            num_params: num(&j, "num_params")?,
+            packed_len: num(&j, "packed_len")?,
+            leaves,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        let total: usize = self.leaves.iter().map(|l| l.size).sum();
+        anyhow::ensure!(total == self.num_params,
+                        "leaf sizes {total} != num_params {}",
+                        self.num_params);
+        anyhow::ensure!(self.packed_len == 3 * self.num_params + 2,
+                        "packed_len mismatch");
+        // offsets must be contiguous and ordered
+        let mut expect = 0usize;
+        for l in &self.leaves {
+            anyhow::ensure!(l.offset == expect,
+                            "leaf {} offset {} != {expect}",
+                            l.name, l.offset);
+            anyhow::ensure!(
+                l.size == l.shape.iter().product::<usize>(),
+                "leaf {} size/shape mismatch", l.name
+            );
+            expect += l.size;
+        }
+        Ok(())
+    }
+
+    /// Element offset of the step counter in the flat state.
+    pub fn step_index(&self) -> usize {
+        3 * self.num_params
+    }
+
+    /// Element offset of the loss scalar in the flat state.
+    pub fn loss_index(&self) -> usize {
+        3 * self.num_params + 1
+    }
+
+    /// Offset of leaf `i`'s slice within region `r` (0=params, 1=m, 2=v).
+    pub fn region_offset(&self, region: usize, leaf: &Leaf) -> usize {
+        region * self.num_params + leaf.offset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> String {
+        r#"{
+          "config": {"vocab": 16, "d_model": 4, "n_layers": 1,
+                     "n_heads": 2, "seq_len": 8},
+          "batch": 2,
+          "num_params": 72,
+          "packed_len": 218,
+          "leaves": [
+            {"name": "wte", "shape": [16, 4], "offset": 0, "size": 64},
+            {"name": "wpe", "shape": [8, 1], "offset": 64, "size": 8}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&toy_manifest()).unwrap();
+        assert_eq!(m.num_params, 72);
+        assert_eq!(m.leaves.len(), 2);
+        assert_eq!(m.step_index(), 216);
+        assert_eq!(m.loss_index(), 217);
+        assert_eq!(m.region_offset(2, &m.leaves[1]), 144 + 64);
+    }
+
+    #[test]
+    fn rejects_inconsistent_offsets() {
+        let bad = toy_manifest().replace("\"offset\": 64", "\"offset\": 60");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        let p = std::path::Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.num_params > 1_000_000);
+            assert_eq!(m.leaves.len(), 16);
+        }
+    }
+}

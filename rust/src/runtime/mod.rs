@@ -1,0 +1,65 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, keep training state device-resident between
+//! steps, and expose per-shard D2H staging for the checkpoint engine.
+//!
+//! Calling convention (see `artifacts/manifest.json`): the whole training
+//! state is ONE flat f32 device buffer `[params | m | v | step | loss]`;
+//! `train_step.hlo.txt` maps `(flat, tokens) -> flat'`, so the output
+//! buffer feeds straight back into the next `execute_b` call — Python is
+//! never on the training path. The loss scalar is read back with a
+//! 4-byte raw D2H copy per step; checkpoint shards are per-leaf slices of
+//! the same buffer, staged through [`PjrtSliceTensor`] on the engine's
+//! copy stream (`to_literal`-style raw copies standing in for CUDA D2H).
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::Manifest;
+pub use session::{PjrtSliceTensor, TrainSession};
+
+use std::path::Path;
+use std::sync::Arc;
+
+/// A loaded PJRT CPU client with compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile an HLO-text artifact. HLO *text* (not serialized
+    /// proto) is the interchange format: jax >= 0.5 emits 64-bit
+    /// instruction ids that xla_extension 0.5.1 rejects; the text parser
+    /// reassigns ids (see /opt/xla-example/README.md).
+    pub fn load_hlo(&self, path: &Path)
+        -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        anyhow::ensure!(path.exists(), "artifact missing: {path:?} — run \
+                        `make artifacts` first");
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Upload a flat f32 slice to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize])
+        -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor (token batches).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize])
+        -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Shared handle to a device buffer so checkpoint shards can outlive the
+/// training loop's buffer swaps (PJRT buffers are immutable; a snapshot
+/// simply keeps the old buffer alive).
+pub type SharedBuffer = Arc<xla::PjRtBuffer>;

@@ -1,0 +1,387 @@
+//! Device-resident training session over the AOT artifacts.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::manifest::Manifest;
+use super::Runtime;
+use crate::state::object::PyObj;
+use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
+use crate::state::tensor::{DType, DeviceTensor, TensorShard};
+use crate::util::Rng;
+
+/// Cross-thread handle to a PJRT buffer.
+///
+/// Safety argument: the PJRT C API is thread-safe, and
+/// `copy_raw_to_host_sync` only issues C calls (no rust-side `Rc`
+/// mutation). The `xla` crate's `PjRtBuffer` is `!Send` solely because it
+/// carries an `Rc<PjRtClientInternal>` that is cloned/dropped when
+/// buffers are created/destroyed. We uphold the invariant that the *last*
+/// `Arc<PjRtBuffer>` clone is always dropped on the session thread: the
+/// session keeps every snapshot buffer in its `retired` list until
+/// [`TrainSession::gc`], so a stager thread dropping its clone only
+/// performs an atomic `Arc` decrement, never the inner `Rc` drop.
+pub struct SendableBuffer(Arc<xla::PjRtBuffer>);
+
+unsafe impl Send for SendableBuffer {}
+unsafe impl Sync for SendableBuffer {}
+
+/// One lazily-materialized D2H snapshot of the flat device state, shared
+/// by every shard of a checkpoint version.
+///
+/// The TFRT CPU PJRT plugin does not implement raw-offset D2H copies, so
+/// the first shard staged pulls the WHOLE buffer down with
+/// `to_literal_sync` (the actual device→host transfer, running on the
+/// engine's copy-stream thread, overlapped with the next iteration's
+/// forward/backward exactly as §V-A2 prescribes); subsequent shards are
+/// host-side slices of that snapshot. Because PJRT buffers are immutable
+/// and the training loop swaps buffers functionally, the snapshot is
+/// consistent no matter how far training has advanced.
+pub struct DeviceSnapshot {
+    buf: SendableBuffer,
+    cache: std::sync::Mutex<Option<Arc<Vec<u8>>>>,
+}
+
+impl DeviceSnapshot {
+    pub fn new(buf: Arc<xla::PjRtBuffer>) -> Arc<Self> {
+        Arc::new(DeviceSnapshot {
+            buf: SendableBuffer(buf),
+            cache: std::sync::Mutex::new(None),
+        })
+    }
+
+    /// The staged bytes (little-endian f32), materialized on first use.
+    fn bytes(&self) -> anyhow::Result<Arc<Vec<u8>>> {
+        let mut guard = self.cache.lock().unwrap();
+        if let Some(b) = guard.as_ref() {
+            return Ok(b.clone());
+        }
+        let lit = self
+            .buf
+            .0
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("D2H literal: {e}"))?;
+        let n = lit.element_count();
+        let mut v = vec![0f32; n];
+        lit.copy_raw_to(&mut v)
+            .map_err(|e| anyhow::anyhow!("literal copy: {e}"))?;
+        // reinterpret as LE bytes
+        let bytes: Vec<u8> = unsafe {
+            let mut v = std::mem::ManuallyDrop::new(v);
+            Vec::from_raw_parts(v.as_mut_ptr() as *mut u8, n * 4,
+                                v.capacity() * 4)
+        };
+        let arc = Arc::new(bytes);
+        *guard = Some(arc.clone());
+        Ok(arc)
+    }
+}
+
+/// A per-leaf slice of the flat device state, staged D2H on demand
+/// through a shared [`DeviceSnapshot`].
+pub struct PjrtSliceTensor {
+    snapshot: Arc<DeviceSnapshot>,
+    /// Offset in f32 elements within the flat state.
+    offset: usize,
+    /// Length in f32 elements.
+    len: usize,
+}
+
+impl PjrtSliceTensor {
+    pub fn new(snapshot: Arc<DeviceSnapshot>, offset: usize, len: usize)
+        -> Arc<Self> {
+        Arc::new(PjrtSliceTensor { snapshot, offset, len })
+    }
+}
+
+impl DeviceTensor for PjrtSliceTensor {
+    fn size_bytes(&self) -> usize {
+        self.len * 4
+    }
+
+    fn stage_into(&self, dst: &mut [u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(dst.len() == self.len * 4, "size mismatch");
+        let bytes = self.snapshot.bytes()?;
+        dst.copy_from_slice(
+            &bytes[self.offset * 4..(self.offset + self.len) * 4]);
+        Ok(())
+    }
+}
+
+/// Live training session: compiled executables + the flat device state.
+pub struct TrainSession {
+    pub manifest: Manifest,
+    rt: Runtime,
+    exe_step: xla::PjRtLoadedExecutable,
+    exe_tail: xla::PjRtLoadedExecutable,
+    exe_loss: Option<xla::PjRtLoadedExecutable>,
+    artifacts: PathBuf,
+    /// Current flat state (swapped functionally each step).
+    state: Arc<xla::PjRtBuffer>,
+    /// Snapshot buffers kept alive until `gc()` so their final drop
+    /// happens on this thread (see [`SendableBuffer`]).
+    retired: Vec<Arc<xla::PjRtBuffer>>,
+    pub iteration: u64,
+}
+
+impl TrainSession {
+    /// Compile the artifacts and initialize state from `seed` (runs the
+    /// `init_state` computation on-device).
+    pub fn new(artifacts: &Path, seed: i32) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&artifacts.join("manifest.json"))?;
+        let rt = Runtime::cpu()?;
+        let exe_step = rt.load_hlo(&artifacts.join("train_step.hlo.txt"))?;
+        let exe_tail = rt.load_hlo(&artifacts.join("read_tail.hlo.txt"))?;
+        let exe_init = rt.load_hlo(&artifacts.join("init_state.hlo.txt"))?;
+        let seed_lit = xla::Literal::scalar(seed);
+        let mut out = exe_init.execute::<xla::Literal>(&[seed_lit])?;
+        let state = Arc::new(
+            out.pop()
+                .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+                .ok_or_else(|| anyhow::anyhow!("init_state: no output"))?,
+        );
+        Ok(TrainSession {
+            manifest,
+            rt,
+            exe_step,
+            exe_tail,
+            exe_loss: None,
+            artifacts: artifacts.to_path_buf(),
+            state,
+            retired: Vec::new(),
+            iteration: 0,
+        })
+    }
+
+    /// One training step over a token batch; returns the loss realized by
+    /// this step. `tokens` is `batch * (seq_len + 1)` i32 values.
+    pub fn step(&mut self, tokens: &[i32]) -> anyhow::Result<f32> {
+        let (b, t) = (self.manifest.batch, self.manifest.seq_len + 1);
+        anyhow::ensure!(tokens.len() == b * t, "tokens must be {b}x{t}");
+        let tok_buf = self.rt.upload_i32(tokens, &[b, t])?;
+        let mut out = self
+            .exe_step
+            .execute_b::<&xla::PjRtBuffer>(&[&self.state, &tok_buf])?;
+        let new_state = out
+            .pop()
+            .and_then(|mut v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .ok_or_else(|| anyhow::anyhow!("train_step: no output"))?;
+        self.state = Arc::new(new_state);
+        self.iteration += 1;
+        let (_, loss) = self.read_tail()?;
+        Ok(loss)
+    }
+
+    /// Read the (step, loss) tail scalars via the `read_tail` artifact —
+    /// an 8-byte D2H copy (the CPU PJRT plugin has no raw-offset reads).
+    fn read_tail(&self) -> anyhow::Result<(f32, f32)> {
+        let out = self
+            .exe_tail
+            .execute_b::<&xla::PjRtBuffer>(&[&self.state])?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("tail literal: {e}"))?;
+        let v = lit.to_vec::<f32>()?;
+        anyhow::ensure!(v.len() == 2, "tail must be 2 elements");
+        Ok((v[0], v[1]))
+    }
+
+    /// Evaluate the forward loss on the current parameters without
+    /// mutating state (restore verification).
+    pub fn eval_loss(&mut self, tokens: &[i32]) -> anyhow::Result<f32> {
+        if self.exe_loss.is_none() {
+            self.exe_loss = Some(
+                self.rt.load_hlo(&self.artifacts.join("fwd_loss.hlo.txt"))?,
+            );
+        }
+        let (b, t) = (self.manifest.batch, self.manifest.seq_len + 1);
+        anyhow::ensure!(tokens.len() == b * t, "tokens must be {b}x{t}");
+        let tok_buf = self.rt.upload_i32(tokens, &[b, t])?;
+        let out = self
+            .exe_loss
+            .as_ref()
+            .unwrap()
+            .execute_b::<&xla::PjRtBuffer>(&[&self.state, &tok_buf])?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("loss literal: {e}"))?;
+        Ok(lit.get_first_element::<f32>()?)
+    }
+
+    /// Deterministic synthetic token batch (zipf-ish unigram corpus).
+    pub fn sample_tokens(&self, seed: u64) -> Vec<i32> {
+        let (b, t) = (self.manifest.batch, self.manifest.seq_len + 1);
+        let mut rng = Rng::new(seed ^ 0x7063_7273);
+        let v = self.manifest.vocab as u64;
+        (0..b * t)
+            .map(|_| {
+                // skewed unigram distribution over the vocab
+                let z = rng.f64();
+                ((v as f64 * z * z) as u64 % v) as i32
+            })
+            .collect()
+    }
+
+    /// Compose the rank's checkpoint state from the CURRENT device
+    /// buffer: one file per parameter leaf (fp32 "layer" shards), one
+    /// optimizer file holding the m/v regions, one host metadata file —
+    /// the same composition shape the 3D partitioner produces for
+    /// DeepSpeed (Table I), at e2e scale.
+    pub fn checkpoint_state(&mut self) -> RankState {
+        let m = &self.manifest;
+        let buf = self.state.clone();
+        self.retired.push(buf.clone());
+        let snap = DeviceSnapshot::new(buf);
+        let mut files = Vec::new();
+        // metadata (host-resident control state)
+        files.push(ShardFile {
+            name: "mp_rank_000_model_states.pt".into(),
+            kind: FileKind::Metadata,
+            items: vec![StateItem::Object {
+                name: "state_dict".into(),
+                obj: PyObj::Dict(vec![
+                    ("iteration".into(),
+                     PyObj::Int(self.iteration as i64)),
+                    ("vocab".into(), PyObj::Int(m.vocab as i64)),
+                    ("d_model".into(), PyObj::Int(m.d_model as i64)),
+                    ("n_layers".into(), PyObj::Int(m.n_layers as i64)),
+                    ("packed_len".into(),
+                     PyObj::Int(m.packed_len as i64)),
+                ]),
+            }],
+        });
+        // parameter leaves (device-resident, staged lazily)
+        for (i, leaf) in m.leaves.iter().enumerate() {
+            files.push(ShardFile {
+                name: format!("layer_{i:02}-model_00-model_states.pt"),
+                kind: FileKind::ParamLayer,
+                items: vec![
+                    StateItem::Tensor(TensorShard::device(
+                        &leaf.name,
+                        DType::F32,
+                        leaf.shape.clone(),
+                        PjrtSliceTensor::new(snap.clone(),
+                                             m.region_offset(0, leaf),
+                                             leaf.size),
+                    )),
+                    StateItem::Object {
+                        name: format!("{}::meta", leaf.name),
+                        obj: PyObj::Dict(vec![(
+                            "offset".into(),
+                            PyObj::Int(leaf.offset as i64),
+                        )]),
+                    },
+                ],
+            });
+        }
+        // optimizer regions m and v (+ step/loss tail), one file
+        let mut items: Vec<StateItem> = Vec::new();
+        for (region, tag) in [(1usize, "exp_avg"), (2, "exp_avg_sq")] {
+            for leaf in &m.leaves {
+                items.push(StateItem::Tensor(TensorShard::device(
+                    format!("{}::{tag}", leaf.name),
+                    DType::F32,
+                    leaf.shape.clone(),
+                    PjrtSliceTensor::new(snap.clone(),
+                                         m.region_offset(region, leaf),
+                                         leaf.size),
+                )));
+            }
+        }
+        items.push(StateItem::Tensor(TensorShard::device(
+            "step_loss",
+            DType::F32,
+            vec![2],
+            PjrtSliceTensor::new(snap.clone(), m.step_index(), 2),
+        )));
+        items.push(StateItem::Object {
+            name: "optim_meta".into(),
+            obj: PyObj::Dict(vec![(
+                "optimizer".into(),
+                PyObj::Str("adam".into()),
+            )]),
+        });
+        files.push(ShardFile {
+            name: "zero_pp_rank_0_mp_rank_000_optim_states.pt".into(),
+            kind: FileKind::Optimizer,
+            items,
+        });
+        RankState { rank: 0, files }
+    }
+
+    /// Rebuild the flat state from a checkpoint version directory written
+    /// by the DataStates engine and resume from it.
+    pub fn restore_from(&mut self, version_dir: &Path) -> anyhow::Result<u64> {
+        let m = &self.manifest;
+        let files =
+            crate::restore::read_version_dir_parallel(version_dir, 4)?;
+        let mut flat = vec![0f32; m.packed_len];
+        let put = |flat: &mut [f32], base: usize, bytes: &[u8]| {
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                flat[base + i] = f32::from_le_bytes(c.try_into().unwrap());
+            }
+        };
+        for (i, leaf) in m.leaves.iter().enumerate() {
+            let f = files
+                .get(&format!("layer_{i:02}-model_00-model_states.pt"))
+                .ok_or_else(|| anyhow::anyhow!("missing layer file {i}"))?;
+            let bytes = f
+                .payloads
+                .get(&leaf.name)
+                .ok_or_else(|| anyhow::anyhow!("missing {}", leaf.name))?;
+            anyhow::ensure!(bytes.len() == leaf.size * 4, "{} size",
+                            leaf.name);
+            put(&mut flat, m.region_offset(0, leaf), bytes);
+        }
+        let opt = files
+            .get("zero_pp_rank_0_mp_rank_000_optim_states.pt")
+            .ok_or_else(|| anyhow::anyhow!("missing optimizer file"))?;
+        for (region, tag) in [(1usize, "exp_avg"), (2, "exp_avg_sq")] {
+            for leaf in &m.leaves {
+                let bytes = opt
+                    .payloads
+                    .get(&format!("{}::{tag}", leaf.name))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("missing {}::{tag}", leaf.name)
+                    })?;
+                put(&mut flat, m.region_offset(region, leaf), bytes);
+            }
+        }
+        let tail = opt
+            .payloads
+            .get("step_loss")
+            .ok_or_else(|| anyhow::anyhow!("missing step_loss"))?;
+        put(&mut flat, m.step_index(), tail);
+
+        let meta = files
+            .get("mp_rank_000_model_states.pt")
+            .ok_or_else(|| anyhow::anyhow!("missing metadata file"))?
+            .object("state_dict")?;
+        let iteration = match &meta {
+            PyObj::Dict(d) => d
+                .iter()
+                .find(|(k, _)| k == "iteration")
+                .and_then(|(_, v)| match v {
+                    PyObj::Int(i) => Some(*i as u64),
+                    _ => None,
+                })
+                .unwrap_or(0),
+            _ => 0,
+        };
+        self.state =
+            Arc::new(self.rt.upload_f32(&flat, &[m.packed_len])?);
+        self.iteration = iteration;
+        Ok(iteration)
+    }
+
+    /// Release retired snapshot buffers. Call after `engine.drain()`;
+    /// the drop happens here, on the session thread.
+    pub fn gc(&mut self) {
+        self.retired.clear();
+    }
+
+    /// Read the step counter from the device (consistency checks).
+    pub fn device_step(&self) -> anyhow::Result<f32> {
+        Ok(self.read_tail()?.0)
+    }
+}

@@ -1,0 +1,153 @@
+//! Calibrated behaviour models of the four engines (paper §VI-B).
+//!
+//! Each constant is traceable to a published number:
+//!
+//! - D2H bandwidths: §VI-A (25 GB/s pinned PCIe; pageable staging
+//!   observed around 6-8 GB/s — Table III DeepSpeed stages ~12 GB in
+//!   1.9 s ≈ 6.3 GB/s).
+//! - Write efficiencies: Table III host→file row for the 7B model
+//!   (per-rank shard ≈ 12 GB): DeepSpeed 16.1 s ≈ 0.74 GB/s
+//!   (single-threaded `torch.save`), TorchSnapshot 11.5 s ≈ 1.05 GB/s
+//!   (0.42 of the 2.5 GB/s fair share), DataStates-LLM 3.8 s ≈ 3.2 GB/s
+//!   (≈ full node share via streaming + io_uring; we cap at 0.95 of the
+//!   fair share borrowed across ranks). Fig 14 confirms the ordering and
+//!   the 1.25-2.5x gap between DataStates-LLM and TorchSnapshot.
+//! - Launch overheads: Table III metadata/serialize row
+//!   (DataStates-LLM 15.6 ms over ~20 files ≈ 0.8 ms/file;
+//!   TorchSnapshot 25.8 ms).
+
+use crate::baselines::EngineKind;
+use crate::cluster::Testbed;
+
+/// Behavioural parameters of one engine in the simulation plane.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineModel {
+    /// Whether the whole checkpoint is on the critical path (DeepSpeed).
+    pub fully_blocking: bool,
+    /// Whether capture is lazy (overlapped with fwd/bwd) vs synchronous.
+    pub lazy_capture: bool,
+    /// Whether tensors pass through the serializer (type-agnostic
+    /// `torch.save` deep copies).
+    pub serialize_tensors: bool,
+    /// Whether objects are serialized on the blocking path
+    /// (metadata-first ordering).
+    pub metadata_first: bool,
+    /// Whether flushing streams chunks as they are staged (vs
+    /// snapshot-then-flush per file).
+    pub streaming: bool,
+    /// Whether every chunk becomes its own file (metadata-op explosion).
+    pub chunk_files: bool,
+    /// Chunk size for the chunk-file model.
+    pub chunk_bytes: u64,
+    /// D2H staging bandwidth, bytes/s.
+    pub d2h_bps: f64,
+    /// Fraction of the per-rank fair share of node write bandwidth
+    /// actually achieved.
+    pub write_eff: f64,
+    /// Absolute per-rank write cap (single-threaded writers), bytes/s.
+    pub write_cap_bps: f64,
+    /// Blocking launch cost per checkpoint file, seconds.
+    pub launch_per_file_s: f64,
+    /// Blocking capture-plan construction cost per payload byte, s/B
+    /// (state-dict traversal, header/view setup — Table III's
+    /// "metadata" component grows with shard size).
+    pub plan_per_byte_s: f64,
+}
+
+/// Look up the calibrated model for an engine on a testbed.
+pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
+    match kind {
+        EngineKind::DeepSpeedDefault => EngineModel {
+            fully_blocking: true,
+            lazy_capture: false,
+            serialize_tensors: true,
+            metadata_first: true,
+            streaming: false,
+            chunk_files: false,
+            chunk_bytes: u64::MAX,
+            d2h_bps: tb.pcie_pageable_bps * 0.8, // blocking pageable copies
+            write_eff: 0.30,
+            write_cap_bps: 0.74e9, // single-threaded torch.save
+            launch_per_file_s: 2e-3,
+            plan_per_byte_s: 0.0, // already fully blocking
+        },
+        EngineKind::TorchSnapshot => EngineModel {
+            fully_blocking: false,
+            lazy_capture: false, // snapshot is synchronous
+            serialize_tensors: false,
+            metadata_first: true, // small residual objects, inline
+            streaming: false,
+            chunk_files: true,
+            chunk_bytes: 512 << 20, // 512 MB chunk files
+            d2h_bps: tb.pcie_pageable_bps, // non-pinned staging buffers
+            write_eff: 0.42,
+            write_cap_bps: f64::INFINITY,
+            launch_per_file_s: 1.2e-3,
+            plan_per_byte_s: 2.0e-12, // plan is cheap; snapshot dominates
+        },
+        EngineKind::DataStatesOld => EngineModel {
+            fully_blocking: false,
+            lazy_capture: true,
+            serialize_tensors: false,
+            metadata_first: true, // serializes objects before launching
+            streaming: false,     // per-file snapshot-then-flush
+            chunk_files: false,
+            chunk_bytes: u64::MAX,
+            d2h_bps: tb.pcie_pinned_bps, // pinned pool
+            write_eff: 0.55,             // single background writer
+            write_cap_bps: f64::INFINITY,
+            launch_per_file_s: 1.0e-3,
+            plan_per_byte_s: 6.0e-12, // eager header construction
+        },
+        EngineKind::DataStatesLlm => EngineModel {
+            fully_blocking: false,
+            lazy_capture: true,
+            serialize_tensors: false,
+            metadata_first: false, // providers serialize lazily
+            streaming: true,       // chunks flush while staging
+            chunk_files: false,
+            chunk_bytes: u64::MAX,
+            d2h_bps: tb.pcie_pinned_bps,
+            write_eff: 0.95, // io_uring + O_DIRECT streaming writes
+            write_cap_bps: f64::INFINITY,
+            launch_per_file_s: 0.8e-3,
+            plan_per_byte_s: 1.2e-12, // lazy header: ~1.2 ms/GB
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_deepspeed_is_fully_blocking() {
+        let tb = Testbed::polaris();
+        for kind in EngineKind::all() {
+            let m = engine_model(kind, &tb);
+            assert_eq!(m.fully_blocking,
+                       kind == EngineKind::DeepSpeedDefault);
+        }
+    }
+
+    #[test]
+    fn lazy_engines_use_pinned_bandwidth() {
+        let tb = Testbed::polaris();
+        for kind in [EngineKind::DataStatesOld, EngineKind::DataStatesLlm] {
+            assert_eq!(engine_model(kind, &tb).d2h_bps,
+                       tb.pcie_pinned_bps);
+        }
+        assert!(engine_model(EngineKind::TorchSnapshot, &tb).d2h_bps
+                < tb.pcie_pinned_bps);
+    }
+
+    #[test]
+    fn write_efficiency_ordering_matches_table3() {
+        let tb = Testbed::polaris();
+        let eff = |k| engine_model(k, &tb).write_eff;
+        assert!(eff(EngineKind::DataStatesLlm)
+                > eff(EngineKind::DataStatesOld));
+        assert!(eff(EngineKind::DataStatesOld)
+                > eff(EngineKind::TorchSnapshot));
+    }
+}

@@ -1,0 +1,14 @@
+//! Checkpoint payload model: tensors, Python-like objects, shard files,
+//! and the 3D (TP/PP/DP + ZeRO) partitioner.
+
+pub mod object;
+pub mod partition;
+pub mod shard;
+pub mod tensor;
+
+pub use object::PyObj;
+pub use partition::{census, materialize, table1_rows, Census, FileDesc,
+                    RankCensus};
+pub use shard::{FileKind, RankState, ShardFile, StateItem};
+pub use tensor::{DType, DeviceTensor, SimDeviceTensor, TensorData,
+                 TensorShard};

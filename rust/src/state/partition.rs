@@ -1,0 +1,423 @@
+//! 3D partitioner: map an [`LlmConfig`] + [`Parallelism`] onto per-rank
+//! checkpoint compositions — reproducing the paper's "3D checkpoint
+//! heterogeneity" (§IV-C, Table I, Figures 1 and 2).
+//!
+//! The partitioner follows DeepSpeed/Megatron's default layout:
+//!
+//! - one `layer_<i>-model_<tp>-model_states.pt` file per *layer unit* per
+//!   TP rank (layer units = transformer layers + embedding on the first
+//!   PP stage + final norm and LM head on the last stage),
+//! - one `mp_rank_<r>_model_states.pt` metadata file per rank
+//!   (host-resident Python control state),
+//! - one `zero_pp_rank_<d>_mp_rank_<r>_optim_states.pt` per rank holding
+//!   the rank's ZeRO-1 partition of the fp32 optimizer state.
+//!
+//! Two outputs: a [`Census`] (exact sizes, no payloads — used by Table I,
+//! Fig 2 and the discrete-event simulator) and
+//! [`materialize`] (real bytes at a configurable scale — used by the
+//! real-plane engine, tests and benchmarks).
+
+use crate::config::{LlmConfig, Parallelism};
+use crate::state::object::PyObj;
+use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
+use crate::state::tensor::{DType, SimDeviceTensor, TensorShard};
+
+/// Descriptor of one checkpoint file (no payload).
+#[derive(Debug, Clone)]
+pub struct FileDesc {
+    pub name: String,
+    pub kind: FileKind,
+    /// Bulk tensor payload bytes in this file.
+    pub tensor_bytes: u64,
+    /// dtype of the bulk payload.
+    pub dtype: DType,
+    /// Number of distinct tensors.
+    pub n_tensors: usize,
+    /// Serialized non-tensor (Python object) bytes.
+    pub object_bytes: u64,
+    /// True if the tensors live on device (GPU) rather than host.
+    pub on_device: bool,
+}
+
+/// Checkpoint composition of one rank.
+#[derive(Debug, Clone)]
+pub struct RankCensus {
+    pub rank: usize,
+    /// (tp_rank, pp_stage, dp_replica) coordinates.
+    pub coords: (usize, usize, usize),
+    pub files: Vec<FileDesc>,
+}
+
+impl RankCensus {
+    pub fn tensor_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.tensor_bytes).sum()
+    }
+
+    pub fn object_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.object_bytes).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.tensor_bytes() + self.object_bytes()
+    }
+}
+
+/// Census of a whole training job.
+#[derive(Debug, Clone)]
+pub struct Census {
+    pub model: LlmConfig,
+    pub par: Parallelism,
+    pub ranks: Vec<RankCensus>,
+}
+
+/// Number of layer units on a PP stage (uniform partition + extras).
+#[cfg(test)]
+fn units_on_stage(cfg: &LlmConfig, pp: usize, stage: usize) -> usize {
+    let base = cfg.layers / pp;
+    let rem = cfg.layers % pp;
+    let mut units = base + usize::from(stage < rem);
+    if stage == 0 {
+        units += 1; // token+position embedding unit
+    }
+    if stage == pp - 1 {
+        units += 2; // final layernorm + LM head units
+    }
+    units
+}
+
+/// fp16 bytes of one layer unit's TP slice.
+fn unit_param_bytes(cfg: &LlmConfig, tp: usize, unit_kind: UnitKind) -> u64 {
+    let d = cfg.hidden as u64;
+    let per_tp = |x: u64| x.div_ceil(tp as u64);
+    match unit_kind {
+        UnitKind::Embedding => 2 * per_tp((cfg.vocab as u64 + cfg.seq_len as u64) * d),
+        UnitKind::Transformer => 2 * per_tp(12 * d * d + 13 * d),
+        UnitKind::FinalNorm => 2 * 2 * d, // replicated, tiny
+        UnitKind::LmHead => 2 * per_tp(cfg.vocab as u64 * d),
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum UnitKind {
+    Embedding,
+    Transformer,
+    FinalNorm,
+    LmHead,
+}
+
+fn stage_units(cfg: &LlmConfig, pp: usize, stage: usize) -> Vec<(usize, UnitKind)> {
+    // global unit index -> kind; unit ids follow DeepSpeed layer ids.
+    let mut units = Vec::new();
+    let base = cfg.layers / pp;
+    let rem = cfg.layers % pp;
+    let first_layer = stage * base + stage.min(rem);
+    let n_layers = base + usize::from(stage < rem);
+    if stage == 0 {
+        units.push((0usize, UnitKind::Embedding));
+    }
+    for i in 0..n_layers {
+        units.push((2 + first_layer + i, UnitKind::Transformer));
+    }
+    if stage == pp - 1 {
+        units.push((2 + cfg.layers + 1, UnitKind::FinalNorm));
+        units.push((2 + cfg.layers + 2, UnitKind::LmHead));
+    }
+    units
+}
+
+/// Host metadata object size per rank — calibrated to Table I
+/// (≈5 MB/rank: 20 MB over 4 ranks for 3B, 40 MB over 8 for 7B, ...).
+const METADATA_OBJ_BYTES: u64 = 5 << 20;
+/// Small non-tensor residue inside each layer file (Table I: ~28 KB over
+/// 132 files ≈ 210 B each).
+const LAYER_OBJ_BYTES: u64 = 212;
+/// Non-tensor residue in each optimizer file (Table I: ~25 KB each).
+const OPTIM_OBJ_BYTES: u64 = 25 << 10;
+/// Tiny host tensors in the metadata file (Table I "tensors" column for
+/// metadata: 20 KB over 4 files ≈ 5 KB each).
+const METADATA_TENSOR_BYTES: u64 = 5 << 10;
+
+/// Compute the full checkpoint census for a job.
+pub fn census(cfg: &LlmConfig, par: &Parallelism) -> Census {
+    let mut ranks = Vec::with_capacity(par.world());
+    let total_params = cfg.num_params();
+    for dp in 0..par.dp {
+        for pp in 0..par.pp {
+            for tp in 0..par.tp {
+                let rank = dp * par.pp * par.tp + pp * par.tp + tp;
+                let mut files = Vec::new();
+                // metadata file (host-resident control state)
+                files.push(FileDesc {
+                    name: format!("mp_rank_{rank:03}_model_states.pt"),
+                    kind: FileKind::Metadata,
+                    tensor_bytes: METADATA_TENSOR_BYTES,
+                    dtype: DType::F32,
+                    n_tensors: 4,
+                    object_bytes: METADATA_OBJ_BYTES,
+                    on_device: false,
+                });
+                // layer parameter files: DP replicas hold identical
+                // parameters, so layer-shard writes are distributed
+                // round-robin across replicas to parallelize I/O
+                // (§II, Figure 1(b)): unit u is written by replica
+                // u % dp.
+                {
+                    for (unit_id, kind) in stage_units(cfg, par.pp, pp) {
+                        if unit_id % par.dp != dp {
+                            continue;
+                        }
+                        let bytes = unit_param_bytes(cfg, par.tp, kind);
+                        let n_tensors = match kind {
+                            UnitKind::Embedding => 2,
+                            UnitKind::Transformer => 12,
+                            UnitKind::FinalNorm => 2,
+                            UnitKind::LmHead => 1,
+                        };
+                        files.push(FileDesc {
+                            name: format!(
+                                "layer_{unit_id:02}-model_{tp:02}-model_states.pt"
+                            ),
+                            kind: FileKind::ParamLayer,
+                            tensor_bytes: bytes,
+                            dtype: DType::F16,
+                            n_tensors,
+                            object_bytes: LAYER_OBJ_BYTES,
+                            on_device: true,
+                        });
+                    }
+                }
+                // optimizer partition: ZeRO-1 shards the fp32 state
+                // (m + v + master weights = 12 B/param) over DP replicas;
+                // model parallelism divides by tp*pp first.
+                let model_parallel_share =
+                    total_params.div_ceil((par.tp * par.pp) as u64);
+                let zero_share = if par.zero_stage >= 1 {
+                    model_parallel_share.div_ceil(par.dp as u64)
+                } else {
+                    model_parallel_share
+                };
+                files.push(FileDesc {
+                    name: format!(
+                        "zero_pp_rank_{dp}_mp_rank_{rank:03}_optim_states.pt"
+                    ),
+                    kind: FileKind::Optimizer,
+                    tensor_bytes: 12 * zero_share,
+                    dtype: DType::F32,
+                    n_tensors: 3,
+                    object_bytes: OPTIM_OBJ_BYTES,
+                    on_device: true,
+                });
+                ranks.push(RankCensus { rank, coords: (tp, pp, dp), files });
+            }
+        }
+    }
+    Census { model: cfg.clone(), par: *par, ranks }
+}
+
+/// Table I row: global census aggregated per file kind.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub model: String,
+    pub kind: FileKind,
+    pub n_files: usize,
+    pub tensor_bytes: u64,
+    pub object_bytes: u64,
+    pub dtype: DType,
+}
+
+/// Aggregate a census into the three Table I rows.
+pub fn table1_rows(c: &Census) -> Vec<Table1Row> {
+    let mut rows = Vec::new();
+    for kind in [FileKind::Metadata, FileKind::ParamLayer, FileKind::Optimizer]
+    {
+        let files: Vec<&FileDesc> = c
+            .ranks
+            .iter()
+            .flat_map(|r| r.files.iter())
+            .filter(|f| f.kind == kind)
+            .collect();
+        rows.push(Table1Row {
+            model: c.model.name.clone(),
+            kind,
+            n_files: files.len(),
+            tensor_bytes: files.iter().map(|f| f.tensor_bytes).sum(),
+            object_bytes: files.iter().map(|f| f.object_bytes).sum(),
+            dtype: files.first().map(|f| f.dtype).unwrap_or(DType::F32),
+        });
+    }
+    rows
+}
+
+/// Materialize one rank's census into real (scaled) payloads for the
+/// real-plane engine. `scale` multiplies tensor sizes (e.g. `1e-3` turns a
+/// 9 GB optimizer shard into 9 MB); object sizes are scaled by
+/// `obj_scale`. Tensors tagged `on_device` become [`SimDeviceTensor`]s so
+/// the engine exercises the D2H staging path.
+pub fn materialize(rank: &RankCensus, scale: f64, obj_scale: f64,
+                   seed: u64) -> RankState {
+    let mut files = Vec::with_capacity(rank.files.len());
+    for (fi, fd) in rank.files.iter().enumerate() {
+        let mut items = Vec::new();
+        let per_tensor =
+            ((fd.tensor_bytes as f64 * scale) / fd.n_tensors.max(1) as f64)
+                .max(64.0) as usize;
+        for ti in 0..fd.n_tensors {
+            let esz = fd.dtype.size_bytes();
+            let numel = per_tensor.div_ceil(esz).max(1);
+            let shape = vec![numel];
+            let name = format!("{}::tensor_{ti}", fd.name);
+            let t = if fd.on_device {
+                let bytes = TensorShard::synthetic(
+                    &name, fd.dtype, shape.clone(),
+                    seed ^ ((fi as u64) << 32) ^ ti as u64,
+                );
+                let raw = match &bytes.data {
+                    crate::state::tensor::TensorData::Host(b) => {
+                        b.as_ref().clone()
+                    }
+                    _ => unreachable!(),
+                };
+                TensorShard::device(&name, fd.dtype, shape,
+                                    SimDeviceTensor::new(raw))
+            } else {
+                TensorShard::synthetic(
+                    &name, fd.dtype, shape,
+                    seed ^ ((fi as u64) << 32) ^ ti as u64,
+                )
+            };
+            items.push(StateItem::Tensor(t));
+        }
+        let obj_bytes = ((fd.object_bytes as f64 * obj_scale) as usize).max(64);
+        items.push(StateItem::Object {
+            name: format!("{}::state_dict", fd.name),
+            obj: PyObj::synthetic_metadata(obj_bytes,
+                                           seed ^ 0xABCD ^ fi as u64),
+        });
+        files.push(ShardFile { name: fd.name.clone(), kind: fd.kind, items });
+    }
+    RankState { rank: rank.rank, files }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str) -> LlmConfig {
+        LlmConfig::by_name(name).unwrap()
+    }
+
+    #[test]
+    fn table1_file_counts_match_paper() {
+        // Paper Table I, DP=1: param files 132/140/172; metadata and
+        // optimizer files = world size.
+        for (name, par_files) in [("3B", 132), ("7B", 140), ("13B", 172)] {
+            let c = cfg(name);
+            let par = Parallelism::paper_default(&c);
+            let rows = table1_rows(&census(&c, &par));
+            let by = |k: FileKind| {
+                rows.iter().find(|r| r.kind == k).unwrap().n_files
+            };
+            assert_eq!(by(FileKind::ParamLayer), par_files, "{name}");
+            assert_eq!(by(FileKind::Metadata), par.world(), "{name}");
+            assert_eq!(by(FileKind::Optimizer), par.world(), "{name}");
+        }
+    }
+
+    #[test]
+    fn table1_sizes_match_paper_magnitudes() {
+        // 3B: ~5.8 GB fp16 params, ~35 GB fp32 optimizer.
+        let c = cfg("3B");
+        let rows =
+            table1_rows(&census(&c, &Parallelism::paper_default(&c)));
+        let params = rows
+            .iter()
+            .find(|r| r.kind == FileKind::ParamLayer)
+            .unwrap()
+            .tensor_bytes as f64
+            / 1e9;
+        let optim = rows
+            .iter()
+            .find(|r| r.kind == FileKind::Optimizer)
+            .unwrap()
+            .tensor_bytes as f64
+            / 1e9;
+        assert!((5.0..8.0).contains(&params), "params {params} GB");
+        assert!((32.0..40.0).contains(&optim), "optim {optim} GB");
+    }
+
+    #[test]
+    fn per_gpu_checkpoint_size_near_constant() {
+        // Fig 2: 10-15 GB per GPU across model scales.
+        for c in LlmConfig::table2() {
+            let par = Parallelism::paper_default(&c);
+            let cs = census(&c, &par);
+            let per_gpu = cs.ranks.iter().map(|r| r.total_bytes()).sum::<u64>()
+                as f64
+                / par.world() as f64
+                / 1e9;
+            assert!(
+                (8.0..18.0).contains(&per_gpu),
+                "{}: {per_gpu:.1} GB/GPU",
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn zero1_shards_optimizer_across_dp() {
+        let c = cfg("7B");
+        let p1 = Parallelism::new(4, 2, 1);
+        let p4 = Parallelism::new(4, 2, 4);
+        let opt_bytes = |p: &Parallelism| {
+            census(&c, p).ranks[0]
+                .files
+                .iter()
+                .find(|f| f.kind == FileKind::Optimizer)
+                .unwrap()
+                .tensor_bytes
+        };
+        let b1 = opt_bytes(&p1);
+        let b4 = opt_bytes(&p4);
+        assert!((b1 as f64 / b4 as f64 - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn materialized_sizes_track_census() {
+        let c = cfg("3B");
+        let par = Parallelism::paper_default(&c);
+        let cs = census(&c, &par);
+        let rs = materialize(&cs.ranks[0], 1e-4, 1e-2, 42);
+        assert_eq!(rs.num_files(), cs.ranks[0].files.len());
+        let want = cs.ranks[0].tensor_bytes() as f64 * 1e-4;
+        let got: usize =
+            rs.files.iter().map(|f| f.tensor_bytes()).sum();
+        assert!(
+            (got as f64) > want * 0.8 && (got as f64) < want * 1.5,
+            "want≈{want} got={got}"
+        );
+        // device residency is preserved for param/optim tensors
+        let dev: usize = rs.files.iter().map(|f| f.device_bytes()).sum();
+        assert!(dev > 0);
+    }
+
+    #[test]
+    fn layer_units_cover_all_layers_once() {
+        let c = cfg("13B");
+        let pp = 4;
+        let mut seen = std::collections::HashSet::new();
+        let mut transformer_units = 0;
+        for s in 0..pp {
+            for (id, kind) in stage_units(&c, pp, s) {
+                assert!(seen.insert(id), "unit {id} duplicated");
+                if kind == UnitKind::Transformer {
+                    transformer_units += 1;
+                }
+            }
+        }
+        assert_eq!(transformer_units, c.layers);
+        assert_eq!(
+            (0..pp).map(|s| units_on_stage(&c, pp, s)).sum::<usize>(),
+            c.layers + 3
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Shard files and rank state: the unit the checkpoint engine consumes.
+//!
+//! A checkpoint on one rank is a set of [`ShardFile`]s (DeepSpeed writes
+//! each as an independent file — layer shards, optimizer shard, metadata
+//! shard). Each file mixes tensors and objects: the "cardinality" axis of
+//! 3D heterogeneity.
+
+use super::object::PyObj;
+use super::tensor::TensorShard;
+
+/// One logical item inside a shard file.
+#[derive(Clone)]
+pub enum StateItem {
+    Tensor(TensorShard),
+    Object { name: String, obj: PyObj },
+}
+
+impl StateItem {
+    pub fn name(&self) -> &str {
+        match self {
+            StateItem::Tensor(t) => &t.name,
+            StateItem::Object { name, .. } => name,
+        }
+    }
+
+    /// Payload bytes (exact for tensors, approximate for objects until
+    /// serialized).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            StateItem::Tensor(t) => t.size_bytes(),
+            StateItem::Object { obj, .. } => obj.approx_size(),
+        }
+    }
+
+    pub fn is_tensor(&self) -> bool {
+        matches!(self, StateItem::Tensor(_))
+    }
+}
+
+impl std::fmt::Debug for StateItem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateItem::Tensor(t) => write!(f, "{t:?}"),
+            StateItem::Object { name, obj } => {
+                write!(f, "Object({name}, ~{} B)", obj.approx_size())
+            }
+        }
+    }
+}
+
+/// What role a shard file plays (drives Table I's census rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FileKind {
+    /// `mp_rank_*_model_states.pt`: host-resident control state.
+    Metadata,
+    /// `layer_*-model_*-model_states.pt`: fp16 parameter shards.
+    ParamLayer,
+    /// `*_optim_states.pt`: fp32 optimizer partition (ZeRO-1).
+    Optimizer,
+}
+
+/// One checkpoint file on one rank.
+#[derive(Clone, Debug)]
+pub struct ShardFile {
+    /// File name relative to the checkpoint directory.
+    pub name: String,
+    pub kind: FileKind,
+    pub items: Vec<StateItem>,
+}
+
+impl ShardFile {
+    pub fn tensor_bytes(&self) -> usize {
+        self.items
+            .iter()
+            .filter_map(|i| match i {
+                StateItem::Tensor(t) => Some(t.size_bytes()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn object_bytes_approx(&self) -> usize {
+        self.items
+            .iter()
+            .filter_map(|i| match i {
+                StateItem::Object { obj, .. } => Some(obj.approx_size()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.items.iter().filter(|i| i.is_tensor()).count()
+    }
+
+    /// Bytes that still live on-device and need D2H staging.
+    pub fn device_bytes(&self) -> usize {
+        self.items
+            .iter()
+            .filter_map(|i| match i {
+                StateItem::Tensor(t) if t.data.is_device() => {
+                    Some(t.size_bytes())
+                }
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+/// All checkpoint files owned by one rank at one checkpoint request.
+#[derive(Clone, Debug, Default)]
+pub struct RankState {
+    pub rank: usize,
+    pub files: Vec<ShardFile>,
+}
+
+impl RankState {
+    pub fn total_bytes(&self) -> usize {
+        self.files
+            .iter()
+            .map(|f| f.tensor_bytes() + f.object_bytes_approx())
+            .sum()
+    }
+
+    pub fn num_files(&self) -> usize {
+        self.files.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::tensor::DType;
+
+    #[test]
+    fn shard_file_accounting() {
+        let f = ShardFile {
+            name: "layer_00.pt".into(),
+            kind: FileKind::ParamLayer,
+            items: vec![
+                StateItem::Tensor(TensorShard::synthetic(
+                    "w", DType::F16, vec![32, 32], 1)),
+                StateItem::Object {
+                    name: "meta".into(),
+                    obj: PyObj::Dict(vec![("v".into(), PyObj::Int(1))]),
+                },
+            ],
+        };
+        assert_eq!(f.tensor_bytes(), 32 * 32 * 2);
+        assert_eq!(f.num_tensors(), 1);
+        assert!(f.object_bytes_approx() > 0);
+        assert_eq!(f.device_bytes(), 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! Tensor shards: the bulk payload of an LLM checkpoint.
+//!
+//! A [`TensorShard`] is a named, typed, shaped buffer that lives either on
+//! the (simulated or PJRT) device or in host memory — the "residency" axis
+//! of the paper's 3D checkpoint heterogeneity. Device tensors expose a
+//! [`DeviceTensor::stage_into`] hook, the D2H copy the engine schedules on
+//! its copy stream.
+
+use std::sync::Arc;
+
+/// Element type of a shard — the "type/precision" heterogeneity axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    BF16,
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F16 | DType::BF16 => 2,
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+/// A device-resident tensor that can be staged to host memory.
+///
+/// Implementations: [`SimDeviceTensor`] (host bytes tagged as
+/// device-resident, used by tests/benchmarks) and
+/// `runtime::PjrtDeviceTensor` (a live PJRT buffer; staging is
+/// `to_literal_sync`, the CPU-PJRT analogue of a CUDA D2H copy).
+pub trait DeviceTensor: Send + Sync {
+    fn size_bytes(&self) -> usize;
+    /// Copy the tensor's bytes into `dst` (len == `size_bytes()`).
+    fn stage_into(&self, dst: &mut [u8]) -> anyhow::Result<()>;
+}
+
+/// Simulated device tensor: bytes held host-side but only reachable
+/// through the staging hook, exactly like a GPU-resident tensor.
+pub struct SimDeviceTensor {
+    pub bytes: Arc<Vec<u8>>,
+}
+
+impl SimDeviceTensor {
+    pub fn new(bytes: Vec<u8>) -> Arc<Self> {
+        Arc::new(SimDeviceTensor { bytes: Arc::new(bytes) })
+    }
+}
+
+impl DeviceTensor for SimDeviceTensor {
+    fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn stage_into(&self, dst: &mut [u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(dst.len() == self.bytes.len(), "size mismatch");
+        dst.copy_from_slice(&self.bytes);
+        Ok(())
+    }
+}
+
+/// Where the payload currently lives.
+#[derive(Clone)]
+pub enum TensorData {
+    /// Already host-resident: the provider exposes these bytes zero-copy.
+    Host(Arc<Vec<u8>>),
+    /// Device-resident: must be staged through the D2H copy stream first.
+    Device(Arc<dyn DeviceTensor>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::Host(b) => b.len(),
+            TensorData::Device(d) => d.size_bytes(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_device(&self) -> bool {
+        matches!(self, TensorData::Device(_))
+    }
+}
+
+/// A named tensor shard — one logical object inside a checkpoint file.
+#[derive(Clone)]
+pub struct TensorShard {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl TensorShard {
+    /// Host-resident shard from raw bytes.
+    pub fn host(name: impl Into<String>, dtype: DType, shape: Vec<usize>,
+                bytes: Vec<u8>) -> Self {
+        let s = TensorShard {
+            name: name.into(),
+            dtype,
+            shape,
+            data: TensorData::Host(Arc::new(bytes)),
+        };
+        debug_assert_eq!(s.expected_bytes(), s.data.len());
+        s
+    }
+
+    /// Device-resident shard.
+    pub fn device(name: impl Into<String>, dtype: DType, shape: Vec<usize>,
+                  dev: Arc<dyn DeviceTensor>) -> Self {
+        TensorShard {
+            name: name.into(),
+            dtype,
+            shape,
+            data: TensorData::Device(dev),
+        }
+    }
+
+    /// Deterministic pseudo-random host shard (tests, benchmarks).
+    pub fn synthetic(name: impl Into<String>, dtype: DType,
+                     shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product::<usize>() * dtype.size_bytes();
+        let mut bytes = vec![0u8; n];
+        let mut x = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        for chunk in bytes.chunks_mut(8) {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let le = x.to_le_bytes();
+            let l = chunk.len();
+            chunk.copy_from_slice(&le[..l]);
+        }
+        TensorShard::host(name, dtype, shape, bytes)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn expected_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl std::fmt::Debug for TensorShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "TensorShard({} {:?} {:?} {} bytes {})",
+            self.name,
+            self.dtype,
+            self.shape,
+            self.size_bytes(),
+            if self.data.is_device() { "device" } else { "host" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = TensorShard::synthetic("a", DType::F32, vec![16, 4], 7);
+        let b = TensorShard::synthetic("a", DType::F32, vec![16, 4], 7);
+        let (TensorData::Host(x), TensorData::Host(y)) = (&a.data, &b.data)
+        else {
+            panic!()
+        };
+        assert_eq!(x, y);
+        assert_eq!(a.size_bytes(), 16 * 4 * 4);
+    }
+
+    #[test]
+    fn device_staging_roundtrip() {
+        let bytes: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+        let dev = SimDeviceTensor::new(bytes.clone());
+        let shard =
+            TensorShard::device("d", DType::U8, vec![1024], dev.clone());
+        assert!(shard.data.is_device());
+        let mut dst = vec![0u8; 1024];
+        match &shard.data {
+            TensorData::Device(d) => d.stage_into(&mut dst).unwrap(),
+            _ => unreachable!(),
+        }
+        assert_eq!(dst, bytes);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F16.size_bytes(), 2);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::F32.size_bytes(), 4);
+    }
+}

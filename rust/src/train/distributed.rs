@@ -1,0 +1,258 @@
+//! Multi-rank checkpointed training (real plane).
+//!
+//! The paper's engine is per-rank, but its *consistency* story is global:
+//! a checkpoint version is usable only when **every** rank persisted its
+//! shards, and the effective checkpoint throughput is dictated by the
+//! slowest rank (§VI-C3). This module runs N ranks (threads standing in
+//! for processes/GPUs, as in the node-level microbenchmark of Fig 14),
+//! each with its own engine instance, synchronized by iteration barriers:
+//!
+//! - every rank runs fwd/bwd → gate → update → (maybe) checkpoint;
+//! - a barrier after the update models the collective the training
+//!   runtime already performs (pipeline flush / allreduce);
+//! - a version is *committed* — the leader writes `global_commit_vNNN` —
+//!   only after all ranks drained that version, giving atomic global
+//!   versions on restart (a rank crash before commit leaves the previous
+//!   committed version authoritative).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+
+use crate::baselines::EngineKind;
+use crate::config::EngineConfig;
+use crate::state::RankState;
+
+/// Per-rank outcome of a distributed run.
+#[derive(Debug, Clone, Default)]
+pub struct RankReport {
+    pub rank: usize,
+    pub iterations: u64,
+    pub gate_wait_s: f64,
+    pub launch_s: f64,
+    pub blocked_s: f64,
+}
+
+/// Global outcome.
+#[derive(Debug, Clone, Default)]
+pub struct WorldReport {
+    pub ranks: Vec<RankReport>,
+    pub wall_s: f64,
+    pub committed_versions: Vec<u64>,
+}
+
+impl WorldReport {
+    /// The slowest rank's total blocked time — what dictates effective
+    /// global checkpoint throughput.
+    pub fn slowest_blocked_s(&self) -> f64 {
+        self.ranks
+            .iter()
+            .map(|r| r.blocked_s)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Configuration for a multi-rank run.
+pub struct WorldConfig {
+    pub world: usize,
+    pub iterations: u64,
+    /// Checkpoint every `interval` iterations (0 = never).
+    pub interval: u64,
+    pub engine: EngineKind,
+    pub ckpt_root: PathBuf,
+    /// Per-rank engine tuning.
+    pub engine_cfg: EngineConfig,
+}
+
+/// Run a synchronized multi-rank training loop.
+///
+/// `state_fn(rank, iteration)` produces each rank's shard set;
+/// `compute_fn(rank, iteration)` performs that rank's fwd+bwd work.
+pub fn run_world<S, C>(cfg: &WorldConfig, state_fn: S, compute_fn: C)
+    -> anyhow::Result<WorldReport>
+where
+    S: Fn(usize, u64) -> RankState + Send + Sync,
+    C: Fn(usize, u64) + Send + Sync,
+{
+    let barrier = Arc::new(Barrier::new(cfg.world));
+    let drained = Arc::new(AtomicU64::new(0));
+    let wall0 = std::time::Instant::now();
+    let reports: Vec<anyhow::Result<RankReport>> =
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for rank in 0..cfg.world {
+                let barrier = barrier.clone();
+                let drained = drained.clone();
+                let state_fn = &state_fn;
+                let compute_fn = &compute_fn;
+                handles.push(scope.spawn(move || {
+                    let mut ecfg = cfg.engine_cfg.clone();
+                    ecfg.ckpt_dir =
+                        cfg.ckpt_root.join(format!("rank{rank:03}"));
+                    let mut engine = cfg.engine.build(ecfg)?;
+                    let mut report =
+                        RankReport { rank, ..Default::default() };
+                    for it in 0..cfg.iterations {
+                        compute_fn(rank, it);
+                        let t = std::time::Instant::now();
+                        report.gate_wait_s +=
+                            engine.wait_snapshot_complete()?;
+                        // update phase would run here (mutation)
+                        if cfg.interval > 0
+                            && (it + 1) % cfg.interval == 0
+                        {
+                            let state = state_fn(rank, it);
+                            engine.checkpoint(it + 1, &state)?;
+                        }
+                        report.blocked_s += t.elapsed().as_secs_f64();
+                        report.launch_s = report.blocked_s
+                            - report.gate_wait_s;
+                        report.iterations += 1;
+                        // the training collective (allreduce/pipeline
+                        // flush) every iteration
+                        barrier.wait();
+                    }
+                    engine.drain()?;
+                    drained.fetch_add(1, Ordering::AcqRel);
+                    Ok(report)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+    let mut world = WorldReport::default();
+    for r in reports {
+        world.ranks.push(r?);
+    }
+    world.wall_s = wall0.elapsed().as_secs_f64();
+
+    // leader commits global versions only after every rank drained
+    anyhow::ensure!(
+        drained.load(Ordering::Acquire) == cfg.world as u64,
+        "not all ranks drained"
+    );
+    if cfg.interval > 0 {
+        let mut v = cfg.interval;
+        while v <= cfg.iterations {
+            // verify every rank produced the version, then commit
+            let all = (0..cfg.world).all(|r| {
+                cfg.ckpt_root
+                    .join(format!("rank{r:03}/v{v:06}"))
+                    .exists()
+            });
+            if all {
+                std::fs::write(
+                    cfg.ckpt_root.join(format!("global_commit_v{v:06}")),
+                    format!("{}\n", cfg.world),
+                )?;
+                world.committed_versions.push(v);
+            }
+            v += cfg.interval;
+        }
+    }
+    Ok(world)
+}
+
+/// Latest globally-committed version (restart entry point).
+pub fn latest_committed(root: &std::path::Path)
+    -> anyhow::Result<Option<u64>> {
+    let mut best = None;
+    if !root.exists() {
+        return Ok(None);
+    }
+    for entry in std::fs::read_dir(root)? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if let Some(v) = name
+            .strip_prefix("global_commit_v")
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            best = best.max(Some(v));
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::state::partition::{census, materialize};
+    use crate::config::{LlmConfig, Parallelism};
+    use crate::util::TempDir;
+
+    fn world_cfg(dir: &std::path::Path, world: usize, interval: u64)
+        -> WorldConfig {
+        WorldConfig {
+            world,
+            iterations: 4,
+            interval,
+            engine: EngineKind::DataStatesLlm,
+            ckpt_root: dir.to_path_buf(),
+            engine_cfg: EngineConfig::default(),
+        }
+    }
+
+    #[test]
+    fn four_ranks_commit_global_versions() {
+        let dir = TempDir::new("world").unwrap();
+        let cfg7 = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::new(4, 1, 1);
+        let cs = census(&cfg7, &par);
+        let report = run_world(
+            &world_cfg(dir.path(), 4, 2),
+            |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.02,
+                                   (rank as u64) << 32 | it),
+            |_, _| std::thread::sleep(
+                std::time::Duration::from_millis(2)),
+        )
+        .unwrap();
+        assert_eq!(report.ranks.len(), 4);
+        assert_eq!(report.committed_versions, vec![2, 4]);
+        assert_eq!(latest_committed(dir.path()).unwrap(), Some(4));
+        // every rank's shards restore
+        for r in 0..4 {
+            let vdir = dir.path().join(format!("rank{r:03}/v000004"));
+            let state = materialize(&cs.ranks[r], 1e-5, 0.02,
+                                    (r as u64) << 32 | 3);
+            crate::restore::verify_against(&vdir, &state).unwrap();
+        }
+    }
+
+    #[test]
+    fn no_commit_without_checkpoints() {
+        let dir = TempDir::new("world0").unwrap();
+        let cfg3 = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::new(2, 1, 1);
+        let cs = census(&cfg3, &par);
+        let report = run_world(
+            &world_cfg(dir.path(), 2, 0),
+            |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.02,
+                                   (rank as u64) << 32 | it),
+            |_, _| {},
+        )
+        .unwrap();
+        assert!(report.committed_versions.is_empty());
+        assert_eq!(latest_committed(dir.path()).unwrap(), None);
+    }
+
+    #[test]
+    fn partial_version_is_not_committed() {
+        // simulate a rank that crashed before writing v2: delete its dir
+        let dir = TempDir::new("world-partial").unwrap();
+        let cfg3 = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::new(2, 1, 1);
+        let cs = census(&cfg3, &par);
+        run_world(
+            &world_cfg(dir.path(), 2, 2),
+            |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.02,
+                                   (rank as u64) << 32 | it),
+            |_, _| {},
+        )
+        .unwrap();
+        // wreck rank 1's v4 and recompute commits
+        std::fs::remove_dir_all(dir.path().join("rank001/v000004"))
+            .unwrap();
+        std::fs::remove_file(dir.path().join("global_commit_v000004"))
+            .unwrap();
+        assert_eq!(latest_committed(dir.path()).unwrap(), Some(2));
+    }
+}

@@ -1,0 +1,12 @@
+//! Training orchestration: iteration phase structure (immutability
+//! windows), the checkpointed training loop, and the analytic phase-time
+//! model used for paper-scale simulation.
+
+pub mod distributed;
+pub mod phases;
+pub mod pipeline;
+pub mod trainer;
+
+pub use distributed::{run_world, WorldConfig, WorldReport};
+pub use phases::{IterationPhases, PhaseModel};
+pub use trainer::{TrainLoop, TrainReport, TrainStats};

@@ -1,0 +1,151 @@
+//! Analytic iteration-phase model (paper §IV-B, Figure 3).
+//!
+//! A training iteration decomposes into forward, backward, and optimizer
+//! update. Model/optimizer state is immutable during forward+backward and
+//! mutates only in the update — the window DataStates-LLM overlaps D2H
+//! staging with. This module predicts those phase durations for a
+//! (model, parallelism, testbed) triple from first principles, calibrated
+//! to the paper's published numbers.
+
+use crate::cluster::Testbed;
+use crate::config::{LlmConfig, Parallelism};
+
+/// Predicted phase durations for one iteration on one rank, seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationPhases {
+    pub forward_s: f64,
+    pub backward_s: f64,
+    pub update_s: f64,
+}
+
+impl IterationPhases {
+    pub fn compute_s(&self) -> f64 {
+        self.forward_s + self.backward_s
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.forward_s + self.backward_s + self.update_s
+    }
+
+    /// The immutability window available for lazy D2H staging.
+    pub fn immutable_window_s(&self) -> f64 {
+        self.compute_s()
+    }
+}
+
+/// Phase-duration estimator.
+#[derive(Debug, Clone)]
+pub struct PhaseModel {
+    pub testbed: Testbed,
+    /// HBM bandwidth used by the (memory-bound) optimizer update, B/s.
+    pub hbm_bps: f64,
+    /// Number of microbatches per iteration (gradient accumulation).
+    pub microbatches: usize,
+}
+
+impl PhaseModel {
+    pub fn polaris() -> Self {
+        PhaseModel {
+            testbed: Testbed::polaris(),
+            hbm_bps: 1.55e12, // A100-40GB HBM2e
+            microbatches: 1,
+        }
+    }
+
+    /// Per-iteration phases for one rank under the given parallelism.
+    pub fn phases(&self, cfg: &LlmConfig, par: &Parallelism)
+        -> IterationPhases {
+        let n_params = cfg.num_params() as f64;
+        let params_per_rank = n_params / (par.tp * par.pp) as f64;
+        let tokens =
+            (cfg.micro_batch * cfg.seq_len * self.microbatches) as f64;
+
+        // Dense-transformer FLOPs: forward ~2*N*T, backward ~4*N*T, plus
+        // the attention quadratic term.
+        let attn_extra = 2.0
+            * (cfg.layers as f64 / par.pp as f64)
+            * tokens
+            * cfg.seq_len as f64
+            * cfg.hidden as f64
+            / par.tp as f64;
+        let eff_flops = self.testbed.gpu_flops * self.testbed.mfu;
+        let fwd = (2.0 * params_per_rank * tokens + attn_extra) / eff_flops;
+        let bwd = 2.0 * fwd;
+
+        // Pipeline bubble: with m microbatches and p stages the bubble
+        // fraction is (p-1)/m; charge it to fwd+bwd proportionally.
+        let bubble = (par.pp.saturating_sub(1)) as f64
+            / self.microbatches.max(1) as f64;
+        let fwd = fwd * (1.0 + bubble / 2.0);
+        let bwd = bwd * (1.0 + bubble / 2.0);
+
+        // Update: memory-bound Adam sweep over the rank's fp32 optimizer
+        // partition (ZeRO-1: divided across DP), plus the DP gradient
+        // all-reduce and parameter all-gather on the NIC.
+        let opt_bytes =
+            12.0 * params_per_rank / par.dp.max(1) as f64;
+        // read m,v,master,grad + write m,v,param ≈ 2.3x sweep
+        let update_compute = 2.3 * opt_bytes / self.hbm_bps;
+        let grad_bytes = 2.0 * params_per_rank;
+        let allreduce = if par.dp > 1 {
+            2.0 * (par.dp as f64 - 1.0) / par.dp as f64 * grad_bytes
+                / self.testbed.nic_bps
+        } else {
+            0.0
+        };
+        IterationPhases {
+            forward_s: fwd,
+            backward_s: bwd,
+            update_s: update_compute + allreduce,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: &str) -> LlmConfig {
+        LlmConfig::by_name(n).unwrap()
+    }
+
+    #[test]
+    fn forward_backward_dominate() {
+        // §IV-B / Fig 3: fwd+bwd dominate; update is comparatively small.
+        let m = PhaseModel::polaris();
+        for c in LlmConfig::table2() {
+            let p = Parallelism::paper_default(&c);
+            let ph = m.phases(&c, &p);
+            assert!(ph.compute_s() > 2.0 * ph.update_s,
+                    "{}: {ph:?}", c.name);
+        }
+    }
+
+    #[test]
+    fn iteration_time_grows_with_model_size() {
+        let m = PhaseModel::polaris();
+        let t3 = m.phases(&cfg("3B"),
+                          &Parallelism::paper_default(&cfg("3B")));
+        let t70 = m.phases(&cfg("70B"),
+                           &Parallelism::paper_default(&cfg("70B")));
+        assert!(t70.total_s() > t3.total_s());
+    }
+
+    #[test]
+    fn iteration_magnitude_plausible() {
+        // Fig 13 implies a 7B iteration is a few seconds on 8 GPUs.
+        let m = PhaseModel::polaris();
+        let ph = m.phases(&cfg("7B"),
+                          &Parallelism::paper_default(&cfg("7B")));
+        assert!((0.3..20.0).contains(&ph.total_s()), "{ph:?}");
+    }
+
+    #[test]
+    fn dp_allreduce_increases_update() {
+        let m = PhaseModel::polaris();
+        let c = cfg("7B");
+        let u1 = m.phases(&c, &Parallelism::new(4, 2, 1)).update_s;
+        let u8 = m.phases(&c, &Parallelism::new(4, 2, 8)).update_s;
+        assert!(u8 > u1);
+    }
+}

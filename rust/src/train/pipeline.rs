@@ -1,0 +1,140 @@
+//! Microbatch pipeline schedule (1F1B) — the execution plan whose
+//! immutability windows the checkpoint engine overlaps with (§II, §IV-B).
+//!
+//! DeepSpeed/Megatron run PP stages on the 1F1B ("one forward, one
+//! backward") schedule: a warm-up ramp of forwards, a steady state
+//! alternating F/B, and a drain of backwards. For checkpointing, what
+//! matters is (a) the *bubble fraction* that stretches the iteration and
+//! (b) that parameters stay immutable through the WHOLE schedule — the
+//! optimizer update happens once, after the drain. This module builds the
+//! explicit per-stage schedule, verifies its invariants by construction
+//! (tests), and feeds the bubble model used by `phases.rs`.
+
+/// One slot in a stage's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Slot {
+    /// Forward pass of microbatch `m`.
+    Forward(usize),
+    /// Backward pass of microbatch `m`.
+    Backward(usize),
+    /// Pipeline bubble (stage idle).
+    Idle,
+}
+
+/// The 1F1B schedule for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageSchedule {
+    pub stage: usize,
+    pub slots: Vec<Slot>,
+}
+
+impl StageSchedule {
+    pub fn bubble_slots(&self) -> usize {
+        self.slots.iter().filter(|s| **s == Slot::Idle).count()
+    }
+}
+
+/// Build the 1F1B schedule for `stages` pipeline stages over
+/// `microbatches` microbatches. Each slot is one microbatch-forward time
+/// unit; backwards are modeled as one slot too (the relative cost is
+/// applied by the phase model).
+pub fn one_f_one_b(stages: usize, microbatches: usize)
+    -> Vec<StageSchedule> {
+    assert!(stages >= 1 && microbatches >= 1);
+    let mut out = Vec::with_capacity(stages);
+    for s in 0..stages {
+        let warmup = (stages - 1 - s).min(microbatches);
+        let mut slots = Vec::new();
+        // ramp-in: stage s starts after s slots of bubble
+        for _ in 0..s {
+            slots.push(Slot::Idle);
+        }
+        // warm-up forwards
+        for m in 0..warmup {
+            slots.push(Slot::Forward(m));
+        }
+        // steady state: one forward then one backward per round (the
+        // oldest in-flight microbatch retires as a new one enters),
+        // followed by the backward drain once forwards are exhausted.
+        let mut next_f = warmup;
+        let mut next_b = 0;
+        while next_b < microbatches {
+            if next_f < microbatches {
+                slots.push(Slot::Forward(next_f));
+                next_f += 1;
+            }
+            slots.push(Slot::Backward(next_b));
+            next_b += 1;
+        }
+        out.push(StageSchedule { stage: s, slots });
+    }
+    out
+}
+
+/// Bubble fraction of the schedule: idle slots of the worst stage over
+/// its total length — the classic `(p-1)/(m+p-1)` for 1F1B.
+pub fn bubble_fraction(stages: usize, microbatches: usize) -> f64 {
+    (stages as f64 - 1.0) / (microbatches as f64 + stages as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_schedule(stages: usize, microbatches: usize) {
+        let sched = one_f_one_b(stages, microbatches);
+        assert_eq!(sched.len(), stages);
+        for st in &sched {
+            // every microbatch appears exactly once forward + once back
+            for m in 0..microbatches {
+                assert_eq!(
+                    st.slots.iter()
+                        .filter(|s| **s == Slot::Forward(m)).count(),
+                    1, "stage {} F({m})", st.stage);
+                assert_eq!(
+                    st.slots.iter()
+                        .filter(|s| **s == Slot::Backward(m)).count(),
+                    1, "stage {} B({m})", st.stage);
+            }
+            // a microbatch's backward comes after its forward
+            for m in 0..microbatches {
+                let f = st.slots.iter()
+                    .position(|s| *s == Slot::Forward(m)).unwrap();
+                let b = st.slots.iter()
+                    .position(|s| *s == Slot::Backward(m)).unwrap();
+                assert!(f < b, "stage {}: B({m}) before F({m})",
+                        st.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_are_complete_and_ordered() {
+        for (p, m) in [(1, 1), (1, 8), (2, 4), (4, 8), (4, 16), (8, 8)] {
+            check_schedule(p, m);
+        }
+    }
+
+    #[test]
+    fn single_stage_has_no_bubble() {
+        let sched = one_f_one_b(1, 8);
+        assert_eq!(sched[0].bubble_slots(), 0);
+        assert_eq!(bubble_fraction(1, 8), 0.0);
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_microbatches() {
+        assert!(bubble_fraction(4, 16) < bubble_fraction(4, 4));
+        assert!((bubble_fraction(4, 4) - 3.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn first_stage_starts_immediately_last_stage_ramps() {
+        let sched = one_f_one_b(4, 8);
+        assert_eq!(sched[0].slots[0], Slot::Forward(0));
+        // stage 3 idles for 3 slots before its first forward
+        assert_eq!(&sched[3].slots[..3],
+                   &[Slot::Idle, Slot::Idle, Slot::Idle]);
+        assert_eq!(sched[3].slots[3], Slot::Forward(0));
+    }
+}

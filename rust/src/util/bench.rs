@@ -1,0 +1,117 @@
+//! Micro-benchmark harness (criterion stand-in for `harness = false`
+//! benches): warmup, repeated timed runs, median/mean/min reporting.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    /// Derived throughput given bytes processed per iteration.
+    pub fn bps(&self, bytes_per_iter: u64) -> f64 {
+        bytes_per_iter as f64 / self.median_s
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bencher {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 25,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 10,
+            budget: Duration::from_secs(2),
+        }
+    }
+
+    /// Time `f` repeatedly; `f` may return a value to prevent
+    /// dead-code elimination (it is black-boxed).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            median_s: times[n / 2],
+            mean_s: times.iter().sum::<f64>() / n as f64,
+            min_s: times[0],
+            max_s: times[n - 1],
+        }
+    }
+}
+
+/// Optimization barrier.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a result row in a stable, greppable format.
+pub fn report(r: &BenchResult) {
+    println!(
+        "bench {:<44} median {:>10.6}s  mean {:>10.6}s  min {:>10.6}s  (n={})",
+        r.name, r.median_s, r.mean_s, r.min_s, r.iters
+    );
+}
+
+/// Print a result row with derived throughput.
+pub fn report_bps(r: &BenchResult, bytes_per_iter: u64) {
+    println!(
+        "bench {:<44} median {:>10.6}s  {:>12}  (n={})",
+        r.name,
+        r.median_s,
+        crate::metrics::human_bps(r.bps(bytes_per_iter)),
+        r.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports_sane_stats() {
+        let b = Bencher { warmup: 1, min_iters: 5, max_iters: 5,
+                          budget: Duration::from_secs(1) };
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+    }
+}

@@ -1,0 +1,262 @@
+//! Multi-producer multi-consumer channel (std has only MPSC).
+//!
+//! Semantics follow the familiar crossbeam API subset used by the engine:
+//! cloneable `Sender`/`Receiver`, blocking `recv`, non-blocking
+//! `try_recv`, disconnect detection when all senders drop.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared<T> {
+    queue: Mutex<Inner<T>>,
+    /// consumers wait here (queue empty)
+    not_empty: Condvar,
+    /// bounded producers wait here (queue full)
+    not_full: Condvar,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+    capacity: Option<usize>,
+}
+
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+impl std::fmt::Display for TryRecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TryRecvError::Empty => write!(f, "channel empty"),
+            TryRecvError::Disconnected => write!(f, "channel disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for TryRecvError {}
+
+#[derive(PartialEq, Eq)]
+pub struct SendError<T>(pub T);
+
+impl<T> std::fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SendError(..)")
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.queue.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.senders -= 1;
+        if q.senders == 0 {
+            drop(q);
+            // disconnect: wake every blocked consumer
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.receivers -= 1;
+        if q.receivers == 0 {
+            drop(q);
+            // disconnect: wake every blocked producer
+            self.shared.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Send, blocking while a bounded channel is full. Errors if all
+    /// receivers dropped.
+    pub fn send(&self, item: T) -> Result<(), SendError<T>> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if q.receivers == 0 {
+                return Err(SendError(item));
+            }
+            match q.capacity {
+                Some(cap) if q.items.len() >= cap => {
+                    q = self.shared.not_full.wait(q).unwrap();
+                }
+                _ => break,
+            }
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; errors when empty and all senders dropped.
+    pub fn recv(&self) -> Result<T, TryRecvError> {
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                let bounded = q.capacity.is_some();
+                drop(q);
+                if bounded {
+                    self.shared.not_full.notify_one();
+                }
+                return Ok(item);
+            }
+            if q.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            q = self.shared.not_empty.wait(q).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if let Some(item) = q.items.pop_front() {
+            let bounded = q.capacity.is_some();
+            drop(q);
+            if bounded {
+                self.shared.not_full.notify_one();
+            }
+            return Ok(item);
+        }
+        if q.senders == 0 {
+            Err(TryRecvError::Disconnected)
+        } else {
+            Err(TryRecvError::Empty)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shared.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn channel<T>(capacity: Option<usize>) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(Inner {
+            items: VecDeque::new(),
+            senders: 1,
+            receivers: 1,
+            capacity,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+/// Unbounded MPMC channel.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    channel(None)
+}
+
+/// Bounded MPMC channel (senders block when full).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    channel(Some(capacity.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = unbounded();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+    }
+
+    #[test]
+    fn disconnect_on_sender_drop() {
+        let (tx, rx) = unbounded::<u32>();
+        tx.send(1).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv(), Err(TryRecvError::Disconnected));
+    }
+
+    #[test]
+    fn send_fails_without_receivers() {
+        let (tx, rx) = unbounded::<u32>();
+        drop(rx);
+        assert!(tx.send(5).is_err());
+    }
+
+    #[test]
+    fn mpmc_workers_share_queue() {
+        let (tx, rx) = unbounded::<u32>();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let rx = rx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut n = 0u32;
+                while rx.recv().is_ok() {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        drop(rx);
+        for i in 0..1000 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn bounded_blocks_until_consumed() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(3).unwrap(); // blocks until a slot frees
+            std::time::Instant::now()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let before = std::time::Instant::now();
+        assert_eq!(rx.recv().unwrap(), 1);
+        let sent_at = t.join().unwrap();
+        assert!(sent_at >= before);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+}

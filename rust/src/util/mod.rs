@@ -1,0 +1,17 @@
+//! In-tree infrastructure: the build environment is offline with only the
+//! `xla` dependency closure vendored, so channels, codecs, RNG, temp
+//! dirs, a micro-benchmark harness, and property-testing helpers are
+//! implemented here instead of pulled from crates.io.
+
+pub mod bench;
+pub mod channel;
+pub mod json;
+pub mod codec;
+pub mod proptest;
+pub mod rng;
+pub mod tempdir;
+
+pub use channel::{bounded, unbounded, Receiver, Sender, TryRecvError};
+pub use codec::{Decoder, Encoder};
+pub use rng::Rng;
+pub use tempdir::TempDir;

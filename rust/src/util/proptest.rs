@@ -1,0 +1,46 @@
+//! Property-testing helper (proptest stand-in): run a closure over many
+//! deterministically-generated random cases; on failure report the case
+//! seed so it can be replayed.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random cases. Each case gets its own [`Rng`]
+/// derived from `seed` + case index; a panic or `Err` fails the test with
+/// the case seed printed for replay.
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> anyhow::Result<()>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64).wrapping_mul(0xA24BAED4963EE407));
+        let mut rng = Rng::new(case_seed);
+        if let Err(e) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (replay seed {case_seed:#x}): {e:#}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(1, 50, |rng| {
+            let a = rng.below(100);
+            anyhow::ensure!(a < 100);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failing_case() {
+        check(2, 50, |rng| {
+            anyhow::ensure!(rng.below(10) != 3, "hit 3");
+            Ok(())
+        });
+    }
+}
