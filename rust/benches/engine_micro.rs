@@ -11,7 +11,7 @@ use datastates::engine::pool::PinnedPool;
 use datastates::metrics::{human_bps, Timeline};
 use datastates::provider::layout::LogCursor;
 use datastates::provider::{
-    Bytes, CompositeProvider, ObjectProvider, Poll, SerializerPool,
+    Bytes, ChunkEvent, CompositeProvider, ObjectProvider, SerializerPool,
     StateProvider, TensorProvider,
 };
 use datastates::state::tensor::DType;
@@ -45,7 +45,7 @@ fn bench_provider_chunking() {
                     "t", DType::U8, vec![data.len()], data.clone(), 0,
                     chunk);
                 let mut n = 0usize;
-                while let Poll::Ready(c) = p.poll_chunk().unwrap() {
+                while let ChunkEvent::Ready(c) = p.next_chunk().unwrap() {
                     n += c.data.len();
                 }
                 black_box(n)
@@ -90,12 +90,12 @@ fn bench_writers() {
             let f = FlushFile::create(&dir.join("w.bin"), "w").unwrap();
             for (i, c) in payload.chunks(4 << 20).into_iter().enumerate()
             {
-                pool.submit(WriteJob {
-                    file: f.clone(),
-                    offset: (i * (4 << 20)) as u64,
-                    data: c,
-                    label: "w".into(),
-                });
+                pool.submit(WriteJob::plain(
+                    f.clone(),
+                    (i * (4 << 20)) as u64,
+                    c,
+                    "w",
+                ));
             }
             f.finish_issuing();
             f.wait_quiescent().unwrap();
@@ -131,10 +131,10 @@ fn bench_composite_overlap() {
         let mut comp = CompositeProvider::new("f", 8 << 20, children);
         let mut total = 0usize;
         loop {
-            match comp.poll_chunk().unwrap() {
-                Poll::Ready(c) => total += c.data.len(),
-                Poll::Done => break,
-                Poll::Pending => std::hint::spin_loop(),
+            match comp.next_chunk().unwrap() {
+                ChunkEvent::Ready(c) => total += c.data.len(),
+                ChunkEvent::Exhausted => break,
+                ChunkEvent::Blocked => std::hint::spin_loop(),
             }
         }
         black_box(total)

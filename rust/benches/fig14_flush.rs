@@ -40,9 +40,9 @@ fn run_node(kind: EngineKind, bytes: usize, dir: &std::path::Path) -> f64 {
                 let mut eng =
                     kind.build(EngineConfig::with_dir(dir)).unwrap();
                 let state = rank_state(bytes, r);
-                eng.checkpoint(0, &state).unwrap();
-                eng.wait_snapshot_complete().unwrap();
-                eng.drain().unwrap();
+                let ticket = eng.begin(0, &state).unwrap();
+                ticket.wait_captured().unwrap();
+                ticket.wait_persisted().unwrap();
             });
         }
     });

@@ -25,14 +25,14 @@ fn main() {
         let dir = TempDir::new("t3").unwrap();
         let mut eng =
             kind.build(EngineConfig::with_dir(dir.path())).unwrap();
-        eng.checkpoint(0, &state).unwrap();
-        eng.wait_snapshot_complete().unwrap();
-        eng.drain().unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        ticket.wait_captured().unwrap();
+        let m = ticket.wait_persisted().unwrap();
         let tl = eng.timeline();
         let (_, ser) = tl.tier_summary(Tier::Serialize);
         let (_, d2h) = tl.tier_summary(Tier::D2H);
         let (_, h2f) = tl.tier_summary(Tier::H2F);
-        let blocked = eng.metrics()[0].blocked_s;
+        let blocked = m.blocked_s;
         println!("{:<22}{:>16.4}{:>14.4}{:>14.4}{:>14.4}",
                  kind.label(), ser, d2h, h2f, blocked);
     }

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
     let mut engine = EngineKind::DataStatesLlm.build(cfg.clone())?;
 
     let mut post_ckpt_losses = Vec::new();
+    let mut ticket = None;
     for it in 0..6u64 {
         let tokens = session.sample_tokens(it);
         let loss = session.step(&tokens)?;
@@ -38,13 +39,18 @@ fn main() -> anyhow::Result<()> {
         if it >= 4 {
             post_ckpt_losses.push(loss);
         }
-        engine.wait_snapshot_complete()?;
+        // consistency gate for the in-flight snapshot, if any
+        if let Some(t) = &ticket {
+            t.wait_captured()?;
+        }
         if it + 1 == 4 {
             let state = session.checkpoint_state();
-            engine.checkpoint(4, &state)?;
+            ticket = Some(engine.begin(4, &state)?);
         }
     }
-    engine.drain()?;
+    if let Some(t) = &ticket {
+        t.wait_persisted()?;
+    }
     session.gc();
     let live_step = session.device_step()?;
     println!("  'crash' at device step {live_step}");

@@ -1,5 +1,6 @@
 //! Quickstart: checkpoint a heterogeneous model state with the
-//! DataStates-LLM engine, restore it, and verify bit-exactness.
+//! DataStates-LLM engine through a session ticket, restore it, and
+//! verify bit-exactness.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -55,28 +56,39 @@ fn main() -> anyhow::Result<()> {
     println!("state: {} files, {}", state.num_files(),
              human_bytes(state.total_bytes() as f64));
 
-    // 2. Checkpoint asynchronously. `checkpoint()` only performs the
-    //    blocking launch; D2H staging and flushing run in the
-    //    background, overlapped with your next iteration's compute.
+    // 2. Begin a checkpoint session. `begin()` only performs the
+    //    blocking launch and hands back a ticket; D2H staging and
+    //    flushing run in the background, overlapped with your next
+    //    iteration's compute. Any number of sessions may be in flight.
     let dir = std::env::temp_dir().join("datastates-quickstart");
     let _ = std::fs::remove_dir_all(&dir);
     let mut engine =
         DataStatesEngine::new(EngineConfig::with_dir(&dir))?;
-    engine.checkpoint(1, &state)?;
-    println!("checkpoint launched (training would continue here...)");
+    let ticket = engine.begin(1, &state)?;
+    println!("checkpoint v{} launched (training would continue here...)",
+             ticket.version());
 
-    // 3. Before mutating the model (optimizer update), take the
-    //    consistency gate.
-    let waited = engine.wait_snapshot_complete()?;
+    // 3. Before mutating the model (optimizer update), take this
+    //    version's consistency gate.
+    let waited = ticket.wait_captured()?;
     println!("consistency gate: waited {waited:.6}s");
 
-    // 4. Wait for full persistence (normally only at shutdown).
-    engine.drain()?;
-    let m = &engine.metrics()[0];
+    // 4. Watch the session's live progress, then await its persistence
+    //    future (normally only at shutdown).
+    let p = ticket.progress();
     println!(
-        "persisted {} — blocked {:.4}s, effective throughput {}",
+        "in flight: {} staged, {} serialized, {} flushed",
+        human_bytes(p.bytes_staged as f64),
+        human_bytes(p.bytes_serialized as f64),
+        human_bytes(p.bytes_flushed as f64),
+    );
+    let m = ticket.wait_persisted()?;
+    println!(
+        "persisted {} — blocked {:.4}s, persist {:.2}s, effective \
+         throughput {}",
         human_bytes(m.bytes as f64),
         m.blocked_s,
+        m.persist_s,
         human_bps(m.effective_bps())
     );
 
@@ -84,12 +96,13 @@ fn main() -> anyhow::Result<()> {
     datastates::restore::verify_against(&dir.join("v000001"), &state)?;
     println!("restore verified: bit-exact");
 
-    // 6. Inspect the self-describing layout of one file.
-    let rf = datastates::restore::read_file(
+    // 6. Inspect the self-describing layout through the read-side chunk
+    //    source (the restore mirror of the write-side providers).
+    let src = datastates::restore::ChunkSource::open(
         &dir.join("v000001/layer_00-model_00-model_states.pt"))?;
     println!("\nfile layout ({} fixed-region bytes):",
-             rf.layout.fixed_region);
-    for e in &rf.layout.entries {
+             src.layout().fixed_region);
+    for e in &src.layout().entries {
         println!("  {:<36} {:?} extents={:?}", e.name,
                  match &e.kind {
                      datastates::provider::layout::EntryKind::Tensor {

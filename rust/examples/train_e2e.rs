@@ -71,9 +71,10 @@ fn main() -> anyhow::Result<()> {
     }
     session.gc();
 
-    for (i, m) in engine.metrics().iter().enumerate() {
+    for m in engine.metrics().iter() {
         println!(
-            "ckpt {i}: {} blocked {:.4}s persist {:.2}s eff {}",
+            "ckpt v{}: {} blocked {:.4}s persist {:.2}s eff {}",
+            m.version,
             human_bytes(m.bytes as f64),
             m.blocked_s,
             m.persist_s,

@@ -2,8 +2,8 @@
 //!
 //! Shares the *lazy* half of the design with the new engine — pinned-pool
 //! D2H staging overlapped with forward/backward, consistency gate before
-//! the update — but keeps the state-of-the-art ordering the new engine
-//! removes:
+//! the update (the ticket's `wait_captured`) — but keeps the
+//! state-of-the-art ordering the new engine removes:
 //!
 //! - **metadata-first**: all non-tensor objects are serialized INLINE on
 //!   the critical path at request time (to precompute the persistent
@@ -23,8 +23,9 @@ use std::time::Instant;
 use crate::config::EngineConfig;
 use crate::engine::pool::PinnedPool;
 use crate::engine::stager::{SnapshotTracker, StageJob, Stager};
+use crate::engine::ticket::{CheckpointTicket, CkptSession};
 use crate::engine::CheckpointEngine;
-use crate::metrics::{CkptMetrics, Tier, Timeline};
+use crate::metrics::{CkptMetrics, ProgressCounters, Tier, Timeline};
 use crate::provider::layout::{plan_fixed_region, EntryKind, FileLayout,
                               LayoutEntry};
 use crate::provider::Bytes;
@@ -36,28 +37,31 @@ use crate::util::channel::{unbounded, Receiver, Sender};
 struct FileTask {
     name: String,
     fixed_region: u64,
-    /// (entry, base offset, expected bytes, channel with staged bytes)
+    /// (entry, base offset, channel with staged bytes)
     tensors: Vec<(LayoutEntry, u64, Receiver<Bytes>)>,
     /// (entry with final extents, serialized bytes)
     objects: Vec<(LayoutEntry, Vec<u8>)>,
 }
 
 struct FlushTask {
+    session: Arc<CkptSession>,
     dir: std::path::PathBuf,
     files: Vec<FileTask>,
     requested: Instant,
+}
+
+enum WorkerMsg {
+    Task(FlushTask),
+    Stop,
 }
 
 pub struct DataStatesOldEngine {
     cfg: EngineConfig,
     timeline: Arc<Timeline>,
     stager: Stager,
-    flush_tx: Sender<FlushTask>,
-    done_rx: Receiver<f64>,
+    flush_tx: Sender<WorkerMsg>,
     worker: Option<std::thread::JoinHandle<()>>,
-    pending_snapshot: Option<Arc<SnapshotTracker>>,
-    in_flight: usize,
-    metrics: Vec<CkptMetrics>,
+    sessions: Vec<Arc<CkptSession>>,
 }
 
 impl DataStatesOldEngine {
@@ -66,19 +70,24 @@ impl DataStatesOldEngine {
         let timeline = Arc::new(Timeline::new());
         let pool = PinnedPool::new(cfg.host_cache_bytes);
         let stager = Stager::new(pool, timeline.clone());
-        let (flush_tx, flush_rx) = unbounded::<FlushTask>();
-        let (done_tx, done_rx) = unbounded::<f64>();
+        let (flush_tx, flush_rx) = unbounded::<WorkerMsg>();
         let tl = timeline.clone();
         // single background writer: files persisted one at a time
         let worker = std::thread::Builder::new()
             .name("ds-old-flush".into())
             .spawn(move || {
-                while let Ok(task) = flush_rx.recv() {
-                    if let Err(e) = Self::flush_task(&task, &tl) {
-                        eprintln!("[datastates-old] flush failed: {e:#}");
+                while let Ok(WorkerMsg::Task(task)) = flush_rx.recv() {
+                    match Self::flush_task(&task, &tl) {
+                        Ok(()) => task.session.complete(
+                            task.requested.elapsed().as_secs_f64()),
+                        Err(e) => {
+                            eprintln!(
+                                "[datastates-old] flush v{} failed: {e:#}",
+                                task.session.version()
+                            );
+                            task.session.fail(format!("{e:#}"));
+                        }
                     }
-                    let _ = done_tx
-                        .send(task.requested.elapsed().as_secs_f64());
                 }
             })
             .expect("spawn ds-old-flush");
@@ -87,16 +96,14 @@ impl DataStatesOldEngine {
             timeline,
             stager,
             flush_tx,
-            done_rx,
             worker: Some(worker),
-            pending_snapshot: None,
-            in_flight: 0,
-            metrics: Vec::new(),
+            sessions: Vec::new(),
         })
     }
 
     fn flush_task(task: &FlushTask, tl: &Timeline) -> anyhow::Result<()> {
         std::fs::create_dir_all(&task.dir)?;
+        let progress = task.session.progress_counters();
         for file in &task.files {
             // snapshot-then-flush: wait for ALL tensors of this file
             let mut staged = Vec::with_capacity(file.tensors.len());
@@ -120,7 +127,7 @@ impl DataStatesOldEngine {
                     .copy_from_slice(bytes.as_slice());
                 entries.push(entry.clone());
             }
-            buf.resize(file.fixed_region as usize, 0);
+            buf.resize(buf.len().max(file.fixed_region as usize), 0);
             let mut log_off = file.fixed_region;
             for (entry, bytes) in &file.objects {
                 let mut e = entry.clone();
@@ -130,6 +137,7 @@ impl DataStatesOldEngine {
                 entries.push(e);
             }
             f.write_all(&buf)?;
+            progress.add_flushed(buf.len() as u64);
             let layout = FileLayout {
                 file_name: file.name.clone(),
                 fixed_region: file.fixed_region,
@@ -152,9 +160,10 @@ impl CheckpointEngine for DataStatesOldEngine {
         "datastates-old"
     }
 
-    fn checkpoint(&mut self, version: u64, state: &RankState)
-        -> anyhow::Result<()> {
+    fn begin(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<CheckpointTicket> {
         let t0 = Instant::now();
+        let progress = Arc::new(ProgressCounters::default());
         let n_device: usize = state
             .files
             .iter()
@@ -200,6 +209,8 @@ impl CheckpointEngine for DataStatesOldEngine {
                                     tensor: dev.clone(),
                                     out: tx,
                                     tracker: tracker.clone(),
+                                    notify: None,
+                                    progress: Some(progress.clone()),
                                 });
                             }
                             TensorData::Host(b) => {
@@ -216,6 +227,7 @@ impl CheckpointEngine for DataStatesOldEngine {
                         self.timeline.record(Tier::Serialize, name,
                                              bytes.len() as u64, start,
                                              self.timeline.now_s());
+                        progress.add_serialized(bytes.len() as u64);
                         objects.push((
                             LayoutEntry {
                                 name: name.clone(),
@@ -235,51 +247,32 @@ impl CheckpointEngine for DataStatesOldEngine {
             });
         }
         let total: u64 = state.total_bytes() as u64;
+        progress.add_total(total);
+        let session = CkptSession::new(
+            version,
+            Some(tracker),
+            progress,
+            CkptMetrics {
+                version,
+                blocked_s: t0.elapsed().as_secs_f64(),
+                bytes: total,
+                ..Default::default()
+            },
+        );
         self.flush_tx
-            .send(FlushTask {
+            .send(WorkerMsg::Task(FlushTask {
+                session: session.clone(),
                 dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
                 files,
                 requested: t0,
-            })
+            }))
             .map_err(|_| anyhow::anyhow!("flush worker dead"))?;
-        self.pending_snapshot = Some(tracker);
-        self.in_flight += 1;
-        self.metrics.push(CkptMetrics {
-            blocked_s: t0.elapsed().as_secs_f64(),
-            bytes: total,
-            ..Default::default()
-        });
-        Ok(())
-    }
-
-    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
-        let waited = match self.pending_snapshot.take() {
-            Some(t) => t.wait()?,
-            None => 0.0,
-        };
-        if let Some(m) = self.metrics.last_mut() {
-            m.blocked_s += waited;
-            m.d2h_s += waited;
-        }
-        Ok(waited)
-    }
-
-    fn drain(&mut self) -> anyhow::Result<()> {
-        self.wait_snapshot_complete()?;
-        while self.in_flight > 0 {
-            let persist = self.done_rx.recv()?;
-            if let Some(m) =
-                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
-            {
-                m.persist_s = persist;
-            }
-            self.in_flight -= 1;
-        }
-        Ok(())
+        self.sessions.push(session.clone());
+        Ok(CheckpointTicket::new(session))
     }
 
     fn metrics(&self) -> Vec<CkptMetrics> {
-        self.metrics.clone()
+        self.sessions.iter().map(|s| s.metrics()).collect()
     }
 
     fn timeline(&self) -> Arc<Timeline> {
@@ -289,9 +282,8 @@ impl CheckpointEngine for DataStatesOldEngine {
 
 impl Drop for DataStatesOldEngine {
     fn drop(&mut self) {
-        let _ = self.drain();
-        let (tx, _rx) = unbounded();
-        self.flush_tx = tx;
+        // explicit stop: queued tasks drain first (FIFO)
+        let _ = self.flush_tx.send(WorkerMsg::Stop);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -328,10 +320,10 @@ mod tests {
                 ],
             }],
         };
-        eng.checkpoint(0, &state).unwrap();
-        let waited = eng.wait_snapshot_complete().unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        let waited = ticket.wait_captured().unwrap();
         assert!(waited >= 0.0);
-        eng.drain().unwrap();
+        ticket.wait_persisted().unwrap();
         crate::restore::verify_against(&dir.path().join("v000000"),
                                        &state)
             .unwrap();

@@ -5,7 +5,8 @@
 //! graph including tensor payloads → single-threaded sequential write →
 //! fsync. The training iteration cannot proceed until the checkpoint is
 //! fully persistent, which is exactly the behaviour the paper's Figure
-//! 6(a) depicts.
+//! 6(a) depicts — so the [`CheckpointTicket`] returned by `begin` is
+//! already captured AND persisted when the call returns.
 //!
 //! Files are still written in the crate's self-describing layout (one
 //! Object entry holding the whole `torch.save` blob) so the uniform
@@ -17,15 +18,16 @@ use std::time::Instant;
 
 use super::common::serialize_object_graph;
 use crate::config::EngineConfig;
+use crate::engine::ticket::{CheckpointTicket, CkptSession};
 use crate::engine::CheckpointEngine;
-use crate::metrics::{CkptMetrics, Tier, Timeline};
+use crate::metrics::{CkptMetrics, ProgressCounters, Tier, Timeline};
 use crate::provider::layout::{EntryKind, FileLayout, LayoutEntry};
 use crate::state::RankState;
 
 pub struct DeepSpeedDefaultEngine {
     cfg: EngineConfig,
     timeline: Arc<Timeline>,
-    metrics: Vec<CkptMetrics>,
+    sessions: Vec<Arc<CkptSession>>,
 }
 
 impl DeepSpeedDefaultEngine {
@@ -34,7 +36,7 @@ impl DeepSpeedDefaultEngine {
         Ok(DeepSpeedDefaultEngine {
             cfg,
             timeline: Arc::new(Timeline::new()),
-            metrics: Vec::new(),
+            sessions: Vec::new(),
         })
     }
 }
@@ -44,16 +46,18 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
         "deepspeed-default"
     }
 
-    fn checkpoint(&mut self, version: u64, state: &RankState)
-        -> anyhow::Result<()> {
+    fn begin(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<CheckpointTicket> {
         let t0 = Instant::now();
         let dir = self.cfg.ckpt_dir.join(format!("v{version:06}"));
         std::fs::create_dir_all(&dir)?;
+        let progress = Arc::new(ProgressCounters::default());
         let mut total = 0u64;
         for file in &state.files {
             // (1) type-agnostic serialization of everything (Fig 4 cost)
             let blob = serialize_object_graph(file, &self.timeline)?;
             total += blob.len() as u64;
+            progress.add_serialized(blob.len() as u64);
 
             // (2) single-threaded sequential write + trailer + fsync
             let start = self.timeline.now_s();
@@ -76,30 +80,33 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
                 trailer.len() as u64,
             ))?;
             f.sync_all()?;
+            progress.add_flushed(blob.len() as u64);
             self.timeline.record(Tier::H2F, &file.name,
                                  blob.len() as u64, start,
                                  self.timeline.now_s());
         }
+        progress.add_total(total);
         let elapsed = t0.elapsed().as_secs_f64();
-        self.metrics.push(CkptMetrics {
-            blocked_s: elapsed,
-            bytes: total,
-            persist_s: elapsed,
-            ..Default::default()
-        });
-        Ok(())
-    }
-
-    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
-        Ok(0.0) // capture was fully synchronous
-    }
-
-    fn drain(&mut self) -> anyhow::Result<()> {
-        Ok(()) // nothing runs in the background
+        // everything was synchronous: no capture gate, and the session
+        // is persisted before the ticket is handed out
+        let session = CkptSession::new(
+            version,
+            None,
+            progress,
+            CkptMetrics {
+                version,
+                blocked_s: elapsed,
+                bytes: total,
+                ..Default::default()
+            },
+        );
+        session.complete(elapsed);
+        self.sessions.push(session.clone());
+        Ok(CheckpointTicket::new(session))
     }
 
     fn metrics(&self) -> Vec<CkptMetrics> {
-        self.metrics.clone()
+        self.sessions.iter().map(|s| s.metrics()).collect()
     }
 
     fn timeline(&self) -> Arc<Timeline> {
@@ -140,9 +147,11 @@ mod tests {
         let mut eng = DeepSpeedDefaultEngine::new(
             EngineConfig::with_dir(dir.path())).unwrap();
         let state = tiny_state();
-        eng.checkpoint(0, &state).unwrap();
-        assert_eq!(eng.wait_snapshot_complete().unwrap(), 0.0);
-        eng.drain().unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        // fully synchronous: captured and persisted at return
+        assert_eq!(ticket.wait_captured().unwrap(), 0.0);
+        assert!(ticket.is_persisted());
+        let m = ticket.wait_persisted().unwrap();
 
         let rf = crate::restore::read_file(
             &dir.path().join("v000000/mp_rank_000_model_states.pt"),
@@ -153,8 +162,9 @@ mod tests {
         assert_eq!(entries[0].0, "w");
         assert_eq!(entries[1].0, "meta");
         // blocking time accounts for the entire persist
-        let m = &eng.metrics()[0];
         assert!(m.blocked_s > 0.0);
         assert_eq!(m.blocked_s, m.persist_s);
+        assert_eq!(m.version, 0);
+        assert_eq!(eng.metrics()[0].persist_s, m.persist_s);
     }
 }

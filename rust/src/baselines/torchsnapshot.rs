@@ -14,9 +14,11 @@
 //!    paper scale and which shows up here as per-file create/fsync
 //!    overhead.
 //!
-//! A subsequent `checkpoint()` call blocks until the previous flush
-//! completed (the engine keeps only one snapshot buffer), reproducing the
-//! back-to-back behaviour in Figure 6(b).
+//! The engine keeps only one snapshot buffer, so `begin` blocks until
+//! the PREVIOUS version's persistence future resolves before capturing
+//! the next — reproducing the back-to-back behaviour in Figure 6(b).
+//! Each version still gets its own [`CheckpointTicket`]; the background
+//! flush completes *its own* session, never a guessed metrics slot.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -24,49 +26,59 @@ use std::time::Instant;
 use super::common::stage_sync;
 use crate::config::EngineConfig;
 use crate::engine::flush::{FlushFile, FlushPool, WriteJob};
+use crate::engine::ticket::{CheckpointTicket, CkptSession};
 use crate::engine::CheckpointEngine;
-use crate::metrics::{CkptMetrics, Tier, Timeline};
+use crate::metrics::{CkptMetrics, ProgressCounters, Tier, Timeline};
 use crate::provider::layout::{EntryKind, FileLayout, LayoutEntry};
 use crate::provider::Bytes;
 use crate::state::{RankState, StateItem};
-use crate::util::channel::{unbounded, Receiver, Sender};
+use crate::util::channel::{unbounded, Sender};
 
 struct FlushTask {
+    session: Arc<CkptSession>,
     dir: std::path::PathBuf,
     /// (logical file name, entries of (entry name, kind, bytes))
     files: Vec<(String, Vec<(String, EntryKind, Vec<u8>)>)>,
     requested: Instant,
 }
 
+enum WorkerMsg {
+    Task(FlushTask),
+    Stop,
+}
+
 pub struct TorchSnapshotEngine {
     cfg: EngineConfig,
     timeline: Arc<Timeline>,
-    flush_tx: Sender<FlushTask>,
-    done_rx: Receiver<f64>,
+    flush_tx: Sender<WorkerMsg>,
     worker: Option<std::thread::JoinHandle<()>>,
-    in_flight: usize,
-    metrics: Vec<CkptMetrics>,
+    sessions: Vec<Arc<CkptSession>>,
+    /// The one outstanding snapshot (single snapshot buffer).
+    prev: Option<CheckpointTicket>,
 }
 
 impl TorchSnapshotEngine {
     pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
         std::fs::create_dir_all(&cfg.ckpt_dir)?;
         let timeline = Arc::new(Timeline::new());
-        let (flush_tx, flush_rx) = unbounded::<FlushTask>();
-        let (done_tx, done_rx) = unbounded::<f64>();
+        let (flush_tx, flush_rx) = unbounded::<WorkerMsg>();
         let pool = FlushPool::new(cfg.writer_threads, timeline.clone());
         let chunk_bytes = cfg.chunk_bytes;
         let worker = std::thread::Builder::new()
             .name("ts-flush".into())
             .spawn(move || {
-                while let Ok(task) = flush_rx.recv() {
-                    if let Err(e) =
-                        Self::flush_task(&task, &pool, chunk_bytes)
-                    {
-                        eprintln!("[torchsnapshot] flush failed: {e:#}");
+                while let Ok(WorkerMsg::Task(task)) = flush_rx.recv() {
+                    match Self::flush_task(&task, &pool, chunk_bytes) {
+                        Ok(()) => task.session.complete(
+                            task.requested.elapsed().as_secs_f64()),
+                        Err(e) => {
+                            eprintln!(
+                                "[torchsnapshot] flush v{} failed: {e:#}",
+                                task.session.version()
+                            );
+                            task.session.fail(format!("{e:#}"));
+                        }
                     }
-                    let _ = done_tx
-                        .send(task.requested.elapsed().as_secs_f64());
                 }
             })
             .expect("spawn ts-flush");
@@ -74,10 +86,9 @@ impl TorchSnapshotEngine {
             cfg,
             timeline,
             flush_tx,
-            done_rx,
             worker: Some(worker),
-            in_flight: 0,
-            metrics: Vec::new(),
+            sessions: Vec::new(),
+            prev: None,
         })
     }
 
@@ -85,6 +96,7 @@ impl TorchSnapshotEngine {
     fn flush_task(task: &FlushTask, pool: &Arc<FlushPool>,
                   chunk_bytes: usize) -> anyhow::Result<()> {
         std::fs::create_dir_all(&task.dir)?;
+        let progress = task.session.progress_counters();
         for (logical, entries) in &task.files {
             let mut manifest_entries = Vec::new();
             let mut open_files = Vec::new();
@@ -103,6 +115,8 @@ impl TorchSnapshotEngine {
                         offset: 0,
                         data: Bytes::from_vec(chunk.to_vec()),
                         label: name.clone(),
+                        notify: None,
+                        progress: Some(progress.clone()),
                     });
                     f.finish_issuing();
                     extents.push((chunk_name.clone(),
@@ -127,12 +141,12 @@ impl TorchSnapshotEngine {
                 &task.dir.join(format!("{logical}.manifest")),
                 format!("{logical}.manifest"),
             )?;
-            pool.submit(WriteJob {
-                file: mf.clone(),
-                offset: 0,
-                data: Bytes::from_vec(manifest.clone()),
-                label: format!("{logical}.manifest"),
-            });
+            pool.submit(WriteJob::plain(
+                mf.clone(),
+                0,
+                Bytes::from_vec(manifest.clone()),
+                format!("{logical}.manifest"),
+            ));
             mf.finish_issuing();
             mf.wait_quiescent()?;
             let layout = FileLayout {
@@ -242,19 +256,15 @@ impl CheckpointEngine for TorchSnapshotEngine {
         "torchsnapshot"
     }
 
-    fn checkpoint(&mut self, version: u64, state: &RankState)
-        -> anyhow::Result<()> {
+    fn begin(&mut self, version: u64, state: &RankState)
+        -> anyhow::Result<CheckpointTicket> {
         let t0 = Instant::now();
-        // one outstanding snapshot: wait for the previous flush
-        while self.in_flight > 0 {
-            let persist = self.done_rx.recv()?;
-            if let Some(m) =
-                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
-            {
-                m.persist_s = persist;
-            }
-            self.in_flight -= 1;
+        // one outstanding snapshot: wait for the previous version's
+        // persistence future before capturing the next
+        if let Some(prev) = self.prev.take() {
+            prev.wait_persisted()?;
         }
+        let progress = Arc::new(ProgressCounters::default());
         // blocking snapshot: D2H everything + serialize residual objects
         let mut files = Vec::with_capacity(state.files.len());
         let mut total = 0u64;
@@ -265,6 +275,7 @@ impl CheckpointEngine for TorchSnapshotEngine {
                     StateItem::Tensor(t) => {
                         let staged = stage_sync(t, &self.timeline)?;
                         total += staged.len() as u64;
+                        progress.add_staged(staged.len() as u64);
                         entries.push((
                             t.name.clone(),
                             EntryKind::Tensor {
@@ -281,6 +292,7 @@ impl CheckpointEngine for TorchSnapshotEngine {
                                              bytes.len() as u64, start,
                                              self.timeline.now_s());
                         total += bytes.len() as u64;
+                        progress.add_serialized(bytes.len() as u64);
                         entries.push((name.clone(), EntryKind::Object,
                                       bytes));
                     }
@@ -288,42 +300,36 @@ impl CheckpointEngine for TorchSnapshotEngine {
             }
             files.push((file.name.clone(), entries));
         }
-        // background flush of the snapshot
+        progress.add_total(total);
+        // capture was synchronous (no gate); persistence resolves when
+        // the background flush completes this session
+        let session = CkptSession::new(
+            version,
+            None,
+            progress,
+            CkptMetrics {
+                version,
+                blocked_s: t0.elapsed().as_secs_f64(),
+                bytes: total,
+                ..Default::default()
+            },
+        );
         self.flush_tx
-            .send(FlushTask {
+            .send(WorkerMsg::Task(FlushTask {
+                session: session.clone(),
                 dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
                 files,
                 requested: t0,
-            })
+            }))
             .map_err(|_| anyhow::anyhow!("flush worker dead"))?;
-        self.in_flight += 1;
-        self.metrics.push(CkptMetrics {
-            blocked_s: t0.elapsed().as_secs_f64(),
-            bytes: total,
-            ..Default::default()
-        });
-        Ok(())
-    }
-
-    fn wait_snapshot_complete(&mut self) -> anyhow::Result<f64> {
-        Ok(0.0) // snapshot was captured synchronously in checkpoint()
-    }
-
-    fn drain(&mut self) -> anyhow::Result<()> {
-        while self.in_flight > 0 {
-            let persist = self.done_rx.recv()?;
-            if let Some(m) =
-                self.metrics.iter_mut().find(|m| m.persist_s == 0.0)
-            {
-                m.persist_s = persist;
-            }
-            self.in_flight -= 1;
-        }
-        Ok(())
+        self.sessions.push(session.clone());
+        let ticket = CheckpointTicket::new(session);
+        self.prev = Some(ticket.clone());
+        Ok(ticket)
     }
 
     fn metrics(&self) -> Vec<CkptMetrics> {
-        self.metrics.clone()
+        self.sessions.iter().map(|s| s.metrics()).collect()
     }
 
     fn timeline(&self) -> Arc<Timeline> {
@@ -333,9 +339,8 @@ impl CheckpointEngine for TorchSnapshotEngine {
 
 impl Drop for TorchSnapshotEngine {
     fn drop(&mut self) {
-        let _ = self.drain();
-        let (tx, _rx) = unbounded();
-        self.flush_tx = tx;
+        // explicit stop: the worker drains queued tasks first (FIFO)
+        let _ = self.flush_tx.send(WorkerMsg::Stop);
         if let Some(h) = self.worker.take() {
             let _ = h.join();
         }
@@ -374,8 +379,8 @@ mod tests {
                 ],
             }],
         };
-        eng.checkpoint(3, &state).unwrap();
-        eng.drain().unwrap();
+        let ticket = eng.begin(3, &state).unwrap();
+        ticket.wait_persisted().unwrap();
 
         let vdir = dir.path().join("v000003");
         // chunk-file explosion: 10 chunks + 1 object chunk + manifest
@@ -392,7 +397,7 @@ mod tests {
     }
 
     #[test]
-    fn second_checkpoint_waits_for_first_flush() {
+    fn second_begin_waits_for_first_flush() {
         let dir = TempDir::new("ds-ts2").unwrap();
         let mut eng =
             TorchSnapshotEngine::new(EngineConfig::with_dir(dir.path()))
@@ -406,11 +411,14 @@ mod tests {
                     "o", DType::F32, vec![1 << 16], 3))],
             }],
         };
-        eng.checkpoint(0, &state).unwrap();
-        eng.checkpoint(1, &state).unwrap(); // must block on flush of v0
-        eng.drain().unwrap();
+        let t0 = eng.begin(0, &state).unwrap();
+        let t1 = eng.begin(1, &state).unwrap(); // must block on v0 flush
+        assert!(t0.is_persisted(),
+                "begin(1) must resolve v0's persistence future first");
+        t1.wait_persisted().unwrap();
         let m = eng.metrics();
         assert_eq!(m.len(), 2);
+        assert_eq!((m[0].version, m[1].version), (0, 1));
         assert!(m[0].persist_s > 0.0);
         assert!(dir.path().join("v000001").exists());
     }

@@ -67,6 +67,20 @@ impl FlushFile {
         self.cv.notify_all();
     }
 
+    /// Non-blocking quiescence check: true once `finish_issuing` was
+    /// called and every issued chunk has been written. Used by the
+    /// event-driven pump, which parks on the engine notifier (signalled
+    /// by the writers per completed chunk) instead of blocking here.
+    pub fn is_quiescent(&self) -> anyhow::Result<bool> {
+        if let Some(e) = self.err.lock().unwrap().clone() {
+            anyhow::bail!("flush {} failed: {e}", self.name);
+        }
+        let done = *self.done_issuing.lock().unwrap();
+        Ok(done
+            && self.written.load(Ordering::Acquire)
+                == self.issued.load(Ordering::Acquire))
+    }
+
     /// Wait until every issued chunk has been written.
     pub fn wait_quiescent(&self) -> anyhow::Result<()> {
         let mut done = self.done_issuing.lock().unwrap();
@@ -118,6 +132,26 @@ pub struct WriteJob {
     pub offset: u64,
     pub data: Bytes,
     pub label: String,
+    /// Readiness signal fired after the write is recorded, so a parked
+    /// pump wakes to finalize files whose last chunk just landed.
+    pub notify: Option<Arc<crate::provider::Notifier>>,
+    /// Per-version progress counters of the owning checkpoint session.
+    pub progress: Option<Arc<crate::metrics::ProgressCounters>>,
+}
+
+impl WriteJob {
+    /// A plain write with no session attribution (baselines, tests).
+    pub fn plain(file: Arc<FlushFile>, offset: u64, data: Bytes,
+                 label: impl Into<String>) -> WriteJob {
+        WriteJob {
+            file,
+            offset,
+            data,
+            label: label.into(),
+            notify: None,
+            progress: None,
+        }
+    }
 }
 
 enum Msg {
@@ -157,10 +191,20 @@ impl FlushPool {
                                         start,
                                         tl.now_s(),
                                     );
+                                    if let Some(p) = &job.progress {
+                                        p.add_flushed(
+                                            job.data.len() as u64);
+                                    }
                                     job.file.record_written();
+                                    if let Some(n) = &job.notify {
+                                        n.notify();
+                                    }
                                 }
                                 Err(e) => {
-                                    job.file.record_error(e.to_string())
+                                    job.file.record_error(e.to_string());
+                                    if let Some(n) = &job.notify {
+                                        n.notify();
+                                    }
                                 }
                             }
                         }
@@ -207,12 +251,12 @@ mod tests {
         let n = 64;
         let chunk = 1024;
         for i in 0..n {
-            pool.submit(WriteJob {
-                file: file.clone(),
-                offset: (i * chunk) as u64,
-                data: Bytes::from_vec(vec![i as u8; chunk]),
-                label: format!("c{i}"),
-            });
+            pool.submit(WriteJob::plain(
+                file.clone(),
+                (i * chunk) as u64,
+                Bytes::from_vec(vec![i as u8; chunk]),
+                format!("c{i}"),
+            ));
         }
         file.finish_issuing();
         file.wait_quiescent().unwrap();
@@ -253,17 +297,42 @@ mod tests {
         let tl = Arc::new(Timeline::new());
         let pool = FlushPool::new(2, tl);
         let file = FlushFile::create(&dir.path().join("g.ds"), "g").unwrap();
-        pool.submit(WriteJob {
-            file: file.clone(),
-            offset: 0,
-            data: Bytes::from_vec(vec![7; 128]),
-            label: "x".into(),
-        });
+        pool.submit(WriteJob::plain(file.clone(), 0,
+                                    Bytes::from_vec(vec![7; 128]), "x"));
         let f2 = file.clone();
         let h = std::thread::spawn(move || f2.wait_quiescent());
         std::thread::sleep(std::time::Duration::from_millis(20));
         assert!(!h.is_finished(), "must wait for finish_issuing");
+        assert!(!file.is_quiescent().unwrap(),
+                "not quiescent before finish_issuing");
         file.finish_issuing();
         h.join().unwrap().unwrap();
+        assert!(file.is_quiescent().unwrap());
+    }
+
+    #[test]
+    fn writers_signal_notifier_per_completed_chunk() {
+        let dir = crate::util::TempDir::new("ds-test").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(2, tl);
+        let file =
+            FlushFile::create(&dir.path().join("n.ds"), "n").unwrap();
+        let notifier = crate::provider::Notifier::new();
+        let progress =
+            Arc::new(crate::metrics::ProgressCounters::default());
+        let seen = notifier.epoch();
+        pool.submit(WriteJob {
+            file: file.clone(),
+            offset: 0,
+            data: Bytes::from_vec(vec![1; 256]),
+            label: "c".into(),
+            notify: Some(notifier.clone()),
+            progress: Some(progress.clone()),
+        });
+        file.finish_issuing();
+        notifier.wait_past(seen);
+        // signal arrives only after the write was recorded
+        assert!(file.is_quiescent().unwrap());
+        assert_eq!(progress.snapshot().bytes_flushed, 256);
     }
 }

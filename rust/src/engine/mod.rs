@@ -1,13 +1,15 @@
 //! The data-movement engine (paper §V-A4): pinned host pool, D2H staging
-//! stream, multi-threaded flush pool, and the checkpoint engine that
-//! pipelines them.
+//! stream, multi-threaded flush pool, the per-version checkpoint session
+//! handles, and the event-driven checkpoint engine that pipelines them.
 
 pub mod checkpoint;
 pub mod flush;
 pub mod pool;
 pub mod stager;
+pub mod ticket;
 
 pub use checkpoint::{CheckpointEngine, DataStatesEngine};
 pub use flush::{FlushFile, FlushPool, WriteJob};
 pub use pool::{PinnedPool, Segment};
 pub use stager::{SnapshotTracker, StageJob, Stager};
+pub use ticket::{CheckpointTicket, CkptSession};

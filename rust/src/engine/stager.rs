@@ -41,7 +41,10 @@ impl SnapshotTracker {
 
     pub fn complete_one(&self) {
         let mut r = self.remaining.lock().unwrap();
-        *r -= 1;
+        // saturating: fail() zeroes the counter, and a sibling copy of
+        // the same snapshot may still complete afterwards — that late
+        // completion must not underflow and kill the stager thread
+        *r = r.saturating_sub(1);
         if *r == 0 {
             self.cv.notify_all();
         }
@@ -55,7 +58,8 @@ impl SnapshotTracker {
     }
 
     /// Block until every D2H copy of this snapshot completed. Returns the
-    /// seconds waited.
+    /// seconds waited. Idempotent on failure: every waiter (there may be
+    /// several ticket clones) observes the same error.
     pub fn wait(&self) -> anyhow::Result<f64> {
         let start = Instant::now();
         let mut r = self.remaining.lock().unwrap();
@@ -63,7 +67,7 @@ impl SnapshotTracker {
             r = self.cv.wait(r).unwrap();
         }
         drop(r);
-        if let Some(e) = self.failed.lock().unwrap().take() {
+        if let Some(e) = self.failed.lock().unwrap().clone() {
             anyhow::bail!("snapshot failed: {e}");
         }
         Ok(start.elapsed().as_secs_f64())
@@ -74,6 +78,18 @@ impl SnapshotTracker {
     }
 }
 
+/// Tear down a failed staging job so its consumer can observe the
+/// failure: drop the delivery channel FIRST (the provider's `try_recv`
+/// then reports a disconnect), and only then wake the pump — the
+/// reverse order would let the pump re-park on a still-empty channel.
+fn fail_job(job: StageJob) {
+    let StageJob { out, notify, .. } = job;
+    drop(out);
+    if let Some(n) = notify {
+        n.notify();
+    }
+}
+
 /// A single D2H staging request.
 pub struct StageJob {
     pub name: String,
@@ -81,6 +97,11 @@ pub struct StageJob {
     /// Where the staged bytes are delivered (the StagedTensorProvider).
     pub out: Sender<Bytes>,
     pub tracker: Arc<SnapshotTracker>,
+    /// Readiness signal for the engine's pump: fired AFTER the bytes are
+    /// published on `out`, so a woken consumer always finds them.
+    pub notify: Option<Arc<crate::provider::Notifier>>,
+    /// Per-version progress counters of the owning checkpoint session.
+    pub progress: Option<Arc<crate::metrics::ProgressCounters>>,
 }
 
 enum Msg {
@@ -113,6 +134,7 @@ impl Stager {
                 Ok((seg, _waited)) => seg,
                 Err(e) => {
                     job.tracker.fail(format!("{}: {e}", job.name));
+                    fail_job(job);
                     continue;
                 }
             };
@@ -122,11 +144,22 @@ impl Stager {
                 Ok(()) => {
                     timeline.record(Tier::D2H, &job.name, len as u64,
                                     start, timeline.now_s());
+                    if let Some(p) = &job.progress {
+                        p.add_staged(len as u64);
+                    }
                     // Receiver may have been dropped on abort; harmless.
                     let _ = job.out.send(Bytes::from_segment(seg));
                     job.tracker.complete_one();
+                    // publish-then-signal: wake the pump only once the
+                    // bytes are observable
+                    if let Some(n) = &job.notify {
+                        n.notify();
+                    }
                 }
-                Err(e) => job.tracker.fail(format!("{}: {e}", job.name)),
+                Err(e) => {
+                    job.tracker.fail(format!("{}: {e}", job.name));
+                    fail_job(job);
+                }
             }
         }
     }
@@ -165,6 +198,8 @@ mod tests {
                 tensor: SimDeviceTensor::new(data),
                 out: tx,
                 tracker: tracker.clone(),
+                notify: None,
+                progress: None,
             });
             rxs.push(rx);
         }
@@ -202,6 +237,8 @@ mod tests {
             tensor: SimDeviceTensor::new(vec![0; 128]),
             out: tx,
             tracker: tracker.clone(),
+            notify: None,
+            progress: None,
         });
         assert!(tracker.wait().is_err());
     }

@@ -1,0 +1,264 @@
+//! Per-checkpoint session handles.
+//!
+//! `CheckpointEngine::begin` returns a [`CheckpointTicket`] — the
+//! caller-facing handle to ONE checkpoint version in flight. The ticket
+//! owns that version's consistency gate ([`CheckpointTicket::wait_captured`]),
+//! persistence future ([`CheckpointTicket::wait_persisted`]), live
+//! transfer progress ([`CheckpointTicket::progress`]) and metrics entry.
+//! Engines keep the shared [`CkptSession`] halves, so any number of
+//! versions can be in flight concurrently with no implicit-singleton
+//! state: a background completion updates *its own* session, never "the
+//! first entry that looks unfinished".
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::stager::SnapshotTracker;
+use crate::metrics::{CkptMetrics, CkptProgress, ProgressCounters};
+
+struct SessionState {
+    metrics: CkptMetrics,
+    /// The capture gate has been resolved (successfully or not) and its
+    /// wait time folded into the metrics.
+    gate_resolved: bool,
+    persisted: bool,
+    failed: Option<String>,
+}
+
+/// Engine-side state of one checkpoint version. Shared between the
+/// engine (for `metrics()` aggregation), its background workers (for
+/// completion) and every clone of the user-facing ticket.
+pub struct CkptSession {
+    version: u64,
+    /// Outstanding-D2H gate; `None` for engines that capture
+    /// synchronously inside `begin`.
+    gate: Option<Arc<SnapshotTracker>>,
+    progress: Arc<ProgressCounters>,
+    state: Mutex<SessionState>,
+    cv: Condvar,
+}
+
+impl CkptSession {
+    pub fn new(
+        version: u64,
+        gate: Option<Arc<SnapshotTracker>>,
+        progress: Arc<ProgressCounters>,
+        initial: CkptMetrics,
+    ) -> Arc<CkptSession> {
+        Arc::new(CkptSession {
+            version,
+            gate,
+            progress,
+            state: Mutex::new(SessionState {
+                metrics: initial,
+                gate_resolved: false,
+                persisted: false,
+                failed: None,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn progress_counters(&self) -> Arc<ProgressCounters> {
+        self.progress.clone()
+    }
+
+    /// Current metrics entry (persist_s is 0 until persisted).
+    pub fn metrics(&self) -> CkptMetrics {
+        self.state.lock().unwrap().metrics.clone()
+    }
+
+    /// Mark this version fully persistent. Called by the engine's
+    /// background worker exactly once, with the wall time since the
+    /// request.
+    pub fn complete(&self, persist_s: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.persist_s = persist_s;
+        st.persisted = true;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Mark this version failed; waiters observe the error.
+    pub fn fail(&self, err: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.failed.is_none() {
+            st.failed = Some(err);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub fn is_persisted(&self) -> bool {
+        self.state.lock().unwrap().persisted
+    }
+
+    fn wait_captured(&self) -> anyhow::Result<f64> {
+        {
+            let st = self.state.lock().unwrap();
+            if st.gate_resolved {
+                if let Some(e) = &st.failed {
+                    anyhow::bail!("checkpoint v{}: {e}", self.version);
+                }
+                return Ok(0.0);
+            }
+        }
+        let waited = match &self.gate {
+            Some(tracker) => match tracker.wait() {
+                Ok(w) => w,
+                Err(e) => {
+                    let msg = format!("capture failed: {e:#}");
+                    let mut st = self.state.lock().unwrap();
+                    st.gate_resolved = true;
+                    if st.failed.is_none() {
+                        st.failed = Some(msg);
+                    }
+                    drop(st);
+                    self.cv.notify_all();
+                    anyhow::bail!("checkpoint v{} capture failed: {e:#}",
+                                  self.version);
+                }
+            },
+            None => 0.0,
+        };
+        let mut st = self.state.lock().unwrap();
+        if !st.gate_resolved {
+            st.gate_resolved = true;
+            // gate time blocks training and is spent waiting on D2H
+            st.metrics.blocked_s += waited;
+            st.metrics.d2h_s += waited;
+        }
+        Ok(waited)
+    }
+
+    fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
+        self.wait_captured()?;
+        let mut st = self.state.lock().unwrap();
+        while !st.persisted && st.failed.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        if let Some(e) = &st.failed {
+            anyhow::bail!("checkpoint v{}: {e}", self.version);
+        }
+        Ok(st.metrics.clone())
+    }
+}
+
+/// Caller-facing handle to one checkpoint version in flight. Cheap to
+/// clone; all clones observe the same session.
+#[derive(Clone)]
+pub struct CheckpointTicket {
+    session: Arc<CkptSession>,
+}
+
+impl CheckpointTicket {
+    pub fn new(session: Arc<CkptSession>) -> CheckpointTicket {
+        CheckpointTicket { session }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.session.version()
+    }
+
+    /// Consistency gate (§V-A2): block until this version's device state
+    /// has been fully captured (all D2H copies landed), so the trainer
+    /// may mutate model/optimizer state again. Returns the seconds
+    /// waited; idempotent — later calls return 0. Engines that capture
+    /// synchronously inside `begin` resolve immediately.
+    pub fn wait_captured(&self) -> anyhow::Result<f64> {
+        self.session.wait_captured()
+    }
+
+    /// Persistence future: block until this version is durably on
+    /// storage (implies `wait_captured`). Returns the final metrics
+    /// entry for this version.
+    pub fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
+        self.session.wait_persisted()
+    }
+
+    /// True once the version is durably persisted (non-blocking).
+    pub fn is_persisted(&self) -> bool {
+        self.session.is_persisted()
+    }
+
+    /// Live transfer progress: bytes staged (D2H), serialized, and
+    /// flushed so far for this version.
+    pub fn progress(&self) -> CkptProgress {
+        self.session.progress.snapshot()
+    }
+
+    /// This version's metrics entry as currently known (persist_s is 0
+    /// until the persistence future resolves).
+    pub fn metrics(&self) -> CkptMetrics {
+        self.session.metrics()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session(gate: Option<Arc<SnapshotTracker>>) -> Arc<CkptSession> {
+        CkptSession::new(
+            7,
+            gate,
+            Arc::new(ProgressCounters::default()),
+            CkptMetrics { version: 7, bytes: 10, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn gateless_ticket_captures_immediately() {
+        let s = session(None);
+        let t = CheckpointTicket::new(s.clone());
+        assert_eq!(t.wait_captured().unwrap(), 0.0);
+        assert!(!t.is_persisted());
+        s.complete(0.5);
+        let m = t.wait_persisted().unwrap();
+        assert_eq!(m.version, 7);
+        assert!((m.persist_s - 0.5).abs() < 1e-12);
+        assert!(t.is_persisted());
+    }
+
+    #[test]
+    fn gate_wait_is_idempotent_and_charged_once() {
+        let tracker = SnapshotTracker::new(1);
+        let s = session(Some(tracker.clone()));
+        let t = CheckpointTicket::new(s.clone());
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.wait_captured().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        tracker.complete_one();
+        let waited = h.join().unwrap();
+        assert!(waited >= 0.015);
+        // second wait resolves instantly and does not double-charge
+        assert_eq!(t.wait_captured().unwrap(), 0.0);
+        let m = t.metrics();
+        assert!((m.d2h_s - waited).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failed_session_errors_all_waiters() {
+        let s = session(None);
+        let t = CheckpointTicket::new(s.clone());
+        s.fail("disk on fire".into());
+        let e = t.wait_persisted().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+        // capture gate itself still fine (no gate), but persistence
+        // keeps erroring
+        assert!(t.wait_persisted().is_err());
+    }
+
+    #[test]
+    fn capture_failure_propagates_to_persistence() {
+        let tracker = SnapshotTracker::new(1);
+        let s = session(Some(tracker.clone()));
+        let t = CheckpointTicket::new(s);
+        tracker.fail("OOM staging".into());
+        assert!(t.wait_captured().is_err());
+        assert!(t.wait_persisted().is_err());
+    }
+}

@@ -315,9 +315,9 @@ pub fn fig15() -> anyhow::Result<()> {
     let tmp = crate::util::TempDir::new("ds-fig15")?;
     let mut eng =
         DataStatesEngine::new(EngineConfig::with_dir(tmp.path()))?;
-    eng.checkpoint(0, &state)?;
-    eng.wait_snapshot_complete()?;
-    eng.drain()?;
+    let ticket = eng.begin(0, &state)?;
+    ticket.wait_captured()?;
+    ticket.wait_persisted()?;
     let mut spans = eng.timeline().spans();
     spans.sort_by(|a, b| b.bytes.cmp(&a.bytes));
     let mut top: Vec<String> = Vec::new();

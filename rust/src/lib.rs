@@ -12,11 +12,15 @@
 //!   control objects, and the 3D (TP/PP/DP + ZeRO-1) partitioner that
 //!   reproduces the paper's "3D checkpoint heterogeneity" (Table I).
 //! - [`provider`] — the paper's core contribution: the
-//!   [`provider::StateProvider`] chunk-stream abstraction, zero-copy
-//!   tensor providers, lazily-serializing object providers, hierarchical
-//!   composition, and the hybrid fixed-offset / log-append file layout.
+//!   [`provider::StateProvider`] chunk-stream abstraction (readiness-
+//!   driven via [`provider::Notifier`]), zero-copy tensor providers,
+//!   lazily-serializing object providers, hierarchical composition, and
+//!   the hybrid fixed-offset / log-append file layout.
 //! - [`engine`] — the data-movement engine: pinned host pool, D2H staging
-//!   stream, multi-threaded flush pool, lazy-capture consistency gate.
+//!   stream, multi-threaded flush pool, and per-version checkpoint
+//!   sessions — [`engine::CheckpointEngine::begin`] returns a
+//!   [`engine::CheckpointTicket`] owning that version's lazy-capture
+//!   consistency gate, persistence future, progress, and metrics.
 //! - [`baselines`] — faithful re-implementations of the compared engines:
 //!   DeepSpeed-default (`torch.save`-style), TorchSnapshot-like, and
 //!   DataStates-LLM-Old (HPDC'24).
@@ -48,6 +52,7 @@ pub mod train;
 pub mod util;
 
 pub use engine::checkpoint::{CheckpointEngine, DataStatesEngine};
+pub use engine::ticket::CheckpointTicket;
 pub use provider::StateProvider;
 
 /// Crate-wide result type.

@@ -249,10 +249,9 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
         let state = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
         let _ = std::fs::remove_dir_all(&dir);
         let mut eng = kind.build(EngineConfig::with_dir(&dir))?;
-        eng.checkpoint(0, &state)?;
-        eng.wait_snapshot_complete()?;
-        eng.drain()?;
-        let m = &eng.metrics()[0];
+        let ticket = eng.begin(0, &state)?;
+        ticket.wait_captured()?;
+        let m = ticket.wait_persisted()?;
         println!("{:<22}{:>14.4}{:>16}", kind.label(), m.blocked_s,
                  human_bps(m.effective_bps()));
     }

@@ -3,6 +3,7 @@
 
 use std::time::Instant;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 /// Which physical path a transfer used.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -131,8 +132,14 @@ pub fn union_time(iter: impl Iterator<Item = (f64, f64)>) -> f64 {
 }
 
 /// Blocking/throughput metrics for one checkpoint (paper §VI-C3).
+///
+/// Owned by the checkpoint's session (see `engine::ticket`), so every
+/// in-flight version has its own entry — completions update *their*
+/// version, never "the first incomplete one".
 #[derive(Debug, Clone, Default)]
 pub struct CkptMetrics {
+    /// Checkpoint version this entry belongs to.
+    pub version: u64,
     /// Seconds training was blocked by this checkpoint (launch +
     /// consistency-gate waits).
     pub blocked_s: f64,
@@ -154,6 +161,59 @@ impl CkptMetrics {
             self.bytes as f64 / self.blocked_s
         }
     }
+}
+
+/// Live byte counters for one checkpoint session, updated by the D2H
+/// stager, the serializer pool, and the flush workers as bytes move
+/// through the tiers. Cheap enough to bump per chunk; read through
+/// [`ProgressCounters::snapshot`] by `CheckpointTicket::progress`.
+#[derive(Debug, Default)]
+pub struct ProgressCounters {
+    total: AtomicU64,
+    staged: AtomicU64,
+    serialized: AtomicU64,
+    flushed: AtomicU64,
+}
+
+impl ProgressCounters {
+    pub fn add_total(&self, bytes: u64) {
+        self.total.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_staged(&self, bytes: u64) {
+        self.staged.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_serialized(&self, bytes: u64) {
+        self.serialized.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_flushed(&self, bytes: u64) {
+        self.flushed.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CkptProgress {
+        CkptProgress {
+            bytes_total: self.total.load(Ordering::Relaxed),
+            bytes_staged: self.staged.load(Ordering::Relaxed),
+            bytes_serialized: self.serialized.load(Ordering::Relaxed),
+            bytes_flushed: self.flushed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of one checkpoint's movement through the tiers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CkptProgress {
+    /// Requested payload bytes (object sizes are pre-serialization
+    /// estimates).
+    pub bytes_total: u64,
+    /// Device bytes landed in the pinned host pool (D2H).
+    pub bytes_staged: u64,
+    /// Object bytes materialized by the serializer pool.
+    pub bytes_serialized: u64,
+    /// Payload bytes durably issued by the flush workers.
+    pub bytes_flushed: u64,
 }
 
 /// Pretty-print helpers shared by the harness drivers.

@@ -4,11 +4,11 @@
 //! polling over children gives the engine the paper's scheduling for
 //! free: at request time the tensor providers are `Ready` immediately
 //! (zero-copy) or become ready as the copy stream delivers them, while
-//! object providers stay `Pending` until the serializer pool finishes —
+//! object providers stay `Blocked` until the serializer pool finishes —
 //! so large tensor chunks flow first and serialization overlaps I/O.
 
 use super::layout::FileLayout;
-use super::{Poll, StateProvider};
+use super::{ChunkEvent, StateProvider};
 
 pub struct CompositeProvider {
     file_name: String,
@@ -52,31 +52,31 @@ impl StateProvider for CompositeProvider {
         self.children.iter().map(|c| c.size_hint()).sum()
     }
 
-    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+    fn next_chunk(&mut self) -> anyhow::Result<ChunkEvent> {
         if self.children.is_empty() {
-            return Ok(Poll::Done);
+            return Ok(ChunkEvent::Exhausted);
         }
         let n = self.children.len();
-        let mut any_pending = false;
+        let mut any_blocked = false;
         for i in 0..n {
             let idx = (self.next + i) % n;
             if self.children[idx].is_done() {
                 continue;
             }
-            match self.children[idx].poll_chunk()? {
-                Poll::Ready(c) => {
+            match self.children[idx].next_chunk()? {
+                ChunkEvent::Ready(c) => {
                     // resume after this child next time (fairness)
                     self.next = (idx + 1) % n;
-                    return Ok(Poll::Ready(c));
+                    return Ok(ChunkEvent::Ready(c));
                 }
-                Poll::Pending => any_pending = true,
-                Poll::Done => {}
+                ChunkEvent::Blocked => any_blocked = true,
+                ChunkEvent::Exhausted => {}
             }
         }
-        if any_pending {
-            Ok(Poll::Pending)
+        if any_blocked {
+            Ok(ChunkEvent::Blocked)
         } else {
-            Ok(Poll::Done)
+            Ok(ChunkEvent::Exhausted)
         }
     }
 
@@ -116,12 +116,12 @@ mod tests {
                 }
             }
             polls += 1;
-            match composite.poll_chunk().unwrap() {
-                Poll::Ready(c) => {
+            match composite.next_chunk().unwrap() {
+                ChunkEvent::Ready(c) => {
                     order.push((c.label.clone(), c.offset, c.data.len()))
                 }
-                Poll::Done => break,
-                Poll::Pending => {}
+                ChunkEvent::Exhausted => break,
+                ChunkEvent::Blocked => {}
             }
             assert!(polls < 10_000, "livelock");
         }
@@ -129,7 +129,7 @@ mod tests {
     }
 
     #[test]
-    fn tensors_flow_while_object_pends() {
+    fn tensors_flow_while_object_blocks() {
         // 2 tensors ready now; 1 object serialized only after 5 polls.
         let cursor = Arc::new(LogCursor::new(200));
         let t0 = TensorProvider::new("t0", DType::U8, vec![100],
@@ -174,9 +174,9 @@ mod tests {
     }
 
     #[test]
-    fn empty_composite_is_done() {
+    fn empty_composite_is_exhausted() {
         let mut c = CompositeProvider::new("e.pt", 0, vec![]);
-        assert!(matches!(c.poll_chunk().unwrap(), Poll::Done));
+        assert!(matches!(c.next_chunk().unwrap(), ChunkEvent::Exhausted));
     }
 
     #[test]

@@ -7,7 +7,14 @@
 //! belong at offset O of the checkpoint file". The engine stays agnostic
 //! to 3D heterogeneity and simply drains competing chunk streams.
 //!
-//! The three implementations mirror the paper:
+//! Streams are **readiness-driven**: pulling the next chunk never
+//! blocks. When a stream reports [`ChunkEvent::Blocked`], its bytes are
+//! still in flight on an asynchronous producer (the D2H copy stream or
+//! the serializer pool); that producer signals the engine's shared
+//! [`Notifier`] the moment bytes land, so the consumer parks instead of
+//! sleep-polling (see `notify.rs`).
+//!
+//! The implementations mirror the paper:
 //!
 //! - [`tensor_provider::TensorProvider`] — zero-copy memory views over
 //!   host-resident tensors (no serialization at all, §IV-D),
@@ -24,6 +31,7 @@ pub mod composite;
 pub mod compress;
 pub mod delta;
 pub mod layout;
+pub mod notify;
 pub mod object_provider;
 pub mod serializer;
 pub mod tensor_provider;
@@ -31,6 +39,7 @@ pub mod tensor_provider;
 pub use bytes::Bytes;
 pub use composite::CompositeProvider;
 pub use layout::{FileLayout, LayoutEntry, LogCursor};
+pub use notify::Notifier;
 pub use object_provider::ObjectProvider;
 pub use serializer::SerializerPool;
 pub use tensor_provider::{StagedTensorProvider, TensorProvider};
@@ -45,16 +54,18 @@ pub struct Chunk {
     pub label: String,
 }
 
-/// Result of polling a provider for its next chunk.
-pub enum Poll {
+/// What a provider stream yields when asked for its next chunk.
+pub enum ChunkEvent {
     /// A chunk is ready for I/O.
     Ready(Chunk),
-    /// More chunks will arrive later (D2H or serialization in flight);
-    /// poll other providers meanwhile — this is exactly the freedom the
+    /// More chunks will arrive later (D2H or serialization in flight).
+    /// The producing side signals the engine's [`Notifier`] when they
+    /// materialize — the consumer should drain other streams and park on
+    /// the notifier rather than spin, which is exactly the freedom the
     /// engine uses to overlap serialization with bulk I/O.
-    Pending,
+    Blocked,
     /// Stream exhausted; layout entries are final.
-    Done,
+    Exhausted,
 }
 
 /// A stream-oriented producer of checkpoint chunks.
@@ -63,12 +74,14 @@ pub trait StateProvider: Send {
     /// not-yet-serialized objects). Used for scheduling hints only.
     fn size_hint(&self) -> u64;
 
-    /// Pull the next chunk.
-    fn poll_chunk(&mut self) -> anyhow::Result<Poll>;
+    /// Pull the next chunk. Never blocks: returns
+    /// [`ChunkEvent::Blocked`] when bytes are still in flight.
+    fn next_chunk(&mut self) -> anyhow::Result<ChunkEvent>;
 
-    /// Layout entries for the trailer. Only complete after `Done`.
+    /// Layout entries for the trailer. Only complete after
+    /// [`ChunkEvent::Exhausted`].
     fn layout_entries(&self) -> Vec<LayoutEntry>;
 
-    /// True once the provider has returned `Done`.
+    /// True once the provider has returned [`ChunkEvent::Exhausted`].
     fn is_done(&self) -> bool;
 }

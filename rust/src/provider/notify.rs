@@ -1,0 +1,93 @@
+//! Readiness notification for provider streams.
+//!
+//! The engine's pump drains chunk streams whose bytes materialize
+//! asynchronously (D2H copies on the staging stream, serialization on
+//! the worker pool). Instead of sleep-polling, producers signal a shared
+//! [`Notifier`] the moment new chunks *may* be available, and the pump
+//! parks on it whenever a full sweep over every active stream made no
+//! progress.
+//!
+//! The protocol is a monotonically increasing epoch: a consumer reads
+//! [`Notifier::epoch`] *before* checking its sources, and calls
+//! [`Notifier::wait_past`] with that value if it found nothing. Any
+//! signal in between bumps the epoch, so the wait returns immediately —
+//! wake-ups cannot be lost, and spurious wake-ups only cost one extra
+//! sweep.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared readiness signal (one per engine, shared by the pump and every
+/// asynchronous byte producer feeding its provider streams).
+#[derive(Debug, Default)]
+pub struct Notifier {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Notifier {
+    pub fn new() -> Arc<Notifier> {
+        Arc::new(Notifier::default())
+    }
+
+    /// Current epoch. Read this BEFORE checking sources to avoid lost
+    /// wake-ups.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Signal that new data may be available: bumps the epoch and wakes
+    /// every parked consumer.
+    pub fn notify(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e = e.wrapping_add(1);
+        drop(e);
+        self.cv.notify_all();
+    }
+
+    /// Park until the epoch moves past `seen`. Returns immediately if a
+    /// signal already arrived since `seen` was read.
+    pub fn wait_past(&self, seen: u64) {
+        let mut e = self.epoch.lock().unwrap();
+        while *e == seen {
+            e = self.cv.wait(e).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_before_wait_is_not_lost() {
+        let n = Notifier::new();
+        let seen = n.epoch();
+        n.notify();
+        // must return immediately, not hang
+        n.wait_past(seen);
+    }
+
+    #[test]
+    fn wakes_parked_waiter() {
+        let n = Notifier::new();
+        let seen = n.epoch();
+        let n2 = n.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            n2.notify();
+        });
+        let t0 = std::time::Instant::now();
+        n.wait_past(seen);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(10));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn epoch_advances_per_signal() {
+        let n = Notifier::new();
+        let e0 = n.epoch();
+        n.notify();
+        n.notify();
+        assert_eq!(n.epoch(), e0 + 2);
+    }
+}

@@ -5,13 +5,14 @@ use std::sync::Arc;
 use crate::util::channel::Receiver;
 
 use super::layout::{EntryKind, LayoutEntry, LogCursor};
-use super::{Bytes, Chunk, Poll, StateProvider};
+use super::{Bytes, Chunk, ChunkEvent, StateProvider};
 
 /// Provider for a Python-like object graph.
 ///
 /// Serialization was submitted to the [`super::SerializerPool`] when the
 /// provider was constructed; until the bytes arrive the provider reports
-/// `Pending`, letting the engine drain tensor streams meanwhile. Once
+/// [`ChunkEvent::Blocked`] (the pool signals the engine's notifier on
+/// delivery), letting the engine drain tensor streams meanwhile. Once
 /// serialized, the provider claims log-region extents *chunk by chunk*
 /// from the shared [`LogCursor`], so concurrent object providers
 /// interleave in the log region — the "concurrent-log-structured append"
@@ -54,12 +55,12 @@ impl StateProvider for ObjectProvider {
             .unwrap_or(self.estimate)
     }
 
-    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+    fn next_chunk(&mut self) -> anyhow::Result<ChunkEvent> {
         if self.data.is_none() {
             match self.rx.try_recv() {
                 Ok(bytes) => self.data = Some(Bytes::from_vec(bytes)),
                 Err(crate::util::channel::TryRecvError::Empty) => {
-                    return Ok(Poll::Pending)
+                    return Ok(ChunkEvent::Blocked)
                 }
                 Err(crate::util::channel::TryRecvError::Disconnected) => {
                     anyhow::bail!("{}: serializer dropped", self.name)
@@ -69,7 +70,7 @@ impl StateProvider for ObjectProvider {
         let data = self.data.as_ref().unwrap();
         if self.sent >= data.len() {
             self.done = true;
-            return Ok(Poll::Done);
+            return Ok(ChunkEvent::Exhausted);
         }
         let end = (self.sent + self.chunk_bytes).min(data.len());
         let len = (end - self.sent) as u64;
@@ -82,7 +83,7 @@ impl StateProvider for ObjectProvider {
             label: self.name.clone(),
         };
         self.sent = end;
-        Ok(Poll::Ready(chunk))
+        Ok(ChunkEvent::Ready(chunk))
     }
 
     fn layout_entries(&self) -> Vec<LayoutEntry> {
@@ -104,11 +105,11 @@ mod tests {
     use crate::state::object::PyObj;
 
     #[test]
-    fn pending_until_serialized_then_claims_log_extents() {
+    fn blocked_until_serialized_then_claims_log_extents() {
         let cursor = Arc::new(LogCursor::new(1000));
         let (tx, rx) = crate::util::channel::bounded(1);
         let mut p = ObjectProvider::new("meta", 64, rx, cursor.clone(), 16);
-        assert!(matches!(p.poll_chunk().unwrap(), Poll::Pending));
+        assert!(matches!(p.next_chunk().unwrap(), ChunkEvent::Blocked));
 
         let obj = PyObj::Dict(vec![("k".into(),
                                     PyObj::Str("v".repeat(40)))]);
@@ -117,14 +118,14 @@ mod tests {
 
         let mut collected = vec![0u8; bytes.len()];
         loop {
-            match p.poll_chunk().unwrap() {
-                Poll::Ready(c) => {
+            match p.next_chunk().unwrap() {
+                ChunkEvent::Ready(c) => {
                     let log_rel = (c.offset - 1000) as usize;
                     collected[log_rel..log_rel + c.data.len()]
                         .copy_from_slice(c.data.as_slice());
                 }
-                Poll::Done => break,
-                Poll::Pending => panic!("no longer pending"),
+                ChunkEvent::Exhausted => break,
+                ChunkEvent::Blocked => panic!("no longer blocked"),
             }
         }
         assert_eq!(collected, bytes);
@@ -151,12 +152,12 @@ mod tests {
         while done < 2 {
             done = 0;
             for p in [&mut a, &mut b] {
-                match p.poll_chunk().unwrap() {
-                    Poll::Ready(c) => {
+                match p.next_chunk().unwrap() {
+                    ChunkEvent::Ready(c) => {
                         extents.push((c.offset, c.data.len() as u64))
                     }
-                    Poll::Done => done += 1,
-                    Poll::Pending => {}
+                    ChunkEvent::Exhausted => done += 1,
+                    ChunkEvent::Blocked => {}
                 }
             }
         }

@@ -5,16 +5,30 @@
 //! engines do the opposite — serialize metadata first, blocking, to
 //! precompute the persistent layout; the hybrid layout (layout.rs) is
 //! what removes that ordering constraint.
+//!
+//! Workers participate in the readiness protocol: a submission may carry
+//! the engine's [`Notifier`], signalled after the serialized bytes are
+//! published so the pump wakes and drains the now-ready object stream,
+//! and a [`ProgressCounters`] handle so checkpoint tickets can report
+//! live per-version serialization progress.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::util::channel::{Receiver, Sender};
 
+use super::notify::Notifier;
+use crate::metrics::ProgressCounters;
 use crate::state::object::PyObj;
 
 enum Job {
-    Serialize { name: String, obj: PyObj, out: Sender<Vec<u8>> },
+    Serialize {
+        name: String,
+        obj: PyObj,
+        out: Sender<Vec<u8>>,
+        notify: Option<Arc<Notifier>>,
+        progress: Option<Arc<ProgressCounters>>,
+    },
     Stop,
 }
 
@@ -47,7 +61,13 @@ impl SerializerPool {
                     .spawn(move || {
                         while let Ok(job) = rx.recv() {
                             match job {
-                                Job::Serialize { name, obj, out } => {
+                                Job::Serialize {
+                                    name,
+                                    obj,
+                                    out,
+                                    notify,
+                                    progress,
+                                } => {
                                     let start =
                                         tl.as_ref().map(|t| t.now_s());
                                     let bytes = obj.to_bytes();
@@ -62,9 +82,19 @@ impl SerializerPool {
                                             t.now_s(),
                                         );
                                     }
+                                    if let Some(p) = &progress {
+                                        p.add_serialized(
+                                            bytes.len() as u64);
+                                    }
                                     // Receiver may be gone if the
                                     // checkpoint was aborted; ignore.
                                     let _ = out.send(bytes);
+                                    // Publish-then-signal: the bytes are
+                                    // on the channel before the pump is
+                                    // woken.
+                                    if let Some(n) = &notify {
+                                        n.notify();
+                                    }
                                 }
                                 Job::Stop => break,
                             }
@@ -85,9 +115,28 @@ impl SerializerPool {
     /// Submit with a name for timeline attribution.
     pub fn submit_named(&self, name: String, obj: PyObj)
         -> Receiver<Vec<u8>> {
+        self.submit_streamed(name, obj, None, None)
+    }
+
+    /// Submit into a readiness-driven stream: `notify` is signalled after
+    /// the bytes are published; `progress` receives the serialized byte
+    /// count for the owning checkpoint session.
+    pub fn submit_streamed(
+        &self,
+        name: String,
+        obj: PyObj,
+        notify: Option<Arc<Notifier>>,
+        progress: Option<Arc<ProgressCounters>>,
+    ) -> Receiver<Vec<u8>> {
         let (out_tx, out_rx) = crate::util::channel::bounded(1);
         self.tx
-            .send(Job::Serialize { name, obj, out: out_tx })
+            .send(Job::Serialize {
+                name,
+                obj,
+                out: out_tx,
+                notify,
+                progress,
+            })
             .expect("serializer pool alive");
         out_rx
     }
@@ -129,5 +178,24 @@ mod tests {
             assert_eq!(bytes,
                        PyObj::synthetic_metadata(1024, i as u64).to_bytes());
         }
+    }
+
+    #[test]
+    fn streamed_submit_signals_notifier_after_publish() {
+        let pool = SerializerPool::new(1);
+        let notifier = Notifier::new();
+        let progress = Arc::new(ProgressCounters::default());
+        let seen = notifier.epoch();
+        let obj = PyObj::synthetic_metadata(2048, 9);
+        let want = obj.to_bytes();
+        let rx = pool.submit_streamed("meta".into(), obj,
+                                      Some(notifier.clone()),
+                                      Some(progress.clone()));
+        notifier.wait_past(seen);
+        // after the signal, the bytes MUST already be available
+        let got = rx.try_recv().expect("bytes published before signal");
+        assert_eq!(got, want);
+        assert_eq!(progress.snapshot().bytes_serialized,
+                   want.len() as u64);
     }
 }

@@ -3,7 +3,7 @@
 use crate::util::channel::Receiver;
 
 use super::layout::{EntryKind, LayoutEntry};
-use super::{Bytes, Chunk, Poll, StateProvider};
+use super::{Bytes, Chunk, ChunkEvent, StateProvider};
 use crate::state::tensor::DType;
 
 /// Host-resident tensor: bytes are byte-addressable *now*; the provider
@@ -41,10 +41,10 @@ impl StateProvider for TensorProvider {
         self.data.len() as u64
     }
 
-    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+    fn next_chunk(&mut self) -> anyhow::Result<ChunkEvent> {
         if self.cursor >= self.data.len() {
             self.done = true;
-            return Ok(Poll::Done);
+            return Ok(ChunkEvent::Exhausted);
         }
         let end = (self.cursor + self.chunk_bytes).min(self.data.len());
         let chunk = Chunk {
@@ -53,7 +53,7 @@ impl StateProvider for TensorProvider {
             label: self.name.clone(),
         };
         self.cursor = end;
-        Ok(Poll::Ready(chunk))
+        Ok(ChunkEvent::Ready(chunk))
     }
 
     fn layout_entries(&self) -> Vec<LayoutEntry> {
@@ -73,9 +73,10 @@ impl StateProvider for TensorProvider {
 }
 
 /// Device-resident tensor: bytes arrive asynchronously from the D2H copy
-/// stream (a pool segment filled by the stager). `Pending` until then —
-/// which is what lets the engine flush host-resident state *while* GPU
-/// state is still in flight (§V-A1).
+/// stream (a pool segment filled by the stager, which signals the
+/// engine's notifier on delivery). `Blocked` until then — which is what
+/// lets the engine flush host-resident state *while* GPU state is still
+/// in flight (§V-A1).
 pub struct StagedTensorProvider {
     name: String,
     dtype: DType,
@@ -111,7 +112,7 @@ impl StateProvider for StagedTensorProvider {
         self.expect_bytes
     }
 
-    fn poll_chunk(&mut self) -> anyhow::Result<Poll> {
+    fn next_chunk(&mut self) -> anyhow::Result<ChunkEvent> {
         if self.inner.is_none() {
             match self.rx.try_recv() {
                 Ok(bytes) => {
@@ -132,7 +133,7 @@ impl StateProvider for StagedTensorProvider {
                     ));
                 }
                 Err(crate::util::channel::TryRecvError::Empty) => {
-                    return Ok(Poll::Pending)
+                    return Ok(ChunkEvent::Blocked)
                 }
                 Err(crate::util::channel::TryRecvError::Disconnected) => {
                     anyhow::bail!(
@@ -141,11 +142,11 @@ impl StateProvider for StagedTensorProvider {
                 }
             }
         }
-        let poll = self.inner.as_mut().unwrap().poll_chunk()?;
-        if matches!(poll, Poll::Done) {
+        let event = self.inner.as_mut().unwrap().next_chunk()?;
+        if matches!(event, ChunkEvent::Exhausted) {
             self.done = true;
         }
-        Ok(poll)
+        Ok(event)
     }
 
     fn layout_entries(&self) -> Vec<LayoutEntry> {
@@ -176,14 +177,14 @@ mod tests {
         let mut seen = Vec::new();
         let mut next_off = 64;
         loop {
-            match p.poll_chunk().unwrap() {
-                Poll::Ready(c) => {
+            match p.next_chunk().unwrap() {
+                ChunkEvent::Ready(c) => {
                     assert_eq!(c.offset, next_off);
                     next_off += c.data.len() as u64;
                     seen.extend_from_slice(c.data.as_slice());
                 }
-                Poll::Done => break,
-                Poll::Pending => panic!("host tensor never pends"),
+                ChunkEvent::Exhausted => break,
+                ChunkEvent::Blocked => panic!("host tensor never blocks"),
             }
         }
         assert_eq!(seen, data.as_slice());
@@ -192,17 +193,21 @@ mod tests {
     }
 
     #[test]
-    fn staged_provider_pends_until_staged() {
+    fn staged_provider_blocks_until_staged() {
         let (tx, rx) = crate::util::channel::bounded(1);
         let mut p = StagedTensorProvider::new(
             "opt", DType::U8, vec![8], 8, 0, 4, rx);
-        assert!(matches!(p.poll_chunk().unwrap(), Poll::Pending));
+        assert!(matches!(p.next_chunk().unwrap(), ChunkEvent::Blocked));
         tx.send(Bytes::from_vec(vec![9; 8])).unwrap();
-        let Poll::Ready(c) = p.poll_chunk().unwrap() else { panic!() };
+        let ChunkEvent::Ready(c) = p.next_chunk().unwrap() else {
+            panic!()
+        };
         assert_eq!(c.data.len(), 4);
-        let Poll::Ready(c2) = p.poll_chunk().unwrap() else { panic!() };
+        let ChunkEvent::Ready(c2) = p.next_chunk().unwrap() else {
+            panic!()
+        };
         assert_eq!(c2.offset, 4);
-        assert!(matches!(p.poll_chunk().unwrap(), Poll::Done));
+        assert!(matches!(p.next_chunk().unwrap(), ChunkEvent::Exhausted));
     }
 
     #[test]
@@ -211,6 +216,6 @@ mod tests {
         let mut p = StagedTensorProvider::new(
             "opt", DType::U8, vec![8], 8, 0, 4, rx);
         tx.send(Bytes::from_vec(vec![1; 4])).unwrap();
-        assert!(p.poll_chunk().is_err());
+        assert!(p.next_chunk().is_err());
     }
 }

@@ -1,13 +1,22 @@
 //! Checkpoint restore: parse the hybrid layout, reconstruct state, verify
 //! integrity (the recovery half of the paper's consistency story).
+//!
+//! The low-level view is [`ChunkSource`] (`source.rs`): a read-side
+//! chunk stream over the same [`FileLayout`] the write-side providers
+//! produced, so restore pipelines mirror checkpoint pipelines. The
+//! helpers here build on it: whole-file reads, version-directory scans,
+//! parallel restore and integrity checks.
+
+pub mod source;
+
+pub use source::ChunkSource;
 
 use std::collections::HashMap;
 use std::fs::File;
 use std::io::Read;
-use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 
-use crate::provider::layout::{EntryKind, FileLayout, FOOTER_BYTES};
+use crate::provider::layout::{EntryKind, FileLayout};
 use crate::state::{PyObj, RankState, StateItem, TensorData};
 
 /// A fully parsed checkpoint file.
@@ -31,31 +40,15 @@ impl RestoredFile {
 }
 
 /// Read one checkpoint file written by any engine using the hybrid
-/// layout: footer → trailer → entries → extents.
+/// layout: footer → trailer → entries → extents, via the read-side
+/// [`ChunkSource`] view.
 pub fn read_file(path: &Path) -> anyhow::Result<RestoredFile> {
-    let file = File::open(path)?;
-    let len = file.metadata()?.len();
-    anyhow::ensure!(len >= FOOTER_BYTES, "{path:?}: too short");
-    let mut footer = [0u8; FOOTER_BYTES as usize];
-    file.read_exact_at(&mut footer, len - FOOTER_BYTES)?;
-    let (toff, tlen) = FileLayout::decode_footer(&footer)?;
-    anyhow::ensure!(toff + tlen + FOOTER_BYTES <= len,
-                    "{path:?}: trailer out of range");
-    let mut trailer = vec![0u8; tlen as usize];
-    file.read_exact_at(&mut trailer, toff)?;
-    let layout = FileLayout::decode_trailer(&trailer)?;
-
+    let src = ChunkSource::open(path)?;
     let mut payloads = HashMap::new();
-    for entry in &layout.entries {
-        let mut buf = Vec::with_capacity(entry.total_len() as usize);
-        for (off, elen) in &entry.extents {
-            let mut part = vec![0u8; *elen as usize];
-            file.read_exact_at(&mut part, *off)?;
-            buf.extend_from_slice(&part);
-        }
-        payloads.insert(entry.name.clone(), buf);
+    for (name, bytes) in src.read_all()? {
+        payloads.insert(name, bytes);
     }
-    Ok(RestoredFile { layout, payloads })
+    Ok(RestoredFile { layout: src.layout().clone(), payloads })
 }
 
 /// Read every file of a checkpoint version directory.
@@ -229,9 +222,8 @@ mod tests {
         let state = materialize(&cs.ranks[0], 2e-5, 0.02, 99);
         let mut eng = crate::engine::DataStatesEngine::new(
             EngineConfig::with_dir(dir)).unwrap();
-        eng.checkpoint(0, &state).unwrap();
-        eng.wait_snapshot_complete().unwrap();
-        eng.drain().unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        ticket.wait_persisted().unwrap();
         state
     }
 

@@ -374,8 +374,9 @@ impl TrainSession {
         Ok(iteration)
     }
 
-    /// Release retired snapshot buffers. Call after `engine.drain()`;
-    /// the drop happens here, on the session thread.
+    /// Release retired snapshot buffers. Call after every outstanding
+    /// checkpoint ticket's `wait_persisted()` resolved; the drop happens
+    /// here, on the session thread.
     pub fn gc(&mut self) {
         self.retired.clear();
     }

@@ -92,17 +92,25 @@ where
                     let mut engine = cfg.engine.build(ecfg)?;
                     let mut report =
                         RankReport { rank, ..Default::default() };
+                    let mut tickets: Vec<
+                        crate::engine::CheckpointTicket,
+                    > = Vec::new();
+                    let mut gate_cursor = 0usize;
                     for it in 0..cfg.iterations {
                         compute_fn(rank, it);
                         let t = std::time::Instant::now();
-                        report.gate_wait_s +=
-                            engine.wait_snapshot_complete()?;
+                        // consistency gate over every in-flight version
+                        while gate_cursor < tickets.len() {
+                            report.gate_wait_s +=
+                                tickets[gate_cursor].wait_captured()?;
+                            gate_cursor += 1;
+                        }
                         // update phase would run here (mutation)
                         if cfg.interval > 0
                             && (it + 1) % cfg.interval == 0
                         {
                             let state = state_fn(rank, it);
-                            engine.checkpoint(it + 1, &state)?;
+                            tickets.push(engine.begin(it + 1, &state)?);
                         }
                         report.blocked_s += t.elapsed().as_secs_f64();
                         report.launch_s = report.blocked_s
@@ -112,7 +120,11 @@ where
                         // flush) every iteration
                         barrier.wait();
                     }
-                    engine.drain()?;
+                    // rank-local drain: every version's persistence
+                    // future must resolve before the global commit
+                    for ticket in &tickets {
+                        ticket.wait_persisted()?;
+                    }
                     drained.fetch_add(1, Ordering::AcqRel);
                     Ok(report)
                 }));

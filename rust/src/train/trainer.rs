@@ -1,10 +1,13 @@
 //! The checkpointed training loop (real plane).
 //!
 //! Places the engine hooks exactly where the paper's integration does
-//! (Figure 6): the checkpoint request fires after the update phase of the
-//! checkpointed iteration; the next iteration's forward/backward run
-//! immediately (overlapping the engine's lazy D2H staging); the
-//! consistency gate is taken right before the next optimizer update.
+//! (Figure 6): the checkpoint request (`begin`) fires after the update
+//! phase of the checkpointed iteration; the next iteration's
+//! forward/backward run immediately (overlapping the engine's lazy D2H
+//! staging); the consistency gate is taken right before the next
+//! optimizer update by resolving `wait_captured` on every ticket still
+//! in flight — with handle-based sessions, several checkpoint versions
+//! may overlap and each keeps its own gate.
 //!
 //! The loop is generic over the "step function" so the same orchestration
 //! drives (a) the real PJRT-backed transformer from `runtime/` and
@@ -12,7 +15,7 @@
 
 use std::time::Instant;
 
-use crate::engine::CheckpointEngine;
+use crate::engine::{CheckpointEngine, CheckpointTicket};
 use crate::state::RankState;
 
 /// Per-iteration record.
@@ -83,6 +86,9 @@ impl<'a> TrainLoop<'a> {
     {
         let wall0 = Instant::now();
         let mut report = TrainReport::default();
+        let mut tickets: Vec<CheckpointTicket> = Vec::new();
+        // first ticket whose consistency gate has not been resolved yet
+        let mut gate_cursor = 0usize;
         for it in 0..iterations {
             let mut stats =
                 TrainStats { iteration: it, ..Default::default() };
@@ -92,9 +98,12 @@ impl<'a> TrainLoop<'a> {
             stats.loss = step(it)?;
             stats.compute_s = t0.elapsed().as_secs_f64();
 
-            // consistency gate: the pending snapshot (if any) must have
+            // consistency gate: EVERY pending snapshot must have
             // finished its D2H copies before the state mutates
-            stats.gate_wait_s = self.engine.wait_snapshot_complete()?;
+            while gate_cursor < tickets.len() {
+                stats.gate_wait_s += tickets[gate_cursor].wait_captured()?;
+                gate_cursor += 1;
+            }
 
             // optimizer update: the only mutating phase
             update(it)?;
@@ -103,14 +112,16 @@ impl<'a> TrainLoop<'a> {
             if self.interval > 0 && (it + 1) % self.interval == 0 {
                 let state = snapshot_state(it)?;
                 let t1 = Instant::now();
-                self.engine.checkpoint(it + 1, &state)?;
+                tickets.push(self.engine.begin(it + 1, &state)?);
                 stats.ckpt_launch_s = t1.elapsed().as_secs_f64();
                 report.checkpoints += 1;
             }
             report.stats.push(stats);
         }
-        // resolve the tail: gate + background flushes
-        self.engine.drain()?;
+        // resolve the tail: every version's persistence future
+        for ticket in &tickets {
+            ticket.wait_persisted()?;
+        }
         report.wall_s = wall0.elapsed().as_secs_f64();
         Ok(report)
     }
@@ -149,7 +160,7 @@ mod tests {
     }
 
     #[test]
-    fn loop_checkpoints_at_interval_and_drains() {
+    fn loop_checkpoints_at_interval_and_persists_all() {
         let dir = TempDir::new("ds-loop").unwrap();
         let mut eng =
             DataStatesEngine::new(EngineConfig::with_dir(dir.path()))
@@ -168,6 +179,11 @@ mod tests {
         for v in [2u64, 4, 6] {
             assert!(dir.path().join(format!("v{v:06}")).exists());
         }
+        // per-version metrics: each entry tagged and persisted
+        let ms = eng.metrics();
+        assert_eq!(ms.iter().map(|m| m.version).collect::<Vec<_>>(),
+                   vec![2, 4, 6]);
+        assert!(ms.iter().all(|m| m.persist_s > 0.0));
     }
 
     #[test]

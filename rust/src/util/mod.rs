@@ -1,7 +1,8 @@
-//! In-tree infrastructure: the build environment is offline with only the
-//! `xla` dependency closure vendored, so channels, codecs, RNG, temp
-//! dirs, a micro-benchmark harness, and property-testing helpers are
-//! implemented here instead of pulled from crates.io.
+//! In-tree infrastructure: the build environment is offline (only the
+//! vendored `anyhow`/`xla` stand-ins under `rust/vendor/` are
+//! available), so channels, codecs, RNG, temp dirs, a micro-benchmark
+//! harness, and property-testing helpers are implemented here instead
+//! of pulled from crates.io.
 
 pub mod bench;
 pub mod channel;

@@ -1,6 +1,6 @@
 //! Cross-engine integration tests: every engine checkpoints a realistic
-//! (scaled) 3D-partitioned rank state through the full pipeline and the
-//! result restores bit-for-bit.
+//! (scaled) 3D-partitioned rank state through the full pipeline — via
+//! the handle-based session API — and the result restores bit-for-bit.
 
 use datastates::baselines::{torchsnapshot, EngineKind};
 use datastates::config::{EngineConfig, LlmConfig, Parallelism};
@@ -23,9 +23,9 @@ fn datastates_checkpoint_restores_scaled_7b_rank() {
     let mut eng = EngineKind::DataStatesLlm
         .build(EngineConfig::with_dir(dir.path()))
         .unwrap();
-    eng.checkpoint(1, &state).unwrap();
-    eng.wait_snapshot_complete().unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(1, &state).unwrap();
+    ticket.wait_captured().unwrap();
+    ticket.wait_persisted().unwrap();
     datastates::restore::verify_against(&dir.path().join("v000001"),
                                         &state)
         .unwrap();
@@ -38,9 +38,9 @@ fn datastates_old_checkpoint_restores_scaled_rank() {
     let mut eng = EngineKind::DataStatesOld
         .build(EngineConfig::with_dir(dir.path()))
         .unwrap();
-    eng.checkpoint(0, &state).unwrap();
-    eng.wait_snapshot_complete().unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(0, &state).unwrap();
+    ticket.wait_captured().unwrap();
+    ticket.wait_persisted().unwrap();
     datastates::restore::verify_against(&dir.path().join("v000000"),
                                         &state)
         .unwrap();
@@ -53,8 +53,8 @@ fn deepspeed_blob_contains_all_entries() {
     let mut eng = EngineKind::DeepSpeedDefault
         .build(EngineConfig::with_dir(dir.path()))
         .unwrap();
-    eng.checkpoint(0, &state).unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(0, &state).unwrap();
+    ticket.wait_persisted().unwrap();
     // every file exists and fsck passes
     for f in &state.files {
         let path = dir.path().join("v000000").join(&f.name);
@@ -70,8 +70,8 @@ fn torchsnapshot_restores_tensor_from_chunks() {
     let mut cfg = EngineConfig::with_dir(dir.path());
     cfg.chunk_bytes = 64 << 10;
     let mut eng = EngineKind::TorchSnapshot.build(cfg).unwrap();
-    eng.checkpoint(0, &state).unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(0, &state).unwrap();
+    ticket.wait_persisted().unwrap();
     // reassemble the first device tensor of the first param file
     let file = state
         .files
@@ -116,7 +116,12 @@ fn all_engines_complete_multi_version_training_loop() {
             )
             .unwrap();
         assert_eq!(report.checkpoints, 3, "{}", kind.label());
-        assert_eq!(eng.metrics().len(), 3);
+        let ms = eng.metrics();
+        assert_eq!(ms.len(), 3);
+        // per-version attribution across every engine
+        assert_eq!(ms.iter().map(|m| m.version).collect::<Vec<_>>(),
+                   vec![2, 4, 6], "{}", kind.label());
+        assert!(ms.iter().all(|m| m.persist_s > 0.0), "{}", kind.label());
         for v in [2u64, 4, 6] {
             assert!(dir.path().join(format!("v{v:06}")).exists(),
                     "{} v{v}", kind.label());
@@ -136,13 +141,13 @@ fn datastates_blocks_less_than_deepspeed_at_real_scale() {
         let mut eng =
             kind.build(EngineConfig::with_dir(dir.path())).unwrap();
         // warm-up round (allocators, thread pools)
-        eng.checkpoint(0, &state).unwrap();
-        eng.wait_snapshot_complete().unwrap();
-        eng.drain().unwrap();
-        eng.checkpoint(1, &state).unwrap();
-        eng.wait_snapshot_complete().unwrap();
-        eng.drain().unwrap();
-        blocked.insert(kind.label(), eng.metrics()[1].blocked_s);
+        let warm = eng.begin(0, &state).unwrap();
+        warm.wait_captured().unwrap();
+        warm.wait_persisted().unwrap();
+        let t = eng.begin(1, &state).unwrap();
+        t.wait_captured().unwrap();
+        let m = t.wait_persisted().unwrap();
+        blocked.insert(kind.label(), m.blocked_s);
     }
     let ds = blocked["deepspeed-default"];
     let new = blocked["datastates-llm"];
@@ -167,9 +172,9 @@ fn object_payloads_roundtrip_through_all_restorable_engines() {
         let dir = TempDir::new("it-obj").unwrap();
         let mut eng =
             kind.build(EngineConfig::with_dir(dir.path())).unwrap();
-        eng.checkpoint(0, &state).unwrap();
-        eng.wait_snapshot_complete().unwrap();
-        eng.drain().unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        ticket.wait_captured().unwrap();
+        ticket.wait_persisted().unwrap();
         let rf = datastates::restore::read_file(
             &dir.path()
                 .join("v000000")

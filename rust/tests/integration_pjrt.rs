@@ -54,9 +54,9 @@ fn pjrt_checkpoint_restore_resume_is_deterministic() {
         .build(EngineConfig::with_dir(dir.path()))
         .unwrap();
     let state = a.checkpoint_state();
-    eng.checkpoint(3, &state).unwrap();
-    eng.wait_snapshot_complete().unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(3, &state).unwrap();
+    ticket.wait_captured().unwrap();
+    ticket.wait_persisted().unwrap();
     let mut a_losses = Vec::new();
     for it in 3..5u64 {
         let t = a.sample_tokens(it);
@@ -97,9 +97,9 @@ fn pjrt_snapshot_is_consistent_across_later_steps() {
     let mut eng = EngineKind::DataStatesLlm
         .build(EngineConfig::with_dir(dir.path()))
         .unwrap();
-    eng.checkpoint(2, &state).unwrap();
-    eng.wait_snapshot_complete().unwrap();
-    eng.drain().unwrap();
+    let ticket = eng.begin(2, &state).unwrap();
+    ticket.wait_captured().unwrap();
+    ticket.wait_persisted().unwrap();
     s.gc();
     // restoring must land at step 2, not 4
     let mut r = TrainSession::new(&arts, 0).unwrap();

@@ -1,0 +1,222 @@
+//! Overlapping-snapshot coverage for the handle-based session API:
+//!
+//! - two concurrent checkpoint versions complete with correct
+//!   PER-VERSION metrics (regression for the old `persist_s == 0.0`
+//!   first-match attribution) and bit-exact restored contents,
+//! - `begin` → `begin` without an intervening `wait_captured` never
+//!   drops a consistency gate (the old engine overwrote its single
+//!   `pending_snapshot`, silently discarding the previous gate),
+//! - a checkpoint → restore round-trip driven entirely through the
+//!   ticket API and the read-side `ChunkSource`.
+
+use std::sync::Arc;
+
+use datastates::config::EngineConfig;
+use datastates::engine::{CheckpointEngine, DataStatesEngine};
+use datastates::state::tensor::{DType, DeviceTensor, SimDeviceTensor,
+                                TensorShard};
+use datastates::state::{FileKind, PyObj, RankState, ShardFile, StateItem};
+use datastates::util::proptest::check;
+use datastates::util::TempDir;
+
+/// A device tensor whose D2H copy takes a configurable time — lets a
+/// test pin one version's persistence strictly after another's.
+struct SlowTensor {
+    bytes: Vec<u8>,
+    delay: std::time::Duration,
+}
+
+impl SlowTensor {
+    fn new(bytes: Vec<u8>, delay_ms: u64) -> Arc<Self> {
+        Arc::new(SlowTensor {
+            bytes,
+            delay: std::time::Duration::from_millis(delay_ms),
+        })
+    }
+}
+
+impl DeviceTensor for SlowTensor {
+    fn size_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn stage_into(&self, dst: &mut [u8]) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        anyhow::ensure!(dst.len() == self.bytes.len(), "size mismatch");
+        dst.copy_from_slice(&self.bytes);
+        Ok(())
+    }
+}
+
+fn device_state(file: &str, tensor: &str, dev: Arc<dyn DeviceTensor>,
+                n: usize, meta: i64) -> RankState {
+    RankState {
+        rank: 0,
+        files: vec![ShardFile {
+            name: file.into(),
+            kind: FileKind::ParamLayer,
+            items: vec![
+                StateItem::Tensor(TensorShard::device(
+                    tensor, DType::U8, vec![n], dev)),
+                StateItem::Object {
+                    name: format!("{tensor}_meta"),
+                    obj: PyObj::Int(meta),
+                },
+            ],
+        }],
+    }
+}
+
+/// Acceptance criterion: two concurrent versions complete with correct
+/// per-version metrics and verified restored contents. The slow v1 is
+/// still staging while the tiny v2 flows through the same pump; under
+/// the old zero-sentinel matching, v2's (earlier) completion would have
+/// been attributed to v1's metrics entry.
+#[test]
+fn overlapping_versions_report_distinct_correct_metrics() {
+    let dir = TempDir::new("overlap-metrics").unwrap();
+    let mut eng =
+        DataStatesEngine::new(EngineConfig::with_dir(dir.path()))
+            .unwrap();
+
+    let slow_payload: Vec<u8> =
+        (0..65536u32).map(|i| (i % 249) as u8).collect();
+    let state1 = device_state(
+        "big.pt", "w1", SlowTensor::new(slow_payload, 300), 65536, 1);
+    // v2 is host-resident (zero-copy providers): it does not queue
+    // behind v1's slow D2H on the staging stream, so it flows through
+    // the shared pump while v1 is still capturing.
+    let state2 = RankState {
+        rank: 0,
+        files: vec![ShardFile {
+            name: "small.pt".into(),
+            kind: FileKind::ParamLayer,
+            items: vec![
+                StateItem::Tensor(TensorShard::host(
+                    "w2", DType::U8, vec![4096], vec![7u8; 4096])),
+                StateItem::Object {
+                    name: "w2_meta".into(),
+                    obj: PyObj::Int(2),
+                },
+            ],
+        }],
+    };
+
+    let t1 = eng.begin(1, &state1).unwrap();
+    let t2 = eng.begin(2, &state2).unwrap();
+
+    // v2 persists through the shared pump while v1's D2H is in flight
+    let m2 = t2.wait_persisted().unwrap();
+    let m1 = t1.wait_persisted().unwrap();
+
+    assert_eq!((m1.version, m2.version), (1, 2));
+    assert!(m1.persist_s >= 0.28,
+            "v1 persist must include its 300ms stage: {}", m1.persist_s);
+    assert!(m2.persist_s > 0.0);
+    assert!(m2.persist_s < m1.persist_s,
+            "tiny v2 ({:.3}s) must not inherit slow v1's wall ({:.3}s)",
+            m2.persist_s, m1.persist_s);
+
+    // the engine-level list matches the tickets, version by version
+    let ms = eng.metrics();
+    assert_eq!(ms.len(), 2);
+    assert_eq!(ms[0].version, 1);
+    assert_eq!(ms[1].version, 2);
+    assert!((ms[0].persist_s - m1.persist_s).abs() < 1e-9);
+    assert!((ms[1].persist_s - m2.persist_s).abs() < 1e-9);
+
+    // both versions restore bit-for-bit
+    datastates::restore::verify_against(&dir.path().join("v000001"),
+                                        &state1)
+        .unwrap();
+    datastates::restore::verify_against(&dir.path().join("v000002"),
+                                        &state2)
+        .unwrap();
+}
+
+/// Satellite property: `begin` → `begin` with no intervening
+/// `wait_captured` never drops a consistency gate — every ticket's gate
+/// resolves and every version's contents are its own.
+#[test]
+fn prop_back_to_back_begins_never_drop_a_gate() {
+    check(0x0FF5E7, 8, |rng| {
+        let dir = TempDir::new("overlap-gates")?;
+        let mut eng =
+            DataStatesEngine::new(EngineConfig::with_dir(dir.path()))?;
+        let n_versions = rng.range(2, 5) as u64;
+        let mut in_flight = Vec::new();
+        for v in 1..=n_versions {
+            let n = rng.range(1 << 10, 1 << 15);
+            let payload: Vec<u8> =
+                (0..n).map(|i| (i as u64 ^ v) as u8).collect();
+            let state = device_state(
+                &format!("f{v}.pt"),
+                &format!("w{v}"),
+                SimDeviceTensor::new(payload),
+                n,
+                v as i64,
+            );
+            // no wait_captured between begins: gates must all survive
+            let ticket = eng.begin(v, &state)?;
+            in_flight.push((ticket, state));
+        }
+        for (ticket, _) in &in_flight {
+            let waited = ticket.wait_captured()?;
+            anyhow::ensure!(waited >= 0.0, "gate dropped");
+        }
+        for (ticket, state) in &in_flight {
+            ticket.wait_persisted()?;
+            datastates::restore::verify_against(
+                &dir.path().join(format!("v{:06}", ticket.version())),
+                state,
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Checkpoint → restore round-trip entirely through the new API: begin,
+/// gate, persistence future, then read back through the symmetric
+/// read-side `ChunkSource` stream.
+#[test]
+fn ticket_roundtrip_through_chunk_source() {
+    let dir = TempDir::new("overlap-rt").unwrap();
+    let mut eng =
+        DataStatesEngine::new(EngineConfig::with_dir(dir.path()))
+            .unwrap();
+    let payload: Vec<u8> = (0..20000u32).map(|i| (i % 241) as u8).collect();
+    let state = device_state(
+        "layer.pt", "w",
+        SimDeviceTensor::new(payload.clone()), 20000, 9);
+
+    let ticket = eng.begin(4, &state).unwrap();
+    assert!(ticket.wait_captured().unwrap() >= 0.0);
+    let m = ticket.wait_persisted().unwrap();
+    assert_eq!(m.version, 4);
+    assert!(m.bytes >= 20000);
+
+    // progress is fully accounted once persisted
+    let p = ticket.progress();
+    assert_eq!(p.bytes_staged, 20000);
+    assert!(p.bytes_flushed >= 20000);
+
+    // stream the file back through the read-side view
+    let mut src = datastates::restore::ChunkSource::with_chunk_bytes(
+        &dir.path().join("v000004/layer.pt"), 1999).unwrap();
+    let mut tensor_bytes: Vec<(u64, Vec<u8>)> = Vec::new();
+    while let Some(c) = src.next_chunk().unwrap() {
+        if c.label == "w" {
+            tensor_bytes.push((c.offset, c.data.as_slice().to_vec()));
+        }
+    }
+    tensor_bytes.sort_by_key(|(off, _)| *off);
+    let got: Vec<u8> = tensor_bytes
+        .into_iter()
+        .flat_map(|(_, b)| b)
+        .collect();
+    assert_eq!(got, payload);
+    // and the object deserializes from the same source
+    let meta =
+        PyObj::from_bytes(&src.read_entry("w_meta").unwrap()).unwrap();
+    assert_eq!(meta, PyObj::Int(9));
+}

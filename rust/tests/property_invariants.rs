@@ -118,9 +118,9 @@ fn prop_checkpoint_restore_roundtrip() {
         cfg.writer_threads = rng.range(1, 5);
         let mut eng =
             datastates::engine::DataStatesEngine::new(cfg)?;
-        eng.checkpoint(0, &state)?;
-        eng.wait_snapshot_complete()?;
-        eng.drain()?;
+        let ticket = eng.begin(0, &state)?;
+        ticket.wait_captured()?;
+        ticket.wait_persisted()?;
         datastates::restore::verify_against(&dir.path().join("v000000"),
                                             &state)?;
         Ok(())
@@ -136,9 +136,9 @@ fn prop_layout_extents_disjoint_and_complete() {
         cfg.chunk_bytes = rng.range(64, 8192);
         let mut eng =
             datastates::engine::DataStatesEngine::new(cfg)?;
-        eng.checkpoint(0, &state)?;
-        eng.wait_snapshot_complete()?;
-        eng.drain()?;
+        let ticket = eng.begin(0, &state)?;
+        ticket.wait_captured()?;
+        ticket.wait_persisted()?;
         for shard in &state.files {
             let path = dir.path().join("v000000").join(&shard.name);
             let rf = datastates::restore::read_file(&path)?;
@@ -229,7 +229,7 @@ fn prop_codec_rejects_random_corruption() {
 
 #[test]
 fn prop_gate_never_admits_partial_snapshot() {
-    // The paper's consistency rule: after wait_snapshot_complete, every
+    // The paper's consistency rule: after the ticket's wait_captured, every
     // device tensor must be fully staged; we verify by mutating the
     // "device" contents after the gate and checking the checkpoint holds
     // the pre-mutation values.
@@ -254,11 +254,11 @@ fn prop_gate_never_admits_partial_snapshot() {
         let dir = TempDir::new("prop-gate")?;
         let mut eng = datastates::engine::DataStatesEngine::new(
             EngineConfig::with_dir(dir.path()))?;
-        eng.checkpoint(0, &state)?;
-        let waited = eng.wait_snapshot_complete()?;
+        let ticket = eng.begin(0, &state)?;
+        let waited = ticket.wait_captured()?;
         anyhow::ensure!(waited >= 0.0);
         // gate passed -> snapshot complete -> flush + verify
-        eng.drain()?;
+        ticket.wait_persisted()?;
         let rf = datastates::restore::read_file(
             &dir.path().join("v000000/w.pt"))?;
         anyhow::ensure!(rf.payloads["w"] == payload,

@@ -1,0 +1,171 @@
+//! Offline stand-in for the `anyhow` crate, implementing exactly the API
+//! subset this repository uses: [`Result`], [`Error`], and the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! The build environment has no network access, so third-party crates
+//! are vendored as minimal shims (see `rust/Cargo.toml`). Like the real
+//! `anyhow`, [`Error`] deliberately does NOT implement
+//! `std::error::Error` — that is what makes the blanket
+//! `impl From<E: std::error::Error> for Error` coherent and lets `?`
+//! convert any standard error into an [`Error`].
+
+use std::fmt;
+
+/// A type-erased error carrying a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from an already-formatted message (used by the macros).
+    pub fn from_msg(msg: String) -> Error {
+        Error { msg }
+    }
+
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context to the message chain (real anyhow keeps a linked
+    /// chain; the shim flattens it into `context: cause` text, which is
+    /// what `{:#}` renders anyway).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension trait (API-compatible subset).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::from_msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::from_msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::from_msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk gone"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk gone"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e}"), "x = 42");
+        assert_eq!(format!("{e:#}"), "x = 42");
+        let plain: Error = anyhow!("literal");
+        assert_eq!(format!("{plain:?}"), "literal");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(11).unwrap_err().to_string().contains("too big"));
+        assert!(f(3).unwrap_err().to_string().contains("x != 3"));
+        assert!(f(5).unwrap_err().to_string().contains("five"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::Other, "disk gone"),
+        );
+        let e = r.context("loading manifest").unwrap_err();
+        assert!(format!("{e:#}").starts_with("loading manifest: "));
+    }
+}
