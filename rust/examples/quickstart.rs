@@ -1,6 +1,7 @@
 //! Quickstart: checkpoint a heterogeneous model state with the
-//! DataStates-LLM engine through a session ticket, restore it, and
-//! verify bit-exactness.
+//! DataStates-LLM engine through a session ticket — landing in the
+//! host-cache tier and draining to disk in the background — restore it,
+//! and verify bit-exactness.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -11,6 +12,7 @@ use datastates::engine::{CheckpointEngine, DataStatesEngine};
 use datastates::metrics::{human_bps, human_bytes};
 use datastates::state::tensor::{DType, SimDeviceTensor, TensorShard};
 use datastates::state::{FileKind, PyObj, RankState, ShardFile, StateItem};
+use datastates::storage::TierKind;
 
 fn main() -> anyhow::Result<()> {
     // 1. Compose a rank's checkpoint state: device tensors (as a GPU
@@ -56,14 +58,16 @@ fn main() -> anyhow::Result<()> {
     println!("state: {} files, {}", state.num_files(),
              human_bytes(state.total_bytes() as f64));
 
-    // 2. Begin a checkpoint session. `begin()` only performs the
-    //    blocking launch and hands back a ticket; D2H staging and
-    //    flushing run in the background, overlapped with your next
-    //    iteration's compute. Any number of sessions may be in flight.
+    // 2. Begin a checkpoint session on a TIERED engine: chunks land in
+    //    the in-memory host cache, and the pipeline drains them to disk
+    //    in the background. `begin()` only performs the blocking launch
+    //    and hands back a ticket; D2H staging, flushing and tier
+    //    draining all overlap your next iteration's compute. Any number
+    //    of sessions may be in flight.
     let dir = std::env::temp_dir().join("datastates-quickstart");
     let _ = std::fs::remove_dir_all(&dir);
     let mut engine =
-        DataStatesEngine::new(EngineConfig::with_dir(&dir))?;
+        DataStatesEngine::new(EngineConfig::two_tier(&dir))?;
     let ticket = engine.begin(1, &state)?;
     println!("checkpoint v{} launched (training would continue here...)",
              ticket.version());
@@ -73,15 +77,20 @@ fn main() -> anyhow::Result<()> {
     let waited = ticket.wait_captured()?;
     println!("consistency gate: waited {waited:.6}s");
 
-    // 4. Watch the session's live progress, then await its persistence
-    //    future (normally only at shutdown).
+    // 4. Watch the session's live progress, take the HOST-CACHE
+    //    durability future (enough to keep training), then await full
+    //    persistence (normally only at shutdown).
     let p = ticket.progress();
     println!(
-        "in flight: {} staged, {} serialized, {} flushed",
+        "in flight: {} staged, {} serialized, {} flushed, {} drained",
         human_bytes(p.bytes_staged as f64),
         human_bytes(p.bytes_serialized as f64),
         human_bytes(p.bytes_flushed as f64),
+        human_bytes(p.bytes_drained as f64),
     );
+    let at_cache = ticket.wait_durable(TierKind::HostCache)?;
+    println!("durable on host cache after {:.4}s",
+             at_cache.tiers[0].durable_s);
     let m = ticket.wait_persisted()?;
     println!(
         "persisted {} — blocked {:.4}s, persist {:.2}s, effective \
@@ -91,6 +100,10 @@ fn main() -> anyhow::Result<()> {
         m.persist_s,
         human_bps(m.effective_bps())
     );
+    for t in &m.tiers {
+        println!("  tier {:<12} durable at {:.4}s", t.kind.label(),
+                 t.durable_s);
+    }
 
     // 5. Restore and verify bit-for-bit.
     datastates::restore::verify_against(&dir.join("v000001"), &state)?;

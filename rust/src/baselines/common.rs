@@ -1,7 +1,34 @@
 //! Shared helpers for the baseline engines.
 
+use std::sync::Arc;
+
+use crate::config::EngineConfig;
 use crate::metrics::{Tier, Timeline};
 use crate::state::{PyObj, ShardFile, StateItem, TensorData, TensorShard};
+use crate::storage::{LocalFs, TierKind, TierPipeline};
+
+/// The baselines persist straight to the terminal filesystem tier — a
+/// degenerate single-tier pipeline. The terminal tier's bandwidth
+/// throttle IS honored, so I/O-contention studies stay comparable
+/// across engines; any additional tiers in the config are not
+/// supported by the baselines and are reported, not silently ignored.
+pub fn single_tier_pipeline(engine: &str, cfg: &EngineConfig,
+                            timeline: Arc<Timeline>) -> Arc<TierPipeline> {
+    if cfg.tiers.len() > 1
+        || cfg.tiers.iter().any(|t| t.kind != TierKind::LocalFs)
+    {
+        eprintln!(
+            "[{engine}] tiered persistence is not supported by this \
+             baseline; landing directly on the terminal local-fs tier"
+        );
+    }
+    let throttle = cfg.tiers.last().and_then(|t| t.throttle_bps);
+    let fs = match throttle {
+        Some(bps) => LocalFs::throttled(cfg.ckpt_dir.clone(), bps),
+        None => LocalFs::new(cfg.ckpt_dir.clone()),
+    };
+    TierPipeline::single(Arc::new(fs), timeline)
+}
 
 /// Synchronous D2H: copy a (possibly device-resident) tensor into a fresh
 /// host allocation. This is the *conservative* staging the paper

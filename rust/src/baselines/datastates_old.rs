@@ -16,7 +16,6 @@
 //! contributions, making this pair an ablation of the state-provider
 //! design.
 
-use std::io::Write;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -30,6 +29,8 @@ use crate::provider::layout::{plan_fixed_region, EntryKind, FileLayout,
                               LayoutEntry};
 use crate::provider::Bytes;
 use crate::state::{RankState, StateItem, TensorData};
+use super::common::single_tier_pipeline;
+use crate::storage::{Backend, BackendFile, TierPipeline};
 use crate::util::channel::{unbounded, Receiver, Sender};
 
 /// One file's flush work: staged tensor bytes (await on channels) and the
@@ -45,7 +46,8 @@ struct FileTask {
 
 struct FlushTask {
     session: Arc<CkptSession>,
-    dir: std::path::PathBuf,
+    /// Version directory, tier-relative (`"v000042"`).
+    dir: String,
     files: Vec<FileTask>,
     requested: Instant,
 }
@@ -56,8 +58,8 @@ enum WorkerMsg {
 }
 
 pub struct DataStatesOldEngine {
-    cfg: EngineConfig,
     timeline: Arc<Timeline>,
+    pipeline: Arc<TierPipeline>,
     stager: Stager,
     flush_tx: Sender<WorkerMsg>,
     worker: Option<std::thread::JoinHandle<()>>,
@@ -68,18 +70,30 @@ impl DataStatesOldEngine {
     pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
         std::fs::create_dir_all(&cfg.ckpt_dir)?;
         let timeline = Arc::new(Timeline::new());
+        let pipeline = single_tier_pipeline("datastates-old", &cfg,
+                                            timeline.clone());
         let pool = PinnedPool::new(cfg.host_cache_bytes);
         let stager = Stager::new(pool, timeline.clone());
         let (flush_tx, flush_rx) = unbounded::<WorkerMsg>();
         let tl = timeline.clone();
+        let worker_pipeline = pipeline.clone();
         // single background writer: files persisted one at a time
         let worker = std::thread::Builder::new()
             .name("ds-old-flush".into())
             .spawn(move || {
                 while let Ok(WorkerMsg::Task(task)) = flush_rx.recv() {
-                    match Self::flush_task(&task, &tl) {
-                        Ok(()) => task.session.complete(
-                            task.requested.elapsed().as_secs_f64()),
+                    match Self::flush_task(&task, &tl, &worker_pipeline) {
+                        Ok(()) => {
+                            let names: Vec<String> = task
+                                .files
+                                .iter()
+                                .map(|f| f.name.clone())
+                                .collect();
+                            worker_pipeline.record_terminal_complete(
+                                task.session.version(), &names);
+                            task.session.complete(
+                                task.requested.elapsed().as_secs_f64());
+                        }
                         Err(e) => {
                             eprintln!(
                                 "[datastates-old] flush v{} failed: {e:#}",
@@ -92,8 +106,8 @@ impl DataStatesOldEngine {
             })
             .expect("spawn ds-old-flush");
         Ok(DataStatesOldEngine {
-            cfg,
             timeline,
+            pipeline,
             stager,
             flush_tx,
             worker: Some(worker),
@@ -101,8 +115,9 @@ impl DataStatesOldEngine {
         })
     }
 
-    fn flush_task(task: &FlushTask, tl: &Timeline) -> anyhow::Result<()> {
-        std::fs::create_dir_all(&task.dir)?;
+    fn flush_task(task: &FlushTask, tl: &Timeline,
+                  pipeline: &TierPipeline) -> anyhow::Result<()> {
+        let backend = pipeline.terminal();
         let progress = task.session.progress_counters();
         for file in &task.files {
             // snapshot-then-flush: wait for ALL tensors of this file
@@ -115,8 +130,8 @@ impl DataStatesOldEngine {
             }
             // whole-file sequential write (no positioned parallelism)
             let start = tl.now_s();
-            let mut f =
-                std::fs::File::create(task.dir.join(&file.name))?;
+            let f = backend
+                .create(&format!("{}/{}", task.dir, file.name))?;
             let mut entries = Vec::new();
             let mut buf: Vec<u8> = Vec::new();
             for (entry, base, bytes) in &staged {
@@ -136,7 +151,7 @@ impl DataStatesOldEngine {
                 buf.extend_from_slice(bytes);
                 entries.push(e);
             }
-            f.write_all(&buf)?;
+            f.write_at(0, &buf)?;
             progress.add_flushed(buf.len() as u64);
             let layout = FileLayout {
                 file_name: file.name.clone(),
@@ -144,10 +159,12 @@ impl DataStatesOldEngine {
                 entries,
             };
             let trailer = layout.encode_trailer();
-            f.write_all(&trailer)?;
-            f.write_all(&FileLayout::encode_footer(log_off,
-                                                   trailer.len() as u64))?;
-            f.sync_all()?;
+            f.write_at(buf.len() as u64, &trailer)?;
+            f.write_at(
+                buf.len() as u64 + trailer.len() as u64,
+                &FileLayout::encode_footer(log_off, trailer.len() as u64),
+            )?;
+            f.finalize()?;
             tl.record(Tier::H2F, &file.name, buf.len() as u64, start,
                       tl.now_s());
         }
@@ -258,11 +275,12 @@ impl CheckpointEngine for DataStatesOldEngine {
                 bytes: total,
                 ..Default::default()
             },
+            self.pipeline.tier_kinds(),
         );
         self.flush_tx
             .send(WorkerMsg::Task(FlushTask {
                 session: session.clone(),
-                dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
+                dir: format!("v{version:06}"),
                 files,
                 requested: t0,
             }))
@@ -277,6 +295,10 @@ impl CheckpointEngine for DataStatesOldEngine {
 
     fn timeline(&self) -> Arc<Timeline> {
         self.timeline.clone()
+    }
+
+    fn pipeline(&self) -> Arc<TierPipeline> {
+        self.pipeline.clone()
     }
 }
 

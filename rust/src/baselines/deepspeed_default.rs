@@ -10,32 +10,36 @@
 //!
 //! Files are still written in the crate's self-describing layout (one
 //! Object entry holding the whole `torch.save` blob) so the uniform
-//! restore path works across engines.
+//! restore path works across engines; the storage plane is a degenerate
+//! single-tier [`TierPipeline`] (the baseline has no tiered draining).
 
-use std::io::Write;
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::common::serialize_object_graph;
+use super::common::{serialize_object_graph, single_tier_pipeline};
 use crate::config::EngineConfig;
 use crate::engine::ticket::{CheckpointTicket, CkptSession};
 use crate::engine::CheckpointEngine;
 use crate::metrics::{CkptMetrics, ProgressCounters, Tier, Timeline};
 use crate::provider::layout::{EntryKind, FileLayout, LayoutEntry};
 use crate::state::RankState;
+use crate::storage::{Backend, BackendFile, TierPipeline};
 
 pub struct DeepSpeedDefaultEngine {
-    cfg: EngineConfig,
     timeline: Arc<Timeline>,
+    pipeline: Arc<TierPipeline>,
     sessions: Vec<Arc<CkptSession>>,
 }
 
 impl DeepSpeedDefaultEngine {
     pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
         std::fs::create_dir_all(&cfg.ckpt_dir)?;
+        let timeline = Arc::new(Timeline::new());
+        let pipeline = single_tier_pipeline("deepspeed-default", &cfg,
+                                            timeline.clone());
         Ok(DeepSpeedDefaultEngine {
-            cfg,
-            timeline: Arc::new(Timeline::new()),
+            timeline,
+            pipeline,
             sessions: Vec::new(),
         })
     }
@@ -49,10 +53,11 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
     fn begin(&mut self, version: u64, state: &RankState)
         -> anyhow::Result<CheckpointTicket> {
         let t0 = Instant::now();
-        let dir = self.cfg.ckpt_dir.join(format!("v{version:06}"));
-        std::fs::create_dir_all(&dir)?;
+        let dir = format!("v{version:06}");
+        let backend = self.pipeline.terminal();
         let progress = Arc::new(ProgressCounters::default());
         let mut total = 0u64;
+        let mut names = Vec::with_capacity(state.files.len());
         for file in &state.files {
             // (1) type-agnostic serialization of everything (Fig 4 cost)
             let blob = serialize_object_graph(file, &self.timeline)?;
@@ -71,19 +76,23 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
                 }],
             };
             let trailer = layout.encode_trailer();
-            let mut f = std::fs::File::create(dir.join(&file.name))?;
+            let f = backend.create(&format!("{dir}/{}", file.name))?;
             // coarse sequential write — no positioned parallelism
-            f.write_all(&blob)?;
-            f.write_all(&trailer)?;
-            f.write_all(&FileLayout::encode_footer(
-                blob.len() as u64,
-                trailer.len() as u64,
-            ))?;
-            f.sync_all()?;
+            f.write_at(0, &blob)?;
+            f.write_at(blob.len() as u64, &trailer)?;
+            f.write_at(
+                blob.len() as u64 + trailer.len() as u64,
+                &FileLayout::encode_footer(
+                    blob.len() as u64,
+                    trailer.len() as u64,
+                ),
+            )?;
+            f.finalize()?;
             progress.add_flushed(blob.len() as u64);
             self.timeline.record(Tier::H2F, &file.name,
                                  blob.len() as u64, start,
                                  self.timeline.now_s());
+            names.push(file.name.clone());
         }
         progress.add_total(total);
         let elapsed = t0.elapsed().as_secs_f64();
@@ -99,7 +108,9 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
                 bytes: total,
                 ..Default::default()
             },
+            self.pipeline.tier_kinds(),
         );
+        self.pipeline.record_terminal_complete(version, &names);
         session.complete(elapsed);
         self.sessions.push(session.clone());
         Ok(CheckpointTicket::new(session))
@@ -111,6 +122,10 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
 
     fn timeline(&self) -> Arc<Timeline> {
         self.timeline.clone()
+    }
+
+    fn pipeline(&self) -> Arc<TierPipeline> {
+        self.pipeline.clone()
     }
 }
 

@@ -23,7 +23,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::common::stage_sync;
+use super::common::{single_tier_pipeline, stage_sync};
 use crate::config::EngineConfig;
 use crate::engine::flush::{FlushFile, FlushPool, WriteJob};
 use crate::engine::ticket::{CheckpointTicket, CkptSession};
@@ -32,11 +32,13 @@ use crate::metrics::{CkptMetrics, ProgressCounters, Tier, Timeline};
 use crate::provider::layout::{EntryKind, FileLayout, LayoutEntry};
 use crate::provider::Bytes;
 use crate::state::{RankState, StateItem};
+use crate::storage::{Backend, TierPipeline};
 use crate::util::channel::{unbounded, Sender};
 
 struct FlushTask {
     session: Arc<CkptSession>,
-    dir: std::path::PathBuf,
+    /// Version directory, tier-relative (`"v000042"`).
+    dir: String,
     /// (logical file name, entries of (entry name, kind, bytes))
     files: Vec<(String, Vec<(String, EntryKind, Vec<u8>)>)>,
     requested: Instant,
@@ -48,8 +50,8 @@ enum WorkerMsg {
 }
 
 pub struct TorchSnapshotEngine {
-    cfg: EngineConfig,
     timeline: Arc<Timeline>,
+    pipeline: Arc<TierPipeline>,
     flush_tx: Sender<WorkerMsg>,
     worker: Option<std::thread::JoinHandle<()>>,
     sessions: Vec<Arc<CkptSession>>,
@@ -61,16 +63,27 @@ impl TorchSnapshotEngine {
     pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
         std::fs::create_dir_all(&cfg.ckpt_dir)?;
         let timeline = Arc::new(Timeline::new());
+        let pipeline = single_tier_pipeline("torchsnapshot", &cfg,
+                                            timeline.clone());
         let (flush_tx, flush_rx) = unbounded::<WorkerMsg>();
         let pool = FlushPool::new(cfg.writer_threads, timeline.clone());
         let chunk_bytes = cfg.chunk_bytes;
+        let worker_pipeline = pipeline.clone();
         let worker = std::thread::Builder::new()
             .name("ts-flush".into())
             .spawn(move || {
                 while let Ok(WorkerMsg::Task(task)) = flush_rx.recv() {
-                    match Self::flush_task(&task, &pool, chunk_bytes) {
-                        Ok(()) => task.session.complete(
-                            task.requested.elapsed().as_secs_f64()),
+                    match Self::flush_task(&task, &pool, chunk_bytes,
+                                           &worker_pipeline) {
+                        // record EVERY physical file (chunk files +
+                        // manifests): a version is only as complete as
+                        // its payload chunks
+                        Ok(written) => {
+                            worker_pipeline.record_terminal_complete(
+                                task.session.version(), &written);
+                            task.session.complete(
+                                task.requested.elapsed().as_secs_f64());
+                        }
                         Err(e) => {
                             eprintln!(
                                 "[torchsnapshot] flush v{} failed: {e:#}",
@@ -83,8 +96,8 @@ impl TorchSnapshotEngine {
             })
             .expect("spawn ts-flush");
         Ok(TorchSnapshotEngine {
-            cfg,
             timeline,
+            pipeline,
             flush_tx,
             worker: Some(worker),
             sessions: Vec::new(),
@@ -93,10 +106,13 @@ impl TorchSnapshotEngine {
     }
 
     /// Write each logical file as N chunk files + 1 manifest file.
+    /// Returns the names of every physical file written.
     fn flush_task(task: &FlushTask, pool: &Arc<FlushPool>,
-                  chunk_bytes: usize) -> anyhow::Result<()> {
-        std::fs::create_dir_all(&task.dir)?;
+                  chunk_bytes: usize, pipeline: &TierPipeline)
+        -> anyhow::Result<Vec<String>> {
+        let backend = pipeline.terminal();
         let progress = task.session.progress_counters();
+        let mut written = Vec::new();
         for (logical, entries) in &task.files {
             let mut manifest_entries = Vec::new();
             let mut open_files = Vec::new();
@@ -108,8 +124,11 @@ impl TorchSnapshotEngine {
                     let chunk_name =
                         format!("{logical}.chunk{chunk_id:04}");
                     chunk_id += 1;
-                    let f = FlushFile::create(&task.dir.join(&chunk_name),
-                                              &chunk_name)?;
+                    let f = FlushFile::on_backend(
+                        backend
+                            .create(&format!("{}/{chunk_name}", task.dir))?,
+                        &chunk_name,
+                    );
                     pool.submit(WriteJob {
                         file: f.clone(),
                         offset: 0,
@@ -119,6 +138,7 @@ impl TorchSnapshotEngine {
                         progress: Some(progress.clone()),
                     });
                     f.finish_issuing();
+                    written.push(chunk_name.clone());
                     extents.push((chunk_name.clone(),
                                   chunk.len() as u64));
                     open_files.push(f);
@@ -137,10 +157,11 @@ impl TorchSnapshotEngine {
             // manifest: reuse the crate layout with named chunk refs
             // encoded in the object payload.
             let manifest = encode_manifest(&manifest_entries);
-            let mf = FlushFile::create(
-                &task.dir.join(format!("{logical}.manifest")),
+            let mf = FlushFile::on_backend(
+                backend.create(
+                    &format!("{}/{logical}.manifest", task.dir))?,
                 format!("{logical}.manifest"),
-            )?;
+            );
             pool.submit(WriteJob::plain(
                 mf.clone(),
                 0,
@@ -159,8 +180,9 @@ impl TorchSnapshotEngine {
                 }],
             };
             mf.finalize(&layout, manifest.len() as u64)?;
+            written.push(format!("{logical}.manifest"));
         }
-        Ok(())
+        Ok(written)
     }
 }
 
@@ -313,11 +335,12 @@ impl CheckpointEngine for TorchSnapshotEngine {
                 bytes: total,
                 ..Default::default()
             },
+            self.pipeline.tier_kinds(),
         );
         self.flush_tx
             .send(WorkerMsg::Task(FlushTask {
                 session: session.clone(),
-                dir: self.cfg.ckpt_dir.join(format!("v{version:06}")),
+                dir: format!("v{version:06}"),
                 files,
                 requested: t0,
             }))
@@ -334,6 +357,10 @@ impl CheckpointEngine for TorchSnapshotEngine {
 
     fn timeline(&self) -> Arc<Timeline> {
         self.timeline.clone()
+    }
+
+    fn pipeline(&self) -> Arc<TierPipeline> {
+        self.pipeline.clone()
     }
 }
 

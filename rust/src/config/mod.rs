@@ -110,6 +110,8 @@ impl Parallelism {
     }
 }
 
+use crate::storage::TierSpec;
+
 /// Checkpoint-engine tuning knobs (the paper's single user-facing knob is
 /// the pinned host cache size; the rest are engine internals we expose for
 /// ablations).
@@ -122,13 +124,22 @@ pub struct EngineConfig {
     pub writer_threads: usize,
     /// Flush chunk granularity in bytes.
     pub chunk_bytes: usize,
-    /// Directory checkpoints are written to.
+    /// Directory checkpoints are written to (the root of the terminal
+    /// filesystem tier).
     pub ckpt_dir: std::path::PathBuf,
     /// Emulate pinned-memory D2H speedup in the real plane (kept for
     /// parity with the simulator; real effect is modeled, see DESIGN.md).
     pub pinned: bool,
     /// Use positioned direct writes (O_DIRECT-style alignment path).
     pub direct_io: bool,
+    /// Storage tier stack, fastest first; the LAST entry is the terminal
+    /// (most durable) tier. The default single `LocalFs` tier reproduces
+    /// the flat flush path; `[HostCache, LocalFs]` lands checkpoints in
+    /// memory and drains them to `ckpt_dir` in the background (paper
+    /// §V-B hierarchy; see `storage::TierPipeline`).
+    pub tiers: Vec<TierSpec>,
+    /// Evict host-cache copies once they drained to the next tier.
+    pub evict_fast_tier: bool,
 }
 
 impl Default for EngineConfig {
@@ -140,6 +151,8 @@ impl Default for EngineConfig {
             ckpt_dir: std::path::PathBuf::from("/tmp/datastates-ckpt"),
             pinned: true,
             direct_io: false,
+            tiers: vec![TierSpec::local_fs()],
+            evict_fast_tier: true,
         }
     }
 }
@@ -147,6 +160,22 @@ impl Default for EngineConfig {
 impl EngineConfig {
     pub fn with_dir(dir: impl Into<std::path::PathBuf>) -> Self {
         EngineConfig { ckpt_dir: dir.into(), ..Default::default() }
+    }
+
+    /// Two-tier stack: land in the in-memory host cache, drain to
+    /// `dir` in the background.
+    pub fn two_tier(dir: impl Into<std::path::PathBuf>) -> Self {
+        EngineConfig {
+            ckpt_dir: dir.into(),
+            tiers: vec![TierSpec::host_cache(), TierSpec::local_fs()],
+            ..Default::default()
+        }
+    }
+
+    /// Replace the tier stack (fastest first).
+    pub fn with_tiers(mut self, tiers: Vec<TierSpec>) -> Self {
+        self.tiers = tiers;
+        self
     }
 }
 

@@ -23,7 +23,6 @@
 //! the streams of all in-flight versions (§V-A3 "competing checkpoint
 //! data streamed by concurrent state providers").
 
-use std::path::PathBuf;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -42,6 +41,7 @@ use crate::provider::{
     SerializerPool, StagedTensorProvider, StateProvider, TensorProvider,
 };
 use crate::state::{RankState, StateItem, TensorData};
+use crate::storage::{TierPipeline, VersionDrainJob};
 
 /// Uniform handle-based interface over DataStates-LLM and the three
 /// baselines.
@@ -61,6 +61,12 @@ pub trait CheckpointEngine: Send {
 
     /// Transfer timeline (Fig 15).
     fn timeline(&self) -> Arc<Timeline>;
+
+    /// The engine's storage tier stack. The baselines run degenerate
+    /// single-tier pipelines; DataStates-LLM lands on the fastest tier
+    /// and drains tier-to-tier. Restore resolves through this handle
+    /// (nearest tier first).
+    fn pipeline(&self) -> Arc<TierPipeline>;
 }
 
 /// Message protocol of the pump thread. Shutdown is explicit: the engine
@@ -74,7 +80,8 @@ enum PumpMsg {
 /// One background checkpoint handed to the pump.
 struct PumpJob {
     session: Arc<CkptSession>,
-    dir: PathBuf,
+    /// Version directory, tier-relative (`"v000042"`).
+    dir: String,
     composites: Vec<(CompositeProvider, Arc<LogCursor>)>,
     requested: Instant,
 }
@@ -83,31 +90,45 @@ struct PumpJob {
 struct ActiveCkpt {
     session: Arc<CkptSession>,
     requested: Instant,
+    /// Tier-relative version directory.
+    dir: String,
     composites: Vec<(CompositeProvider, Arc<LogCursor>)>,
     files: Vec<Arc<FlushFile>>,
     /// Stream exhausted and `finish_issuing` called, per file.
     issuing_done: Vec<bool>,
-    /// Trailer + footer written and fsynced, per file.
+    /// Trailer + footer written and made tier-durable, per file.
     finalized: Vec<bool>,
 }
 
 impl ActiveCkpt {
-    fn start(job: PumpJob) -> anyhow::Result<ActiveCkpt> {
-        std::fs::create_dir_all(&job.dir)?;
+    fn start(job: PumpJob, pipeline: &TierPipeline)
+        -> anyhow::Result<ActiveCkpt> {
         let mut files = Vec::with_capacity(job.composites.len());
         for (comp, _) in job.composites.iter() {
-            files.push(FlushFile::create(&job.dir.join(comp.file_name()),
-                                         comp.file_name())?);
+            // land on the fastest tier; the pipeline drains deeper
+            let rel = format!("{}/{}", job.dir, comp.file_name());
+            files.push(FlushFile::on_backend(
+                pipeline.create_landing(&rel)?,
+                comp.file_name(),
+            ));
         }
         let n = job.composites.len();
         Ok(ActiveCkpt {
             session: job.session,
             requested: job.requested,
+            dir: job.dir,
             composites: job.composites,
             files,
             issuing_done: vec![false; n],
             finalized: vec![false; n],
         })
+    }
+
+    fn file_names(&self) -> Vec<String> {
+        self.composites
+            .iter()
+            .map(|(c, _)| c.file_name().to_string())
+            .collect()
     }
 
     /// One fair pass over this version's file streams: pull at most one
@@ -169,6 +190,7 @@ pub struct DataStatesEngine {
     serializer: Arc<SerializerPool>,
     timeline: Arc<Timeline>,
     notifier: Arc<Notifier>,
+    pipeline: Arc<TierPipeline>,
     pump_tx: Sender<PumpMsg>,
     pump: Option<JoinHandle<()>>,
     sessions: Vec<Arc<CkptSession>>,
@@ -183,11 +205,24 @@ impl DataStatesEngine {
             SerializerPool::with_timeline(2, Some(timeline.clone()));
         let flush = FlushPool::new(cfg.writer_threads, timeline.clone());
         let notifier = Notifier::new();
+        let pipeline = TierPipeline::from_specs(
+            &cfg.tiers,
+            &cfg.ckpt_dir,
+            cfg.evict_fast_tier,
+            cfg.chunk_bytes,
+            // the paper's host-memory budget also bounds the burst tier
+            Some(cfg.host_cache_bytes),
+            timeline.clone(),
+        )?;
         let (pump_tx, pump_rx) = crate::util::channel::unbounded::<PumpMsg>();
         let pump_notifier = notifier.clone();
+        let pump_pipeline = pipeline.clone();
         let pump = std::thread::Builder::new()
             .name("ds-pump".into())
-            .spawn(move || Self::pump_loop(pump_rx, flush, pump_notifier))
+            .spawn(move || {
+                Self::pump_loop(pump_rx, flush, pump_notifier,
+                                pump_pipeline)
+            })
             .expect("spawn pump");
         std::fs::create_dir_all(&cfg.ckpt_dir)?;
         Ok(DataStatesEngine {
@@ -196,6 +231,7 @@ impl DataStatesEngine {
             serializer,
             timeline,
             notifier,
+            pipeline,
             pump_tx,
             pump: Some(pump),
             sessions: Vec::new(),
@@ -203,10 +239,12 @@ impl DataStatesEngine {
     }
 
     /// Admit one requested checkpoint into the pump's active set; a
-    /// failed activation (directory/file creation) fails its session.
-    fn admit(job: PumpJob, active: &mut Vec<ActiveCkpt>) {
+    /// failed activation (file creation on the landing tier) fails its
+    /// session.
+    fn admit(job: PumpJob, active: &mut Vec<ActiveCkpt>,
+             pipeline: &TierPipeline) {
         let session = job.session.clone();
-        match ActiveCkpt::start(job) {
+        match ActiveCkpt::start(job, pipeline) {
             Ok(a) => active.push(a),
             Err(e) => {
                 eprintln!("[datastates] checkpoint v{} failed: {e:#}",
@@ -216,16 +254,56 @@ impl DataStatesEngine {
         }
     }
 
+    /// Handle one version whose landing-tier copy is complete: on a
+    /// multi-tier pipeline the landing durability future resolves now
+    /// and the version is handed to the background drain worker (which
+    /// resolves the deeper tiers, evicts the host cache and keeps the
+    /// manifest); single-tier pipelines persist right here.
+    fn landed(done: ActiveCkpt, pipeline: &TierPipeline,
+              notifier: &Arc<Notifier>) {
+        let elapsed = done.requested.elapsed().as_secs_f64();
+        let files = done.file_names();
+        if pipeline.is_multi() {
+            done.session.tier_durable(0, elapsed);
+            let session = done.session.clone();
+            if let Err(e) = pipeline.submit_drain(VersionDrainJob {
+                session: done.session,
+                requested: done.requested,
+                dir: done.dir,
+                files,
+                // eviction signals wake the pump when it is deferring
+                // admissions on landing-tier capacity
+                notify: Some(notifier.clone()),
+            }) {
+                session.fail(format!("tier drain submit: {e:#}"));
+            }
+        } else {
+            pipeline
+                .record_terminal_complete(done.session.version(), &files);
+            done.session.complete(elapsed);
+        }
+    }
+
     /// Background driver: drains the provider streams of EVERY in-flight
     /// version into the flush pool, finalizing files as their streams
     /// complete. Event-driven — whenever a full sweep makes no progress
     /// the pump parks on the engine notifier (signalled by the D2H
-    /// stager, the serializer pool and the flush writers); there is no
-    /// fixed-interval sleep on this path. Never touches the training
-    /// thread.
+    /// stager, the serializer pool, the flush writers, and the tier
+    /// drain worker's evictions); there is no fixed-interval sleep on
+    /// this path. Never touches the training thread.
+    ///
+    /// Admission backpressure: new versions wait in `deferred` while the
+    /// landing tier reports itself over capacity, so host-cache
+    /// residency stays bounded without EVER blocking a version already
+    /// landing (writes never wait — see `storage::host_cache`). To stay
+    /// live even if space can no longer be freed (a drain failed and
+    /// left residents behind), a version is force-admitted once nothing
+    /// is active and no drain is pending.
     fn pump_loop(rx: Receiver<PumpMsg>, flush: Arc<FlushPool>,
-                 notifier: Arc<Notifier>) {
+                 notifier: Arc<Notifier>, pipeline: Arc<TierPipeline>) {
         let mut active: Vec<ActiveCkpt> = Vec::new();
+        let mut deferred: std::collections::VecDeque<PumpJob> =
+            std::collections::VecDeque::new();
         let mut shutdown = false;
         loop {
             // Read the epoch BEFORE polling sources: any signal arriving
@@ -239,7 +317,7 @@ impl DataStatesEngine {
                 match rx.try_recv() {
                     Ok(PumpMsg::Job(job)) => {
                         progressed = true;
-                        Self::admit(job, &mut active);
+                        deferred.push_back(job);
                     }
                     Ok(PumpMsg::Shutdown) => shutdown = true,
                     Err(TryRecvError::Empty) => break,
@@ -250,14 +328,28 @@ impl DataStatesEngine {
                 }
             }
 
-            if active.is_empty() {
+            // admit deferred versions (FIFO) while the landing tier has
+            // room; force one through if the pipeline is otherwise idle
+            while !deferred.is_empty() {
+                let admissible = pipeline.landing_admissible()
+                    || (active.is_empty()
+                        && pipeline.drains_pending() == 0);
+                if !admissible {
+                    break;
+                }
+                let job = deferred.pop_front().expect("non-empty");
+                progressed = true;
+                Self::admit(job, &mut active, &pipeline);
+            }
+
+            if active.is_empty() && deferred.is_empty() {
                 if shutdown {
                     return;
                 }
                 // idle: block on the request channel itself
                 match rx.recv() {
                     Ok(PumpMsg::Job(job)) => {
-                        Self::admit(job, &mut active);
+                        deferred.push_back(job);
                         continue;
                     }
                     Ok(PumpMsg::Shutdown) | Err(_) => return,
@@ -272,8 +364,7 @@ impl DataStatesEngine {
                         progressed |= prog;
                         if complete {
                             let done = active.remove(i);
-                            done.session.complete(
-                                done.requested.elapsed().as_secs_f64());
+                            Self::landed(done, &pipeline, &notifier);
                         } else {
                             i += 1;
                         }
@@ -290,8 +381,9 @@ impl DataStatesEngine {
             }
 
             if !progressed {
-                // every stream is waiting on D2H/serialization or on
-                // outstanding writes: park until a producer signals
+                // every stream is waiting on D2H/serialization, on
+                // outstanding writes, or on landing-tier capacity: park
+                // until a producer (or the drain's eviction) signals
                 notifier.wait_past(epoch);
             }
         }
@@ -413,8 +505,9 @@ impl CheckpointEngine for DataStatesEngine {
                 bytes: total_bytes,
                 ..Default::default()
             },
+            self.pipeline.tier_kinds(),
         );
-        let dir = self.cfg.ckpt_dir.join(format!("v{version:06}"));
+        let dir = format!("v{version:06}");
         self.pump_tx
             .send(PumpMsg::Job(PumpJob {
                 session: session.clone(),
@@ -435,6 +528,10 @@ impl CheckpointEngine for DataStatesEngine {
 
     fn timeline(&self) -> Arc<Timeline> {
         self.timeline.clone()
+    }
+
+    fn pipeline(&self) -> Arc<TierPipeline> {
+        self.pipeline.clone()
     }
 }
 

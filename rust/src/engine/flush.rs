@@ -1,4 +1,4 @@
-//! Host→storage flush pool (paper §V-A4, §V-B).
+//! Host→landing-tier flush pool (paper §V-A4, §V-B).
 //!
 //! Multi-threaded positioned writes drain the chunk queue produced by the
 //! state providers. The paper uses liburing + O_DIRECT; the structural
@@ -7,11 +7,17 @@
 //! file cursor, writers never contend on position). Each file tracks
 //! outstanding chunks so finalization (trailer + footer + fsync) runs
 //! exactly once, after the last payload byte landed.
+//!
+//! Files are tier-agnostic: a [`FlushFile`] wraps a
+//! [`storage::BackendFile`], so the same pool lands chunks on a real
+//! filesystem or on the in-memory host-cache tier — the engine's
+//! [`storage::TierPipeline`] decides where, and drains deeper
+//! asynchronously.
+//!
+//! [`storage::BackendFile`]: crate::storage::BackendFile
+//! [`storage::TierPipeline`]: crate::storage::TierPipeline
 
-use std::fs::File;
-use std::os::unix::fs::FileExt;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -21,49 +27,88 @@ use std::sync::{Condvar, Mutex};
 use crate::metrics::{Tier, Timeline};
 use crate::provider::layout::FileLayout;
 use crate::provider::Bytes;
+use crate::storage::BackendFile;
+
+/// Chunk accounting of one open file: a single mutex covers the issue
+/// and completion counters, so quiescence waits are a plain condvar loop
+/// with no timed-wait workaround — the completing writer bumps `written`
+/// and notifies UNDER the same lock the waiter sleeps on, making lost
+/// wake-ups impossible.
+struct FlushState {
+    /// Chunks handed to the pool.
+    issued: u64,
+    /// Chunks whose `write_at` completed.
+    written: u64,
+    /// No more payload chunks will be issued.
+    done_issuing: bool,
+    err: Option<String>,
+}
 
 /// An open checkpoint file accepting concurrent positioned writes.
 pub struct FlushFile {
     pub name: String,
-    file: File,
-    /// chunks issued vs completed, to detect quiescence.
-    issued: AtomicU64,
-    written: AtomicU64,
-    done_issuing: Mutex<bool>,
+    file: Box<dyn BackendFile>,
+    state: Mutex<FlushState>,
     cv: Condvar,
-    err: Mutex<Option<String>>,
 }
 
 impl FlushFile {
-    pub fn create(path: &Path, name: impl Into<String>) -> anyhow::Result<Arc<Self>> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let file = File::create(path)?;
-        Ok(Arc::new(FlushFile {
+    /// Wrap a file created on some storage tier.
+    pub fn on_backend(file: Box<dyn BackendFile>, name: impl Into<String>)
+        -> Arc<Self> {
+        Arc::new(FlushFile {
             name: name.into(),
             file,
-            issued: AtomicU64::new(0),
-            written: AtomicU64::new(0),
-            done_issuing: Mutex::new(false),
+            state: Mutex::new(FlushState {
+                issued: 0,
+                written: 0,
+                done_issuing: false,
+                err: None,
+            }),
             cv: Condvar::new(),
-            err: Mutex::new(None),
-        }))
+        })
+    }
+
+    /// Create a filesystem-backed flush file directly (tests, baselines
+    /// that bypass a pipeline).
+    pub fn create(path: &Path, name: impl Into<String>)
+        -> anyhow::Result<Arc<Self>> {
+        let dir = path
+            .parent()
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: no parent"))?;
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("{path:?}: no file name"))?
+            .to_string_lossy()
+            .into_owned();
+        let backend = crate::storage::LocalFs::new(dir);
+        use crate::storage::Backend;
+        Ok(Self::on_backend(backend.create(&file_name)?, name))
     }
 
     fn record_written(&self) {
-        self.written.fetch_add(1, Ordering::AcqRel);
+        let mut st = self.state.lock().unwrap();
+        st.written += 1;
+        drop(st);
         self.cv.notify_all();
     }
 
     fn record_error(&self, e: String) {
-        *self.err.lock().unwrap() = Some(e);
+        let mut st = self.state.lock().unwrap();
+        if st.err.is_none() {
+            st.err = Some(e);
+        }
+        drop(st);
         self.cv.notify_all();
+    }
+
+    fn record_issued(&self) {
+        self.state.lock().unwrap().issued += 1;
     }
 
     /// Mark that no more payload chunks will be issued for this file.
     pub fn finish_issuing(&self) {
-        *self.done_issuing.lock().unwrap() = true;
+        self.state.lock().unwrap().done_issuing = true;
         self.cv.notify_all();
     }
 
@@ -72,56 +117,46 @@ impl FlushFile {
     /// event-driven pump, which parks on the engine notifier (signalled
     /// by the writers per completed chunk) instead of blocking here.
     pub fn is_quiescent(&self) -> anyhow::Result<bool> {
-        if let Some(e) = self.err.lock().unwrap().clone() {
+        let st = self.state.lock().unwrap();
+        if let Some(e) = &st.err {
             anyhow::bail!("flush {} failed: {e}", self.name);
         }
-        let done = *self.done_issuing.lock().unwrap();
-        Ok(done
-            && self.written.load(Ordering::Acquire)
-                == self.issued.load(Ordering::Acquire))
+        Ok(st.done_issuing && st.written == st.issued)
     }
 
-    /// Wait until every issued chunk has been written.
+    /// Wait until every issued chunk has been written. Race-free: all
+    /// counter updates and this wait share one mutex, so the final
+    /// writer's notify can never slip between the check and the sleep.
     pub fn wait_quiescent(&self) -> anyhow::Result<()> {
-        let mut done = self.done_issuing.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(e) = self.err.lock().unwrap().clone() {
+            if let Some(e) = &st.err {
                 anyhow::bail!("flush {} failed: {e}", self.name);
             }
-            if *done
-                && self.written.load(Ordering::Acquire)
-                    == self.issued.load(Ordering::Acquire)
-            {
+            if st.done_issuing && st.written == st.issued {
                 return Ok(());
             }
-            // timed wait: `written` is bumped outside this mutex, so a
-            // pure wait could race the final notify.
-            let (g, _) = self
-                .cv
-                .wait_timeout(done, std::time::Duration::from_millis(10))
-                .unwrap();
-            done = g;
+            st = self.cv.wait(st).unwrap();
         }
     }
 
-    /// fsync without a trailer (raw payload files, e.g. TorchSnapshot
-    /// chunk files).
+    /// Make the raw payload durable on its tier without a trailer
+    /// (e.g. TorchSnapshot chunk files).
     pub fn sync(&self) -> anyhow::Result<()> {
-        self.file.sync_all()?;
-        Ok(())
+        self.file.finalize()
     }
 
-    /// Write the trailer + footer and fsync — makes the file
-    /// self-describing and durable. Must be called after
+    /// Write the trailer + footer and make the file durable on its tier
+    /// — self-describing from here on. Must be called after
     /// `wait_quiescent`.
     pub fn finalize(&self, layout: &FileLayout, log_end: u64) -> anyhow::Result<u64> {
         let trailer = layout.encode_trailer();
         let trailer_off = log_end.max(layout.fixed_region);
-        self.file.write_all_at(&trailer, trailer_off)?;
+        self.file.write_at(trailer_off, &trailer)?;
         let footer =
             FileLayout::encode_footer(trailer_off, trailer.len() as u64);
-        self.file.write_all_at(&footer, trailer_off + trailer.len() as u64)?;
-        self.file.sync_all()?;
+        self.file.write_at(trailer_off + trailer.len() as u64, &footer)?;
+        self.file.finalize()?;
         Ok(trailer_off + trailer.len() as u64 + footer.len() as u64)
     }
 }
@@ -181,7 +216,7 @@ impl FlushPool {
                             match job
                                 .file
                                 .file
-                                .write_all_at(job.data.as_slice(), job.offset)
+                                .write_at(job.offset, job.data.as_slice())
                             {
                                 Ok(()) => {
                                     tl.record(
@@ -218,7 +253,7 @@ impl FlushPool {
     /// Enqueue a chunk write. The file's issued counter is bumped here so
     /// quiescence detection can never observe written > issued.
     pub fn submit(&self, job: WriteJob) {
-        job.file.issued.fetch_add(1, Ordering::AcqRel);
+        job.file.record_issued();
         self.tx.send(Msg::Job(job)).expect("flush pool alive");
     }
 }
@@ -334,5 +369,56 @@ mod tests {
         // signal arrives only after the write was recorded
         assert!(file.is_quiescent().unwrap());
         assert_eq!(progress.snapshot().bytes_flushed, 256);
+    }
+
+    #[test]
+    fn flush_lands_on_host_cache_tier() {
+        use crate::storage::{Backend, HostCache, ReadAt};
+        let hc = HostCache::new();
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(2, tl);
+        let file = FlushFile::on_backend(
+            hc.create("v000001/m.ds").unwrap(), "m.ds");
+        for i in 0..4u64 {
+            pool.submit(WriteJob::plain(
+                file.clone(),
+                i * 64,
+                Bytes::from_vec(vec![i as u8; 64]),
+                format!("c{i}"),
+            ));
+        }
+        file.finish_issuing();
+        file.wait_quiescent().unwrap();
+        let r = hc.open("v000001/m.ds").unwrap();
+        assert_eq!(r.len().unwrap(), 256);
+        let mut buf = [0u8; 64];
+        r.read_exact_at(&mut buf, 192).unwrap();
+        assert!(buf.iter().all(|&b| b == 3));
+    }
+
+    /// Regression for the old timed-wait workaround: hammer the
+    /// completion path; a lost final wake-up would hang this test.
+    #[test]
+    fn wait_quiescent_never_misses_the_final_notify() {
+        let dir = crate::util::TempDir::new("ds-race").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(4, tl);
+        for round in 0..50 {
+            let file = FlushFile::create(
+                &dir.path().join(format!("r{round}.ds")),
+                format!("r{round}"),
+            )
+            .unwrap();
+            for i in 0..8u64 {
+                pool.submit(WriteJob::plain(
+                    file.clone(),
+                    i * 16,
+                    Bytes::from_vec(vec![round as u8; 16]),
+                    "c",
+                ));
+            }
+            file.finish_issuing();
+            file.wait_quiescent().unwrap();
+        }
     }
 }

@@ -1,6 +1,8 @@
 //! The data-movement engine (paper §V-A4): pinned host pool, D2H staging
-//! stream, multi-threaded flush pool, the per-version checkpoint session
-//! handles, and the event-driven checkpoint engine that pipelines them.
+//! stream, multi-threaded flush pool landing on the fastest storage tier
+//! (see [`crate::storage`]), the per-version checkpoint session handles
+//! with per-tier durability futures, and the event-driven checkpoint
+//! engine that pipelines them.
 
 pub mod checkpoint;
 pub mod flush;

@@ -3,36 +3,54 @@
 //! `CheckpointEngine::begin` returns a [`CheckpointTicket`] — the
 //! caller-facing handle to ONE checkpoint version in flight. The ticket
 //! owns that version's consistency gate ([`CheckpointTicket::wait_captured`]),
-//! persistence future ([`CheckpointTicket::wait_persisted`]), live
-//! transfer progress ([`CheckpointTicket::progress`]) and metrics entry.
-//! Engines keep the shared [`CkptSession`] halves, so any number of
-//! versions can be in flight concurrently with no implicit-singleton
-//! state: a background completion updates *its own* session, never "the
-//! first entry that looks unfinished".
+//! its per-tier durability futures ([`CheckpointTicket::wait_durable`] —
+//! [`CheckpointTicket::wait_persisted`] is durability on the terminal
+//! tier), live transfer progress ([`CheckpointTicket::progress`]) and
+//! metrics entry. Engines keep the shared [`CkptSession`] halves, so any
+//! number of versions can be in flight concurrently with no
+//! implicit-singleton state: a background completion updates *its own*
+//! session, never "the first entry that looks unfinished".
+//!
+//! Durability is **tiered** (paper §V-B): a session is created with the
+//! engine pipeline's tier stack (fastest first), the flush path resolves
+//! the landing tier, and the pipeline's drain worker resolves each
+//! deeper tier as the version's files land there. Single-tier engines
+//! are the degenerate case — one tier, resolved once.
 
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::stager::SnapshotTracker;
-use crate::metrics::{CkptMetrics, CkptProgress, ProgressCounters};
+use crate::metrics::{CkptMetrics, CkptProgress, ProgressCounters,
+                     TierDurability};
+use crate::storage::TierKind;
 
 struct SessionState {
     metrics: CkptMetrics,
     /// The capture gate has been resolved (successfully or not) and its
     /// wait time folded into the metrics.
     gate_resolved: bool,
+    /// The gate resolved WITH a failure (distinguishes a capture
+    /// failure from a later drain failure: achieved durability levels
+    /// stay achieved even if a deeper tier fails afterwards).
+    gate_failed: bool,
+    /// Per-tier durability, fastest tier first.
+    durable: Vec<bool>,
+    /// Durable on the terminal tier.
     persisted: bool,
     failed: Option<String>,
 }
 
 /// Engine-side state of one checkpoint version. Shared between the
 /// engine (for `metrics()` aggregation), its background workers (for
-/// completion) and every clone of the user-facing ticket.
+/// per-tier completion) and every clone of the user-facing ticket.
 pub struct CkptSession {
     version: u64,
     /// Outstanding-D2H gate; `None` for engines that capture
     /// synchronously inside `begin`.
     gate: Option<Arc<SnapshotTracker>>,
     progress: Arc<ProgressCounters>,
+    /// The engine pipeline's tier stack, fastest first.
+    tiers: Vec<TierKind>,
     state: Mutex<SessionState>,
     cv: Condvar,
 }
@@ -42,15 +60,29 @@ impl CkptSession {
         version: u64,
         gate: Option<Arc<SnapshotTracker>>,
         progress: Arc<ProgressCounters>,
-        initial: CkptMetrics,
+        mut initial: CkptMetrics,
+        tiers: Vec<TierKind>,
     ) -> Arc<CkptSession> {
+        let tiers = if tiers.is_empty() {
+            vec![TierKind::LocalFs]
+        } else {
+            tiers
+        };
+        initial.tiers = tiers
+            .iter()
+            .map(|&kind| TierDurability { kind, durable_s: 0.0 })
+            .collect();
+        let n = tiers.len();
         Arc::new(CkptSession {
             version,
             gate,
             progress,
+            tiers,
             state: Mutex::new(SessionState {
                 metrics: initial,
                 gate_resolved: false,
+                gate_failed: false,
+                durable: vec![false; n],
                 persisted: false,
                 failed: None,
             }),
@@ -66,16 +98,55 @@ impl CkptSession {
         self.progress.clone()
     }
 
+    /// The tier stack this session resolves against, fastest first.
+    pub fn tier_kinds(&self) -> &[TierKind] {
+        &self.tiers
+    }
+
     /// Current metrics entry (persist_s is 0 until persisted).
     pub fn metrics(&self) -> CkptMetrics {
         self.state.lock().unwrap().metrics.clone()
     }
 
-    /// Mark this version fully persistent. Called by the engine's
-    /// background worker exactly once, with the wall time since the
-    /// request.
+    /// Map a tier kind to its index in this session's stack. Unknown
+    /// kinds resolve to the TERMINAL tier: waiting on a tier an engine
+    /// does not have degrades to the strongest guarantee it offers.
+    fn tier_index(&self, kind: TierKind) -> usize {
+        self.tiers
+            .iter()
+            .position(|&k| k == kind)
+            .unwrap_or(self.tiers.len() - 1)
+    }
+
+    /// Mark this version durable on tier `idx` (and implicitly on every
+    /// faster tier it drained from). Called by the flush pump for the
+    /// landing tier and by the pipeline's drain worker for each deeper
+    /// tier; marking the terminal tier resolves the persistence future.
+    pub fn tier_durable(&self, idx: usize, elapsed_s: f64) {
+        let mut st = self.state.lock().unwrap();
+        if idx < st.durable.len() && !st.durable[idx] {
+            st.durable[idx] = true;
+            st.metrics.tiers[idx].durable_s = elapsed_s;
+        }
+        if idx + 1 == st.durable.len() {
+            st.persisted = true;
+            st.metrics.persist_s = elapsed_s;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Mark this version fully persistent on EVERY tier at once (the
+    /// single-tier / synchronous-engine path). Called exactly once, with
+    /// the wall time since the request.
     pub fn complete(&self, persist_s: f64) {
         let mut st = self.state.lock().unwrap();
+        for i in 0..st.durable.len() {
+            if !st.durable[i] {
+                st.durable[i] = true;
+                st.metrics.tiers[i].durable_s = persist_s;
+            }
+        }
         st.metrics.persist_s = persist_s;
         st.persisted = true;
         drop(st);
@@ -96,11 +167,19 @@ impl CkptSession {
         self.state.lock().unwrap().persisted
     }
 
+    fn is_durable_at(&self, idx: usize) -> bool {
+        let st = self.state.lock().unwrap();
+        idx < st.durable.len() && st.durable[idx]
+    }
+
     fn wait_captured(&self) -> anyhow::Result<f64> {
         {
             let st = self.state.lock().unwrap();
             if st.gate_resolved {
-                if let Some(e) = &st.failed {
+                // only a CAPTURE failure invalidates the gate; a later
+                // tier-drain failure does not un-capture the snapshot
+                if st.gate_failed {
+                    let e = st.failed.as_deref().unwrap_or("capture failed");
                     anyhow::bail!("checkpoint v{}: {e}", self.version);
                 }
                 return Ok(0.0);
@@ -113,6 +192,7 @@ impl CkptSession {
                     let msg = format!("capture failed: {e:#}");
                     let mut st = self.state.lock().unwrap();
                     st.gate_resolved = true;
+                    st.gate_failed = true;
                     if st.failed.is_none() {
                         st.failed = Some(msg);
                     }
@@ -134,16 +214,31 @@ impl CkptSession {
         Ok(waited)
     }
 
-    fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
+    /// Block until this version is durable on tier `idx`. A durability
+    /// level once achieved stays achieved: if tier `idx` already
+    /// resolved, a LATER failure (e.g. the drain to a deeper tier) does
+    /// not retract it — only waiters for the not-yet-durable tiers
+    /// observe the error.
+    fn wait_durable_at(&self, idx: usize) -> anyhow::Result<CkptMetrics> {
         self.wait_captured()?;
         let mut st = self.state.lock().unwrap();
-        while !st.persisted && st.failed.is_none() {
+        loop {
+            if idx < st.durable.len() && st.durable[idx] {
+                return Ok(st.metrics.clone());
+            }
+            if let Some(e) = &st.failed {
+                anyhow::bail!("checkpoint v{}: {e}", self.version);
+            }
             st = self.cv.wait(st).unwrap();
         }
-        if let Some(e) = &st.failed {
-            anyhow::bail!("checkpoint v{}: {e}", self.version);
-        }
-        Ok(st.metrics.clone())
+    }
+
+    fn wait_durable(&self, kind: TierKind) -> anyhow::Result<CkptMetrics> {
+        self.wait_durable_at(self.tier_index(kind))
+    }
+
+    fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
+        self.wait_durable_at(self.tiers.len() - 1)
     }
 }
 
@@ -172,26 +267,49 @@ impl CheckpointTicket {
         self.session.wait_captured()
     }
 
-    /// Persistence future: block until this version is durably on
-    /// storage (implies `wait_captured`). Returns the final metrics
-    /// entry for this version.
+    /// Per-tier durability future: block until this version is durable
+    /// on the named storage tier (implies `wait_captured`). On a
+    /// two-tier HostCache→LocalFs pipeline,
+    /// `wait_durable(TierKind::HostCache)` resolves as soon as every
+    /// file landed in the host cache — long before the background drain
+    /// to the filesystem completes — which is what lets a trainer resume
+    /// at host-cache durability. Waiting on a tier the engine does not
+    /// have degrades to the terminal tier (the strongest guarantee).
+    /// Returns the metrics entry as of that tier's resolution.
+    pub fn wait_durable(&self, tier: TierKind)
+        -> anyhow::Result<CkptMetrics> {
+        self.session.wait_durable(tier)
+    }
+
+    /// Persistence future: block until this version is durable on the
+    /// TERMINAL storage tier (implies `wait_captured` and every faster
+    /// tier). Returns the final metrics entry for this version.
     pub fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
         self.session.wait_persisted()
     }
 
-    /// True once the version is durably persisted (non-blocking).
+    /// True once the version is durably persisted on the terminal tier
+    /// (non-blocking).
     pub fn is_persisted(&self) -> bool {
         self.session.is_persisted()
     }
 
-    /// Live transfer progress: bytes staged (D2H), serialized, and
-    /// flushed so far for this version.
+    /// True once the version is durable on the named tier
+    /// (non-blocking; unknown tiers degrade to the terminal tier).
+    pub fn is_durable(&self, tier: TierKind) -> bool {
+        self.session.is_durable_at(self.session.tier_index(tier))
+    }
+
+    /// Live transfer progress: bytes staged (D2H), serialized, flushed
+    /// to the landing tier, and drained tier-to-tier so far for this
+    /// version.
     pub fn progress(&self) -> CkptProgress {
         self.session.progress.snapshot()
     }
 
     /// This version's metrics entry as currently known (persist_s is 0
-    /// until the persistence future resolves).
+    /// until the persistence future resolves; per-tier durability fills
+    /// in as the drain progresses).
     pub fn metrics(&self) -> CkptMetrics {
         self.session.metrics()
     }
@@ -207,6 +325,17 @@ mod tests {
             gate,
             Arc::new(ProgressCounters::default()),
             CkptMetrics { version: 7, bytes: 10, ..Default::default() },
+            vec![TierKind::LocalFs],
+        )
+    }
+
+    fn two_tier_session() -> Arc<CkptSession> {
+        CkptSession::new(
+            9,
+            None,
+            Arc::new(ProgressCounters::default()),
+            CkptMetrics { version: 9, bytes: 10, ..Default::default() },
+            vec![TierKind::HostCache, TierKind::LocalFs],
         )
     }
 
@@ -221,6 +350,9 @@ mod tests {
         assert_eq!(m.version, 7);
         assert!((m.persist_s - 0.5).abs() < 1e-12);
         assert!(t.is_persisted());
+        // single tier: the one durability entry mirrors persist_s
+        assert_eq!(m.tiers.len(), 1);
+        assert!((m.tiers[0].durable_s - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -260,5 +392,58 @@ mod tests {
         tracker.fail("OOM staging".into());
         assert!(t.wait_captured().is_err());
         assert!(t.wait_persisted().is_err());
+    }
+
+    #[test]
+    fn fast_tier_durability_resolves_before_terminal() {
+        let s = two_tier_session();
+        let t = CheckpointTicket::new(s.clone());
+        assert!(!t.is_durable(TierKind::HostCache));
+        s.tier_durable(0, 0.1);
+        // host-cache future resolved, persistence future still pending
+        let m = t.wait_durable(TierKind::HostCache).unwrap();
+        assert!((m.tiers[0].durable_s - 0.1).abs() < 1e-12);
+        assert!(t.is_durable(TierKind::HostCache));
+        assert!(!t.is_persisted());
+        assert_eq!(m.persist_s, 0.0);
+
+        let t2 = t.clone();
+        let h =
+            std::thread::spawn(move || t2.wait_persisted().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        s.tier_durable(1, 0.4);
+        let m = h.join().unwrap();
+        assert!(t.is_persisted());
+        assert!((m.persist_s - 0.4).abs() < 1e-12);
+        assert!((m.tiers[1].durable_s - 0.4).abs() < 1e-12);
+        assert!(m.tiers[0].durable_s < m.tiers[1].durable_s);
+    }
+
+    #[test]
+    fn achieved_durability_survives_later_drain_failure() {
+        let s = two_tier_session();
+        let t = CheckpointTicket::new(s.clone());
+        s.tier_durable(0, 0.1);
+        s.fail("terminal tier drain: disk full".into());
+        // the host-cache level was achieved and stays achieved...
+        let m = t.wait_durable(TierKind::HostCache).unwrap();
+        assert!((m.tiers[0].durable_s - 0.1).abs() < 1e-12);
+        assert!(t.is_durable(TierKind::HostCache));
+        // ...while the unachieved terminal level reports the failure
+        let e = t.wait_persisted().unwrap_err();
+        assert!(e.to_string().contains("disk full"));
+        assert!(!t.is_persisted());
+    }
+
+    #[test]
+    fn unknown_tier_degrades_to_terminal() {
+        let s = session(None); // LocalFs only
+        let t = CheckpointTicket::new(s.clone());
+        assert!(!t.is_durable(TierKind::HostCache));
+        s.complete(0.2);
+        // waiting on a missing HostCache tier waits on the terminal tier
+        let m = t.wait_durable(TierKind::HostCache).unwrap();
+        assert!((m.persist_s - 0.2).abs() < 1e-12);
+        assert!(t.is_durable(TierKind::HostCache));
     }
 }

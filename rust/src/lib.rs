@@ -21,6 +21,13 @@
 //!   sessions — [`engine::CheckpointEngine::begin`] returns a
 //!   [`engine::CheckpointTicket`] owning that version's lazy-capture
 //!   consistency gate, persistence future, progress, and metrics.
+//! - [`storage`] — the persistence plane as composable tiers: the
+//!   [`storage::Backend`] trait over real filesystems and the in-memory
+//!   host cache, per-tier bandwidth throttles, and the
+//!   [`storage::TierPipeline`] that lands checkpoints on the fastest
+//!   tier, drains them tier-to-tier in the background (per-tier
+//!   durability futures on the ticket), and resolves restores from the
+//!   nearest complete copy via a cross-tier manifest.
 //! - [`baselines`] — faithful re-implementations of the compared engines:
 //!   DeepSpeed-default (`torch.save`-style), TorchSnapshot-like, and
 //!   DataStates-LLM-Old (HPDC'24).
@@ -48,6 +55,7 @@ pub mod restore;
 pub mod runtime;
 pub mod sim;
 pub mod state;
+pub mod storage;
 pub mod train;
 pub mod util;
 

@@ -5,15 +5,27 @@
 //!            fig12|fig13|table3|fig14|fig15|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
+//!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
 //!   fsck <checkpoint-file>
 //!   partition <model> [--dp D]     (print one rank's composition)
-//!   bench-io [--dir DIR]           (quick real-plane flush sweep)
+//!   bench-io [--dir DIR] [--tiers T1,T2] [--throttle-mbps M]
+//!            [--json PATH]         (quick real-plane flush sweep)
+//!
+//! Storage-tier knobs (tiered persistence pipeline, see DESIGN.md
+//! "Storage tiers"):
+//!   --tiers hostcache,localfs   tier stack, fastest first; the last
+//!                               tier is terminal (default: localfs)
+//!   --throttle-mbps M           cap the TERMINAL tier's write bandwidth
+//!                               at M MB/s (I/O-contention studies)
+//!   --durability hostcache      train: drain the run tail only to this
+//!                               tier (background drain continues)
 
 use datastates::baselines::EngineKind;
 use datastates::config::{EngineConfig, LlmConfig, Parallelism};
 use datastates::harness;
-use datastates::metrics::{human_bps, human_bytes};
+use datastates::metrics::{human_bps, human_bytes, Tier, Timeline};
 use datastates::runtime::TrainSession;
+use datastates::storage::{TierKind, TierSpec};
 use datastates::train::TrainLoop;
 
 fn main() {
@@ -74,11 +86,77 @@ fn run() -> anyhow::Result<()> {
         _ => {
             eprintln!(
                 "usage: datastates <figures|train|world|fsck|partition|\
-                 bench-io> [options]\n  see rust/src/main.rs for flags"
+                 bench-io> [options]\n  tier knobs: --tiers \
+                 hostcache,localfs --throttle-mbps M --durability TIER\n  \
+                 see rust/src/main.rs for all flags"
             );
             Ok(())
         }
     }
+}
+
+/// Parse `--tiers hostcache,localfs` (+ optional `--throttle-mbps M`
+/// applied to the terminal tier) into a tier stack. `--throttle-mbps`
+/// alone throttles the default single-LocalFs stack.
+fn tier_specs(args: &Args) -> anyhow::Result<Option<Vec<TierSpec>>> {
+    let throttle_bps = match args.get("throttle-mbps") {
+        Some(mbps) => {
+            let mbps: f64 = mbps.parse().map_err(|_| {
+                anyhow::anyhow!("bad --throttle-mbps {mbps}")
+            })?;
+            anyhow::ensure!(mbps > 0.0 && mbps.is_finite(),
+                            "--throttle-mbps must be > 0, got {mbps}");
+            Some(mbps * 1e6)
+        }
+        None => None,
+    };
+    let mut tiers = match args.get("tiers") {
+        Some(spec) => {
+            let mut tiers = Vec::new();
+            for part in spec.split(',') {
+                let kind = TierKind::parse(part).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown tier {part:?} (hostcache|localfs)")
+                })?;
+                tiers.push(TierSpec { kind, throttle_bps: None });
+            }
+            tiers
+        }
+        // throttle without an explicit stack: default single LocalFs
+        None if throttle_bps.is_some() => vec![TierSpec::local_fs()],
+        None => return Ok(None),
+    };
+    anyhow::ensure!(!tiers.is_empty(), "--tiers needs at least one tier");
+    if tiers.last().map(|t| t.kind) == Some(TierKind::HostCache) {
+        eprintln!(
+            "warning: terminal tier is the VOLATILE host cache — \
+             checkpoints are in-memory only and lost on exit"
+        );
+    }
+    if let Some(bps) = throttle_bps {
+        if let Some(last) = tiers.last_mut() {
+            last.throttle_bps = Some(bps);
+        }
+    }
+    Ok(Some(tiers))
+}
+
+/// Per-transfer-tier `{bytes, busy_s, bps}` JSON for one timeline.
+fn tier_throughput_json(tl: &Timeline) -> String {
+    let entry = |tier: Tier| {
+        let (bytes, busy) = tl.tier_summary(tier);
+        let bps = tl.tier_bps(tier);
+        format!(
+            "{{\"bytes\":{bytes},\"busy_s\":{busy:.6},\"bps\":{bps:.1}}}"
+        )
+    };
+    format!(
+        "{{\"d2h\":{},\"serialize\":{},\"h2f\":{},\"drain\":{}}}",
+        entry(Tier::D2H),
+        entry(Tier::Serialize),
+        entry(Tier::H2F),
+        entry(Tier::Drain),
+    )
 }
 
 fn figures(args: &Args) -> anyhow::Result<()> {
@@ -103,6 +181,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "table3" => harness::table3(),
         "fig14" => harness::fig14(),
         "fig15" => harness::fig15()?,
+        "tiers" => harness::tiers()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -147,6 +226,15 @@ fn train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = EngineConfig::with_dir(&ckpt_dir);
     // e2e state is ~1.1 GB; keep a full snapshot resident
     cfg.host_cache_bytes = 1400 << 20;
+    if let Some(tiers) = tier_specs(args)? {
+        cfg.tiers = tiers;
+    }
+    let drain_tier = match args.get("durability") {
+        Some(s) => Some(TierKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown --durability tier {s:?}")
+        })?),
+        None => None,
+    };
     let mut engine = kind.build(cfg)?;
 
     let base_iter = session.iteration;
@@ -155,6 +243,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
         let session_cell = std::cell::RefCell::new(&mut session);
         let losses_cell = std::cell::RefCell::new(&mut losses);
         let mut tl = TrainLoop::new(engine.as_mut(), interval);
+        tl.drain_tier = drain_tier;
         let report = tl.run(
             steps,
             |it| {
@@ -236,24 +325,73 @@ fn partition(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Quick real-plane I/O sweep (Fig 14 counterpart on this machine).
+/// `--tiers`/`--throttle-mbps` select the storage stack; `--json PATH`
+/// records per-tier throughput (H2F landing vs tier drain) for
+/// BENCH_*.json tracking.
 fn bench_io(args: &Args) -> anyhow::Result<()> {
     use datastates::state::census as mk_census;
     use datastates::state::partition::materialize;
     let dir = std::path::PathBuf::from(
         args.get("dir").unwrap_or("/tmp/datastates-bench-io"));
+    let tiers = tier_specs(args)?;
     let cfg = LlmConfig::by_name("7B").unwrap();
     let par = Parallelism::paper_default(&cfg);
     let cs = mk_census(&cfg, &par);
-    println!("{:<22}{:>14}{:>16}", "engine", "blocked s", "eff tput");
+    println!("{:<22}{:>14}{:>16}{:>16}{:>16}", "engine", "blocked s",
+             "eff tput", "H2F tput", "drain tput");
+    let mut rows = Vec::new();
     for kind in EngineKind::all() {
         let state = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
         let _ = std::fs::remove_dir_all(&dir);
-        let mut eng = kind.build(EngineConfig::with_dir(&dir))?;
+        let mut ecfg = EngineConfig::with_dir(&dir);
+        if let Some(t) = &tiers {
+            ecfg.tiers = t.clone();
+        }
+        let mut eng = kind.build(ecfg)?;
         let ticket = eng.begin(0, &state)?;
         ticket.wait_captured()?;
         let m = ticket.wait_persisted()?;
-        println!("{:<22}{:>14.4}{:>16}", kind.label(), m.blocked_s,
-                 human_bps(m.effective_bps()));
+        let tl = eng.timeline();
+        println!(
+            "{:<22}{:>14.4}{:>16}{:>16}{:>16}",
+            kind.label(),
+            m.blocked_s,
+            human_bps(m.effective_bps()),
+            human_bps(tl.tier_bps(Tier::H2F)),
+            human_bps(tl.tier_bps(Tier::Drain)),
+        );
+        let eff = m.effective_bps();
+        let tiers_json: Vec<String> = m
+            .tiers
+            .iter()
+            .map(|t| {
+                format!(
+                    "{{\"kind\":\"{}\",\"durable_s\":{:.6}}}",
+                    t.kind.label(),
+                    t.durable_s
+                )
+            })
+            .collect();
+        rows.push(format!(
+            "{{\"engine\":\"{}\",\"blocked_s\":{:.6},\
+             \"persist_s\":{:.6},\"effective_bps\":{:.1},\
+             \"tiers\":[{}],\"transfer\":{}}}",
+            kind.label(),
+            m.blocked_s,
+            m.persist_s,
+            if eff.is_finite() { eff } else { 0.0 },
+            tiers_json.join(","),
+            tier_throughput_json(&tl),
+        ));
+    }
+    if let Some(path) = args.get("json") {
+        let doc = format!(
+            "{{\"bench\":\"bench-io\",\"model\":\"7B\",\
+             \"engines\":[{}]}}\n",
+            rows.join(",")
+        );
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -279,6 +417,10 @@ fn world(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown engine"))?;
     println!("world: {world_size} ranks x {iterations} iters, ckpt \
               every {interval}, engine {}", kind.label());
+    let mut engine_cfg = EngineConfig::default();
+    if let Some(t) = tier_specs(args)? {
+        engine_cfg.tiers = t;
+    }
     let report = run_world(
         &WorldConfig {
             world: world_size,
@@ -286,7 +428,7 @@ fn world(args: &Args) -> anyhow::Result<()> {
             interval,
             engine: kind,
             ckpt_root: root.clone(),
-            engine_cfg: EngineConfig::default(),
+            engine_cfg,
         },
         |rank, it| {
             materialize(&cs.ranks[rank % cs.ranks.len()], 5e-5, 0.05,

@@ -11,10 +11,13 @@ pub enum Tier {
     /// GPU → host staging (PCIe in the paper; `to_literal_sync`/memcpy
     /// here).
     D2H,
-    /// Host → persistent storage flush.
+    /// Host → landing storage tier flush.
     H2F,
     /// Serialization of non-tensor objects.
     Serialize,
+    /// Storage-tier-to-storage-tier drain (host cache → local FS →
+    /// parallel FS in the paper's hierarchy).
+    Drain,
 }
 
 /// One interval on the Fig 15 timeline.
@@ -104,6 +107,16 @@ impl Timeline {
         );
         (bytes, busy)
     }
+
+    /// Achieved throughput on one transfer tier (0 when it never ran).
+    pub fn tier_bps(&self, tier: Tier) -> f64 {
+        let (bytes, busy) = self.tier_summary(tier);
+        if busy > 0.0 {
+            bytes as f64 / busy
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Total covered time of a set of (possibly overlapping) intervals.
@@ -131,6 +144,15 @@ pub fn union_time(iter: impl Iterator<Item = (f64, f64)>) -> f64 {
     total
 }
 
+/// Per-storage-tier durability of one checkpoint version: when (seconds
+/// after the request) the version became durable on that tier. `0.0`
+/// until it does.
+#[derive(Debug, Clone)]
+pub struct TierDurability {
+    pub kind: crate::storage::TierKind,
+    pub durable_s: f64,
+}
+
 /// Blocking/throughput metrics for one checkpoint (paper §VI-C3).
 ///
 /// Owned by the checkpoint's session (see `engine::ticket`), so every
@@ -145,11 +167,16 @@ pub struct CkptMetrics {
     pub blocked_s: f64,
     /// Total checkpoint payload bytes.
     pub bytes: u64,
-    /// Wall seconds until fully persistent.
+    /// Wall seconds until fully persistent (durable on the TERMINAL
+    /// storage tier; per-tier resolution is in `tiers`).
     pub persist_s: f64,
     pub serialize_s: f64,
     pub d2h_s: f64,
     pub h2f_s: f64,
+    /// Per-tier durability, fastest tier first (one entry per storage
+    /// tier of the engine's pipeline; the last entry mirrors
+    /// `persist_s`).
+    pub tiers: Vec<TierDurability>,
 }
 
 impl CkptMetrics {
@@ -173,6 +200,7 @@ pub struct ProgressCounters {
     staged: AtomicU64,
     serialized: AtomicU64,
     flushed: AtomicU64,
+    drained: AtomicU64,
 }
 
 impl ProgressCounters {
@@ -192,12 +220,17 @@ impl ProgressCounters {
         self.flushed.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    pub fn add_drained(&self, bytes: u64) {
+        self.drained.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CkptProgress {
         CkptProgress {
             bytes_total: self.total.load(Ordering::Relaxed),
             bytes_staged: self.staged.load(Ordering::Relaxed),
             bytes_serialized: self.serialized.load(Ordering::Relaxed),
             bytes_flushed: self.flushed.load(Ordering::Relaxed),
+            bytes_drained: self.drained.load(Ordering::Relaxed),
         }
     }
 }
@@ -212,8 +245,12 @@ pub struct CkptProgress {
     pub bytes_staged: u64,
     /// Object bytes materialized by the serializer pool.
     pub bytes_serialized: u64,
-    /// Payload bytes durably issued by the flush workers.
+    /// Payload bytes written to the landing storage tier by the flush
+    /// workers.
     pub bytes_flushed: u64,
+    /// Payload bytes copied tier-to-tier by the pipeline's drain worker
+    /// (0 on single-tier pipelines).
+    pub bytes_drained: u64,
 }
 
 /// Pretty-print helpers shared by the harness drivers.

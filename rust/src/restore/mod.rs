@@ -43,7 +43,17 @@ impl RestoredFile {
 /// layout: footer → trailer → entries → extents, via the read-side
 /// [`ChunkSource`] view.
 pub fn read_file(path: &Path) -> anyhow::Result<RestoredFile> {
-    let src = ChunkSource::open(path)?;
+    read_from(Box::new(File::open(path)?))
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e:#}"))
+}
+
+/// Read one checkpoint file out of any positioned-read surface — this
+/// is how the tier pipeline restores from whichever tier holds the
+/// nearest complete copy, including the in-memory host cache.
+pub fn read_from(reader: Box<dyn crate::storage::ReadAt>)
+    -> anyhow::Result<RestoredFile> {
+    let src = ChunkSource::from_reader(reader,
+                                       source::DEFAULT_CHUNK_BYTES)?;
     let mut payloads = HashMap::new();
     for (name, bytes) in src.read_all()? {
         payloads.insert(name, bytes);
@@ -51,44 +61,13 @@ pub fn read_file(path: &Path) -> anyhow::Result<RestoredFile> {
     Ok(RestoredFile { layout: src.layout().clone(), payloads })
 }
 
-/// Read every file of a checkpoint version directory.
-pub fn read_version_dir(dir: &Path)
-    -> anyhow::Result<HashMap<String, RestoredFile>> {
-    let mut out = HashMap::new();
-    for entry in std::fs::read_dir(dir)? {
-        let entry = entry?;
-        if entry.file_type()?.is_file() {
-            let name = entry.file_name().to_string_lossy().into_owned();
-            out.insert(name, read_file(&entry.path())?);
-        }
-    }
-    Ok(out)
-}
-
-/// Latest version directory under a checkpoint root (`v000042/`...).
-pub fn latest_version(root: &Path) -> anyhow::Result<Option<(u64, PathBuf)>> {
-    let mut best: Option<(u64, PathBuf)> = None;
-    if !root.exists() {
-        return Ok(None);
-    }
-    for entry in std::fs::read_dir(root)? {
-        let entry = entry?;
-        let name = entry.file_name().to_string_lossy().into_owned();
-        if let Some(v) = name.strip_prefix('v')
-            .and_then(|s| s.parse::<u64>().ok())
-        {
-            if best.as_ref().map(|(b, _)| v > *b).unwrap_or(true) {
-                best = Some((v, entry.path()));
-            }
-        }
-    }
-    Ok(best)
-}
-
-/// Verify that a restored checkpoint version matches the original rank
-/// state bit-for-bit (used by tests and the failure_recovery example).
-pub fn verify_against(dir: &Path, state: &RankState) -> anyhow::Result<()> {
-    let restored = read_version_dir(dir)?;
+/// Verify a restored file set (as produced by
+/// `storage::TierPipeline::read_version`) against the original rank
+/// state bit-for-bit — the tier-agnostic sibling of [`verify_against`].
+pub fn verify_files_against(
+    restored: &HashMap<String, RestoredFile>,
+    state: &RankState,
+) -> anyhow::Result<()> {
     anyhow::ensure!(
         restored.len() == state.files.len(),
         "file count mismatch: {} vs {}",
@@ -130,6 +109,46 @@ pub fn verify_against(dir: &Path, state: &RankState) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Read every file of a checkpoint version directory.
+pub fn read_version_dir(dir: &Path)
+    -> anyhow::Result<HashMap<String, RestoredFile>> {
+    let mut out = HashMap::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if entry.file_type()?.is_file() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            out.insert(name, read_file(&entry.path())?);
+        }
+    }
+    Ok(out)
+}
+
+/// Latest version directory under a checkpoint root (`v000042/`...).
+pub fn latest_version(root: &Path) -> anyhow::Result<Option<(u64, PathBuf)>> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    if !root.exists() {
+        return Ok(None);
+    }
+    for entry in std::fs::read_dir(root)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(v) = name.strip_prefix('v')
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            if best.as_ref().map(|(b, _)| v > *b).unwrap_or(true) {
+                best = Some((v, entry.path()));
+            }
+        }
+    }
+    Ok(best)
+}
+
+/// Verify that a restored checkpoint version matches the original rank
+/// state bit-for-bit (used by tests and the failure_recovery example).
+pub fn verify_against(dir: &Path, state: &RankState) -> anyhow::Result<()> {
+    verify_files_against(&read_version_dir(dir)?, state)
 }
 
 /// Integrity check without reference state: footer magic, trailer parse,

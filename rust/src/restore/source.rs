@@ -10,20 +10,28 @@
 //! consumers by entry — instead of materializing whole files, and the
 //! per-entry accessors reassemble payloads through positioned reads
 //! exactly as the flush pool scattered them.
+//!
+//! The source is tier-agnostic: it reads through [`storage::ReadAt`],
+//! so the same parser restores a checkpoint out of a real file OR out
+//! of the in-memory host-cache tier ([`storage::Backend::open`]) — the
+//! read-side mirror of the write-side tier pipeline.
+//!
+//! [`storage::ReadAt`]: crate::storage::ReadAt
+//! [`storage::Backend::open`]: crate::storage::Backend::open
 
 use std::fs::File;
-use std::os::unix::fs::FileExt;
 use std::path::Path;
 
 use crate::provider::layout::{FileLayout, FOOTER_BYTES};
 use crate::provider::{Bytes, Chunk};
+use crate::storage::ReadAt;
 
 /// Default read granularity (matches the engine's default chunking).
-const DEFAULT_CHUNK_BYTES: usize = 4 << 20;
+pub(crate) const DEFAULT_CHUNK_BYTES: usize = 4 << 20;
 
 /// A readable view over one checkpoint file's layout + payload extents.
 pub struct ChunkSource {
-    file: File,
+    reader: Box<dyn ReadAt>,
     layout: FileLayout,
     chunk_bytes: usize,
     /// Stream position: (entry index, extent index, byte offset within
@@ -42,19 +50,26 @@ impl ChunkSource {
     /// Open with an explicit streaming granularity.
     pub fn with_chunk_bytes(path: &Path, chunk_bytes: usize)
         -> anyhow::Result<ChunkSource> {
-        let file = File::open(path)?;
-        let len = file.metadata()?.len();
-        anyhow::ensure!(len >= FOOTER_BYTES, "{path:?}: too short");
+        Self::from_reader(Box::new(File::open(path)?), chunk_bytes)
+            .map_err(|e| anyhow::anyhow!("{path:?}: {e:#}"))
+    }
+
+    /// Build over any positioned-read surface (a tier backend's
+    /// [`crate::storage::Backend::open`] handle, a plain file, ...).
+    pub fn from_reader(reader: Box<dyn ReadAt>, chunk_bytes: usize)
+        -> anyhow::Result<ChunkSource> {
+        let len = reader.len()?;
+        anyhow::ensure!(len >= FOOTER_BYTES, "checkpoint too short");
         let mut footer = [0u8; FOOTER_BYTES as usize];
-        file.read_exact_at(&mut footer, len - FOOTER_BYTES)?;
+        reader.read_exact_at(&mut footer, len - FOOTER_BYTES)?;
         let (toff, tlen) = FileLayout::decode_footer(&footer)?;
         anyhow::ensure!(toff + tlen + FOOTER_BYTES <= len,
-                        "{path:?}: trailer out of range");
+                        "trailer out of range");
         let mut trailer = vec![0u8; tlen as usize];
-        file.read_exact_at(&mut trailer, toff)?;
+        reader.read_exact_at(&mut trailer, toff)?;
         let layout = FileLayout::decode_trailer(&trailer)?;
         Ok(ChunkSource {
-            file,
+            reader,
             layout,
             chunk_bytes: chunk_bytes.max(1),
             entry_idx: 0,
@@ -94,7 +109,7 @@ impl ChunkSource {
             let take = (ext_len - self.extent_pos)
                 .min(self.chunk_bytes as u64);
             let mut buf = vec![0u8; take as usize];
-            self.file
+            self.reader
                 .read_exact_at(&mut buf, ext_off + self.extent_pos)?;
             let chunk = Chunk {
                 offset: ext_off + self.extent_pos,
@@ -111,7 +126,7 @@ impl ChunkSource {
         let mut out = Vec::with_capacity(entry.total_len() as usize);
         for (off, len) in &entry.extents {
             let mut part = vec![0u8; *len as usize];
-            self.file.read_exact_at(&mut part, *off)?;
+            self.reader.read_exact_at(&mut part, *off)?;
             out.extend_from_slice(&part);
         }
         Ok(out)

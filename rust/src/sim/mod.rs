@@ -43,6 +43,13 @@ pub struct SimConfig {
     pub interval: u64,
     /// Pinned host cache per rank, bytes (paper: 80 GB/node = 20 GB/rank).
     pub host_cache_bytes: u64,
+    /// Optional deeper storage tier (the real plane's `TierPipeline`
+    /// drain): when set, a flushed checkpoint must ALSO drain from the
+    /// landing tier to the terminal tier at this per-rank bandwidth
+    /// (bytes/s) before it counts as globally persistent. Purely a
+    /// background tail — training blocking is unaffected, which is
+    /// exactly the tiered-persistence claim.
+    pub tier_drain_bps: Option<f64>,
 }
 
 impl SimConfig {
@@ -56,11 +63,18 @@ impl SimConfig {
             iterations,
             interval,
             host_cache_bytes: 20 << 30,
+            tier_drain_bps: None,
         }
     }
 
     pub fn with_dp(mut self, dp: usize) -> Self {
         self.par.dp = dp;
+        self
+    }
+
+    /// Add a terminal-tier drain at `bps` bytes/s per rank.
+    pub fn with_tier_drain(mut self, bps: f64) -> Self {
+        self.tier_drain_bps = Some(bps);
         self
     }
 }
@@ -193,6 +207,8 @@ fn simulate_core(kind: EngineKind, em: EngineModel, cfg: &SimConfig)
     // resident in the pinned cache)
     let mut t = 0.0f64;
     let mut flush_done_at = 0.0f64;
+    // tiered persistence: the terminal-tier drain trails the flush
+    let mut drain_done_at = 0.0f64;
     let mut cache_frees_at: Vec<(f64, u64)> = Vec::new(); // (time, bytes)
     let mut cache_used = 0u64;
     // lazy engines: D2H completion time of the pending snapshot
@@ -329,6 +345,20 @@ fn simulate_core(kind: EngineKind, em: EngineModel, cfg: &SimConfig)
                 flush_done_at = flush_done_at.max(start) + flush_work;
                 cache_frees_at.push((flush_done_at, load.dev_bytes));
             }
+
+            // tier pipeline: the checkpoint just flushed still has to
+            // drain to the terminal tier (background only — never
+            // blocks). A fully-blocking engine finished its write at
+            // the current `t` (it never populates flush_done_at).
+            if let Some(bps) = cfg.tier_drain_bps {
+                let flushed_at = if em.fully_blocking {
+                    t
+                } else {
+                    flush_done_at
+                };
+                drain_done_at = drain_done_at.max(flushed_at)
+                    + payload as f64 / bps;
+            }
         }
 
         total_blocked += blocked;
@@ -337,6 +367,9 @@ fn simulate_core(kind: EngineKind, em: EngineModel, cfg: &SimConfig)
     // drain the background tail
     if flush_done_at > t {
         t = flush_done_at;
+    }
+    if drain_done_at > t {
+        t = drain_done_at;
     }
     if pending_d2h_done > t {
         t = pending_d2h_done;
@@ -460,5 +493,24 @@ mod tests {
                          &SimConfig::paper("7B", 10, 0));
         assert_eq!(r.checkpoints, 0);
         assert!(r.iters.iter().all(|i| i.blocked_s == 0.0));
+    }
+
+    #[test]
+    fn tier_drain_extends_tail_but_never_blocks_training() {
+        // The tiered-persistence claim in the sim plane: a slow
+        // terminal-tier drain lengthens the background tail, not the
+        // per-iteration blocked time.
+        let base = SimConfig::paper("7B", 15, 1);
+        let fast = simulate(EngineKind::DataStatesLlm, &base);
+        let tiered = simulate(
+            EngineKind::DataStatesLlm,
+            &base.clone().with_tier_drain(0.2e9), // slow PFS drain
+        );
+        assert!(tiered.total_s > fast.total_s,
+                "tiered {:.1} vs flat {:.1}", tiered.total_s, fast.total_s);
+        assert!((tiered.mean_blocked_s - fast.mean_blocked_s).abs()
+                    < 1e-9,
+                "drain must not change blocking: {:.4} vs {:.4}",
+                tiered.mean_blocked_s, fast.mean_blocked_s);
     }
 }

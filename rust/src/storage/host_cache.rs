@@ -1,0 +1,324 @@
+//! In-memory storage tier: the node-local burst cache.
+//!
+//! Stands in for the fast volatile tier of the paper's hierarchy (pinned
+//! host memory / node-local NVMe burst buffer): checkpoint files land
+//! here first so `wait_durable(HostCache)` resolves long before the
+//! parallel-FS drain completes, and the trainer can resume mutating
+//! state (or even restart in-process) against this tier. Copies are
+//! evicted once the pipeline drained them to the next tier.
+//!
+//! An optional **capacity** bounds residency via ADMISSION backpressure:
+//! writes themselves never block (a version already landing must always
+//! be able to finish, reach the drain worker, and get evicted — blocking
+//! writers would entangle the flush pool and the pump in wait cycles).
+//! Instead the tier reports `(resident, capacity)` through
+//! [`Backend::capacity_status`], and the engine pump defers admitting
+//! NEW checkpoint versions while the cache is over capacity, waking when
+//! the drain worker evicts (see `TierPipeline`). The bound is soft —
+//! admitted versions may overshoot — but residency cannot grow
+//! unboundedly and no component ever waits on a cycle.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use super::{Backend, BackendFile, ReadAt, Throttle, TierKind};
+
+#[derive(Default)]
+struct Entry {
+    data: RwLock<Vec<u8>>,
+}
+
+struct CacheInner {
+    files: Mutex<HashMap<String, Arc<Entry>>>,
+    /// Total bytes across all entries, maintained incrementally so the
+    /// pump's per-wakeup admission check is O(1) and lock-free.
+    resident: AtomicU64,
+    capacity: Option<usize>,
+    throttle: Option<Arc<Throttle>>,
+}
+
+/// The in-memory tier. All files live in one map keyed by tier-relative
+/// path.
+pub struct HostCache {
+    inner: Arc<CacheInner>,
+}
+
+impl Default for HostCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostCache {
+    pub fn new() -> HostCache {
+        Self::build(None, None)
+    }
+
+    /// Cap the tier's aggregate write bandwidth.
+    pub fn throttled(bps: f64) -> HostCache {
+        Self::build(Some(bps), None)
+    }
+
+    /// Bound residency at `bytes` (admission backpressure against a
+    /// slow drain; see the module docs).
+    pub fn with_capacity(bytes: usize) -> HostCache {
+        Self::build(None, Some(bytes))
+    }
+
+    pub fn build(throttle_bps: Option<f64>, capacity: Option<usize>)
+        -> HostCache {
+        HostCache {
+            inner: Arc::new(CacheInner {
+                files: Mutex::new(HashMap::new()),
+                resident: AtomicU64::new(0),
+                capacity,
+                throttle: throttle_bps.map(|b| Arc::new(Throttle::new(b))),
+            }),
+        }
+    }
+
+    /// Bytes currently resident across all cached files.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.resident.load(Ordering::Acquire)
+    }
+
+    fn entry(&self, rel: &str) -> Option<Arc<Entry>> {
+        self.inner.files.lock().unwrap().get(rel).cloned()
+    }
+}
+
+struct CacheFile {
+    entry: Arc<Entry>,
+    inner: Arc<CacheInner>,
+}
+
+impl BackendFile for CacheFile {
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        if let Some(t) = &self.inner.throttle {
+            t.acquire(data.len() as u64);
+        }
+        let mut buf = self.entry.data.write().unwrap();
+        let end = offset as usize + data.len();
+        if buf.len() < end {
+            self.inner
+                .resident
+                .fetch_add((end - buf.len()) as u64, Ordering::AcqRel);
+            buf.resize(end, 0);
+        }
+        buf[offset as usize..end].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn finalize(&self) -> anyhow::Result<()> {
+        // memory is as durable as this tier gets
+        Ok(())
+    }
+}
+
+struct CacheReader {
+    entry: Arc<Entry>,
+}
+
+impl ReadAt for CacheReader {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+        -> anyhow::Result<()> {
+        let data = self.entry.data.read().unwrap();
+        let end = offset as usize + buf.len();
+        anyhow::ensure!(
+            end <= data.len(),
+            "host-cache read past EOF ({} > {})",
+            end,
+            data.len()
+        );
+        buf.copy_from_slice(&data[offset as usize..end]);
+        Ok(())
+    }
+
+    fn len(&self) -> anyhow::Result<u64> {
+        Ok(self.entry.data.read().unwrap().len() as u64)
+    }
+}
+
+impl Backend for HostCache {
+    fn kind(&self) -> TierKind {
+        TierKind::HostCache
+    }
+
+    fn create(&self, rel: &str) -> anyhow::Result<Box<dyn BackendFile>> {
+        let entry = Arc::new(Entry::default());
+        let displaced = self
+            .inner
+            .files
+            .lock()
+            .unwrap()
+            .insert(rel.to_string(), entry.clone());
+        if let Some(old) = displaced {
+            // create truncates: the overwritten bytes are gone
+            let len = old.data.read().unwrap().len() as u64;
+            self.inner.resident.fetch_sub(len, Ordering::AcqRel);
+        }
+        Ok(Box::new(CacheFile { entry, inner: self.inner.clone() }))
+    }
+
+    fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
+        let entry = self
+            .entry(rel)
+            .ok_or_else(|| anyhow::anyhow!("host-cache: no file {rel}"))?;
+        Ok(Box::new(CacheReader { entry }))
+    }
+
+    fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let prefix = format!("{rel_dir}/");
+        let mut out: Vec<String> = self
+            .inner
+            .files
+            .lock()
+            .unwrap()
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix))
+            .filter(|rest| !rest.contains('/'))
+            .map(|rest| rest.to_string())
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    fn list_dirs(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let prefix = if rel_dir.is_empty() {
+            String::new()
+        } else {
+            format!("{rel_dir}/")
+        };
+        let mut out: Vec<String> = self
+            .inner
+            .files
+            .lock()
+            .unwrap()
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix))
+            .filter_map(|rest| {
+                rest.find('/').map(|i| rest[..i].to_string())
+            })
+            .collect();
+        out.sort();
+        out.dedup();
+        Ok(out)
+    }
+
+    fn remove(&self, rel: &str) -> anyhow::Result<()> {
+        let entry = self
+            .inner
+            .files
+            .lock()
+            .unwrap()
+            .remove(rel)
+            .ok_or_else(|| anyhow::anyhow!("host-cache: no file {rel}"))?;
+        let len = entry.data.read().unwrap().len() as u64;
+        self.inner.resident.fetch_sub(len, Ordering::AcqRel);
+        Ok(())
+    }
+
+    fn rename(&self, from: &str, to: &str) -> anyhow::Result<()> {
+        let mut files = self.inner.files.lock().unwrap();
+        let entry = files
+            .remove(from)
+            .ok_or_else(|| anyhow::anyhow!("host-cache: no file {from}"))?;
+        if let Some(old) = files.insert(to.to_string(), entry) {
+            // replaced file's bytes are gone
+            let len = old.data.read().unwrap().len() as u64;
+            self.inner.resident.fetch_sub(len, Ordering::AcqRel);
+        }
+        Ok(())
+    }
+
+    fn truncate(&self, rel: &str, len: u64) -> anyhow::Result<()> {
+        let entry = self
+            .entry(rel)
+            .ok_or_else(|| anyhow::anyhow!("host-cache: no file {rel}"))?;
+        let mut buf = entry.data.write().unwrap();
+        if (len as usize) < buf.len() {
+            self.inner
+                .resident
+                .fetch_sub(buf.len() as u64 - len, Ordering::AcqRel);
+            buf.truncate(len as usize);
+        }
+        Ok(())
+    }
+
+    fn exists(&self, rel: &str) -> bool {
+        self.inner.files.lock().unwrap().contains_key(rel)
+    }
+
+    fn capacity_status(&self) -> Option<(u64, u64)> {
+        self.inner.capacity.map(|cap| {
+            (self.inner.resident.load(Ordering::Acquire), cap as u64)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_list_roundtrip() {
+        let hc = HostCache::new();
+        let f = hc.create("v000003/layer.pt").unwrap();
+        f.write_at(8, &[2u8; 8]).unwrap();
+        f.write_at(0, &[1u8; 8]).unwrap();
+        f.finalize().unwrap();
+        let r = hc.open("v000003/layer.pt").unwrap();
+        assert_eq!(r.len().unwrap(), 16);
+        let mut buf = [0u8; 16];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf[..8], &[1u8; 8]);
+        assert_eq!(&buf[8..], &[2u8; 8]);
+        assert_eq!(hc.list("v000003").unwrap(),
+                   vec!["layer.pt".to_string()]);
+        assert!(hc.list("v000004").unwrap().is_empty());
+        assert_eq!(hc.list_dirs("").unwrap(),
+                   vec!["v000003".to_string()]);
+        assert_eq!(hc.resident_bytes(), 16);
+    }
+
+    #[test]
+    fn truncated_file_reads_fail_past_eof() {
+        let hc = HostCache::new();
+        let f = hc.create("x").unwrap();
+        f.write_at(0, &[9u8; 64]).unwrap();
+        hc.truncate("x", 10).unwrap();
+        let r = hc.open("x").unwrap();
+        let mut buf = [0u8; 20];
+        assert!(r.read_exact_at(&mut buf, 0).is_err());
+        let mut ok = [0u8; 10];
+        r.read_exact_at(&mut ok, 0).unwrap();
+    }
+
+    #[test]
+    fn eviction_removes_entry() {
+        let hc = HostCache::new();
+        hc.create("a").unwrap().write_at(0, &[1]).unwrap();
+        assert!(hc.exists("a"));
+        hc.remove("a").unwrap();
+        assert!(!hc.exists("a"));
+        assert!(hc.open("a").is_err());
+        assert!(hc.remove("a").is_err());
+    }
+
+    #[test]
+    fn capacity_status_reports_residency_and_never_blocks_writes() {
+        let hc = HostCache::with_capacity(1024);
+        assert_eq!(hc.capacity_status(), Some((0, 1024)));
+        let f = hc.create("v1/a").unwrap();
+        // writes never block, even past capacity (admission-level
+        // backpressure lives in the pump, not here)
+        f.write_at(0, &[0u8; 2048]).unwrap();
+        f.finalize().unwrap();
+        assert_eq!(hc.capacity_status(), Some((2048, 1024)));
+        hc.remove("v1/a").unwrap();
+        assert_eq!(hc.capacity_status(), Some((0, 1024)));
+        // unbounded caches report no status
+        assert_eq!(HostCache::new().capacity_status(), None);
+    }
+}

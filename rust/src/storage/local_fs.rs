@@ -1,0 +1,173 @@
+//! Filesystem-backed storage tier.
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::{Backend, BackendFile, ReadAt, Throttle, TierKind};
+
+/// A storage tier rooted at a directory of a real filesystem — the
+/// terminal (durable) tier in most pipelines. `finalize` is an fsync.
+pub struct LocalFs {
+    root: PathBuf,
+    throttle: Option<Arc<Throttle>>,
+}
+
+impl LocalFs {
+    pub fn new(root: impl Into<PathBuf>) -> LocalFs {
+        LocalFs { root: root.into(), throttle: None }
+    }
+
+    /// Cap the tier's aggregate write bandwidth (contention studies).
+    pub fn throttled(root: impl Into<PathBuf>, bps: f64) -> LocalFs {
+        LocalFs {
+            root: root.into(),
+            throttle: Some(Arc::new(Throttle::new(bps))),
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn abs(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+struct LocalFile {
+    file: File,
+    throttle: Option<Arc<Throttle>>,
+}
+
+impl BackendFile for LocalFile {
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        if let Some(t) = &self.throttle {
+            t.acquire(data.len() as u64);
+        }
+        self.file.write_all_at(data, offset)?;
+        Ok(())
+    }
+
+    fn finalize(&self) -> anyhow::Result<()> {
+        self.file.sync_all()?;
+        Ok(())
+    }
+}
+
+impl Backend for LocalFs {
+    fn kind(&self) -> TierKind {
+        TierKind::LocalFs
+    }
+
+    fn create(&self, rel: &str) -> anyhow::Result<Box<dyn BackendFile>> {
+        let path = self.abs(rel);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(Box::new(LocalFile {
+            file: File::create(path)?,
+            throttle: self.throttle.clone(),
+        }))
+    }
+
+    fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
+        Ok(Box::new(File::open(self.abs(rel))?))
+    }
+
+    fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let dir = self.abs(rel_dir);
+        if !dir.exists() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                out.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn list_dirs(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let dir = if rel_dir.is_empty() {
+            self.root.clone()
+        } else {
+            self.abs(rel_dir)
+        };
+        if !dir.exists() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_dir() {
+                out.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn remove(&self, rel: &str) -> anyhow::Result<()> {
+        std::fs::remove_file(self.abs(rel))?;
+        Ok(())
+    }
+
+    fn rename(&self, from: &str, to: &str) -> anyhow::Result<()> {
+        std::fs::rename(self.abs(from), self.abs(to))?;
+        Ok(())
+    }
+
+    fn truncate(&self, rel: &str, len: u64) -> anyhow::Result<()> {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(self.abs(rel))?;
+        f.set_len(len)?;
+        Ok(())
+    }
+
+    fn exists(&self, rel: &str) -> bool {
+        self.abs(rel).is_file()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_write_finalize_open_roundtrip() {
+        let dir = crate::util::TempDir::new("localfs").unwrap();
+        let fs = LocalFs::new(dir.path());
+        let f = fs.create("v000001/a.ds").unwrap();
+        f.write_at(4, b"tail").unwrap();
+        f.write_at(0, b"head").unwrap();
+        f.finalize().unwrap();
+        assert!(fs.exists("v000001/a.ds"));
+        let r = fs.open("v000001/a.ds").unwrap();
+        assert_eq!(r.len().unwrap(), 8);
+        let mut buf = [0u8; 8];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"headtail");
+        assert_eq!(fs.list("v000001").unwrap(), vec!["a.ds".to_string()]);
+        assert!(fs.list("v000099").unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncate_and_remove() {
+        let dir = crate::util::TempDir::new("localfs2").unwrap();
+        let fs = LocalFs::new(dir.path());
+        let f = fs.create("x").unwrap();
+        f.write_at(0, &[7u8; 100]).unwrap();
+        f.finalize().unwrap();
+        fs.truncate("x", 10).unwrap();
+        assert_eq!(fs.open("x").unwrap().len().unwrap(), 10);
+        fs.remove("x").unwrap();
+        assert!(!fs.exists("x"));
+        assert!(fs.open("x").is_err());
+    }
+}

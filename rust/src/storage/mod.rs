@@ -1,0 +1,250 @@
+//! Composable storage tiers (paper §V-B, TierCheck/ByteCheckpoint-style
+//! tiered persistence).
+//!
+//! The paper's checkpoint path is hierarchical — GPU → pinned host →
+//! local storage → parallel FS — but a flat flush pool collapses
+//! everything below the staging pump into one filesystem, making
+//! "persisted" a single boolean. This module splits the persistence
+//! plane into **tiers**:
+//!
+//! - [`Backend`] — the uniform storage surface
+//!   (`create`/`write_at`/`finalize`/`open`/`read_at`/`list`) every tier
+//!   implements. [`LocalFs`] is a real filesystem rooted at a directory;
+//!   [`HostCache`] is an in-memory store standing in for the node-local
+//!   burst tier.
+//! - [`Throttle`] — an optional per-tier bandwidth cap, so the harness
+//!   can reproduce the paper's storage-I/O-contention scenarios (§V-B)
+//!   on a machine whose real disks are too fast to contend.
+//! - [`TierPipeline`] — lands checkpoint chunks on the fastest tier and
+//!   asynchronously drains finalized files tier-to-tier; per-version
+//!   durability is reported tier by tier through the checkpoint session
+//!   (`CheckpointTicket::wait_durable`), and a per-rank cross-tier
+//!   manifest records where each version lives so restore can resolve
+//!   the newest complete copy from the nearest tier.
+
+pub mod host_cache;
+pub mod local_fs;
+pub mod pipeline;
+
+pub use host_cache::HostCache;
+pub use local_fs::LocalFs;
+pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
+                   VersionDrainJob};
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Which class of storage a tier is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierKind {
+    /// In-memory node-local cache: fastest, volatile.
+    HostCache,
+    /// A real filesystem directory: the durable (terminal) tier.
+    LocalFs,
+}
+
+impl TierKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TierKind::HostCache => "host-cache",
+            TierKind::LocalFs => "local-fs",
+        }
+    }
+
+    /// Parse a CLI tier name ("hostcache"/"host-cache", "localfs"/
+    /// "local-fs"/"fs").
+    pub fn parse(s: &str) -> Option<TierKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hostcache" | "host-cache" | "host" | "cache" => {
+                Some(TierKind::HostCache)
+            }
+            "localfs" | "local-fs" | "fs" | "disk" => Some(TierKind::LocalFs),
+            _ => None,
+        }
+    }
+}
+
+/// Declarative tier description used by `EngineConfig`: the pipeline is
+/// built from a `Vec<TierSpec>` ordered fastest-first; the last spec is
+/// the terminal (most durable) tier.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    pub kind: TierKind,
+    /// Optional write-bandwidth cap in bytes/s (I/O-contention studies).
+    pub throttle_bps: Option<f64>,
+}
+
+impl TierSpec {
+    pub fn host_cache() -> TierSpec {
+        TierSpec { kind: TierKind::HostCache, throttle_bps: None }
+    }
+
+    pub fn local_fs() -> TierSpec {
+        TierSpec { kind: TierKind::LocalFs, throttle_bps: None }
+    }
+
+    /// Cap this tier's write bandwidth at `bps` bytes/s.
+    pub fn throttled(mut self, bps: f64) -> TierSpec {
+        self.throttle_bps = Some(bps);
+        self
+    }
+}
+
+/// Positioned read surface shared by the restore path and tier drains.
+/// `std::fs::File` implements it directly; [`Backend::open`] returns one
+/// per stored file, which is what lets `restore::ChunkSource` parse a
+/// checkpoint out of ANY tier, including the in-memory host cache.
+#[allow(clippy::len_without_is_empty)]
+pub trait ReadAt: Send {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+        -> anyhow::Result<()>;
+    fn len(&self) -> anyhow::Result<u64>;
+}
+
+impl ReadAt for std::fs::File {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+        -> anyhow::Result<()> {
+        use std::os::unix::fs::FileExt;
+        FileExt::read_exact_at(self, buf, offset)?;
+        Ok(())
+    }
+
+    fn len(&self) -> anyhow::Result<u64> {
+        Ok(self.metadata()?.len())
+    }
+}
+
+/// A file being written on one tier. Positioned writes at
+/// provider-assigned offsets (no shared cursor, writers never contend on
+/// position), then one `finalize` making it as durable as the tier gets
+/// (fsync on a filesystem, a no-op marker in memory).
+pub trait BackendFile: Send + Sync {
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()>;
+    fn finalize(&self) -> anyhow::Result<()>;
+}
+
+/// One storage tier. Paths are tier-relative, '/'-separated
+/// (`"v000042/layer_00.pt"`); the backend owns its own root.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> TierKind;
+
+    /// Create (truncate) a file for writing.
+    fn create(&self, rel: &str) -> anyhow::Result<Box<dyn BackendFile>>;
+
+    /// Open a stored file for positioned reads.
+    fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>>;
+
+    /// File names directly under a tier-relative directory (empty if the
+    /// directory does not exist — callers fall through to other tiers).
+    fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>>;
+
+    /// Directory names directly under a tier-relative directory (`""` =
+    /// the tier root) — version discovery across tiers.
+    fn list_dirs(&self, rel_dir: &str) -> anyhow::Result<Vec<String>>;
+
+    /// Remove a stored file (host-cache eviction after drain).
+    fn remove(&self, rel: &str) -> anyhow::Result<()>;
+
+    /// Atomically replace `to` with `from` (manifest rewrites publish
+    /// through a temp file + rename so a crash can never leave a torn
+    /// manifest).
+    fn rename(&self, from: &str, to: &str) -> anyhow::Result<()>;
+
+    /// Truncate a stored file (torn-file injection for recovery tests —
+    /// the structural stand-in for a crash mid-flush).
+    fn truncate(&self, rel: &str, len: u64) -> anyhow::Result<()>;
+
+    fn exists(&self, rel: &str) -> bool;
+
+    /// `(resident_bytes, capacity_bytes)` for capacity-bounded tiers —
+    /// the engine pump defers admitting new versions while the landing
+    /// tier reports itself over capacity. `None` = unbounded.
+    fn capacity_status(&self) -> Option<(u64, u64)> {
+        None
+    }
+}
+
+/// Token-bucket-style bandwidth cap shared by every writer of one tier:
+/// each write reserves `bytes / bps` seconds on a single virtual
+/// transfer clock and sleeps until its reservation elapses, so the
+/// tier's aggregate write rate never exceeds `bps` no matter how many
+/// threads push into it.
+#[derive(Debug)]
+pub struct Throttle {
+    bps: f64,
+    epoch: Instant,
+    /// Virtual time (seconds since epoch) when the tier is next free.
+    next_free_s: Mutex<f64>,
+}
+
+impl Throttle {
+    pub fn new(bps: f64) -> Throttle {
+        Throttle {
+            bps: bps.max(1.0),
+            epoch: Instant::now(),
+            next_free_s: Mutex::new(0.0),
+        }
+    }
+
+    pub fn bps(&self) -> f64 {
+        self.bps
+    }
+
+    /// Block until `bytes` may pass at the configured rate.
+    pub fn acquire(&self, bytes: u64) {
+        let now = self.epoch.elapsed().as_secs_f64();
+        let done_at = {
+            let mut next = self.next_free_s.lock().unwrap();
+            let start = next.max(now);
+            *next = start + bytes as f64 / self.bps;
+            *next
+        };
+        let wait = done_at - now;
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_kind_parse_and_label() {
+        assert_eq!(TierKind::parse("hostcache"), Some(TierKind::HostCache));
+        assert_eq!(TierKind::parse("host-cache"), Some(TierKind::HostCache));
+        assert_eq!(TierKind::parse("localfs"), Some(TierKind::LocalFs));
+        assert_eq!(TierKind::parse("fs"), Some(TierKind::LocalFs));
+        assert_eq!(TierKind::parse("nvme"), None);
+        assert_eq!(TierKind::HostCache.label(), "host-cache");
+    }
+
+    #[test]
+    fn throttle_enforces_rate() {
+        // 1 MB at 10 MB/s must take >= ~100 ms across two writers.
+        let th = std::sync::Arc::new(Throttle::new(10e6));
+        let t0 = Instant::now();
+        let h = {
+            let th = th.clone();
+            std::thread::spawn(move || th.acquire(500_000))
+        };
+        th.acquire(500_000);
+        h.join().unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.09,
+                "throttle too permissive: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn file_read_at_via_trait() {
+        let dir = crate::util::TempDir::new("storage-readat").unwrap();
+        let p = dir.path().join("f");
+        std::fs::write(&p, b"hello world").unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        let r: &dyn ReadAt = &f;
+        assert_eq!(r.len().unwrap(), 11);
+        let mut buf = [0u8; 5];
+        r.read_exact_at(&mut buf, 6).unwrap();
+        assert_eq!(&buf, b"world");
+    }
+}

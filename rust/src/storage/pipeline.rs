@@ -1,0 +1,784 @@
+//! The tier pipeline: land fast, drain deep, restore from the nearest
+//! copy.
+//!
+//! A [`TierPipeline`] owns an ordered stack of [`Backend`]s, fastest
+//! first; the last is the **terminal** (most durable) tier. The engine's
+//! pump lands checkpoint chunks on the landing (fastest) tier exactly as
+//! it used to land them on a flat filesystem; once every file of a
+//! version is finalized there, the pump submits a [`VersionDrainJob`]
+//! and the pipeline's drain worker copies the version tier-to-tier in
+//! the background — event-driven off its job channel, no sleep-polling —
+//! marking the checkpoint session durable at each tier as the copy
+//! lands (`CheckpointTicket::wait_durable`), evicting host-cache copies
+//! once drained, and recording residency in the per-rank cross-tier
+//! [`Manifest`].
+//!
+//! Restore resolves the other way: [`TierPipeline::read_version`] reads
+//! each file from the NEAREST (fastest) tier holding it and falls
+//! through to deeper tiers on missing or torn copies;
+//! [`TierPipeline::restore_newest`] walks versions newest-first until
+//! one restores completely.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt, TierKind,
+            TierSpec};
+use crate::engine::ticket::CkptSession;
+use crate::metrics::{Tier, Timeline};
+use crate::restore::RestoredFile;
+use crate::util::channel::{Receiver, Sender};
+
+/// Tier-relative name of the persisted manifest on the terminal tier.
+const MANIFEST_FILE: &str = "MANIFEST";
+
+/// A restored checkpoint version: every file of the version, each read
+/// from its nearest readable tier.
+pub type RestoredVersion =
+    std::collections::HashMap<String, RestoredFile>;
+
+/// One finalized checkpoint version handed to the drain worker by the
+/// engine pump (landing-tier copy complete).
+pub struct VersionDrainJob {
+    pub session: Arc<CkptSession>,
+    /// Wall-clock origin of the checkpoint request, for per-tier
+    /// durability timing.
+    pub requested: Instant,
+    /// Version directory, tier-relative (`"v000042"`).
+    pub dir: String,
+    /// File names within the version directory.
+    pub files: Vec<String>,
+    /// Signalled after evictions and when the drain finishes, so a pump
+    /// parked on admission backpressure wakes to re-check capacity.
+    pub notify: Option<Arc<crate::provider::Notifier>>,
+}
+
+/// Per-version residency: which tiers hold a complete copy.
+#[derive(Debug, Clone)]
+struct VersionRecord {
+    files: Vec<String>,
+    /// `complete[i]` — tier `i` holds every file of this version.
+    complete: Vec<bool>,
+}
+
+/// The per-rank cross-tier manifest: for every checkpoint version, the
+/// file set and the tiers holding a complete copy. Persisted as a small
+/// text file on the terminal tier (rewritten whole on update) so
+/// restarts resolve residency without scanning.
+pub struct Manifest {
+    /// The current pipeline's tier kinds, fastest first — residency
+    /// columns are matched by KIND on load, so a manifest written under
+    /// a different tier config cannot misattribute residency.
+    kinds: Vec<TierKind>,
+    records: Mutex<BTreeMap<u64, VersionRecord>>,
+}
+
+impl Manifest {
+    fn new(kinds: Vec<TierKind>) -> Manifest {
+        Manifest { kinds, records: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Load the persisted manifest from the terminal tier (empty when
+    /// absent or unparsable — residency then falls back to tier scans).
+    fn load(terminal: &dyn Backend, kinds: Vec<TierKind>) -> Manifest {
+        let m = Manifest::new(kinds);
+        if let Ok(reader) = terminal.open(MANIFEST_FILE) {
+            if let Ok(len) = reader.len() {
+                let mut buf = vec![0u8; len as usize];
+                if reader.read_exact_at(&mut buf, 0).is_ok() {
+                    if let Ok(text) = String::from_utf8(buf) {
+                        m.parse_into(&text);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    fn parse_into(&self, text: &str) {
+        // The `tiers` header names the kind of each recorded column;
+        // map columns onto the current stack by kind (each current tier
+        // claimed once, nearest first). Without a header (legacy),
+        // columns map positionally. Unmappable columns are dropped —
+        // restore falls back to per-tier `exists()` scans anyway.
+        let mut col_map: Option<Vec<Option<usize>>> = None;
+        for line in text.lines() {
+            if let Some(labels) = line.strip_prefix("tiers\t") {
+                let mut used = vec![false; self.kinds.len()];
+                col_map = Some(
+                    labels
+                        .split(',')
+                        .map(|label| {
+                            let hit = self.kinds.iter().enumerate().find(
+                                |(i, k)| {
+                                    !used[*i] && k.label() == label.trim()
+                                },
+                            );
+                            hit.map(|(i, _)| {
+                                used[i] = true;
+                                i
+                            })
+                        })
+                        .collect(),
+                );
+            }
+        }
+        let mut records = self.records.lock().unwrap();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty()
+                || line.starts_with('#')
+                || line.starts_with("tiers\t")
+            {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (Some(v), Some(bits), Some(files)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let Ok(version) = v.parse::<u64>() else { continue };
+            let mut complete = vec![false; self.kinds.len()];
+            for (i, c) in bits.chars().enumerate() {
+                if c != '1' {
+                    continue;
+                }
+                let target = match &col_map {
+                    Some(m) => m.get(i).copied().flatten(),
+                    None => (i < complete.len()).then_some(i),
+                };
+                if let Some(t) = target {
+                    complete[t] = true;
+                }
+            }
+            records.insert(
+                version,
+                VersionRecord {
+                    files: files
+                        .split(',')
+                        .filter(|f| !f.is_empty())
+                        .map(|f| f.to_string())
+                        .collect(),
+                    complete,
+                },
+            );
+        }
+    }
+
+    fn encode(&self) -> String {
+        let records = self.records.lock().unwrap();
+        let mut out =
+            String::from("# datastates cross-tier manifest v1\n");
+        let labels: Vec<&str> =
+            self.kinds.iter().map(|k| k.label()).collect();
+        out.push_str(&format!("tiers\t{}\n", labels.join(",")));
+        for (version, rec) in records.iter() {
+            let bits: String = rec
+                .complete
+                .iter()
+                .map(|&c| if c { '1' } else { '0' })
+                .collect();
+            out.push_str(&format!("{version}\t{bits}\t{}\n",
+                                  rec.files.join(",")));
+        }
+        out
+    }
+
+    /// Mark tier `tier` (in)complete for `version`, creating the record
+    /// if needed. A non-empty `files` set that DIFFERS from the
+    /// recorded one means the version was rewritten (e.g. re-taken
+    /// after a restart with a different shard layout): the stale record
+    /// is reset so old completeness flags cannot vouch for files that
+    /// no longer exist.
+    fn set(&self, version: u64, files: &[String], tier: usize,
+           complete: bool) {
+        let mut records = self.records.lock().unwrap();
+        let rec = records.entry(version).or_insert_with(|| VersionRecord {
+            files: files.to_vec(),
+            complete: vec![false; self.kinds.len()],
+        });
+        if !files.is_empty() && rec.files.as_slice() != files {
+            rec.files = files.to_vec();
+            rec.complete.iter_mut().for_each(|c| *c = false);
+        }
+        if tier < rec.complete.len() {
+            rec.complete[tier] = complete;
+        }
+    }
+
+    /// Tier indices holding a complete copy of `version`, nearest first.
+    pub fn lives_on(&self, version: u64) -> Vec<usize> {
+        self.records
+            .lock()
+            .unwrap()
+            .get(&version)
+            .map(|r| {
+                r.complete
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c)
+                    .map(|(i, _)| i)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Recorded file set of `version`.
+    pub fn files(&self, version: u64) -> Option<Vec<String>> {
+        self.records
+            .lock()
+            .unwrap()
+            .get(&version)
+            .map(|r| r.files.clone())
+    }
+
+    /// All recorded versions, ascending.
+    pub fn versions(&self) -> Vec<u64> {
+        self.records.lock().unwrap().keys().copied().collect()
+    }
+}
+
+/// State shared between the pipeline handle and its drain worker (the
+/// worker must not hold the handle itself, or drop/join would cycle).
+struct PipelineShared {
+    tiers: Vec<Arc<dyn Backend>>,
+    manifest: Manifest,
+    timeline: Arc<Timeline>,
+    /// Evict host-cache copies once drained to the next tier.
+    evict_fast: bool,
+    /// Copy granularity for tier-to-tier drains.
+    chunk_bytes: usize,
+    /// Versions submitted to the drain worker and not yet finished
+    /// (admission backpressure uses this to tell "space will free soon"
+    /// from "nothing left to evict").
+    drains_pending: std::sync::atomic::AtomicUsize,
+}
+
+impl PipelineShared {
+    fn terminal(&self) -> &Arc<dyn Backend> {
+        self.tiers.last().expect("pipeline has at least one tier")
+    }
+
+    /// Persist the manifest on the terminal tier, publishing through a
+    /// temp file + rename so a crash mid-rewrite can never leave a torn
+    /// manifest. Failures are reported but non-fatal: the checkpoint
+    /// payload is already durable, and restore falls back to tier scans
+    /// without a manifest.
+    fn persist_manifest(&self) {
+        let text = self.manifest.encode();
+        let tmp = format!("{MANIFEST_FILE}.tmp");
+        let res = self
+            .terminal()
+            .create(&tmp)
+            .and_then(|f| {
+                f.write_at(0, text.as_bytes())?;
+                f.finalize()
+            })
+            .and_then(|()| self.terminal().rename(&tmp, MANIFEST_FILE));
+        if let Err(e) = res {
+            eprintln!("[storage] manifest persist failed: {e:#}");
+        }
+    }
+
+    /// Copy one file from tier `from` to tier `from + 1`.
+    fn drain_file(&self, from: usize, rel: &str,
+                  session: &CkptSession) -> anyhow::Result<u64> {
+        let src = self.tiers[from].open(rel)?;
+        let len = src.len()?;
+        let dst = self.tiers[from + 1].create(rel)?;
+        let start = self.timeline.now_s();
+        // chunk_bytes is clamped >= 1 at construction
+        let mut buf = vec![0u8; self.chunk_bytes.min(len.max(1) as usize)];
+        let mut off = 0u64;
+        while off < len {
+            let take = ((len - off) as usize).min(buf.len());
+            src.read_exact_at(&mut buf[..take], off)?;
+            dst.write_at(off, &buf[..take])?;
+            off += take as u64;
+        }
+        dst.finalize()?;
+        self.timeline
+            .record(Tier::Drain, rel, len, start, self.timeline.now_s());
+        session.progress_counters().add_drained(len);
+        Ok(len)
+    }
+
+    /// Drain one finalized version hop by hop until it reaches the
+    /// terminal tier, marking per-tier durability as each hop lands.
+    fn drain_version(&self, job: VersionDrainJob) {
+        let version = job.session.version();
+        for from in 0..self.tiers.len() - 1 {
+            let to = from + 1;
+            for f in &job.files {
+                let rel = format!("{}/{f}", job.dir);
+                if let Err(e) = self.drain_file(from, &rel, &job.session) {
+                    eprintln!(
+                        "[storage] drain v{version} {} -> {} failed: {e:#}",
+                        self.tiers[from].kind().label(),
+                        self.tiers[to].kind().label()
+                    );
+                    job.session.fail(format!(
+                        "tier drain to {}: {e:#}",
+                        self.tiers[to].kind().label()
+                    ));
+                    return;
+                }
+            }
+            // the hop is complete: evict the volatile copy, record
+            // residency, then resolve this tier's durability future
+            if self.evict_fast
+                && self.tiers[from].kind() == TierKind::HostCache
+            {
+                for f in &job.files {
+                    let rel = format!("{}/{f}", job.dir);
+                    let _ = self.tiers[from].remove(&rel);
+                }
+                self.manifest.set(version, &job.files, from, false);
+            }
+            self.manifest.set(version, &job.files, to, true);
+            // resolve the durability future FIRST — the payload is
+            // already durable; the manifest rewrite is advisory (restore
+            // falls back to tier scans) and must not delay waiters
+            job.session
+                .tier_durable(to, job.requested.elapsed().as_secs_f64());
+            // evictions freed landing-tier space: wake a pump that is
+            // deferring admissions on capacity
+            if let Some(n) = &job.notify {
+                n.notify();
+            }
+            self.persist_manifest();
+        }
+    }
+}
+
+/// The composable tier stack. Single-tier pipelines are degenerate (no
+/// drain worker, landing == terminal) and behave exactly like the old
+/// flat flush path.
+pub struct TierPipeline {
+    shared: Arc<PipelineShared>,
+    drain_tx: Option<Sender<VersionDrainJob>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl TierPipeline {
+    pub fn new(tiers: Vec<Arc<dyn Backend>>, evict_fast: bool,
+               chunk_bytes: usize, timeline: Arc<Timeline>)
+        -> Arc<TierPipeline> {
+        assert!(!tiers.is_empty(), "pipeline needs at least one tier");
+        let kinds: Vec<TierKind> =
+            tiers.iter().map(|t| t.kind()).collect();
+        let manifest =
+            Manifest::load(tiers.last().unwrap().as_ref(), kinds);
+        let shared = Arc::new(PipelineShared {
+            tiers,
+            manifest,
+            timeline,
+            evict_fast,
+            chunk_bytes: chunk_bytes.max(1),
+            drains_pending: std::sync::atomic::AtomicUsize::new(0),
+        });
+        let (drain_tx, worker) = if shared.tiers.len() > 1 {
+            let (tx, rx) =
+                crate::util::channel::unbounded::<VersionDrainJob>();
+            let sh = shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("ds-tier-drain".into())
+                .spawn(move || Self::drain_loop(rx, sh))
+                .expect("spawn tier drain");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+        Arc::new(TierPipeline { shared, drain_tx, worker })
+    }
+
+    /// Degenerate single-tier pipeline (the baselines' flat path).
+    pub fn single(backend: Arc<dyn Backend>, timeline: Arc<Timeline>)
+        -> Arc<TierPipeline> {
+        Self::new(vec![backend], false, 4 << 20, timeline)
+    }
+
+    /// Build from declarative specs. The LAST `LocalFs` spec roots at
+    /// `ckpt_dir` (so on-disk layouts match the flat engine's); any
+    /// earlier filesystem tier gets a `tier{i}` subdirectory.
+    /// `host_cache_capacity` bounds host-cache residency (admission
+    /// backpressure) — applied only when eviction is on AND a deeper
+    /// tier exists, since only the drain worker's evictions ever free
+    /// space; a capacity on a drain-less cache could never be respected.
+    pub fn from_specs(specs: &[TierSpec], ckpt_dir: &Path,
+                      evict_fast: bool, chunk_bytes: usize,
+                      host_cache_capacity: Option<usize>,
+                      timeline: Arc<Timeline>)
+        -> anyhow::Result<Arc<TierPipeline>> {
+        anyhow::ensure!(!specs.is_empty(), "tier stack is empty");
+        let cache_capacity = if evict_fast && specs.len() > 1 {
+            host_cache_capacity
+        } else {
+            None
+        };
+        let last_fs = specs
+            .iter()
+            .rposition(|s| s.kind == TierKind::LocalFs);
+        let mut tiers: Vec<Arc<dyn Backend>> =
+            Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let tier: Arc<dyn Backend> = match spec.kind {
+                TierKind::HostCache => Arc::new(HostCache::build(
+                    spec.throttle_bps,
+                    cache_capacity,
+                )),
+                TierKind::LocalFs => {
+                    let root = if Some(i) == last_fs {
+                        ckpt_dir.to_path_buf()
+                    } else {
+                        ckpt_dir.join(format!("tier{i}"))
+                    };
+                    match spec.throttle_bps {
+                        Some(bps) => Arc::new(LocalFs::throttled(root, bps)),
+                        None => Arc::new(LocalFs::new(root)),
+                    }
+                }
+            };
+            tiers.push(tier);
+        }
+        Ok(Self::new(tiers, evict_fast, chunk_bytes, timeline))
+    }
+
+    fn drain_loop(rx: Receiver<VersionDrainJob>, shared: Arc<PipelineShared>) {
+        use std::sync::atomic::Ordering;
+        // event-driven: parks on the job channel; exits on disconnect
+        // after draining every queued version
+        while let Ok(job) = rx.recv() {
+            let notify = job.notify.clone();
+            shared.drain_version(job);
+            shared.drains_pending.fetch_sub(1, Ordering::AcqRel);
+            if let Some(n) = notify {
+                n.notify();
+            }
+        }
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.shared.tiers.len()
+    }
+
+    pub fn is_multi(&self) -> bool {
+        self.n_tiers() > 1
+    }
+
+    pub fn tiers(&self) -> &[Arc<dyn Backend>] {
+        &self.shared.tiers
+    }
+
+    /// The landing (fastest) tier — where the flush pool writes.
+    pub fn landing(&self) -> &Arc<dyn Backend> {
+        &self.shared.tiers[0]
+    }
+
+    /// The terminal (most durable) tier.
+    pub fn terminal(&self) -> &Arc<dyn Backend> {
+        self.shared.terminal()
+    }
+
+    /// Tier kinds, fastest first (checkpoint sessions index durability
+    /// by this).
+    pub fn tier_kinds(&self) -> Vec<TierKind> {
+        self.shared.tiers.iter().map(|t| t.kind()).collect()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.shared.manifest
+    }
+
+    /// Create a file on the landing tier (the engine flush path).
+    pub fn create_landing(&self, rel: &str)
+        -> anyhow::Result<Box<dyn BackendFile>> {
+        self.landing().create(rel)
+    }
+
+    /// Submit a version whose landing-tier copy is finalized for
+    /// background tier-to-tier draining.
+    pub fn submit_drain(&self, job: VersionDrainJob) -> anyhow::Result<()> {
+        use std::sync::atomic::Ordering;
+        let tx = self
+            .drain_tx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("single-tier pipeline"))?;
+        self.shared.drains_pending.fetch_add(1, Ordering::AcqRel);
+        if let Err(e) = tx.send(job) {
+            self.shared.drains_pending.fetch_sub(1, Ordering::AcqRel);
+            drop(e);
+            anyhow::bail!("tier drain worker dead");
+        }
+        Ok(())
+    }
+
+    /// Versions submitted to the drain worker and not yet finished.
+    pub fn drains_pending(&self) -> usize {
+        self.shared
+            .drains_pending
+            .load(std::sync::atomic::Ordering::Acquire)
+    }
+
+    /// Admission backpressure: false while the landing tier reports
+    /// itself over capacity — the pump should defer NEW versions (it
+    /// wakes on the drain worker's eviction notifications) but never
+    /// stall versions already landing. Unbounded tiers always admit.
+    pub fn landing_admissible(&self) -> bool {
+        match self.landing().capacity_status() {
+            Some((resident, capacity)) => resident < capacity,
+            None => true,
+        }
+    }
+
+    /// Record a version written directly to the terminal tier (the
+    /// degenerate single-tier path, and the engine pump's completion
+    /// path). In-memory only — cheap enough for the pump thread and
+    /// synchronous engines; the manifest file is rewritten by the drain
+    /// worker (multi-tier) and at pipeline drop. A crash loses only the
+    /// manifest, and restore falls back to tier scans.
+    pub fn record_terminal_complete(&self, version: u64, files: &[String]) {
+        let idx = self.n_tiers() - 1;
+        self.shared.manifest.set(version, files, idx, true);
+    }
+
+    /// Rewrite the persisted manifest on the terminal tier now.
+    pub fn persist_manifest(&self) {
+        self.shared.persist_manifest();
+    }
+
+    // ---- restore side -------------------------------------------------
+
+    /// File set of a version: from the manifest when recorded — unless
+    /// a recorded file exists on NO tier (a stale or corrupt record must
+    /// not veto a checkpoint that is intact on disk) — else the union of
+    /// per-tier directory listings.
+    fn version_files(&self, version: u64, dir: &str)
+        -> anyhow::Result<Vec<String>> {
+        if let Some(files) = self.shared.manifest.files(version) {
+            let all_present = !files.is_empty()
+                && files.iter().all(|f| {
+                    let rel = format!("{dir}/{f}");
+                    self.shared.tiers.iter().any(|t| t.exists(&rel))
+                });
+            if all_present {
+                return Ok(files);
+            }
+        }
+        let mut files: Vec<String> = Vec::new();
+        for tier in &self.shared.tiers {
+            for f in tier.list(dir)? {
+                if !files.contains(&f) {
+                    files.push(f);
+                }
+            }
+        }
+        files.sort();
+        Ok(files)
+    }
+
+    /// Read one checkpoint file from the nearest tier holding a readable
+    /// copy, falling through on missing or torn files.
+    pub fn read_file_nearest(&self, rel: &str)
+        -> anyhow::Result<RestoredFile> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for tier in &self.shared.tiers {
+            if !tier.exists(rel) {
+                continue;
+            }
+            match tier
+                .open(rel)
+                .and_then(crate::restore::read_from)
+            {
+                Ok(rf) => return Ok(rf),
+                Err(e) => {
+                    // torn/truncated on this tier: try the next one
+                    last_err = Some(anyhow::anyhow!(
+                        "{rel} on {} tier: {e:#}",
+                        tier.kind().label()
+                    ));
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            anyhow::anyhow!("{rel}: not found on any tier")
+        }))
+    }
+
+    /// Read every file of a checkpoint version, each from its nearest
+    /// readable tier.
+    pub fn read_version(&self, version: u64)
+        -> anyhow::Result<RestoredVersion> {
+        let dir = format!("v{version:06}");
+        let files = self.version_files(version, &dir)?;
+        anyhow::ensure!(!files.is_empty(),
+                        "no files recorded or stored for v{version}");
+        let mut out = RestoredVersion::new();
+        for f in &files {
+            let rf = self.read_file_nearest(&format!("{dir}/{f}"))?;
+            out.insert(f.clone(), rf);
+        }
+        Ok(out)
+    }
+
+    /// Every version known to the pipeline (manifest ∪ tier scans),
+    /// ascending.
+    pub fn versions(&self) -> anyhow::Result<Vec<u64>> {
+        let mut vs = self.shared.manifest.versions();
+        for tier in &self.shared.tiers {
+            for d in tier.list_dirs("")? {
+                if let Some(v) = d
+                    .strip_prefix('v')
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    vs.push(v);
+                }
+            }
+        }
+        vs.sort_unstable();
+        vs.dedup();
+        Ok(vs)
+    }
+
+    /// Restore the newest version with a complete readable copy, walking
+    /// versions newest-first and tiers nearest-first.
+    pub fn restore_newest(&self)
+        -> anyhow::Result<Option<(u64, RestoredVersion)>> {
+        for v in self.versions()?.into_iter().rev() {
+            if let Ok(files) = self.read_version(v) {
+                return Ok(Some((v, files)));
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl Drop for TierPipeline {
+    fn drop(&mut self) {
+        // disconnect the job channel; the worker drains queued versions,
+        // then exits on the disconnect
+        drop(self.drain_tx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        // final manifest rewrite (the in-memory record may be ahead of
+        // the persisted one on single-tier pipelines)
+        if !self.shared.manifest.versions().is_empty() {
+            self.shared.persist_manifest();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_kinds() -> Vec<TierKind> {
+        vec![TierKind::HostCache, TierKind::LocalFs]
+    }
+
+    #[test]
+    fn manifest_roundtrip_through_terminal_tier() {
+        let dir = crate::util::TempDir::new("manifest").unwrap();
+        let fs: Arc<dyn Backend> = Arc::new(LocalFs::new(dir.path()));
+        let m = Manifest::new(two_kinds());
+        m.set(3, &["a.pt".into(), "b.pt".into()], 1, true);
+        m.set(3, &[], 0, true);
+        m.set(7, &["c.pt".into()], 1, true);
+        let text = m.encode();
+        let f = fs.create(MANIFEST_FILE).unwrap();
+        f.write_at(0, text.as_bytes()).unwrap();
+        f.finalize().unwrap();
+
+        let loaded = Manifest::load(fs.as_ref(), two_kinds());
+        assert_eq!(loaded.versions(), vec![3, 7]);
+        assert_eq!(loaded.lives_on(3), vec![0, 1]);
+        assert_eq!(loaded.lives_on(7), vec![1]);
+        assert_eq!(loaded.files(3).unwrap(),
+                   vec!["a.pt".to_string(), "b.pt".to_string()]);
+        assert!(loaded.lives_on(99).is_empty());
+    }
+
+    #[test]
+    fn manifest_tolerates_garbage_lines() {
+        let m = Manifest::new(two_kinds());
+        m.parse_into("# comment\n\nnot-a-version\tx\ty\n5\t01\tf.pt\n");
+        assert_eq!(m.versions(), vec![5]);
+        assert_eq!(m.lives_on(5), vec![1]);
+    }
+
+    #[test]
+    fn manifest_columns_map_by_tier_kind_across_configs() {
+        // written by a single-tier (LocalFs-only) engine...
+        let single = Manifest::new(vec![TierKind::LocalFs]);
+        single.set(4, &["f.pt".into()], 0, true);
+        let text = single.encode();
+
+        // ...read under a two-tier config: the LocalFs column must land
+        // on tier 1, NOT on the volatile host cache at index 0
+        let two = Manifest::new(two_kinds());
+        two.parse_into(&text);
+        assert_eq!(two.lives_on(4), vec![1]);
+
+        // and back: a two-tier manifest read single-tier keeps only the
+        // LocalFs residency
+        let two2 = Manifest::new(two_kinds());
+        two2.set(9, &["g.pt".into()], 0, true);
+        two2.set(9, &[], 1, true);
+        let single2 = Manifest::new(vec![TierKind::LocalFs]);
+        single2.parse_into(&two2.encode());
+        assert_eq!(single2.lives_on(9), vec![0]);
+    }
+
+    #[test]
+    fn single_tier_pipeline_has_no_worker() {
+        let dir = crate::util::TempDir::new("pipe-single").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::single(
+            Arc::new(LocalFs::new(dir.path())), tl);
+        assert!(!p.is_multi());
+        assert_eq!(p.tier_kinds(), vec![TierKind::LocalFs]);
+        assert!(p
+            .submit_drain(VersionDrainJob {
+                session: CkptSession::new(
+                    0,
+                    None,
+                    Arc::new(crate::metrics::ProgressCounters::default()),
+                    Default::default(),
+                    vec![TierKind::LocalFs],
+                ),
+                requested: Instant::now(),
+                dir: "v000000".into(),
+                files: vec![],
+                notify: None,
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn from_specs_roots_terminal_fs_at_ckpt_dir() {
+        let dir = crate::util::TempDir::new("pipe-specs").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::from_specs(
+            &[TierSpec::host_cache(), TierSpec::local_fs()],
+            dir.path(),
+            true,
+            1 << 20,
+            None,
+            tl,
+        )
+        .unwrap();
+        assert!(p.is_multi());
+        assert_eq!(p.tier_kinds(),
+                   vec![TierKind::HostCache, TierKind::LocalFs]);
+        // the terminal tier writes land directly under ckpt_dir
+        let f = p.terminal().create("v000001/x").unwrap();
+        f.write_at(0, b"z").unwrap();
+        f.finalize().unwrap();
+        assert!(dir.path().join("v000001/x").is_file());
+    }
+}

@@ -62,11 +62,26 @@ pub struct TrainLoop<'a> {
     pub engine: &'a mut dyn CheckpointEngine,
     /// Checkpoint every `interval` iterations (0 = never).
     pub interval: u64,
+    /// Storage tier whose durability the tail drain waits for. `None`
+    /// waits for full persistence (the terminal tier). On a tiered
+    /// engine, `Some(TierKind::HostCache)` lets the loop return as soon
+    /// as every version is durable in the host cache — the background
+    /// drain to deeper tiers keeps running in the engine — which is the
+    /// "resume at host-cache durability" mode of TierCheck-style
+    /// frequency sweeps.
+    pub drain_tier: Option<crate::storage::TierKind>,
 }
 
 impl<'a> TrainLoop<'a> {
     pub fn new(engine: &'a mut dyn CheckpointEngine, interval: u64) -> Self {
-        TrainLoop { engine, interval }
+        TrainLoop { engine, interval, drain_tier: None }
+    }
+
+    /// A loop whose tail drain waits only for durability on `tier`.
+    pub fn with_drain_tier(engine: &'a mut dyn CheckpointEngine,
+                           interval: u64,
+                           tier: crate::storage::TierKind) -> Self {
+        TrainLoop { engine, interval, drain_tier: Some(tier) }
     }
 
     /// Run `iterations` steps.
@@ -118,9 +133,17 @@ impl<'a> TrainLoop<'a> {
             }
             report.stats.push(stats);
         }
-        // resolve the tail: every version's persistence future
+        // resolve the tail: every version's durability future — on the
+        // configured tier, or full persistence by default
         for ticket in &tickets {
-            ticket.wait_persisted()?;
+            match self.drain_tier {
+                Some(tier) => {
+                    ticket.wait_durable(tier)?;
+                }
+                None => {
+                    ticket.wait_persisted()?;
+                }
+            }
         }
         report.wall_s = wall0.elapsed().as_secs_f64();
         Ok(report)
