@@ -216,6 +216,7 @@ impl CheckpointEngine for DataStatesOldEngine {
                             },
                             extents: vec![(base,
                                            t.size_bytes() as u64)],
+                            logical: t.logical.clone(),
                         };
                         let (tx, rx) = crate::util::channel::bounded(1);
                         match &t.data {
@@ -250,6 +251,7 @@ impl CheckpointEngine for DataStatesOldEngine {
                                 name: name.clone(),
                                 kind: EntryKind::Object,
                                 extents: Vec::new(),
+                                logical: None,
                             },
                             bytes,
                         ));

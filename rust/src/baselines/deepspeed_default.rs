@@ -73,6 +73,7 @@ impl CheckpointEngine for DeepSpeedDefaultEngine {
                     name: "torch_save_blob".into(),
                     kind: EntryKind::Object,
                     extents: vec![(0, blob.len() as u64)],
+                    logical: None,
                 }],
             };
             let trailer = layout.encode_trailer();

@@ -177,6 +177,7 @@ impl TorchSnapshotEngine {
                     name: "manifest".into(),
                     kind: EntryKind::Object,
                     extents: vec![(0, manifest.len() as u64)],
+                    logical: None,
                 }],
             };
             mf.finalize(&layout, manifest.len() as u64)?;

@@ -124,6 +124,14 @@ pub struct EngineConfig {
     pub writer_threads: usize,
     /// Flush chunk granularity in bytes.
     pub chunk_bytes: usize,
+    /// Coalescing threshold: the pump merges contiguous `Ready` chunks
+    /// of the same entry into single `WriteJob`s, sealing a run once it
+    /// reaches this size (a sealed write may exceed it by at most one
+    /// chunk; chunks already at/over it pass through uncoalesced) — the
+    /// fragmented-small-write pathology of the LLM checkpoint I/O
+    /// studies. `0` disables coalescing (every chunk is its own write,
+    /// the pre-coalescing behavior).
+    pub coalesce_bytes: usize,
     /// Directory checkpoints are written to (the root of the terminal
     /// filesystem tier).
     pub ckpt_dir: std::path::PathBuf,
@@ -147,7 +155,8 @@ impl Default for EngineConfig {
         EngineConfig {
             host_cache_bytes: 1 << 30, // 1 GiB
             writer_threads: 4,
-            chunk_bytes: 4 << 20, // 4 MiB
+            chunk_bytes: 4 << 20,    // 4 MiB
+            coalesce_bytes: 16 << 20, // merge contiguous chunks up to 16 MiB
             ckpt_dir: std::path::PathBuf::from("/tmp/datastates-ckpt"),
             pinned: true,
             direct_io: false,

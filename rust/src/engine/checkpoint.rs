@@ -37,8 +37,9 @@ use crate::config::EngineConfig;
 use crate::metrics::{CkptMetrics, ProgressCounters, Timeline};
 use crate::provider::layout::{plan_fixed_region, LogCursor};
 use crate::provider::{
-    Bytes, ChunkEvent, CompositeProvider, Notifier, ObjectProvider,
-    SerializerPool, StagedTensorProvider, StateProvider, TensorProvider,
+    Bytes, Chunk, ChunkEvent, CompositeProvider, Notifier,
+    ObjectProvider, SerializerPool, StagedTensorProvider, StateProvider,
+    TensorProvider,
 };
 use crate::state::{RankState, StateItem, TensorData};
 use crate::storage::{TierPipeline, VersionDrainJob};
@@ -84,6 +85,143 @@ struct PumpJob {
     dir: String,
     composites: Vec<(CompositeProvider, Arc<LogCursor>)>,
     requested: Instant,
+    /// Coalesced-write ceiling (0 = coalescing off).
+    coalesce_bytes: usize,
+}
+
+/// A write the coalescer decided to issue: either a single chunk passed
+/// through zero-copy, or `merged + 1` file-contiguous chunks
+/// concatenated into one positioned write.
+struct MergedWrite {
+    offset: u64,
+    data: Bytes,
+    label: String,
+    /// Chunks folded into a neighbor (k-chunk run → k-1; 0 = pass-through).
+    merged: u64,
+}
+
+/// One open run of file-contiguous chunks awaiting merge.
+struct Run {
+    start: u64,
+    len: u64,
+    parts: Vec<Bytes>,
+    label: String,
+}
+
+impl Run {
+    fn seal(self) -> MergedWrite {
+        if self.parts.len() == 1 {
+            // single chunk: keep the zero-copy view
+            let data = self.parts.into_iter().next().expect("one part");
+            MergedWrite {
+                offset: self.start,
+                data,
+                label: self.label,
+                merged: 0,
+            }
+        } else {
+            let merged = (self.parts.len() - 1) as u64;
+            let mut buf = Vec::with_capacity(self.len as usize);
+            for p in &self.parts {
+                buf.extend_from_slice(p.as_slice());
+            }
+            MergedWrite {
+                offset: self.start,
+                data: Bytes::from_vec(buf),
+                label: self.label,
+                merged,
+            }
+        }
+    }
+}
+
+/// Per-file write coalescer (§IV, the fragmented-small-write pathology):
+/// provider streams interleave chunks of different tensors round-robin,
+/// so the coalescer keeps a small set of open *runs* — one per
+/// file-contiguous sequence in flight — appends each `Ready` chunk to
+/// the run it extends, and seals a run into a single `WriteJob` once it
+/// reaches `max_bytes` (or at stream exhaustion). Merging copies the
+/// chunk bytes once; passing a lone chunk through stays zero-copy.
+/// A chunk extends a run only when its label matches too: a merged
+/// write carries ONE label into the Fig 15 timeline, so merging across
+/// entry boundaries (tensors are 64-byte aligned and often abut
+/// exactly) would misattribute one tensor's bytes to another.
+struct Coalescer {
+    /// 0 disables coalescing entirely.
+    max_bytes: usize,
+    runs: Vec<Run>,
+}
+
+/// Distinct contiguous runs tracked per file before the oldest is
+/// force-sealed (bounds buffered bytes to ~MAX_OPEN_RUNS × max_bytes).
+/// Must exceed the widest per-file provider round-robin, or the
+/// interleave evicts every run before its tensor's next chunk returns
+/// and nothing ever merges: a transformer unit file is 12 tensor
+/// streams + 1 object stream = 13 in flight.
+const MAX_OPEN_RUNS: usize = 16;
+
+impl Coalescer {
+    fn new(max_bytes: usize) -> Coalescer {
+        Coalescer { max_bytes, runs: Vec::new() }
+    }
+
+    /// Absorb one chunk; returns any writes that became due.
+    fn push(&mut self, chunk: Chunk) -> Vec<MergedWrite> {
+        let len = chunk.data.len() as u64;
+        if self.max_bytes == 0 {
+            return vec![MergedWrite {
+                offset: chunk.offset,
+                data: chunk.data,
+                label: chunk.label,
+                merged: 0,
+            }];
+        }
+        let mut out = Vec::new();
+        if let Some(i) = self
+            .runs
+            .iter()
+            .position(|r| r.start + r.len == chunk.offset
+                          && r.label == chunk.label)
+        {
+            let run = &mut self.runs[i];
+            run.parts.push(chunk.data);
+            run.len += len;
+            if run.len as usize >= self.max_bytes {
+                out.push(self.runs.remove(i).seal());
+            }
+            return out;
+        }
+        if len as usize >= self.max_bytes {
+            // a single chunk already at/over the ceiling: issuing it
+            // now keeps the zero-copy path and keeps `max_bytes` a real
+            // bound (otherwise it would sit buffered until the NEXT
+            // chunk of its tensor arrives, then seal oversized)
+            out.push(MergedWrite {
+                offset: chunk.offset,
+                data: chunk.data,
+                label: chunk.label,
+                merged: 0,
+            });
+            return out;
+        }
+        if self.runs.len() >= MAX_OPEN_RUNS {
+            // bound buffering: seal the oldest run to free a slot
+            out.push(self.runs.remove(0).seal());
+        }
+        self.runs.push(Run {
+            start: chunk.offset,
+            len,
+            parts: vec![chunk.data],
+            label: chunk.label,
+        });
+        out
+    }
+
+    /// Seal every open run (stream exhausted; nothing more can extend
+    /// them).
+    fn flush_all(&mut self) -> Vec<MergedWrite> {
+        std::mem::take(&mut self.runs).into_iter().map(Run::seal).collect()
+    }
 }
 
 /// Pump-side state of one in-flight version.
@@ -94,6 +232,9 @@ struct ActiveCkpt {
     dir: String,
     composites: Vec<(CompositeProvider, Arc<LogCursor>)>,
     files: Vec<Arc<FlushFile>>,
+    /// Per-file coalescer merging file-contiguous chunks into single
+    /// writes.
+    coalescers: Vec<Coalescer>,
     /// Stream exhausted and `finish_issuing` called, per file.
     issuing_done: Vec<bool>,
     /// Trailer + footer written and made tier-durable, per file.
@@ -113,12 +254,16 @@ impl ActiveCkpt {
             ));
         }
         let n = job.composites.len();
+        let coalesce_bytes = job.coalesce_bytes;
         Ok(ActiveCkpt {
             session: job.session,
             requested: job.requested,
             dir: job.dir,
             composites: job.composites,
             files,
+            coalescers: (0..n)
+                .map(|_| Coalescer::new(coalesce_bytes))
+                .collect(),
             issuing_done: vec![false; n],
             finalized: vec![false; n],
         })
@@ -147,19 +292,20 @@ impl ActiveCkpt {
             if !self.issuing_done[fi] {
                 match comp.next_chunk()? {
                     ChunkEvent::Ready(chunk) => {
-                        flush.submit(WriteJob {
-                            file: self.files[fi].clone(),
-                            offset: chunk.offset,
-                            data: chunk.data,
-                            label: chunk.label,
-                            notify: Some(notifier.clone()),
-                            progress: Some(
-                                self.session.progress_counters()),
-                        });
+                        for w in self.coalescers[fi].push(chunk) {
+                            Self::submit(&self.session, &self.files[fi],
+                                         w, flush, notifier);
+                        }
                         progress = true;
                     }
                     ChunkEvent::Blocked => {}
                     ChunkEvent::Exhausted => {
+                        // seal every buffered run BEFORE closing the
+                        // issue window, so quiescence accounts for them
+                        for w in self.coalescers[fi].flush_all() {
+                            Self::submit(&self.session, &self.files[fi],
+                                         w, flush, notifier);
+                        }
                         self.files[fi].finish_issuing();
                         self.issuing_done[fi] = true;
                         progress = true;
@@ -180,6 +326,24 @@ impl ActiveCkpt {
         }
         let complete = self.finalized.iter().all(|&f| f);
         Ok((progress, complete))
+    }
+
+    /// Hand one (possibly merged) write to the flush pool, attributing
+    /// coalescing savings to the owning session.
+    fn submit(session: &Arc<CkptSession>, file: &Arc<FlushFile>,
+              w: MergedWrite, flush: &Arc<FlushPool>,
+              notifier: &Arc<Notifier>) {
+        if w.merged > 0 {
+            session.add_coalesced(w.merged, w.data.len() as u64);
+        }
+        flush.submit(WriteJob {
+            file: file.clone(),
+            offset: w.offset,
+            data: w.data,
+            label: w.label,
+            notify: Some(notifier.clone()),
+            progress: Some(session.progress_counters()),
+        });
     }
 }
 
@@ -435,14 +599,17 @@ impl CheckpointEngine for DataStatesEngine {
                         match &t.data {
                             TensorData::Host(bytes) => {
                                 // zero-copy: no staging, no serialization
-                                children.push(Box::new(TensorProvider::new(
-                                    &t.name,
-                                    t.dtype,
-                                    t.shape.clone(),
-                                    Bytes::from_arc(bytes.clone()),
-                                    base,
-                                    self.cfg.chunk_bytes,
-                                )));
+                                children.push(Box::new(
+                                    TensorProvider::new(
+                                        &t.name,
+                                        t.dtype,
+                                        t.shape.clone(),
+                                        Bytes::from_arc(bytes.clone()),
+                                        base,
+                                        self.cfg.chunk_bytes,
+                                    )
+                                    .with_logical(t.logical.clone()),
+                                ));
                             }
                             TensorData::Device(dev) => {
                                 let (tx, rx) =
@@ -464,7 +631,8 @@ impl CheckpointEngine for DataStatesEngine {
                                         base,
                                         self.cfg.chunk_bytes,
                                         rx,
-                                    ),
+                                    )
+                                    .with_logical(t.logical.clone()),
                                 ));
                             }
                         }
@@ -514,6 +682,7 @@ impl CheckpointEngine for DataStatesEngine {
                 dir,
                 composites,
                 requested: t0,
+                coalesce_bytes: self.cfg.coalesce_bytes,
             }))
             .map_err(|_| anyhow::anyhow!("pump thread dead"))?;
         // wake the pump in case it is parked mid-drain on the notifier
@@ -605,6 +774,116 @@ mod tests {
         let em = &eng.metrics()[0];
         assert_eq!(em.version, 5);
         assert!((em.persist_s - m.persist_s).abs() < 1e-9);
+    }
+
+    fn mk_chunk(off: u64, len: usize, label: &str) -> Chunk {
+        Chunk {
+            offset: off,
+            data: Bytes::from_vec(vec![(off % 251) as u8; len]),
+            label: label.into(),
+        }
+    }
+
+    #[test]
+    fn coalescer_merges_interleaved_contiguous_runs() {
+        // round-robin interleaving: a0, b0, a1 — a's chunks merge even
+        // though b's chunk arrived between them
+        let mut c = Coalescer::new(100);
+        assert!(c.push(mk_chunk(0, 10, "a")).is_empty());
+        assert!(c.push(mk_chunk(50, 10, "b")).is_empty());
+        assert!(c.push(mk_chunk(10, 10, "a")).is_empty());
+        let mut out = c.flush_all();
+        out.sort_by_key(|w| w.offset);
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+                   (0, 20, 1));
+        assert_eq!((out[1].offset, out[1].data.len(), out[1].merged),
+                   (50, 10, 0));
+    }
+
+    #[test]
+    fn coalescer_seals_at_max_and_disabled_passes_through() {
+        let mut c = Coalescer::new(16);
+        assert!(c.push(mk_chunk(0, 8, "t")).is_empty());
+        let out = c.push(mk_chunk(8, 8, "t"));
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+                   (0, 16, 1));
+        assert!(c.flush_all().is_empty());
+
+        let mut off = Coalescer::new(0);
+        let out = off.push(mk_chunk(0, 8, "t"));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].merged, 0);
+    }
+
+    #[test]
+    fn coalescer_issues_oversized_chunks_immediately() {
+        // coalesce_bytes < chunk size: nothing to merge, and nothing
+        // may sit buffered waiting for a later neighbor
+        let mut c = Coalescer::new(4);
+        let out = c.push(mk_chunk(0, 8, "t"));
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+                   (0, 8, 0));
+        assert!(c.flush_all().is_empty());
+    }
+
+    #[test]
+    fn coalescer_never_merges_across_labels() {
+        // abutting offsets but different originating entries: the
+        // timeline attributes a merged write to ONE label, so these
+        // must stay separate writes
+        let mut c = Coalescer::new(1 << 20);
+        assert!(c.push(mk_chunk(0, 8, "a")).is_empty());
+        assert!(c.push(mk_chunk(8, 8, "b")).is_empty());
+        let mut out = c.flush_all();
+        out.sort_by_key(|w| w.offset);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|w| w.merged == 0));
+        assert_eq!((out[0].label.as_str(), out[1].label.as_str()),
+                   ("a", "b"));
+    }
+
+    #[test]
+    fn coalescer_bounds_open_runs() {
+        let mut c = Coalescer::new(1 << 20);
+        let mut sealed = 0;
+        for i in 0..(MAX_OPEN_RUNS + 3) {
+            // disjoint, non-contiguous offsets: every chunk opens a run
+            sealed += c.push(mk_chunk(i as u64 * 100, 10, "t")).len();
+        }
+        assert_eq!(sealed, 3, "oldest runs sealed to free slots");
+        assert_eq!(c.flush_all().len(), MAX_OPEN_RUNS);
+    }
+
+    #[test]
+    fn coalescing_preserves_contents_and_counts_merges() {
+        let dir = TempDir::new("ds-coalesce").unwrap();
+        let mut cfg = EngineConfig::with_dir(dir.path());
+        cfg.chunk_bytes = 1024; // 16 KiB device tensor → 16 chunks
+        cfg.coalesce_bytes = 8 * 1024;
+        let mut eng = DataStatesEngine::new(cfg).unwrap();
+        let state = mixed_state(5);
+        let ticket = eng.begin(0, &state).unwrap();
+        let m = ticket.wait_persisted().unwrap();
+        assert!(m.coalesced_writes > 0, "no merges: {m:?}");
+        assert!(m.coalesced_bytes > 0);
+        crate::restore::verify_against(&dir.path().join("v000000"),
+                                       &state)
+            .unwrap();
+        // same payload with coalescing disabled restores identically
+        let dir2 = TempDir::new("ds-coalesce-off").unwrap();
+        let mut cfg2 = EngineConfig::with_dir(dir2.path());
+        cfg2.chunk_bytes = 1024;
+        cfg2.coalesce_bytes = 0;
+        let mut eng2 = DataStatesEngine::new(cfg2).unwrap();
+        let t2 = eng2.begin(0, &state).unwrap();
+        let m2 = t2.wait_persisted().unwrap();
+        assert_eq!(m2.coalesced_writes, 0);
+        crate::restore::verify_against(&dir2.path().join("v000000"),
+                                       &state)
+            .unwrap();
     }
 
     #[test]

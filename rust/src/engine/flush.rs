@@ -306,6 +306,7 @@ mod tests {
                     shape: vec![n * chunk],
                 },
                 extents: vec![(0, (n * chunk) as u64)],
+                logical: None,
             }],
         };
         file.finalize(&layout, (n * chunk) as u64).unwrap();

@@ -153,6 +153,15 @@ impl CkptSession {
         self.cv.notify_all();
     }
 
+    /// Account one flushed coalesced run: `merged` chunks were folded
+    /// into neighbors (k-chunk run → k-1), `bytes` total in the merged
+    /// write. Called by the engine pump's coalescing pass.
+    pub fn add_coalesced(&self, merged: u64, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.coalesced_writes += merged;
+        st.metrics.coalesced_bytes += bytes;
+    }
+
     /// Mark this version failed; waiters observe the error.
     pub fn fail(&self, err: String) {
         let mut st = self.state.lock().unwrap();

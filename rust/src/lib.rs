@@ -39,7 +39,11 @@
 //!   device-resident between steps.
 //! - [`cluster`] + [`sim`] — a calibrated discrete-event model of the
 //!   Polaris testbed used to regenerate the paper-scale figures.
-//! - [`restore`] — checkpoint parsing, verification and resume.
+//! - [`restore`] — checkpoint parsing, verification, resume, and
+//!   restore-time resharding: [`restore::reshard::restore_for_topology`]
+//!   materializes any rank of any topology from the logical state index
+//!   ([`state::index::LogicalIndex`]) built from the self-describing
+//!   trailers.
 //! - [`metrics`] — throughput/blocked-time accounting and the per-tensor
 //!   multi-tier timelines of Fig 15.
 //! - [`harness`] — one driver per paper table/figure.

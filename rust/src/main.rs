@@ -2,14 +2,21 @@
 //!
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
-//!            fig12|fig13|table3|fig14|fig15|files>
+//!            fig12|fig13|table3|fig14|fig15|tiers|reshard|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
 //!   fsck <checkpoint-file>
 //!   partition <model> [--dp D]     (print one rank's composition)
 //!   bench-io [--dir DIR] [--tiers T1,T2] [--throttle-mbps M]
-//!            [--json PATH]         (quick real-plane flush sweep)
+//!            [--json PATH]         (quick real-plane flush sweep;
+//!                                   records coalesced_writes/bytes)
+//!   reshard [--model M] [--from-tp T --from-pp P --from-dp D]
+//!           [--to-tp T --to-pp P --to-dp D] [--steps N]
+//!           [--interval K] [--scale S] [--ckpt-dir DIR]
+//!           [--tiers T1,T2]        (write at topology A, reshard-
+//!                                   restore at topology B, verify
+//!                                   byte-identity, restart at B)
 //!
 //! Storage-tier knobs (tiered persistence pipeline, see DESIGN.md
 //! "Storage tiers"):
@@ -83,11 +90,14 @@ fn run() -> anyhow::Result<()> {
         Some("partition") => partition(&args),
         Some("bench-io") => bench_io(&args),
         Some("world") => world(&args),
+        Some("reshard") => reshard(&args),
         _ => {
             eprintln!(
-                "usage: datastates <figures|train|world|fsck|partition|\
-                 bench-io> [options]\n  tier knobs: --tiers \
+                "usage: datastates <figures|train|world|reshard|fsck|\
+                 partition|bench-io> [options]\n  tier knobs: --tiers \
                  hostcache,localfs --throttle-mbps M --durability TIER\n  \
+                 reshard knobs: --from-tp/--from-pp/--from-dp \
+                 --to-tp/--to-pp/--to-dp\n  \
                  see rust/src/main.rs for all flags"
             );
             Ok(())
@@ -182,6 +192,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "fig14" => harness::fig14(),
         "fig15" => harness::fig15()?,
         "tiers" => harness::tiers()?,
+        "reshard" => harness::reshard()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -375,11 +386,14 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
         rows.push(format!(
             "{{\"engine\":\"{}\",\"blocked_s\":{:.6},\
              \"persist_s\":{:.6},\"effective_bps\":{:.1},\
+             \"coalesced_writes\":{},\"coalesced_bytes\":{},\
              \"tiers\":[{}],\"transfer\":{}}}",
             kind.label(),
             m.blocked_s,
             m.persist_s,
             if eff.is_finite() { eff } else { 0.0 },
+            m.coalesced_writes,
+            m.coalesced_bytes,
             tiers_json.join(","),
             tier_throughput_json(&tl),
         ));
@@ -393,6 +407,117 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, doc)?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Topology-change demo: write a distributed checkpoint at topology A,
+/// reshard-restore it at topology B through the logical index, verify
+/// byte-identity of the flattened logical tensors, then RESTART a short
+/// run at topology B seeded from the resharded states.
+fn reshard(args: &Args) -> anyhow::Result<()> {
+    use datastates::state::index::flatten_states;
+    use datastates::state::partition::{census, materialize};
+    use datastates::state::RankState;
+    use datastates::train::distributed::{resume_resharded, run_world,
+                                         WorldConfig};
+    let model_name = args.get("model").unwrap_or("3B");
+    let model = LlmConfig::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let from = Parallelism::new(args.num("from-tp", 2),
+                                args.num("from-pp", 1),
+                                args.num("from-dp", 1));
+    let to = Parallelism::new(args.num("to-tp", 1),
+                              args.num("to-pp", 1),
+                              args.num("to-dp", 1));
+    let steps: u64 = args.num("steps", 2);
+    let interval: u64 = args.num("interval", 2);
+    let scale: f64 = args.num("scale", 1e-5);
+    let user_dir = args.get("ckpt-dir");
+    let root = std::path::PathBuf::from(
+        user_dir.unwrap_or("/tmp/datastates-reshard"));
+    if user_dir.is_none() {
+        // our own scratch default: safe to recycle
+        let _ = std::fs::remove_dir_all(&root);
+    } else if root.exists()
+        && root
+            .read_dir()
+            .map(|mut d| d.next().is_some())
+            .unwrap_or(false)
+    {
+        // never silently destroy a user-named directory — reshard
+        // WRITES a fresh checkpoint at topology A before restoring
+        anyhow::bail!(
+            "--ckpt-dir {root:?} is not empty; reshard writes a fresh \
+             checkpoint there — pass a new or empty directory"
+        );
+    }
+    let mut engine_cfg = EngineConfig::default();
+    if let Some(t) = tier_specs(args)? {
+        engine_cfg.tiers = t;
+    }
+    let tiers = engine_cfg.tiers.clone();
+
+    // phase 1: write at topology A
+    println!(
+        "write: {model_name} TP={} PP={} DP={} ({} ranks), {steps} \
+         iters, ckpt every {interval}",
+        from.tp, from.pp, from.dp, from.world()
+    );
+    let cs = census(&model, &from);
+    let report = run_world(
+        &WorldConfig {
+            world: from.world(),
+            iterations: steps,
+            interval,
+            engine: EngineKind::DataStatesLlm,
+            ckpt_root: root.clone(),
+            engine_cfg: engine_cfg.clone(),
+        },
+        |rank, it| materialize(&cs.ranks[rank], scale, 0.05,
+                               ((rank as u64) << 32) | it),
+        |_, _| {},
+    )?;
+    println!("  committed versions: {:?}", report.committed_versions);
+
+    // phase 2: reshard-restore at topology B
+    let Some((v, restored)) =
+        resume_resharded(&root, &tiers, &model, &to)?
+    else {
+        anyhow::bail!("no committed version to reshard from");
+    };
+    let src: Vec<RankState> = (0..from.world())
+        .map(|r| materialize(&cs.ranks[r], scale, 0.05,
+                             ((r as u64) << 32) | (v - 1)))
+        .collect();
+    let a = flatten_states(&src)?;
+    let b = flatten_states(&restored)?;
+    anyhow::ensure!(a == b, "resharded state differs from source");
+    let bytes: u64 = a.values().map(|v| v.len() as u64).sum();
+    println!(
+        "reshard: v{v} -> TP={} PP={} DP={} ({} ranks): {} logical \
+         tensors, {} byte-identical",
+        to.tp, to.pp, to.dp, to.world(), a.len(),
+        human_bytes(bytes as f64)
+    );
+
+    // phase 3: restart at topology B from the resharded states
+    let restart_root = root.join("resharded");
+    let report_b = run_world(
+        &WorldConfig {
+            world: to.world(),
+            iterations: interval,
+            interval,
+            engine: EngineKind::DataStatesLlm,
+            ckpt_root: restart_root.clone(),
+            engine_cfg,
+        },
+        |rank, _it| restored[rank].clone(),
+        |_, _| {},
+    )?;
+    println!(
+        "restart: {} ranks recommitted {:?} under {:?}",
+        to.world(), report_b.committed_versions, restart_root
+    );
     Ok(())
 }
 

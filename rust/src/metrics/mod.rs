@@ -177,6 +177,13 @@ pub struct CkptMetrics {
     /// tier of the engine's pipeline; the last entry mirrors
     /// `persist_s`).
     pub tiers: Vec<TierDurability>,
+    /// Small writes eliminated by the pump's coalescing pass: how many
+    /// provider chunks were merged INTO a neighbor instead of issued as
+    /// their own `WriteJob` (a run of k contiguous chunks counts k-1).
+    pub coalesced_writes: u64,
+    /// Total bytes of the merged (multi-chunk) writes issued by the
+    /// coalescing pass.
+    pub coalesced_bytes: u64,
 }
 
 impl CkptMetrics {

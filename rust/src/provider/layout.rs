@@ -22,10 +22,15 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::state::tensor::DType;
+use crate::state::tensor::{DType, LogicalRef};
 use crate::util::codec::{Decoder, Encoder};
 
-pub const MAGIC: u64 = 0x4453_4C4C_4D30_3031; // "DSLLM001"
+// Format version 002: trailer entries carry a per-entry `LogicalRef`
+// tag. Bumped from "DSLLM001" so pre-logical-ref checkpoints fail with
+// a clear magic mismatch instead of a misleading "bad logical tag" /
+// "trailing bytes" decode error that restore would treat as a torn
+// copy.
+pub const MAGIC: u64 = 0x4453_4C4C_4D30_3032; // "DSLLM002"
 pub const FOOTER_BYTES: u64 = 24;
 
 /// What one layout entry describes.
@@ -67,6 +72,11 @@ pub struct LayoutEntry {
     /// extent in the fixed region; objects may have several in the log
     /// region (concurrent append interleaves producers).
     pub extents: Vec<(u64, u64)>,
+    /// Which slice of which *logical* tensor this entry holds — recorded
+    /// in the trailer so a checkpoint stays resharddable without the
+    /// topology that wrote it (`state::index`, `restore::reshard`).
+    /// `None` for rank-local state (objects, metadata tensors).
+    pub logical: Option<LogicalRef>,
 }
 
 impl LayoutEntry {
@@ -107,6 +117,15 @@ impl FileLayout {
             for (off, len) in &entry.extents {
                 e.u64(*off).u64(*len);
             }
+            match &entry.logical {
+                Some(l) => {
+                    e.u8(1).str(l.tensor.as_str())
+                        .u64(l.range.start).u64(l.range.end);
+                }
+                None => {
+                    e.u8(0);
+                }
+            }
         }
         e.finish()
     }
@@ -140,7 +159,18 @@ impl FileLayout {
             for _ in 0..n_ext {
                 extents.push((d.u64()?, d.u64()?));
             }
-            entries.push(LayoutEntry { name, kind, extents });
+            let logical = match d.u8()? {
+                0 => None,
+                1 => {
+                    let tensor = d.str()?;
+                    let (start, end) = (d.u64()?, d.u64()?);
+                    anyhow::ensure!(start <= end,
+                                    "bad logical range {start}..{end}");
+                    Some(LogicalRef::new(tensor, start..end))
+                }
+                t => anyhow::bail!("bad logical tag {t}"),
+            };
+            entries.push(LayoutEntry { name, kind, extents, logical });
         }
         anyhow::ensure!(d.done(), "trailing bytes in trailer");
         Ok(FileLayout { file_name, fixed_region, entries })
@@ -213,17 +243,31 @@ mod tests {
         let l = FileLayout {
             file_name: "layer_00.pt".into(),
             fixed_region: 4096,
-            entries: vec![LayoutEntry {
-                name: "w".into(),
-                kind: EntryKind::Tensor {
-                    dtype: DType::F16,
-                    shape: vec![64, 32],
+            entries: vec![
+                LayoutEntry {
+                    name: "w".into(),
+                    kind: EntryKind::Tensor {
+                        dtype: DType::F16,
+                        shape: vec![64, 32],
+                    },
+                    extents: vec![(0, 4096)],
+                    logical: Some(LogicalRef::new("unit002/t0",
+                                                  4096..8192)),
                 },
-                extents: vec![(0, 4096)],
-            }],
+                LayoutEntry {
+                    name: "meta".into(),
+                    kind: EntryKind::Object,
+                    extents: vec![(4096, 100)],
+                    logical: None,
+                },
+            ],
         };
         let t = l.encode_trailer();
-        assert_eq!(FileLayout::decode_trailer(&t).unwrap(), l);
+        let got = FileLayout::decode_trailer(&t).unwrap();
+        assert_eq!(got, l);
+        let lr = got.entries[0].logical.as_ref().unwrap();
+        assert_eq!(lr.tensor.as_str(), "unit002/t0");
+        assert_eq!(lr.range, 4096..8192);
     }
 
     #[test]

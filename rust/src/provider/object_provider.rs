@@ -91,6 +91,7 @@ impl StateProvider for ObjectProvider {
             name: self.name.clone(),
             kind: EntryKind::Object,
             extents: self.extents.clone(),
+            logical: None,
         }]
     }
 

@@ -4,7 +4,7 @@ use crate::util::channel::Receiver;
 
 use super::layout::{EntryKind, LayoutEntry};
 use super::{Bytes, Chunk, ChunkEvent, StateProvider};
-use crate::state::tensor::DType;
+use crate::state::tensor::{DType, LogicalRef};
 
 /// Host-resident tensor: bytes are byte-addressable *now*; the provider
 /// is a pure window iterator — no copy, no serialization (§IV-D).
@@ -18,6 +18,7 @@ pub struct TensorProvider {
     chunk_bytes: usize,
     cursor: usize,
     done: bool,
+    logical: Option<LogicalRef>,
 }
 
 impl TensorProvider {
@@ -32,7 +33,14 @@ impl TensorProvider {
             chunk_bytes: chunk_bytes.max(1),
             cursor: 0,
             done: false,
+            logical: None,
         }
+    }
+
+    /// Record this tensor's logical-slice identity in the trailer entry.
+    pub fn with_logical(mut self, logical: Option<LogicalRef>) -> Self {
+        self.logical = logical;
+        self
     }
 }
 
@@ -64,6 +72,7 @@ impl StateProvider for TensorProvider {
                 shape: self.shape.clone(),
             },
             extents: vec![(self.base_offset, self.data.len() as u64)],
+            logical: self.logical.clone(),
         }]
     }
 
@@ -87,6 +96,7 @@ pub struct StagedTensorProvider {
     rx: Receiver<Bytes>,
     inner: Option<TensorProvider>,
     done: bool,
+    logical: Option<LogicalRef>,
 }
 
 impl StagedTensorProvider {
@@ -103,7 +113,14 @@ impl StagedTensorProvider {
             rx,
             inner: None,
             done: false,
+            logical: None,
         }
+    }
+
+    /// Record this tensor's logical-slice identity in the trailer entry.
+    pub fn with_logical(mut self, logical: Option<LogicalRef>) -> Self {
+        self.logical = logical;
+        self
     }
 }
 
@@ -157,6 +174,7 @@ impl StateProvider for StagedTensorProvider {
                 shape: self.shape.clone(),
             },
             extents: vec![(self.base_offset, self.expect_bytes)],
+            logical: self.logical.clone(),
         }]
     }
 

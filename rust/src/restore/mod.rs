@@ -7,8 +7,11 @@
 //! helpers here build on it: whole-file reads, version-directory scans,
 //! parallel restore and integrity checks.
 
+pub mod reshard;
 pub mod source;
 
+pub use reshard::{plan_reshard, restore_for_topology, CheckpointWorld,
+                  ReshardPlan};
 pub use source::ChunkSource;
 
 use std::collections::HashMap;

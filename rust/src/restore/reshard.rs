@@ -1,0 +1,473 @@
+//! Restore-time resharding: materialize ANY rank of ANY topology from a
+//! checkpoint written under a different one.
+//!
+//! A checkpoint's physical layout (which rank wrote which slice to
+//! which file) is an artifact of the topology that wrote it. The
+//! [`LogicalIndex`] built from the per-rank self-describing trailers
+//! erases that artifact; this module maps a *target*
+//! [`Parallelism`] back onto it:
+//!
+//! 1. [`plan_reshard`] walks the target topology's census — the same 3D
+//!    partitioner that drives the write side — and, for every logical
+//!    tensor slice a target rank holds, computes the read plan: the
+//!    source extents covering its byte range (possibly spanning several
+//!    source ranks/files), with DP-replica alternates for failover.
+//! 2. [`restore_for_topology`] executes the plan over a
+//!    [`CheckpointWorld`] — one [`TierPipeline`] per source rank — using
+//!    `ChunkSource::read_entry_range` positioned reads resolved from
+//!    the NEAREST tier holding a readable copy (torn copies fall
+//!    through to deeper tiers; torn primaries fall back to replica
+//!    alternates), assembling each target rank's [`RankState`].
+//!
+//! Rank-local control state (metadata files, serialized objects) has no
+//! cross-topology identity and is NOT resharded — the training runtime
+//! regenerates it on restart, as production resharding systems do.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::{LlmConfig, Parallelism};
+use crate::metrics::Timeline;
+use crate::restore::ChunkSource;
+use crate::state::index::{LogicalIndex, LogicalIndexBuilder,
+                          PhysicalExtent, SliceRead};
+use crate::state::partition::census;
+use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
+use crate::state::tensor::{DType, LogicalRef, TensorShard};
+use crate::storage::{TierPipeline, TierSpec};
+
+/// The saved side of a reshard: every source rank's tier pipeline,
+/// resolved from a distributed checkpoint root (`rank000/`,
+/// `rank001/`, ...) or handed over directly from live engines.
+pub struct CheckpointWorld {
+    pipelines: Vec<Arc<TierPipeline>>,
+}
+
+impl CheckpointWorld {
+    /// Open the per-rank pipelines of a distributed checkpoint root
+    /// written by `train::distributed::run_world` (`rank{r:03}/`
+    /// subdirectories), with the tier stack it was written under.
+    pub fn open(root: &Path, world: usize, tiers: &[TierSpec])
+        -> anyhow::Result<CheckpointWorld> {
+        anyhow::ensure!(world > 0, "world must be > 0");
+        let mut pipelines = Vec::with_capacity(world);
+        for r in 0..world {
+            let dir = root.join(format!("rank{r:03}"));
+            anyhow::ensure!(dir.is_dir(),
+                            "missing rank directory {dir:?}");
+            pipelines.push(TierPipeline::from_specs(
+                tiers,
+                &dir,
+                false,
+                4 << 20,
+                None,
+                Arc::new(Timeline::new()),
+            )?);
+        }
+        Ok(CheckpointWorld { pipelines })
+    }
+
+    /// Wrap live pipelines (e.g. `engine.pipeline()` of each rank).
+    pub fn from_pipelines(pipelines: Vec<Arc<TierPipeline>>)
+        -> CheckpointWorld {
+        CheckpointWorld { pipelines }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    /// Open one source file as a positioned-read chunk stream from its
+    /// nearest readable tier.
+    pub fn source(&self, rank: usize, version: u64, file: &str)
+        -> anyhow::Result<ChunkSource> {
+        let p = self
+            .pipelines
+            .get(rank)
+            .ok_or_else(|| anyhow::anyhow!("no source rank {rank}"))?;
+        p.chunk_source_nearest(&format!("v{version:06}/{file}"))
+    }
+
+    /// Build the job-wide logical index of one version from every
+    /// source rank's trailers.
+    pub fn index(&self, version: u64) -> anyhow::Result<LogicalIndex> {
+        self.index_with(version, &mut HashMap::new())
+    }
+
+    /// Like [`CheckpointWorld::index`], but keeps every opened
+    /// [`ChunkSource`] in `cache` so a following [`execute_plan_with`]
+    /// does not reopen and re-decode the same trailers.
+    fn index_with(&self, version: u64, cache: &mut SourceCache)
+        -> anyhow::Result<LogicalIndex> {
+        let mut b = LogicalIndexBuilder::new();
+        for (rank, p) in self.pipelines.iter().enumerate() {
+            let files = p.version_file_names(version).map_err(|e| {
+                anyhow::anyhow!("rank {rank} v{version}: {e:#}")
+            })?;
+            anyhow::ensure!(!files.is_empty(),
+                            "rank {rank}: no files for v{version}");
+            for f in &files {
+                let key = (rank, f.clone());
+                if !cache.contains_key(&key) {
+                    let src = self.source(rank, version, f)?;
+                    cache.insert(key.clone(), src);
+                }
+                let src = cache.get(&key).expect("just inserted");
+                b.add_layout(rank, src.layout())?;
+            }
+        }
+        b.finish()
+    }
+}
+
+/// Opened source files of one restore, keyed by (source rank, file
+/// name) — shared between the index build and the plan executor so each
+/// trailer is opened and decoded once per restore.
+type SourceCache = HashMap<(usize, String), ChunkSource>;
+
+/// One target tensor and the source reads materializing it.
+#[derive(Debug, Clone)]
+pub struct TargetTensor {
+    /// Shard name in the target rank's file (partitioner naming).
+    pub name: String,
+    pub dtype: DType,
+    /// This shard's slice of its logical tensor under the TARGET
+    /// topology (in the SOURCE index's byte coordinates).
+    pub logical: LogicalRef,
+    pub reads: Vec<SliceRead>,
+}
+
+/// One target checkpoint file (metadata files are not planned).
+#[derive(Debug, Clone)]
+pub struct TargetFile {
+    pub name: String,
+    pub kind: FileKind,
+    pub tensors: Vec<TargetTensor>,
+}
+
+/// Read plan of one target rank.
+#[derive(Debug, Clone)]
+pub struct RankPlan {
+    pub rank: usize,
+    /// (tp, pp, dp) coordinates under the target topology.
+    pub coords: (usize, usize, usize),
+    pub files: Vec<TargetFile>,
+}
+
+/// The full reshard plan: saved index × target topology.
+#[derive(Debug, Clone)]
+pub struct ReshardPlan {
+    pub target: Parallelism,
+    pub ranks: Vec<RankPlan>,
+}
+
+impl ReshardPlan {
+    /// Total positioned reads across all ranks.
+    pub fn n_reads(&self) -> usize {
+        self.ranks
+            .iter()
+            .flat_map(|r| r.files.iter())
+            .flat_map(|f| f.tensors.iter())
+            .map(|t| t.reads.len())
+            .sum()
+    }
+
+    /// Total bytes the plan materializes.
+    pub fn total_bytes(&self) -> u64 {
+        self.ranks
+            .iter()
+            .flat_map(|r| r.files.iter())
+            .flat_map(|f| f.tensors.iter())
+            .map(|t| t.logical.len())
+            .sum()
+    }
+}
+
+/// Slice `k` of `n` of a `len`-byte tensor, on element boundaries when
+/// `len` is a whole number of `esz`-byte elements (byte boundaries
+/// otherwise). Slices tile `[0, len)` exactly for any `len`/`n`.
+fn part_range(len: u64, esz: u64, n: u64, k: u64)
+    -> std::ops::Range<u64> {
+    let (units, scale) = if esz > 0 && len % esz == 0 {
+        (len / esz, esz)
+    } else {
+        (len, 1)
+    };
+    let lo = (units as u128 * k as u128 / n as u128) as u64 * scale;
+    let hi = (units as u128 * (k as u128 + 1) / n as u128) as u64 * scale;
+    lo..hi
+}
+
+/// Map a target topology onto a saved logical index: per-target-rank
+/// read plans, every byte of every logical tensor assigned to the
+/// target rank(s) the 3D partitioner would give it.
+pub fn plan_reshard(model: &LlmConfig, target: &Parallelism,
+                    index: &LogicalIndex)
+    -> anyhow::Result<ReshardPlan> {
+    let cs = census(model, target);
+    let mut ranks = Vec::with_capacity(cs.ranks.len());
+    for rc in &cs.ranks {
+        let mut files = Vec::new();
+        for fd in &rc.files {
+            let (Some((k, n)), true) =
+                (fd.logical.slice(), fd.n_tensors > 0)
+            else {
+                continue; // rank-local metadata: not resharddable
+            };
+            let mut tensors = Vec::new();
+            for ti in 0..fd.n_tensors {
+                let id = fd
+                    .logical
+                    .tensor_id(ti)
+                    .expect("sliced files have tensor ids");
+                let t = index.get(&id).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "target needs logical tensor {id} (for {}) but \
+                         the saved index does not have it — was the \
+                         checkpoint written with logical refs?",
+                        fd.name
+                    )
+                })?;
+                let esz = t
+                    .dtype
+                    .unwrap_or(fd.dtype)
+                    .size_bytes() as u64;
+                let range =
+                    part_range(t.len, esz, n as u64, k as u64);
+                if range.is_empty() {
+                    continue; // fewer elements than target shards
+                }
+                let reads = t.reads_for(range.clone())?;
+                let dtype = t.dtype.unwrap_or(fd.dtype);
+                tensors.push(TargetTensor {
+                    name: format!("{}::tensor_{ti}", fd.name),
+                    dtype,
+                    logical: LogicalRef::new(id, range),
+                    reads,
+                });
+            }
+            if !tensors.is_empty() {
+                files.push(TargetFile {
+                    name: fd.name.clone(),
+                    kind: fd.kind,
+                    tensors,
+                });
+            }
+        }
+        ranks.push(RankPlan { rank: rc.rank, coords: rc.coords, files });
+    }
+    Ok(ReshardPlan { target: *target, ranks })
+}
+
+/// Execute one read into `dst` (the slice's slot of the target
+/// tensor), trying the primary extent first and falling back to
+/// byte-identical replica alternates when a source copy cannot be read
+/// on any tier. A successful read fills all of `dst` (the covering
+/// extents tile the window), so a failed earlier candidate's partial
+/// bytes are fully overwritten.
+fn read_slice(
+    world: &CheckpointWorld,
+    version: u64,
+    cache: &mut SourceCache,
+    sr: &SliceRead,
+    dst: &mut [u8],
+) -> anyhow::Result<()> {
+    let mut last_err: Option<anyhow::Error> = None;
+    let candidates = std::iter::once(&sr.extent).chain(&sr.alternates);
+    for ext in candidates {
+        match read_extent(world, version, cache, ext, sr, dst) {
+            Ok(()) => return Ok(()),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("at least the primary candidate was tried"))
+}
+
+fn read_extent(
+    world: &CheckpointWorld,
+    version: u64,
+    cache: &mut SourceCache,
+    ext: &PhysicalExtent,
+    sr: &SliceRead,
+    dst: &mut [u8],
+) -> anyhow::Result<()> {
+    let key = (ext.rank, ext.file.clone());
+    if !cache.contains_key(&key) {
+        let src = world.source(ext.rank, version, &ext.file)?;
+        cache.insert(key.clone(), src);
+    }
+    let res = cache
+        .get(&key)
+        .expect("just inserted")
+        .read_entry_range_into(&ext.entry, sr.entry_offset, dst);
+    match res {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // a torn payload read must not poison later fall-backs
+            cache.remove(&key);
+            Err(anyhow::anyhow!("rank {} {}: {e:#}", ext.rank,
+                                ext.file))
+        }
+    }
+}
+
+/// Execute a reshard plan against a saved checkpoint version,
+/// materializing every target rank's state.
+pub fn execute_plan(world: &CheckpointWorld, version: u64,
+                    plan: &ReshardPlan)
+    -> anyhow::Result<Vec<RankState>> {
+    execute_plan_with(world, version, plan, &mut HashMap::new())
+}
+
+/// [`execute_plan`] reusing the caller's already-opened sources.
+fn execute_plan_with(world: &CheckpointWorld, version: u64,
+                     plan: &ReshardPlan, cache: &mut SourceCache)
+    -> anyhow::Result<Vec<RankState>> {
+    let mut out = Vec::with_capacity(plan.ranks.len());
+    for rp in &plan.ranks {
+        let mut files = Vec::with_capacity(rp.files.len());
+        for tf in &rp.files {
+            let mut items = Vec::with_capacity(tf.tensors.len());
+            for tt in &tf.tensors {
+                let total = tt.logical.len();
+                let mut buf = vec![0u8; total as usize];
+                for sr in &tt.reads {
+                    let at = sr.dst_offset as usize;
+                    read_slice(world, version, cache, sr,
+                               &mut buf[at..at + sr.len as usize])?;
+                }
+                let esz = tt.dtype.size_bytes();
+                let (dtype, shape) = if esz > 0 && buf.len() % esz == 0 {
+                    (tt.dtype, vec![buf.len() / esz])
+                } else {
+                    (DType::U8, vec![buf.len()])
+                };
+                items.push(StateItem::Tensor(
+                    TensorShard::host(&tt.name, dtype, shape, buf)
+                        .with_logical(Some(tt.logical.clone())),
+                ));
+            }
+            files.push(ShardFile {
+                name: tf.name.clone(),
+                kind: tf.kind,
+                items,
+            });
+        }
+        out.push(RankState { rank: rp.rank, files });
+    }
+    Ok(out)
+}
+
+/// Materialize every rank of `target` from checkpoint `version` written
+/// under any (possibly different) topology: build the logical index
+/// from the saved trailers, plan the target layout over it, and execute
+/// the positioned reads through the source tiers.
+pub fn restore_for_topology(world: &CheckpointWorld, version: u64,
+                            model: &LlmConfig, target: &Parallelism)
+    -> anyhow::Result<Vec<RankState>> {
+    // one source cache across index build and execution: each source
+    // file is opened and its trailer decoded exactly once per restore
+    let mut cache = SourceCache::new();
+    let index = world.index_with(version, &mut cache)?;
+    let plan = plan_reshard(model, target, &index)?;
+    execute_plan_with(world, version, &plan, &mut cache)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::state::index::flatten_states;
+    use crate::state::partition::materialize;
+    use crate::util::TempDir;
+
+    #[test]
+    fn part_range_tiles_exactly() {
+        for (len, esz, n) in
+            [(100u64, 4u64, 3u64), (7, 1, 4), (12, 4, 5), (0, 2, 2),
+             (64, 2, 1)]
+        {
+            let mut cur = 0;
+            for k in 0..n {
+                let r = part_range(len, esz, n, k);
+                assert_eq!(r.start, cur, "len={len} n={n} k={k}");
+                assert!(r.end >= r.start);
+                if len % esz == 0 {
+                    assert_eq!(r.start % esz, 0);
+                    assert_eq!(r.end % esz, 0);
+                }
+                cur = r.end;
+            }
+            assert_eq!(cur, len);
+        }
+    }
+
+    /// Write one world at topology `par` through real engines (one per
+    /// rank, single-tier), returning (source states, world handle).
+    fn write_world(dir: &Path, model: &LlmConfig, par: &Parallelism,
+                   scale: f64, seed: u64)
+        -> (Vec<RankState>, CheckpointWorld) {
+        let cs = census(model, par);
+        let mut states = Vec::new();
+        let mut pipelines = Vec::new();
+        for rc in &cs.ranks {
+            let state = materialize(rc, scale, 0.05,
+                                    seed ^ (rc.rank as u64) << 16);
+            let mut eng = DataStatesEngine::new(EngineConfig::with_dir(
+                dir.join(format!("rank{:03}", rc.rank)),
+            ))
+            .unwrap();
+            let ticket = eng.begin(1, &state).unwrap();
+            ticket.wait_persisted().unwrap();
+            pipelines.push(eng.pipeline());
+            states.push(state);
+        }
+        (states, CheckpointWorld::from_pipelines(pipelines))
+    }
+
+    #[test]
+    fn reshard_tp2_dp2_to_single_rank_is_byte_identical() {
+        let model = LlmConfig::by_name("3B").unwrap();
+        let from = Parallelism::new(2, 1, 2);
+        let to = Parallelism::new(1, 1, 1);
+        let dir = TempDir::new("reshard-basic").unwrap();
+        let (src_states, world) =
+            write_world(dir.path(), &model, &from, 2e-6, 11);
+        let restored =
+            restore_for_topology(&world, 1, &model, &to).unwrap();
+        assert_eq!(restored.len(), 1);
+        let a = flatten_states(&src_states).unwrap();
+        let b = flatten_states(&restored).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn plan_spans_source_ranks_and_counts() {
+        let model = LlmConfig::by_name("3B").unwrap();
+        let from = Parallelism::new(2, 1, 1);
+        let to = Parallelism::new(1, 1, 1);
+        let dir = TempDir::new("reshard-plan").unwrap();
+        let (_states, world) =
+            write_world(dir.path(), &model, &from, 2e-6, 5);
+        let index = world.index(1).unwrap();
+        let plan = plan_reshard(&model, &to, &index).unwrap();
+        // one target rank; its optimizer slices must read from BOTH
+        // source ranks (the saved mp partition spans them)
+        let optim = plan.ranks[0]
+            .files
+            .iter()
+            .find(|f| f.kind == FileKind::Optimizer)
+            .unwrap();
+        let src_ranks: std::collections::BTreeSet<usize> = optim
+            .tensors
+            .iter()
+            .flat_map(|t| t.reads.iter().map(|r| r.extent.rank))
+            .collect();
+        assert_eq!(src_ranks.into_iter().collect::<Vec<_>>(),
+                   vec![0, 1]);
+        assert!(plan.n_reads() > 0);
+        assert_eq!(plan.total_bytes(), index.total_bytes());
+    }
+}

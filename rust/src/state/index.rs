@@ -1,0 +1,483 @@
+//! The job-wide logical state index (§IV, Table I): logical tensor →
+//! sorted physical extents with rank/file coordinates.
+//!
+//! The physical layout of a checkpoint — which rank wrote which slice
+//! into which file — is an artifact of the topology it was written
+//! under. The [`LogicalIndex`] inverts it: built from the per-rank
+//! self-describing trailers (whose entries carry the partitioner's
+//! [`LogicalRef`]s), it maps every logical tensor of the job to the
+//! ordered physical extents covering it, validated on construction:
+//!
+//! - **full coverage** — the extents of each tensor tile `[0, len)`
+//!   exactly, no gaps;
+//! - **no overlap** — extents covering the same bytes are allowed only
+//!   when they cover *identical* ranges (DP replicas, byte-identical by
+//!   construction); those become restore-time alternates. Partial
+//!   overlaps are layout bugs and rejected.
+//!
+//! The reshard planner (`restore::reshard`) maps a target topology onto
+//! this index; [`flatten_states`] is the byte-level equality oracle the
+//! round-trip tests use.
+
+use std::collections::BTreeMap;
+
+use crate::provider::layout::{EntryKind, FileLayout};
+use crate::state::shard::{RankState, StateItem};
+use crate::state::tensor::{DType, GlobalTensorId, TensorData};
+
+/// One physical slice of a logical tensor: where its bytes live.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhysicalExtent {
+    /// Source rank that wrote the slice.
+    pub rank: usize,
+    /// File name within the rank's version directory.
+    pub file: String,
+    /// Layout entry name within that file.
+    pub entry: String,
+    /// Logical byte range of the owning tensor this extent covers (the
+    /// entry's payload bytes `[0, range.len())` map onto it 1:1).
+    pub range: std::ops::Range<u64>,
+}
+
+impl PhysicalExtent {
+    pub fn len(&self) -> u64 {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+/// One logical tensor with its validated physical extent cover.
+#[derive(Debug, Clone)]
+pub struct LogicalTensor {
+    pub id: GlobalTensorId,
+    /// Total logical bytes.
+    pub len: u64,
+    /// Element dtype (when the writing entries recorded one).
+    pub dtype: Option<DType>,
+    /// Primary extents, sorted by `range.start` — an exact tiling of
+    /// `[0, len)`.
+    pub extents: Vec<PhysicalExtent>,
+    /// Replica extents: alternates whose range is identical to some
+    /// primary extent (DP replicas, byte-identical by construction).
+    /// Restore may fall back to these when a primary copy is torn.
+    pub replicas: Vec<PhysicalExtent>,
+}
+
+impl LogicalTensor {
+    /// The reads materializing logical bytes `[range)` of this tensor:
+    /// for each covering extent, the entry-relative offset/length plus
+    /// the destination offset within the requested range, and any
+    /// replica alternates for the same slice.
+    pub fn reads_for(&self, range: std::ops::Range<u64>)
+        -> anyhow::Result<Vec<SliceRead>> {
+        anyhow::ensure!(range.end <= self.len,
+                        "{}: range {:?} beyond len {}", self.id, range,
+                        self.len);
+        let mut out = Vec::new();
+        for ext in &self.extents {
+            let lo = ext.range.start.max(range.start);
+            let hi = ext.range.end.min(range.end);
+            if lo >= hi {
+                continue;
+            }
+            let alternates = self
+                .replicas
+                .iter()
+                .filter(|r| r.range == ext.range)
+                .cloned()
+                .collect();
+            out.push(SliceRead {
+                extent: ext.clone(),
+                entry_offset: lo - ext.range.start,
+                len: hi - lo,
+                dst_offset: lo - range.start,
+                alternates,
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// One positioned read of a reshard plan: `len` bytes at
+/// `entry_offset` of `extent`'s entry, landing at `dst_offset` of the
+/// target slice. `alternates` are byte-identical replica extents to
+/// fall back to when the primary copy cannot be read.
+#[derive(Debug, Clone)]
+pub struct SliceRead {
+    pub extent: PhysicalExtent,
+    pub entry_offset: u64,
+    pub len: u64,
+    pub dst_offset: u64,
+    pub alternates: Vec<PhysicalExtent>,
+}
+
+/// The job-wide logical→physical index of one checkpoint version.
+#[derive(Debug, Clone, Default)]
+pub struct LogicalIndex {
+    tensors: BTreeMap<String, LogicalTensor>,
+}
+
+/// Builder accumulating per-rank file layouts before validation.
+#[derive(Debug, Default)]
+pub struct LogicalIndexBuilder {
+    raw: BTreeMap<String, (Option<DType>, Vec<PhysicalExtent>)>,
+}
+
+impl LogicalIndexBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record every logically-tagged entry of one file's trailer.
+    /// Rejects entries whose logical range disagrees with their payload
+    /// length — a corrupt trailer must not smuggle an absurd `len` into
+    /// the index (the reshard executor sizes target buffers from it).
+    pub fn add_layout(&mut self, rank: usize, layout: &FileLayout)
+        -> anyhow::Result<()> {
+        for entry in &layout.entries {
+            let Some(l) = &entry.logical else { continue };
+            anyhow::ensure!(
+                l.len() == entry.total_len(),
+                "{} {}: logical range {:?} ({} bytes) does not match \
+                 payload length {}",
+                layout.file_name, entry.name, l.range, l.len(),
+                entry.total_len()
+            );
+            let dtype = match &entry.kind {
+                EntryKind::Tensor { dtype, .. } => Some(*dtype),
+                EntryKind::Object => None,
+            };
+            let slot = self
+                .raw
+                .entry(l.tensor.as_str().to_string())
+                .or_insert_with(|| (dtype, Vec::new()));
+            if slot.0.is_none() {
+                slot.0 = dtype;
+            }
+            slot.1.push(PhysicalExtent {
+                rank,
+                file: layout.file_name.clone(),
+                entry: entry.name.clone(),
+                range: l.range.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Record every logically-tagged shard of an in-memory rank state
+    /// (write-side view; tests and pre-flight validation).
+    pub fn add_state(&mut self, state: &RankState)
+        -> anyhow::Result<()> {
+        for file in &state.files {
+            for item in &file.items {
+                let StateItem::Tensor(t) = item else { continue };
+                let Some(l) = &t.logical else { continue };
+                anyhow::ensure!(
+                    l.len() == t.size_bytes() as u64,
+                    "{}: logical range {:?} does not match shard size {}",
+                    t.name, l.range, t.size_bytes()
+                );
+                let slot = self
+                    .raw
+                    .entry(l.tensor.as_str().to_string())
+                    .or_insert_with(|| (Some(t.dtype), Vec::new()));
+                slot.1.push(PhysicalExtent {
+                    rank: state.rank,
+                    file: file.name.clone(),
+                    entry: t.name.clone(),
+                    range: l.range.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate coverage and overlap, producing the index.
+    pub fn finish(self) -> anyhow::Result<LogicalIndex> {
+        let mut tensors = BTreeMap::new();
+        for (id, (dtype, mut extents)) in self.raw {
+            extents.sort_by_key(|e| (e.range.start, e.range.end));
+            let mut primary: Vec<PhysicalExtent> = Vec::new();
+            let mut replicas = Vec::new();
+            for ext in extents {
+                anyhow::ensure!(!ext.is_empty(),
+                                "{id}: empty extent from rank {} {}",
+                                ext.rank, ext.entry);
+                match primary.last() {
+                    Some(prev) if ext.range == prev.range => {
+                        // identical range: a DP replica, byte-identical
+                        // by construction — keep as an alternate
+                        replicas.push(ext);
+                    }
+                    Some(prev) if ext.range.start < prev.range.end => {
+                        anyhow::bail!(
+                            "{id}: partial overlap — rank {} {} covers \
+                             {:?}, rank {} {} covers {:?}",
+                            prev.rank, prev.entry, prev.range,
+                            ext.rank, ext.entry, ext.range
+                        );
+                    }
+                    Some(prev) if ext.range.start > prev.range.end => {
+                        anyhow::bail!(
+                            "{id}: gap — no bytes cover {:?}",
+                            prev.range.end..ext.range.start
+                        );
+                    }
+                    _ => primary.push(ext),
+                }
+            }
+            let first = primary.first().expect("non-empty by entry");
+            anyhow::ensure!(
+                first.range.start == 0,
+                "{id}: coverage starts at {} not 0", first.range.start
+            );
+            let len = primary.last().expect("non-empty").range.end;
+            tensors.insert(
+                id.clone(),
+                LogicalTensor {
+                    id: GlobalTensorId::new(id),
+                    len,
+                    dtype,
+                    extents: primary,
+                    replicas,
+                },
+            );
+        }
+        Ok(LogicalIndex { tensors })
+    }
+}
+
+impl LogicalIndex {
+    /// Build from per-rank trailer layouts.
+    pub fn from_layouts<'a>(
+        layouts: impl IntoIterator<Item = (usize, &'a FileLayout)>,
+    ) -> anyhow::Result<LogicalIndex> {
+        let mut b = LogicalIndexBuilder::new();
+        for (rank, layout) in layouts {
+            b.add_layout(rank, layout)?;
+        }
+        b.finish()
+    }
+
+    /// Build from in-memory rank states (write-side view).
+    pub fn from_states(states: &[RankState])
+        -> anyhow::Result<LogicalIndex> {
+        let mut b = LogicalIndexBuilder::new();
+        for s in states {
+            b.add_state(s)?;
+        }
+        b.finish()
+    }
+
+    pub fn get(&self, id: &str) -> Option<&LogicalTensor> {
+        self.tensors.get(id)
+    }
+
+    pub fn tensors(&self) -> impl Iterator<Item = &LogicalTensor> {
+        self.tensors.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total logical bytes across all tensors.
+    pub fn total_bytes(&self) -> u64 {
+        self.tensors.values().map(|t| t.len).sum()
+    }
+}
+
+/// Flatten the logically-tagged tensors of a set of rank states into
+/// full logical-tensor payloads — the equality oracle for reshard
+/// round-trips: a checkpoint written at topology A and one resharded to
+/// topology B must flatten to identical maps. Replicated slices
+/// (identical ranges) are verified byte-identical here.
+pub fn flatten_states(states: &[RankState])
+    -> anyhow::Result<BTreeMap<String, Vec<u8>>> {
+    let mut slices: BTreeMap<String, Vec<(u64, u64, Vec<u8>)>> =
+        BTreeMap::new();
+    for state in states {
+        for file in &state.files {
+            for item in &file.items {
+                let StateItem::Tensor(t) = item else { continue };
+                let Some(l) = &t.logical else { continue };
+                let bytes: Vec<u8> = match &t.data {
+                    TensorData::Host(b) => b.as_ref().clone(),
+                    TensorData::Device(d) => {
+                        let mut v = vec![0u8; d.size_bytes()];
+                        d.stage_into(&mut v)?;
+                        v
+                    }
+                };
+                anyhow::ensure!(
+                    bytes.len() as u64 == l.len(),
+                    "{}: {} payload bytes but logical range {:?}",
+                    t.name, bytes.len(), l.range
+                );
+                slices
+                    .entry(l.tensor.as_str().to_string())
+                    .or_default()
+                    .push((l.range.start, l.range.end, bytes));
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (id, mut parts) in slices {
+        parts.sort_by_key(|(s, e, _)| (*s, *e));
+        let mut flat: Vec<u8> = Vec::new();
+        let mut prev: Option<(u64, u64, &[u8])> = None;
+        for (s, e, bytes) in &parts {
+            if let Some((ps, pe, pb)) = prev {
+                if (*s, *e) == (ps, pe) {
+                    anyhow::ensure!(
+                        bytes.as_slice() == pb,
+                        "{id}: replicas of {:?} differ", ps..pe
+                    );
+                    continue;
+                }
+                anyhow::ensure!(
+                    *s == pe,
+                    "{id}: gap/overlap between {:?} and {:?}",
+                    ps..pe, *s..*e
+                );
+            } else {
+                anyhow::ensure!(*s == 0,
+                                "{id}: coverage starts at {s} not 0");
+            }
+            flat.extend_from_slice(bytes);
+            prev = Some((*s, *e, bytes.as_slice()));
+        }
+        out.insert(id, flat);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provider::layout::LayoutEntry;
+    use crate::state::tensor::LogicalRef;
+
+    fn entry(name: &str, tensor: &str, range: std::ops::Range<u64>)
+        -> LayoutEntry {
+        LayoutEntry {
+            name: name.into(),
+            kind: EntryKind::Tensor { dtype: DType::U8, shape: vec![1] },
+            extents: vec![(0, range.end - range.start)],
+            logical: Some(LogicalRef::new(tensor, range)),
+        }
+    }
+
+    fn layout(file: &str, entries: Vec<LayoutEntry>) -> FileLayout {
+        FileLayout { file_name: file.into(), fixed_region: 0, entries }
+    }
+
+    #[test]
+    fn builds_and_validates_exact_tiling() {
+        let l0 = layout("a.pt", vec![entry("t::0", "w", 0..10)]);
+        let l1 = layout("b.pt", vec![entry("t::1", "w", 10..30)]);
+        let idx =
+            LogicalIndex::from_layouts([(0, &l0), (1, &l1)]).unwrap();
+        let t = idx.get("w").unwrap();
+        assert_eq!(t.len, 30);
+        assert_eq!(t.extents.len(), 2);
+        assert_eq!(t.dtype, Some(DType::U8));
+        assert_eq!(idx.total_bytes(), 30);
+        // sub-range read plan spans the extent boundary
+        let reads = t.reads_for(5..15).unwrap();
+        assert_eq!(reads.len(), 2);
+        assert_eq!((reads[0].entry_offset, reads[0].len,
+                    reads[0].dst_offset), (5, 5, 0));
+        assert_eq!((reads[1].entry_offset, reads[1].len,
+                    reads[1].dst_offset), (0, 5, 5));
+    }
+
+    #[test]
+    fn identical_ranges_become_replicas() {
+        let l0 = layout("a.pt", vec![entry("t::0", "w", 0..10)]);
+        let l1 = layout("b.pt", vec![entry("t::1", "w", 0..10)]);
+        let idx =
+            LogicalIndex::from_layouts([(0, &l0), (1, &l1)]).unwrap();
+        let t = idx.get("w").unwrap();
+        assert_eq!(t.extents.len(), 1);
+        assert_eq!(t.replicas.len(), 1);
+        let reads = t.reads_for(0..10).unwrap();
+        assert_eq!(reads[0].alternates.len(), 1);
+    }
+
+    #[test]
+    fn gaps_and_partial_overlaps_rejected() {
+        let gap = LogicalIndex::from_layouts([
+            (0, &layout("a.pt", vec![entry("e", "w", 0..10)])),
+            (1, &layout("b.pt", vec![entry("e", "w", 12..20)])),
+        ]);
+        assert!(gap.unwrap_err().to_string().contains("gap"));
+        let ovl = LogicalIndex::from_layouts([
+            (0, &layout("a.pt", vec![entry("e", "w", 0..10)])),
+            (1, &layout("b.pt", vec![entry("e", "w", 5..20)])),
+        ]);
+        assert!(ovl.unwrap_err().to_string().contains("overlap"));
+        let off = LogicalIndex::from_layouts([(
+            0,
+            &layout("a.pt", vec![entry("e", "w", 5..10)]),
+        )]);
+        assert!(off.unwrap_err().to_string().contains("starts at 5"));
+    }
+
+    #[test]
+    fn logical_range_must_match_payload_length() {
+        // a corrupt trailer claiming a huge logical range is rejected
+        // at index build, before any buffer is sized from it
+        let mut e = entry("e", "w", 0..10);
+        e.logical = Some(LogicalRef::new("w", 0..u64::MAX / 2));
+        let bad = LogicalIndex::from_layouts([(
+            0,
+            &layout("a.pt", vec![e]),
+        )]);
+        assert!(bad.unwrap_err().to_string()
+            .contains("does not match payload length"));
+    }
+
+    #[test]
+    fn flatten_states_assembles_and_checks_replicas() {
+        use crate::state::shard::{FileKind, ShardFile};
+        use crate::state::tensor::TensorShard;
+        let shard = |name: &str, bytes: Vec<u8>,
+                     range: std::ops::Range<u64>| {
+            StateItem::Tensor(
+                TensorShard::host(name, DType::U8,
+                                  vec![bytes.len()], bytes)
+                    .with_logical(Some(LogicalRef::new("w", range))),
+            )
+        };
+        let mk = |rank, items| RankState {
+            rank,
+            files: vec![ShardFile {
+                name: "f.pt".into(),
+                kind: FileKind::ParamLayer,
+                items,
+            }],
+        };
+        let states = vec![
+            mk(0, vec![shard("a", vec![1, 2], 0..2)]),
+            mk(1, vec![shard("b", vec![3, 4, 5], 2..5)]),
+            mk(2, vec![shard("c", vec![1, 2], 0..2)]), // replica of a
+        ];
+        let flat = flatten_states(&states).unwrap();
+        assert_eq!(flat["w"], vec![1, 2, 3, 4, 5]);
+        // a differing replica fails
+        let bad = vec![
+            mk(0, vec![shard("a", vec![1, 2], 0..2)]),
+            mk(1, vec![shard("c", vec![9, 9], 0..2)]),
+        ];
+        assert!(flatten_states(&bad).unwrap_err().to_string()
+            .contains("replicas"));
+    }
+}

@@ -1,14 +1,19 @@
 //! Checkpoint payload model: tensors, Python-like objects, shard files,
-//! and the 3D (TP/PP/DP + ZeRO) partitioner.
+//! the 3D (TP/PP/DP + ZeRO) partitioner, and the logical state index
+//! that maps physical shards back onto topology-independent logical
+//! tensors (restore-time resharding).
 
+pub mod index;
 pub mod object;
 pub mod partition;
 pub mod shard;
 pub mod tensor;
 
+pub use index::{flatten_states, LogicalIndex, LogicalIndexBuilder,
+                LogicalTensor, PhysicalExtent, SliceRead};
 pub use object::PyObj;
 pub use partition::{census, materialize, table1_rows, Census, FileDesc,
-                    RankCensus};
+                    FileLogical, RankCensus};
 pub use shard::{FileKind, RankState, ShardFile, StateItem};
-pub use tensor::{DType, DeviceTensor, SimDeviceTensor, TensorData,
-                 TensorShard};
+pub use tensor::{DType, DeviceTensor, GlobalTensorId, LogicalRef,
+                 SimDeviceTensor, TensorData, TensorShard};

@@ -20,7 +20,51 @@
 use crate::config::{LlmConfig, Parallelism};
 use crate::state::object::PyObj;
 use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
-use crate::state::tensor::{DType, SimDeviceTensor, TensorShard};
+use crate::state::tensor::{DType, LogicalRef, SimDeviceTensor,
+                           TensorShard};
+
+/// How a file's tensors map onto the job's *logical* tensors — the
+/// topology-independent identity that makes restore-time resharding
+/// possible (`state::index`, `restore::reshard`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileLogical {
+    /// Rank-local control state with no cross-topology identity
+    /// (metadata files). Not resharddable.
+    None,
+    /// A layer unit's TP slice: this file holds slice `tp` of `n_tp`
+    /// of every tensor of logical unit `unit`.
+    ParamUnit { unit: usize, tp: usize, n_tp: usize },
+    /// A ZeRO-1 optimizer partition: flat part `part` of `n_parts`
+    /// (canonical order: model-parallel rank major, DP replica minor)
+    /// of every optimizer state tensor.
+    Optimizer { part: usize, n_parts: usize },
+}
+
+impl FileLogical {
+    /// Logical tensor id of tensor `ti` of this file (`None` for
+    /// rank-local state).
+    pub fn tensor_id(&self, ti: usize) -> Option<String> {
+        match self {
+            FileLogical::None => None,
+            FileLogical::ParamUnit { unit, .. } => {
+                Some(format!("unit{unit:03}/t{ti}"))
+            }
+            FileLogical::Optimizer { .. } => Some(format!("optim/t{ti}")),
+        }
+    }
+
+    /// (slice index, slice count) of this file within each of its
+    /// logical tensors.
+    pub fn slice(&self) -> Option<(usize, usize)> {
+        match self {
+            FileLogical::None => None,
+            FileLogical::ParamUnit { tp, n_tp, .. } => Some((*tp, *n_tp)),
+            FileLogical::Optimizer { part, n_parts } => {
+                Some((*part, *n_parts))
+            }
+        }
+    }
+}
 
 /// Descriptor of one checkpoint file (no payload).
 #[derive(Debug, Clone)]
@@ -37,6 +81,8 @@ pub struct FileDesc {
     pub object_bytes: u64,
     /// True if the tensors live on device (GPU) rather than host.
     pub on_device: bool,
+    /// Logical-tensor mapping of this file's shards.
+    pub logical: FileLogical,
 }
 
 /// Checkpoint composition of one rank.
@@ -155,6 +201,7 @@ pub fn census(cfg: &LlmConfig, par: &Parallelism) -> Census {
                     n_tensors: 4,
                     object_bytes: METADATA_OBJ_BYTES,
                     on_device: false,
+                    logical: FileLogical::None,
                 });
                 // layer parameter files: DP replicas hold identical
                 // parameters, so layer-shard writes are distributed
@@ -183,6 +230,11 @@ pub fn census(cfg: &LlmConfig, par: &Parallelism) -> Census {
                             n_tensors,
                             object_bytes: LAYER_OBJ_BYTES,
                             on_device: true,
+                            logical: FileLogical::ParamUnit {
+                                unit: unit_id,
+                                tp,
+                                n_tp: par.tp,
+                            },
                         });
                     }
                 }
@@ -206,6 +258,12 @@ pub fn census(cfg: &LlmConfig, par: &Parallelism) -> Census {
                     n_tensors: 3,
                     object_bytes: OPTIM_OBJ_BYTES,
                     on_device: true,
+                    // canonical flat order: model-parallel rank major
+                    // (pp stage, then tp), DP replica minor
+                    logical: FileLogical::Optimizer {
+                        part: (pp * par.tp + tp) * par.dp + dp,
+                        n_parts: par.world(),
+                    },
                 });
                 ranks.push(RankCensus { rank, coords: (tp, pp, dp), files });
             }
@@ -266,6 +324,20 @@ pub fn materialize(rank: &RankCensus, scale: f64, obj_scale: f64,
             let numel = per_tensor.div_ceil(esz).max(1);
             let shape = vec![numel];
             let name = format!("{}::tensor_{ti}", fd.name);
+            // Logical identity: every rank materializes the same slice
+            // size for a given logical tensor (the census bytes are a
+            // pure function of model + topology, identical across the
+            // ranks sharing a logical tensor), so slice k of n covers
+            // bytes [k*b, (k+1)*b) of a logical tensor of n*b bytes.
+            let logical = match (fd.logical.tensor_id(ti),
+                                 fd.logical.slice()) {
+                (Some(id), Some((k, _n))) => {
+                    let b = (numel * esz) as u64;
+                    Some(LogicalRef::new(id, k as u64 * b
+                                             ..(k as u64 + 1) * b))
+                }
+                _ => None,
+            };
             let t = if fd.on_device {
                 let bytes = TensorShard::synthetic(
                     &name, fd.dtype, shape.clone(),
@@ -285,7 +357,7 @@ pub fn materialize(rank: &RankCensus, scale: f64, obj_scale: f64,
                     seed ^ ((fi as u64) << 32) ^ ti as u64,
                 )
             };
-            items.push(StateItem::Tensor(t));
+            items.push(StateItem::Tensor(t.with_logical(logical)));
         }
         let obj_bytes = ((fd.object_bytes as f64 * obj_scale) as usize).max(64);
         items.push(StateItem::Object {
@@ -398,6 +470,53 @@ mod tests {
         // device residency is preserved for param/optim tensors
         let dev: usize = rs.files.iter().map(|f| f.device_bytes()).sum();
         assert!(dev > 0);
+    }
+
+    #[test]
+    fn logical_refs_tile_each_logical_tensor() {
+        // Across every rank of a 3D topology, the emitted LogicalRefs
+        // must tile each logical tensor exactly: sorted ranges abut
+        // with no gaps or overlaps, starting at 0.
+        let c = cfg("3B");
+        let par = Parallelism::new(2, 2, 2);
+        let cs = census(&c, &par);
+        let mut by_tensor: std::collections::BTreeMap<
+            String, Vec<(u64, u64)>> = Default::default();
+        for rc in &cs.ranks {
+            let rs = materialize(rc, 1e-5, 0.02, rc.rank as u64);
+            for f in &rs.files {
+                for item in &f.items {
+                    if let StateItem::Tensor(t) = item {
+                        if let Some(l) = &t.logical {
+                            assert_eq!(l.len(), t.size_bytes() as u64,
+                                       "{}", t.name);
+                            by_tensor
+                                .entry(l.tensor.as_str().to_string())
+                                .or_default()
+                                .push((l.range.start, l.range.end));
+                        }
+                    }
+                }
+            }
+        }
+        assert!(!by_tensor.is_empty());
+        for (id, mut ranges) in by_tensor {
+            ranges.sort();
+            let mut cur = 0;
+            for (s, e) in ranges {
+                assert_eq!(s, cur, "{id}: gap/overlap at {s}");
+                cur = e;
+            }
+        }
+        // metadata tensors carry no logical identity
+        let rs = materialize(&cs.ranks[0], 1e-5, 0.02, 0);
+        let meta = rs.files.iter()
+            .find(|f| f.kind == FileKind::Metadata).unwrap();
+        for item in &meta.items {
+            if let StateItem::Tensor(t) = item {
+                assert!(t.logical.is_none());
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,57 @@
 
 use std::sync::Arc;
 
+/// Identity of one *logical* tensor of the training job, independent of
+/// how any particular topology shards it (e.g. `"unit004/t03"` for the
+/// fourth tensor of layer unit 4, `"optim/t1"` for the second optimizer
+/// state tensor). Two checkpoints of the same model at different
+/// TP/PP/DP layouts shard the SAME set of logical tensors — which is
+/// what makes restore-time resharding possible (`state::index`,
+/// `restore::reshard`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GlobalTensorId(pub String);
+
+impl GlobalTensorId {
+    pub fn new(id: impl Into<String>) -> Self {
+        GlobalTensorId(id.into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for GlobalTensorId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Where a physical shard sits inside its logical tensor: the byte
+/// `range` it covers of the logical tensor `tensor`. Emitted by the 3D
+/// partitioner, carried through the providers into the self-describing
+/// file trailer, and consumed by the `LogicalIndex` / reshard planner.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogicalRef {
+    pub tensor: GlobalTensorId,
+    pub range: std::ops::Range<u64>,
+}
+
+impl LogicalRef {
+    pub fn new(tensor: impl Into<String>, range: std::ops::Range<u64>)
+        -> Self {
+        LogicalRef { tensor: GlobalTensorId::new(tensor), range }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
 /// Element type of a shard — the "type/precision" heterogeneity axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
@@ -107,6 +158,10 @@ pub struct TensorShard {
     pub dtype: DType,
     pub shape: Vec<usize>,
     pub data: TensorData,
+    /// Which slice of which logical tensor this shard is. `None` for
+    /// rank-local state that has no topology-independent identity
+    /// (host metadata tensors) — such shards cannot be resharded.
+    pub logical: Option<LogicalRef>,
 }
 
 impl TensorShard {
@@ -118,6 +173,7 @@ impl TensorShard {
             dtype,
             shape,
             data: TensorData::Host(Arc::new(bytes)),
+            logical: None,
         };
         debug_assert_eq!(s.expected_bytes(), s.data.len());
         s
@@ -131,7 +187,14 @@ impl TensorShard {
             dtype,
             shape,
             data: TensorData::Device(dev),
+            logical: None,
         }
+    }
+
+    /// Attach (or clear) the logical-tensor identity of this shard.
+    pub fn with_logical(mut self, logical: Option<LogicalRef>) -> Self {
+        self.logical = logical;
+        self
     }
 
     /// Deterministic pseudo-random host shard (tests, benchmarks).
@@ -207,6 +270,18 @@ mod tests {
             _ => unreachable!(),
         }
         assert_eq!(dst, bytes);
+    }
+
+    #[test]
+    fn logical_ref_attaches_and_measures() {
+        let t = TensorShard::synthetic("a", DType::U8, vec![64], 1)
+            .with_logical(Some(LogicalRef::new("unit000/t0", 64..128)));
+        let l = t.logical.as_ref().unwrap();
+        assert_eq!(l.tensor.as_str(), "unit000/t0");
+        assert_eq!(l.len(), 64);
+        assert!(!l.is_empty());
+        let bare = TensorShard::synthetic("b", DType::U8, vec![4], 2);
+        assert!(bare.logical.is_none());
     }
 
     #[test]

@@ -581,20 +581,31 @@ impl TierPipeline {
         Ok(files)
     }
 
-    /// Read one checkpoint file from the nearest tier holding a readable
-    /// copy, falling through on missing or torn files.
-    pub fn read_file_nearest(&self, rel: &str)
-        -> anyhow::Result<RestoredFile> {
+    /// File names of a version (manifest when trustworthy, else the
+    /// union of per-tier listings) — the reshard planner's view of a
+    /// source rank's checkpoint.
+    pub fn version_file_names(&self, version: u64)
+        -> anyhow::Result<Vec<String>> {
+        self.version_files(version, &format!("v{version:06}"))
+    }
+
+    /// Open `rel` on the nearest tier holding a copy and hand the
+    /// reader to `parse`, falling through to deeper tiers on missing or
+    /// torn (unparsable) copies. The single home of the torn-copy
+    /// fall-through policy — every nearest-tier read path funnels
+    /// through here.
+    fn open_nearest<T>(
+        &self,
+        rel: &str,
+        parse: impl Fn(Box<dyn ReadAt>) -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
         let mut last_err: Option<anyhow::Error> = None;
         for tier in &self.shared.tiers {
             if !tier.exists(rel) {
                 continue;
             }
-            match tier
-                .open(rel)
-                .and_then(crate::restore::read_from)
-            {
-                Ok(rf) => return Ok(rf),
+            match tier.open(rel).and_then(&parse) {
+                Ok(v) => return Ok(v),
                 Err(e) => {
                     // torn/truncated on this tier: try the next one
                     last_err = Some(anyhow::anyhow!(
@@ -607,6 +618,47 @@ impl TierPipeline {
         Err(last_err.unwrap_or_else(|| {
             anyhow::anyhow!("{rel}: not found on any tier")
         }))
+    }
+
+    /// Open one checkpoint file of a version as a positioned-read chunk
+    /// stream from the nearest tier holding a readable copy, falling
+    /// through on missing or torn (unparsable-trailer) copies — the
+    /// streaming sibling of [`TierPipeline::read_file_nearest`], used by
+    /// the reshard executor to pull sub-ranges of entries without
+    /// materializing whole files.
+    pub fn chunk_source_nearest(&self, rel: &str)
+        -> anyhow::Result<crate::restore::ChunkSource> {
+        self.open_nearest(rel, |r| {
+            crate::restore::ChunkSource::from_reader(
+                r,
+                crate::restore::source::DEFAULT_CHUNK_BYTES,
+            )
+        })
+    }
+
+    /// Read one checkpoint file from the nearest tier holding a readable
+    /// copy, falling through on missing or torn files.
+    pub fn read_file_nearest(&self, rel: &str)
+        -> anyhow::Result<RestoredFile> {
+        self.open_nearest(rel, crate::restore::read_from)
+    }
+
+    /// Cheap completeness check: every file of `version` has a parsable
+    /// self-describing copy on some tier. The trailer + footer are
+    /// written only after every payload write landed
+    /// (`FlushFile::finalize`), so a successful parse implies the whole
+    /// file is present — unlike [`TierPipeline::read_version`] this
+    /// reads no payload bytes, which is what the distributed commit
+    /// vote needs (verifying N versions must not re-read N checkpoints).
+    pub fn version_readable(&self, version: u64) -> anyhow::Result<()> {
+        let dir = format!("v{version:06}");
+        let files = self.version_files(version, &dir)?;
+        anyhow::ensure!(!files.is_empty(),
+                        "no files recorded or stored for v{version}");
+        for f in &files {
+            self.chunk_source_nearest(&format!("{dir}/{f}"))?;
+        }
+        Ok(())
     }
 
     /// Read every file of a checkpoint version, each from its nearest

@@ -11,17 +11,29 @@
 //! - a barrier after the update models the collective the training
 //!   runtime already performs (pipeline flush / allreduce);
 //! - a version is *committed* — the leader writes `global_commit_vNNN` —
-//!   only after all ranks drained that version, giving atomic global
+//!   only after EVERY rank's tier pipeline resolves a complete readable
+//!   copy of it (`TierPipeline::version_readable`), giving atomic global
 //!   versions on restart (a rank crash before commit leaves the previous
-//!   committed version authoritative).
+//!   committed version authoritative). Deciding through the pipeline —
+//!   not raw `rankNNN/vNNNNNN` path existence — keeps commits correct
+//!   when `--tiers` lands the terminal tier somewhere else (e.g. the
+//!   in-memory host cache) or the fast tier has been evicted.
+//!
+//! Restarting does not require the original topology: `resume_resharded`
+//! resolves `latest_committed` and materializes ANY target topology's
+//! rank states from it through the logical index
+//! (`restore::reshard::restore_for_topology`).
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 
 use crate::baselines::EngineKind;
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, LlmConfig, Parallelism};
+use crate::restore::reshard::{execute_plan, plan_reshard,
+                              CheckpointWorld};
 use crate::state::RankState;
+use crate::storage::TierSpec;
 
 /// Per-rank outcome of a distributed run.
 #[derive(Debug, Clone, Default)]
@@ -31,6 +43,9 @@ pub struct RankReport {
     pub gate_wait_s: f64,
     pub launch_s: f64,
     pub blocked_s: f64,
+    /// Versions this rank's tier pipeline resolves a complete readable
+    /// copy of (the rank's vote for the global commit).
+    pub verified_versions: Vec<u64>,
 }
 
 /// Global outcome.
@@ -125,6 +140,23 @@ where
                     for ticket in &tickets {
                         ticket.wait_persisted()?;
                     }
+                    // commit vote through the tier pipeline: a version
+                    // counts only if a complete parsable copy resolves
+                    // through the tiers (correct even when the terminal
+                    // tier is the in-memory host cache, or the fast
+                    // tier was evicted — raw path existence is not);
+                    // trailer-parse only, no payload re-reads
+                    let pipeline = engine.pipeline();
+                    for ticket in &tickets {
+                        if pipeline
+                            .version_readable(ticket.version())
+                            .is_ok()
+                        {
+                            report
+                                .verified_versions
+                                .push(ticket.version());
+                        }
+                    }
                     drained.fetch_add(1, Ordering::AcqRel);
                     Ok(report)
                 }));
@@ -146,12 +178,12 @@ where
     if cfg.interval > 0 {
         let mut v = cfg.interval;
         while v <= cfg.iterations {
-            // verify every rank produced the version, then commit
-            let all = (0..cfg.world).all(|r| {
-                cfg.ckpt_root
-                    .join(format!("rank{r:03}/v{v:06}"))
-                    .exists()
-            });
+            // commit only versions EVERY rank's pipeline verified (a
+            // complete readable copy on some tier — not a path check)
+            let all = world
+                .ranks
+                .iter()
+                .all(|r| r.verified_versions.contains(&v));
             if all {
                 std::fs::write(
                     cfg.ckpt_root.join(format!("global_commit_v{v:06}")),
@@ -165,12 +197,58 @@ where
     Ok(world)
 }
 
-/// Latest globally-committed version (restart entry point).
-pub fn latest_committed(root: &std::path::Path)
-    -> anyhow::Result<Option<u64>> {
-    let mut best = None;
+/// Restart entry point across topologies: resolve the newest globally
+/// committed version under `root` whose data still resolves through
+/// tier stack `tiers`, and materialize every rank state of the
+/// `target` topology from it via the logical index. The source world
+/// size is read from the commit marker itself (`run_world` records it),
+/// so callers need not know the topology the checkpoint was written
+/// under. A commit marker attests a globally-consistent version existed
+/// when the run committed it — with volatile-only tiers (`--tiers
+/// hostcache`) the data dies with the engines while the marker
+/// survives, so markers whose data no longer resolves are skipped with
+/// a warning, falling back to the next-older commit. `Ok(None)` when no
+/// committed version's data can be resolved.
+pub fn resume_resharded(
+    root: &std::path::Path,
+    tiers: &[TierSpec],
+    model: &LlmConfig,
+    target: &Parallelism,
+) -> anyhow::Result<Option<(u64, Vec<RankState>)>> {
+    for v in committed_versions(root)?.into_iter().rev() {
+        // resolution failures (missing rank dirs, unreadable/torn
+        // files, unbuildable index) mean THIS version's data is gone:
+        // fall back to an older commit
+        let resolved = committed_world(root, v).and_then(|w| {
+            let world = CheckpointWorld::open(root, w, tiers)?;
+            let index = world.index(v)?;
+            Ok((world, index))
+        });
+        let (world, index) = match resolved {
+            Ok(wi) => wi,
+            Err(e) => {
+                eprintln!(
+                    "[train] committed v{v} no longer resolves \
+                     ({e:#}); falling back to an older commit"
+                );
+                continue;
+            }
+        };
+        // a checkpoint that resolves but fails to plan or execute is a
+        // real error (wrong model, layout bug) — propagate, don't mask
+        // it as "nothing to resume"
+        let plan = plan_reshard(model, target, &index)?;
+        return Ok(Some((v, execute_plan(&world, v, &plan)?)));
+    }
+    Ok(None)
+}
+
+/// All globally-committed versions under `root`, ascending.
+pub fn committed_versions(root: &std::path::Path)
+    -> anyhow::Result<Vec<u64>> {
+    let mut vs = Vec::new();
     if !root.exists() {
-        return Ok(None);
+        return Ok(vs);
     }
     for entry in std::fs::read_dir(root)? {
         let name = entry?.file_name().to_string_lossy().into_owned();
@@ -178,10 +256,27 @@ pub fn latest_committed(root: &std::path::Path)
             .strip_prefix("global_commit_v")
             .and_then(|s| s.parse::<u64>().ok())
         {
-            best = best.max(Some(v));
+            vs.push(v);
         }
     }
-    Ok(best)
+    vs.sort_unstable();
+    Ok(vs)
+}
+
+/// World size recorded in version `v`'s commit marker.
+fn committed_world(root: &std::path::Path, v: u64)
+    -> anyhow::Result<usize> {
+    let path = root.join(format!("global_commit_v{v:06}"));
+    let body = std::fs::read_to_string(&path)?;
+    body.trim().parse().map_err(|_| {
+        anyhow::anyhow!("{path:?}: bad world size {body:?}")
+    })
+}
+
+/// Latest globally-committed version (restart entry point).
+pub fn latest_committed(root: &std::path::Path)
+    -> anyhow::Result<Option<u64>> {
+    Ok(committed_versions(root)?.pop())
 }
 
 #[cfg(test)]
@@ -227,6 +322,78 @@ mod tests {
                                     (r as u64) << 32 | 3);
             crate::restore::verify_against(&vdir, &state).unwrap();
         }
+    }
+
+    #[test]
+    fn commit_decided_by_pipeline_works_with_volatile_terminal_tier() {
+        // terminal tier = in-memory host cache: NO rankNNN/vNNNNNN
+        // paths ever exist on disk, so the old path-existence commit
+        // would find nothing — the pipeline-decided commit still works
+        // because each rank verifies through its own engine's tiers.
+        let dir = TempDir::new("world-hostcache").unwrap();
+        let cfg3 = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::new(2, 1, 1);
+        let cs = census(&cfg3, &par);
+        let mut wc = world_cfg(dir.path(), 2, 2);
+        wc.engine_cfg = EngineConfig::default()
+            .with_tiers(vec![crate::storage::TierSpec::host_cache()]);
+        let report = run_world(
+            &wc,
+            |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.02,
+                                   (rank as u64) << 32 | it),
+            |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(report.committed_versions, vec![2, 4]);
+        // and indeed nothing was written on disk by the ranks
+        assert!(!dir.path().join("rank000/v000002").exists());
+    }
+
+    #[test]
+    fn resume_resharded_restores_latest_commit_onto_new_topology() {
+        let dir = TempDir::new("world-reshard").unwrap();
+        let model = LlmConfig::by_name("3B").unwrap();
+        let from = Parallelism::new(2, 1, 1);
+        let cs = census(&model, &from);
+        run_world(
+            &world_cfg(dir.path(), 2, 2),
+            |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.02,
+                                   (rank as u64) << 32 | it),
+            |_, _| {},
+        )
+        .unwrap();
+        let to = Parallelism::new(1, 1, 1);
+        let (v, restored) = resume_resharded(
+            dir.path(),
+            &[crate::storage::TierSpec::local_fs()],
+            &model,
+            &to,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(v, 4);
+        assert_eq!(restored.len(), 1);
+        // v4 was written from state_fn(rank, it=3): flattening the
+        // source and resharded states through the logical index must
+        // agree byte for byte
+        let src: Vec<RankState> = (0..2)
+            .map(|r| materialize(&cs.ranks[r], 1e-5, 0.02,
+                                 (r as u64) << 32 | 3))
+            .collect();
+        assert_eq!(
+            crate::state::index::flatten_states(&src).unwrap(),
+            crate::state::index::flatten_states(&restored).unwrap()
+        );
+        // empty root resumes to None
+        let empty = TempDir::new("world-reshard-empty").unwrap();
+        assert!(resume_resharded(
+            empty.path(),
+            &[crate::storage::TierSpec::local_fs()],
+            &model,
+            &to
+        )
+        .unwrap()
+        .is_none());
     }
 
     #[test]
