@@ -132,7 +132,9 @@ impl TorchSnapshotEngine {
                     pool.submit(WriteJob {
                         file: f.clone(),
                         offset: 0,
-                        data: Bytes::from_vec(chunk.to_vec()),
+                        // deliberate copy: TorchSnapshot's chunk files
+                        // are written from freshly materialized buffers
+                        extents: vec![Bytes::from_vec(chunk.to_vec())],
                         label: name.clone(),
                         notify: None,
                         progress: Some(progress.clone()),

@@ -132,6 +132,19 @@ pub struct EngineConfig {
     /// studies. `0` disables coalescing (every chunk is its own write,
     /// the pre-coalescing behavior).
     pub coalesce_bytes: usize,
+    /// Issue merged coalesced runs as zero-copy **gather-list** writes:
+    /// the run's chunk views go to the storage backend as one vectored
+    /// write (`BackendFile::write_gather_at`) and the payload is never
+    /// concatenated in host memory. `false` falls back to merging
+    /// through a per-run copy buffer (the pre-gather pump path, kept
+    /// for the `figures gather` ablation); output files are
+    /// byte-identical either way.
+    pub gather_writes: bool,
+    /// Concurrent D2H staging lanes sharing the pinned pool — the
+    /// paper's concurrent copy streams. Staging jobs are dealt
+    /// round-robin across lanes; the pool's blocking free list is the
+    /// shared backpressure point. Clamped to >= 1.
+    pub stager_lanes: usize,
     /// Directory checkpoints are written to (the root of the terminal
     /// filesystem tier).
     pub ckpt_dir: std::path::PathBuf,
@@ -157,6 +170,8 @@ impl Default for EngineConfig {
             writer_threads: 4,
             chunk_bytes: 4 << 20,    // 4 MiB
             coalesce_bytes: 16 << 20, // merge contiguous chunks up to 16 MiB
+            gather_writes: true,
+            stager_lanes: 2,
             ckpt_dir: std::path::PathBuf::from("/tmp/datastates-ckpt"),
             pinned: true,
             direct_io: false,

@@ -87,17 +87,40 @@ struct PumpJob {
     requested: Instant,
     /// Coalesced-write ceiling (0 = coalescing off).
     coalesce_bytes: usize,
+    /// Seal merged runs as zero-copy gather lists.
+    gather_writes: bool,
 }
 
-/// A write the coalescer decided to issue: either a single chunk passed
-/// through zero-copy, or `merged + 1` file-contiguous chunks
-/// concatenated into one positioned write.
+/// A write the coalescer decided to issue: a gather list of `merged + 1`
+/// file-contiguous chunk views going to the flush pool as ONE
+/// positioned write. With gather writes on (the default) the list is
+/// handed to the backend as-is — zero payload memcpy between the
+/// staging pool and storage; the copy-path fallback (ablations)
+/// concatenates the run into a single heap extent first.
 struct MergedWrite {
     offset: u64,
-    data: Bytes,
+    /// File-contiguous chunk views, in file order (one element for
+    /// pass-through chunks and copy-path merges).
+    parts: Vec<Bytes>,
     label: String,
     /// Chunks folded into a neighbor (k-chunk run → k-1; 0 = pass-through).
     merged: u64,
+}
+
+impl MergedWrite {
+    fn total_len(&self) -> u64 {
+        self.parts.iter().map(|p| p.len() as u64).sum()
+    }
+
+    /// A single chunk passed through untouched.
+    fn pass_through(chunk: Chunk) -> MergedWrite {
+        MergedWrite {
+            offset: chunk.offset,
+            parts: vec![chunk.data],
+            label: chunk.label,
+            merged: 0,
+        }
+    }
 }
 
 /// One open run of file-contiguous chunks awaiting merge.
@@ -109,25 +132,26 @@ struct Run {
 }
 
 impl Run {
-    fn seal(self) -> MergedWrite {
-        if self.parts.len() == 1 {
-            // single chunk: keep the zero-copy view
-            let data = self.parts.into_iter().next().expect("one part");
+    fn seal(self, gather: bool) -> MergedWrite {
+        let merged = (self.parts.len() - 1) as u64;
+        if gather || self.parts.len() == 1 {
+            // the extent list IS the merged write — no copy
             MergedWrite {
                 offset: self.start,
-                data,
+                parts: self.parts,
                 label: self.label,
-                merged: 0,
+                merged,
             }
         } else {
-            let merged = (self.parts.len() - 1) as u64;
+            // copy-path fallback: concatenate into one heap extent
+            // (the pre-gather behavior, kept for ablations)
             let mut buf = Vec::with_capacity(self.len as usize);
             for p in &self.parts {
                 buf.extend_from_slice(p.as_slice());
             }
             MergedWrite {
                 offset: self.start,
-                data: Bytes::from_vec(buf),
+                parts: vec![Bytes::from_vec(buf)],
                 label: self.label,
                 merged,
             }
@@ -140,8 +164,10 @@ impl Run {
 /// so the coalescer keeps a small set of open *runs* — one per
 /// file-contiguous sequence in flight — appends each `Ready` chunk to
 /// the run it extends, and seals a run into a single `WriteJob` once it
-/// reaches `max_bytes` (or at stream exhaustion). Merging copies the
-/// chunk bytes once; passing a lone chunk through stays zero-copy.
+/// reaches `max_bytes` (or at stream exhaustion). Sealing is zero-copy:
+/// the run's chunk views become the job's gather list, written by the
+/// backend as one vectored write (`gather = false` keeps the old
+/// copy-merge for ablations; lone chunks always pass through as-is).
 /// A chunk extends a run only when its label matches too: a merged
 /// write carries ONE label into the Fig 15 timeline, so merging across
 /// entry boundaries (tensors are 64-byte aligned and often abut
@@ -149,6 +175,9 @@ impl Run {
 struct Coalescer {
     /// 0 disables coalescing entirely.
     max_bytes: usize,
+    /// Seal merged runs as zero-copy gather lists (vs the copy-path
+    /// fallback that concatenates each run into a fresh buffer).
+    gather: bool,
     runs: Vec<Run>,
 }
 
@@ -161,20 +190,15 @@ struct Coalescer {
 const MAX_OPEN_RUNS: usize = 16;
 
 impl Coalescer {
-    fn new(max_bytes: usize) -> Coalescer {
-        Coalescer { max_bytes, runs: Vec::new() }
+    fn new(max_bytes: usize, gather: bool) -> Coalescer {
+        Coalescer { max_bytes, gather, runs: Vec::new() }
     }
 
     /// Absorb one chunk; returns any writes that became due.
     fn push(&mut self, chunk: Chunk) -> Vec<MergedWrite> {
         let len = chunk.data.len() as u64;
         if self.max_bytes == 0 {
-            return vec![MergedWrite {
-                offset: chunk.offset,
-                data: chunk.data,
-                label: chunk.label,
-                merged: 0,
-            }];
+            return vec![MergedWrite::pass_through(chunk)];
         }
         let mut out = Vec::new();
         if let Some(i) = self
@@ -187,7 +211,7 @@ impl Coalescer {
             run.parts.push(chunk.data);
             run.len += len;
             if run.len as usize >= self.max_bytes {
-                out.push(self.runs.remove(i).seal());
+                out.push(self.runs.remove(i).seal(self.gather));
             }
             return out;
         }
@@ -196,17 +220,12 @@ impl Coalescer {
             // now keeps the zero-copy path and keeps `max_bytes` a real
             // bound (otherwise it would sit buffered until the NEXT
             // chunk of its tensor arrives, then seal oversized)
-            out.push(MergedWrite {
-                offset: chunk.offset,
-                data: chunk.data,
-                label: chunk.label,
-                merged: 0,
-            });
+            out.push(MergedWrite::pass_through(chunk));
             return out;
         }
         if self.runs.len() >= MAX_OPEN_RUNS {
             // bound buffering: seal the oldest run to free a slot
-            out.push(self.runs.remove(0).seal());
+            out.push(self.runs.remove(0).seal(self.gather));
         }
         self.runs.push(Run {
             start: chunk.offset,
@@ -220,7 +239,11 @@ impl Coalescer {
     /// Seal every open run (stream exhausted; nothing more can extend
     /// them).
     fn flush_all(&mut self) -> Vec<MergedWrite> {
-        std::mem::take(&mut self.runs).into_iter().map(Run::seal).collect()
+        let gather = self.gather;
+        std::mem::take(&mut self.runs)
+            .into_iter()
+            .map(|r| r.seal(gather))
+            .collect()
     }
 }
 
@@ -255,6 +278,7 @@ impl ActiveCkpt {
         }
         let n = job.composites.len();
         let coalesce_bytes = job.coalesce_bytes;
+        let gather = job.gather_writes;
         Ok(ActiveCkpt {
             session: job.session,
             requested: job.requested,
@@ -262,7 +286,7 @@ impl ActiveCkpt {
             composites: job.composites,
             files,
             coalescers: (0..n)
-                .map(|_| Coalescer::new(coalesce_bytes))
+                .map(|_| Coalescer::new(coalesce_bytes, gather))
                 .collect(),
             issuing_done: vec![false; n],
             finalized: vec![false; n],
@@ -329,17 +353,22 @@ impl ActiveCkpt {
     }
 
     /// Hand one (possibly merged) write to the flush pool, attributing
-    /// coalescing savings to the owning session.
+    /// coalescing and gather savings to the owning session.
     fn submit(session: &Arc<CkptSession>, file: &Arc<FlushFile>,
               w: MergedWrite, flush: &Arc<FlushPool>,
               notifier: &Arc<Notifier>) {
         if w.merged > 0 {
-            session.add_coalesced(w.merged, w.data.len() as u64);
+            session.add_coalesced(w.merged, w.total_len());
+            if w.parts.len() > 1 {
+                // zero-copy gather: the merge buffer these bytes would
+                // have been concatenated into never exists
+                session.add_gather(w.parts.len() as u64, w.total_len());
+            }
         }
         flush.submit(WriteJob {
             file: file.clone(),
             offset: w.offset,
-            data: w.data,
+            extents: w.parts,
             label: w.label,
             notify: Some(notifier.clone()),
             progress: Some(session.progress_counters()),
@@ -364,7 +393,10 @@ impl DataStatesEngine {
     pub fn new(cfg: EngineConfig) -> anyhow::Result<Self> {
         let timeline = Arc::new(Timeline::new());
         let pool = PinnedPool::new(cfg.host_cache_bytes);
-        let stager = Stager::new(pool, timeline.clone());
+        // N concurrent copy streams over the shared pinned pool; the
+        // pool's blocking free list is the shared backpressure point
+        let stager =
+            Stager::with_lanes(pool, timeline.clone(), cfg.stager_lanes);
         let serializer =
             SerializerPool::with_timeline(2, Some(timeline.clone()));
         let flush = FlushPool::new(cfg.writer_threads, timeline.clone());
@@ -683,6 +715,7 @@ impl CheckpointEngine for DataStatesEngine {
                 composites,
                 requested: t0,
                 coalesce_bytes: self.cfg.coalesce_bytes,
+                gather_writes: self.cfg.gather_writes,
             }))
             .map_err(|_| anyhow::anyhow!("pump thread dead"))?;
         // wake the pump in case it is parked mid-drain on the notifier
@@ -788,30 +821,48 @@ mod tests {
     fn coalescer_merges_interleaved_contiguous_runs() {
         // round-robin interleaving: a0, b0, a1 — a's chunks merge even
         // though b's chunk arrived between them
-        let mut c = Coalescer::new(100);
+        let mut c = Coalescer::new(100, true);
         assert!(c.push(mk_chunk(0, 10, "a")).is_empty());
         assert!(c.push(mk_chunk(50, 10, "b")).is_empty());
         assert!(c.push(mk_chunk(10, 10, "a")).is_empty());
         let mut out = c.flush_all();
         out.sort_by_key(|w| w.offset);
         assert_eq!(out.len(), 2);
-        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+        assert_eq!((out[0].offset, out[0].total_len(), out[0].merged),
                    (0, 20, 1));
-        assert_eq!((out[1].offset, out[1].data.len(), out[1].merged),
+        // gather seal: the merged run stays an extent LIST (zero-copy)
+        assert_eq!(out[0].parts.len(), 2);
+        assert_eq!((out[1].offset, out[1].total_len(), out[1].merged),
                    (50, 10, 0));
+        assert_eq!(out[1].parts.len(), 1);
+    }
+
+    #[test]
+    fn coalescer_copy_path_concatenates_runs() {
+        // gather off (ablation): a merged run seals as ONE flat extent
+        // whose bytes equal the concatenated chunks
+        let mut c = Coalescer::new(100, false);
+        assert!(c.push(mk_chunk(0, 10, "a")).is_empty());
+        assert!(c.push(mk_chunk(10, 10, "a")).is_empty());
+        let out = c.flush_all();
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].merged, out[0].parts.len()), (1, 1));
+        let mut want = vec![0u8; 10];
+        want.extend_from_slice(&[10u8; 10]);
+        assert_eq!(out[0].parts[0].as_slice(), &want[..]);
     }
 
     #[test]
     fn coalescer_seals_at_max_and_disabled_passes_through() {
-        let mut c = Coalescer::new(16);
+        let mut c = Coalescer::new(16, true);
         assert!(c.push(mk_chunk(0, 8, "t")).is_empty());
         let out = c.push(mk_chunk(8, 8, "t"));
         assert_eq!(out.len(), 1);
-        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+        assert_eq!((out[0].offset, out[0].total_len(), out[0].merged),
                    (0, 16, 1));
         assert!(c.flush_all().is_empty());
 
-        let mut off = Coalescer::new(0);
+        let mut off = Coalescer::new(0, true);
         let out = off.push(mk_chunk(0, 8, "t"));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].merged, 0);
@@ -821,10 +872,10 @@ mod tests {
     fn coalescer_issues_oversized_chunks_immediately() {
         // coalesce_bytes < chunk size: nothing to merge, and nothing
         // may sit buffered waiting for a later neighbor
-        let mut c = Coalescer::new(4);
+        let mut c = Coalescer::new(4, true);
         let out = c.push(mk_chunk(0, 8, "t"));
         assert_eq!(out.len(), 1);
-        assert_eq!((out[0].offset, out[0].data.len(), out[0].merged),
+        assert_eq!((out[0].offset, out[0].total_len(), out[0].merged),
                    (0, 8, 0));
         assert!(c.flush_all().is_empty());
     }
@@ -834,7 +885,7 @@ mod tests {
         // abutting offsets but different originating entries: the
         // timeline attributes a merged write to ONE label, so these
         // must stay separate writes
-        let mut c = Coalescer::new(1 << 20);
+        let mut c = Coalescer::new(1 << 20, true);
         assert!(c.push(mk_chunk(0, 8, "a")).is_empty());
         assert!(c.push(mk_chunk(8, 8, "b")).is_empty());
         let mut out = c.flush_all();
@@ -847,7 +898,7 @@ mod tests {
 
     #[test]
     fn coalescer_bounds_open_runs() {
-        let mut c = Coalescer::new(1 << 20);
+        let mut c = Coalescer::new(1 << 20, true);
         let mut sealed = 0;
         for i in 0..(MAX_OPEN_RUNS + 3) {
             // disjoint, non-contiguous offsets: every chunk opens a run
@@ -869,6 +920,12 @@ mod tests {
         let m = ticket.wait_persisted().unwrap();
         assert!(m.coalesced_writes > 0, "no merges: {m:?}");
         assert!(m.coalesced_bytes > 0);
+        // gather writes on by default: every merged run went out as a
+        // zero-copy extent list, and the avoided-memcpy volume is
+        // exactly the former merge-buffer volume
+        assert!(m.gather_writes > 0, "no gather writes: {m:?}");
+        assert!(m.gather_extents > m.gather_writes);
+        assert_eq!(m.memcpy_bytes_avoided, m.coalesced_bytes);
         crate::restore::verify_against(&dir.path().join("v000000"),
                                        &state)
             .unwrap();
@@ -881,9 +938,67 @@ mod tests {
         let t2 = eng2.begin(0, &state).unwrap();
         let m2 = t2.wait_persisted().unwrap();
         assert_eq!(m2.coalesced_writes, 0);
+        assert_eq!(m2.gather_writes, 0);
         crate::restore::verify_against(&dir2.path().join("v000000"),
                                        &state)
             .unwrap();
+        // and with the copy-path fallback (gather off): merges counted,
+        // but no memcpy avoided
+        let dir3 = TempDir::new("ds-gather-off").unwrap();
+        let mut cfg3 = EngineConfig::with_dir(dir3.path());
+        cfg3.chunk_bytes = 1024;
+        cfg3.coalesce_bytes = 8 * 1024;
+        cfg3.gather_writes = false;
+        let mut eng3 = DataStatesEngine::new(cfg3).unwrap();
+        let t3 = eng3.begin(0, &state).unwrap();
+        let m3 = t3.wait_persisted().unwrap();
+        assert!(m3.coalesced_writes > 0);
+        assert_eq!(m3.gather_writes, 0);
+        assert_eq!(m3.memcpy_bytes_avoided, 0);
+        crate::restore::verify_against(&dir3.path().join("v000000"),
+                                       &state)
+            .unwrap();
+    }
+
+    #[test]
+    fn multi_lane_staging_round_trips_many_device_tensors() {
+        let dir = TempDir::new("ds-lanes").unwrap();
+        let mut cfg = EngineConfig::with_dir(dir.path());
+        cfg.stager_lanes = 4;
+        cfg.chunk_bytes = 2048;
+        let mut eng = DataStatesEngine::new(cfg).unwrap();
+        let items: Vec<StateItem> = (0..12)
+            .map(|i| {
+                StateItem::Tensor(TensorShard::device(
+                    format!("w{i:02}"),
+                    DType::U8,
+                    vec![4096 + i * 64],
+                    SimDeviceTensor::new(
+                        (0..4096 + i * 64)
+                            .map(|j| ((i * 37 + j) % 251) as u8)
+                            .collect(),
+                    ),
+                ))
+            })
+            .collect();
+        let state = RankState {
+            rank: 0,
+            files: vec![ShardFile {
+                name: "layer_00.pt".into(),
+                kind: FileKind::ParamLayer,
+                items,
+            }],
+        };
+        let ticket = eng.begin(0, &state).unwrap();
+        ticket.wait_captured().unwrap();
+        ticket.wait_persisted().unwrap();
+        crate::restore::verify_against(&dir.path().join("v000000"),
+                                       &state)
+            .unwrap();
+        // the copies really ran on more than one lane
+        use crate::metrics::Tier;
+        assert!(eng.timeline().lanes_used(Tier::D2H) > 1,
+                "12 staging jobs dealt round-robin over 4 lanes");
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! state providers. The paper uses liburing + O_DIRECT; the structural
 //! equivalents here are a writer-thread pool issuing `pwrite`-style
 //! `write_at` calls at provider-assigned offsets (no seeking, no shared
-//! file cursor, writers never contend on position). Each file tracks
-//! outstanding chunks so finalization (trailer + footer + fsync) runs
-//! exactly once, after the last payload byte landed.
+//! file cursor, writers never contend on position). A [`WriteJob`] is a
+//! **gather list**: the coalescer's merged runs arrive as extent lists
+//! of refcounted chunk views and go to the backend as one vectored
+//! write (`write_gather_at`) — no merge buffer, zero payload memcpy
+//! between the staging pool and storage. Each file tracks outstanding
+//! chunks so finalization (trailer + footer + fsync) runs exactly once,
+//! after the last payload byte landed.
 //!
 //! Files are tier-agnostic: a [`FlushFile`] wraps a
 //! [`storage::BackendFile`], so the same pool lands chunks on a real
@@ -161,11 +165,18 @@ impl FlushFile {
     }
 }
 
-/// One queued write.
+/// One queued write: a gather list of extents landing back-to-back at
+/// `offset`. The engine's coalescer seals a merged run as its extent
+/// list — refcounted [`Bytes`] views of pool segments / heap buffers —
+/// so the payload is never concatenated in host memory; the storage
+/// backend receives the list as one vectored write
+/// ([`crate::storage::BackendFile::write_gather_at`]). A single-extent
+/// job is the plain positioned write.
 pub struct WriteJob {
     pub file: Arc<FlushFile>,
     pub offset: u64,
-    pub data: Bytes,
+    /// File-contiguous extents, in file order.
+    pub extents: Vec<Bytes>,
     pub label: String,
     /// Readiness signal fired after the write is recorded, so a parked
     /// pump wakes to finalize files whose last chunk just landed.
@@ -175,17 +186,23 @@ pub struct WriteJob {
 }
 
 impl WriteJob {
-    /// A plain write with no session attribution (baselines, tests).
+    /// A plain single-extent write with no session attribution
+    /// (baselines, tests).
     pub fn plain(file: Arc<FlushFile>, offset: u64, data: Bytes,
                  label: impl Into<String>) -> WriteJob {
         WriteJob {
             file,
             offset,
-            data,
+            extents: vec![data],
             label: label.into(),
             notify: None,
             progress: None,
         }
+    }
+
+    /// Total payload bytes across the gather list.
+    pub fn total_len(&self) -> u64 {
+        self.extents.iter().map(|b| b.len() as u64).sum()
     }
 }
 
@@ -212,23 +229,28 @@ impl FlushPool {
                     .name(format!("ds-flush-{i}"))
                     .spawn(move || {
                         while let Ok(Msg::Job(job)) = rx.recv() {
+                            let len = job.total_len();
+                            let slices: Vec<&[u8]> = job
+                                .extents
+                                .iter()
+                                .map(|b| b.as_slice())
+                                .collect();
                             let start = tl.now_s();
                             match job
                                 .file
                                 .file
-                                .write_at(job.offset, job.data.as_slice())
+                                .write_gather_at(job.offset, &slices)
                             {
                                 Ok(()) => {
                                     tl.record(
                                         Tier::H2F,
                                         &job.label,
-                                        job.data.len() as u64,
+                                        len,
                                         start,
                                         tl.now_s(),
                                     );
                                     if let Some(p) = &job.progress {
-                                        p.add_flushed(
-                                            job.data.len() as u64);
+                                        p.add_flushed(len);
                                     }
                                     job.file.record_written();
                                     if let Some(n) = &job.notify {
@@ -360,7 +382,7 @@ mod tests {
         pool.submit(WriteJob {
             file: file.clone(),
             offset: 0,
-            data: Bytes::from_vec(vec![1; 256]),
+            extents: vec![Bytes::from_vec(vec![1; 256])],
             label: "c".into(),
             notify: Some(notifier.clone()),
             progress: Some(progress.clone()),
@@ -370,6 +392,39 @@ mod tests {
         // signal arrives only after the write was recorded
         assert!(file.is_quiescent().unwrap());
         assert_eq!(progress.snapshot().bytes_flushed, 256);
+    }
+
+    #[test]
+    fn gather_job_lands_extents_contiguously() {
+        let dir = crate::util::TempDir::new("ds-gather").unwrap();
+        let path = dir.path().join("g.ds");
+        let tl = Arc::new(Timeline::new());
+        let pool = FlushPool::new(2, tl);
+        let file = FlushFile::create(&path, "g.ds").unwrap();
+        let progress =
+            Arc::new(crate::metrics::ProgressCounters::default());
+        pool.submit(WriteJob {
+            file: file.clone(),
+            offset: 100,
+            extents: vec![
+                Bytes::from_vec(vec![1u8; 10]),
+                Bytes::from_vec(vec![2u8; 20]),
+                Bytes::from_vec(vec![3u8; 5]),
+            ],
+            label: "g".into(),
+            notify: None,
+            progress: Some(progress.clone()),
+        });
+        file.finish_issuing();
+        file.wait_quiescent().unwrap();
+        file.sync().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(bytes.len(), 135);
+        assert!(bytes[100..110].iter().all(|&b| b == 1));
+        assert!(bytes[110..130].iter().all(|&b| b == 2));
+        assert!(bytes[130..135].iter().all(|&b| b == 3));
+        // progress was charged the TOTAL gathered bytes, once
+        assert_eq!(progress.snapshot().bytes_flushed, 35);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use std::sync::{Condvar, Mutex};
 
@@ -145,12 +145,9 @@ impl PinnedPool {
         self.inner.state.lock().unwrap().in_use
     }
 
-    /// Try to allocate without blocking (first-fit).
-    pub fn try_alloc(&self, len: usize) -> Option<Arc<Segment>> {
-        if len == 0 || len > self.inner.capacity {
-            return None;
-        }
-        let mut st = self.inner.state.lock().unwrap();
+    /// First-fit carve out of the free list. Caller holds the lock.
+    fn carve(inner: &Arc<PoolInner>, st: &mut FreeList, len: usize)
+        -> Option<Arc<Segment>> {
         let found = st
             .free
             .iter()
@@ -163,36 +160,48 @@ impl PinnedPool {
         }
         st.in_use += len;
         Some(Arc::new(Segment {
-            pool: self.inner.clone(),
+            pool: inner.clone(),
             offset: off,
             len,
         }))
     }
 
+    /// Try to allocate without blocking (first-fit).
+    pub fn try_alloc(&self, len: usize) -> Option<Arc<Segment>> {
+        if len == 0 || len > self.inner.capacity {
+            return None;
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        Self::carve(&self.inner, &mut st, len)
+    }
+
     /// Blocking allocation: waits (backpressure) until earlier segments
     /// are evicted. Returns the seconds spent waiting, for blocked-time
     /// attribution.
-    pub fn alloc_blocking(&self, len: usize) -> anyhow::Result<(Arc<Segment>, f64)> {
+    ///
+    /// Multi-consumer correct by construction: the check and the sleep
+    /// hold the ONE mutex that every free-list mutation
+    /// ([`Segment::drop`]) takes, and the drop `notify_all`s — so with
+    /// N staging lanes blocked here, an eviction can neither slip
+    /// between a lane's re-check and its wait (lost wakeup) nor wake
+    /// only a lane the freed extent cannot satisfy (every lane
+    /// re-checks). The old implementation re-took the lock between
+    /// `try_alloc` and the wait and papered over the race with a 50 ms
+    /// timed wait; that polling fallback is gone.
+    pub fn alloc_blocking(&self, len: usize)
+        -> anyhow::Result<(Arc<Segment>, f64)> {
         anyhow::ensure!(
-            len <= self.inner.capacity,
-            "request {len} exceeds pool capacity {}",
+            len > 0 && len <= self.inner.capacity,
+            "request {len} outside pool capacity {}",
             self.inner.capacity
         );
         let start = Instant::now();
+        let mut st = self.inner.state.lock().unwrap();
         loop {
-            if let Some(seg) = self.try_alloc(len) {
+            if let Some(seg) = Self::carve(&self.inner, &mut st, len) {
                 return Ok((seg, start.elapsed().as_secs_f64()));
             }
-            let st = self.inner.state.lock().unwrap();
-            // re-check under the lock to avoid a lost wakeup
-            let fits = st.free.values().any(|&flen| flen >= len);
-            if !fits {
-                let _unused = self
-                    .inner
-                    .freed
-                    .wait_timeout(st, Duration::from_millis(50))
-                    .unwrap();
-            }
+            st = self.inner.freed.wait(st).unwrap();
         }
     }
 }
@@ -200,6 +209,7 @@ impl PinnedPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn alloc_free_roundtrip() {

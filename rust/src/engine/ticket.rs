@@ -162,6 +162,17 @@ impl CkptSession {
         st.metrics.coalesced_bytes += bytes;
     }
 
+    /// Account one merged run issued as a zero-copy gather-list write:
+    /// `extents` chunk views in the list, `bytes` total payload — the
+    /// bytes the pre-gather pump would have memcpy'd into a merge
+    /// buffer. Called by the engine pump when `gather_writes` is on.
+    pub fn add_gather(&self, extents: u64, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.gather_writes += 1;
+        st.metrics.gather_extents += extents;
+        st.metrics.memcpy_bytes_avoided += bytes;
+    }
+
     /// Mark this version failed; waiters observe the error.
     pub fn fail(&self, err: String) {
         let mut st = self.state.lock().unwrap();

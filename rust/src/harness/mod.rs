@@ -471,6 +471,98 @@ pub fn reshard() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Zero-copy ablation: gather-list writes on/off × D2H staging lanes
+/// 1/2/4. Real plane: the same scaled 7B rank is checkpointed under
+/// each configuration, outputs are verified byte-identical against the
+/// source state, and the pump's gather attribution
+/// (`gather_writes` / `gather_extents` / `memcpy_bytes_avoided`) plus
+/// the per-lane D2H spans are reported. Sim plane: the calibrated
+/// capture-time model (`sim::capture_time_s`) under explicit lane
+/// counts — lanes=2 strictly below lanes=1 (one copy stream cannot
+/// saturate pinned PCIe).
+pub fn gather() -> anyhow::Result<()> {
+    hr("Gather ablation: zero-copy gather writes × D2H staging lanes");
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::metrics::Tier;
+    use crate::state::partition::{census as mk_census, materialize};
+
+    let cfg = LlmConfig::by_name("7B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = mk_census(&cfg, &par);
+    let state = materialize(&cs.ranks[0], 1e-4, 1.0, 11);
+
+    println!(
+        "{:<10}{:>7}{:>12}{:>14}{:>16}{:>12}{:>12}",
+        "gather", "lanes", "persist s", "gather writes",
+        "memcpy avoided", "D2H busy s", "D2H lanes"
+    );
+    for lanes in [1usize, 2, 4] {
+        for gather in [true, false] {
+            let tmp = crate::util::TempDir::new("ds-gather-abl")?;
+            let mut ecfg = EngineConfig::with_dir(tmp.path());
+            ecfg.stager_lanes = lanes;
+            ecfg.gather_writes = gather;
+            // small chunks relative to the scaled tensors, so the
+            // coalescing (and thus gathering) pass is busy; a small
+            // pool keeps the 6-engine sweep cheap (payload ~1 MB)
+            ecfg.chunk_bytes = 16 << 10;
+            ecfg.coalesce_bytes = 1 << 20;
+            ecfg.host_cache_bytes = 64 << 20;
+            let mut eng = DataStatesEngine::new(ecfg)?;
+            let ticket = eng.begin(0, &state)?;
+            ticket.wait_captured()?;
+            let m = ticket.wait_persisted()?;
+            // both paths must restore bit-for-bit
+            crate::restore::verify_against(
+                &tmp.path().join("v000000"), &state)?;
+            let tl = eng.timeline();
+            let (_, d2h_busy) = tl.tier_summary(Tier::D2H);
+            println!(
+                "{:<10}{:>7}{:>12.4}{:>14}{:>16}{:>12.4}{:>12}",
+                if gather { "on" } else { "off" },
+                lanes,
+                m.persist_s,
+                m.gather_writes,
+                human_bytes(m.memcpy_bytes_avoided as f64),
+                d2h_busy,
+                tl.lanes_used(Tier::D2H),
+            );
+            if gather {
+                anyhow::ensure!(m.gather_writes > 0,
+                                "gather path issued no gather writes");
+                anyhow::ensure!(
+                    m.memcpy_bytes_avoided == m.coalesced_bytes,
+                    "avoided-memcpy volume must equal the former \
+                     merge-buffer volume"
+                );
+            } else {
+                anyhow::ensure!(m.gather_writes == 0);
+            }
+        }
+    }
+
+    println!("\ncapture time, calibrated sim model (7B slowest rank):");
+    println!("{:<8}{:>16}", "lanes", "capture s");
+    let sim_cfg = crate::sim::SimConfig::paper("7B", 15, 1);
+    let mut prev = f64::INFINITY;
+    for lanes in [1usize, 2, 4] {
+        let t = crate::sim::capture_time_s(
+            EngineKind::DataStatesLlm, &sim_cfg, lanes);
+        println!("{:<8}{:>16.3}", lanes, t);
+        anyhow::ensure!(t <= prev, "more lanes must never slow capture");
+        if lanes == 2 {
+            // `prev` is the lanes=1 result from the previous iteration
+            anyhow::ensure!(
+                t < prev,
+                "lanes=2 capture must be strictly below lanes=1"
+            );
+        }
+        prev = t;
+    }
+    Ok(())
+}
+
 /// File census summary used in §II / Fig 1 discussion.
 pub fn files_summary() {
     hr("File census per model (global)");
@@ -509,6 +601,7 @@ pub fn all() -> anyhow::Result<()> {
     fig15()?;
     tiers()?;
     reshard()?;
+    gather()?;
     files_summary();
     ablations();
     Ok(())

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
-//!            fig12|fig13|table3|fig14|fig15|tiers|reshard|files>
+//!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
+//!            files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -10,7 +11,8 @@
 //!   partition <model> [--dp D]     (print one rank's composition)
 //!   bench-io [--dir DIR] [--tiers T1,T2] [--throttle-mbps M]
 //!            [--json PATH]         (quick real-plane flush sweep;
-//!                                   records coalesced_writes/bytes)
+//!                                   records coalesced/gather write
+//!                                   savings + per-lane D2H spans)
 //!   reshard [--model M] [--from-tp T --from-pp P --from-dp D]
 //!           [--to-tp T --to-pp P --to-dp D] [--steps N]
 //!           [--interval K] [--scale S] [--ckpt-dir DIR]
@@ -193,6 +195,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "fig15" => harness::fig15()?,
         "tiers" => harness::tiers()?,
         "reshard" => harness::reshard()?,
+        "gather" => harness::gather()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -342,6 +345,11 @@ fn partition(args: &Args) -> anyhow::Result<()> {
 fn bench_io(args: &Args) -> anyhow::Result<()> {
     use datastates::state::census as mk_census;
     use datastates::state::partition::materialize;
+    // sweep shape, recorded verbatim in the JSON header so the
+    // committed BENCH_*.json trajectory can never drift from the
+    // config the engines actually ran with
+    const BENCH_CHUNK_BYTES: usize = 16 << 10;
+    const BENCH_COALESCE_BYTES: usize = 1 << 20;
     let dir = std::path::PathBuf::from(
         args.get("dir").unwrap_or("/tmp/datastates-bench-io"));
     let tiers = tier_specs(args)?;
@@ -355,6 +363,11 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
         let state = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
         let _ = std::fs::remove_dir_all(&dir);
         let mut ecfg = EngineConfig::with_dir(&dir);
+        // scaled payloads need proportionally small chunks for the
+        // coalescing/gather pass to be visible (and diffable across
+        // PRs via BENCH_*.json)
+        ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
+        ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
         if let Some(t) = &tiers {
             ecfg.tiers = t.clone();
         }
@@ -383,10 +396,22 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
                 )
             })
             .collect();
+        let lanes_json: Vec<String> = (0..tl.lanes_used(Tier::D2H))
+            .map(|lane| {
+                let (bytes, busy) = tl.lane_summary(Tier::D2H, lane);
+                format!(
+                    "{{\"lane\":{lane},\"bytes\":{bytes},\
+                     \"busy_s\":{busy:.6}}}"
+                )
+            })
+            .collect();
         rows.push(format!(
             "{{\"engine\":\"{}\",\"blocked_s\":{:.6},\
              \"persist_s\":{:.6},\"effective_bps\":{:.1},\
              \"coalesced_writes\":{},\"coalesced_bytes\":{},\
+             \"gather_writes\":{},\"gather_extents\":{},\
+             \"memcpy_bytes_avoided\":{},\
+             \"d2h_lanes\":[{}],\
              \"tiers\":[{}],\"transfer\":{}}}",
             kind.label(),
             m.blocked_s,
@@ -394,6 +419,10 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             if eff.is_finite() { eff } else { 0.0 },
             m.coalesced_writes,
             m.coalesced_bytes,
+            m.gather_writes,
+            m.gather_extents,
+            m.memcpy_bytes_avoided,
+            lanes_json.join(","),
             tiers_json.join(","),
             tier_throughput_json(&tl),
         ));
@@ -401,7 +430,12 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("json") {
         let doc = format!(
             "{{\"bench\":\"bench-io\",\"model\":\"7B\",\
+             \"chunk_bytes\":{},\"coalesce_bytes\":{},\
+             \"stager_lanes\":{},\
              \"engines\":[{}]}}\n",
+            BENCH_CHUNK_BYTES,
+            BENCH_COALESCE_BYTES,
+            EngineConfig::default().stager_lanes,
             rows.join(",")
         );
         std::fs::write(path, doc)?;

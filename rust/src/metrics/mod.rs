@@ -30,6 +30,9 @@ pub struct Span {
     /// Seconds since the timeline epoch.
     pub start_s: f64,
     pub end_s: f64,
+    /// Which parallel lane of the tier carried this transfer (D2H
+    /// staging lanes; 0 for single-stream tiers).
+    pub lane: usize,
 }
 
 impl Span {
@@ -71,12 +74,21 @@ impl Timeline {
     /// Record a span with explicit timestamps (virtual-time friendly).
     pub fn record(&self, tier: Tier, name: impl Into<String>, bytes: u64,
                   start_s: f64, end_s: f64) {
+        self.record_on_lane(tier, name, bytes, start_s, end_s, 0);
+    }
+
+    /// Record a span attributed to one parallel lane of a tier (the D2H
+    /// staging lanes; single-stream tiers record on lane 0).
+    pub fn record_on_lane(&self, tier: Tier, name: impl Into<String>,
+                          bytes: u64, start_s: f64, end_s: f64,
+                          lane: usize) {
         self.spans.lock().unwrap().push(Span {
             tier,
             name: name.into(),
             bytes,
             start_s,
             end_s,
+            lane,
         });
     }
 
@@ -116,6 +128,36 @@ impl Timeline {
         } else {
             0.0
         }
+    }
+
+    /// Aggregate bytes and busy-time of ONE parallel lane of a tier.
+    pub fn lane_summary(&self, tier: Tier, lane: usize) -> (u64, f64) {
+        let spans = self.spans.lock().unwrap();
+        let bytes = spans
+            .iter()
+            .filter(|s| s.tier == tier && s.lane == lane)
+            .map(|s| s.bytes)
+            .sum();
+        let busy = union_time(
+            spans
+                .iter()
+                .filter(|s| s.tier == tier && s.lane == lane)
+                .map(|s| (s.start_s, s.end_s)),
+        );
+        (bytes, busy)
+    }
+
+    /// Number of lanes a tier actually ran on (highest lane index + 1;
+    /// 0 when the tier never recorded a span).
+    pub fn lanes_used(&self, tier: Tier) -> usize {
+        self.spans
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.tier == tier)
+            .map(|s| s.lane + 1)
+            .max()
+            .unwrap_or(0)
     }
 }
 
@@ -184,6 +226,16 @@ pub struct CkptMetrics {
     /// Total bytes of the merged (multi-chunk) writes issued by the
     /// coalescing pass.
     pub coalesced_bytes: u64,
+    /// Merged runs issued as zero-copy gather-list `WriteJob`s (extent
+    /// lists of refcounted pool/heap slices — no merge buffer exists).
+    pub gather_writes: u64,
+    /// Total extents carried by those gather writes.
+    pub gather_extents: u64,
+    /// Payload bytes that the pre-gather pump would have memcpy'd into
+    /// per-run merge buffers before the storage backend — equals the
+    /// former merge-buffer volume (0 when `gather_writes` is disabled
+    /// or nothing merged).
+    pub memcpy_bytes_avoided: u64,
 }
 
 impl CkptMetrics {
@@ -297,6 +349,23 @@ mod tests {
         let (bytes, busy) = tl.tier_summary(Tier::D2H);
         assert_eq!(bytes, 2000);
         assert!((busy - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lane_attribution_splits_tier_summary() {
+        let tl = Timeline::new();
+        tl.record_on_lane(Tier::D2H, "a", 100, 0.0, 1.0, 0);
+        tl.record_on_lane(Tier::D2H, "b", 200, 0.0, 1.0, 1);
+        tl.record(Tier::H2F, "a", 50, 1.0, 2.0); // lane 0 by default
+        assert_eq!(tl.lanes_used(Tier::D2H), 2);
+        assert_eq!(tl.lanes_used(Tier::H2F), 1);
+        assert_eq!(tl.lanes_used(Tier::Drain), 0);
+        assert_eq!(tl.lane_summary(Tier::D2H, 0).0, 100);
+        assert_eq!(tl.lane_summary(Tier::D2H, 1).0, 200);
+        // the tier summary still aggregates across lanes
+        assert_eq!(tl.tier_summary(Tier::D2H).0, 300);
+        // overlapping lanes: busy time is the union, not the sum
+        assert!((tl.tier_summary(Tier::D2H).1 - 1.0).abs() < 1e-9);
     }
 
     #[test]

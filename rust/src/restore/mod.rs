@@ -87,20 +87,25 @@ pub fn verify_files_against(
                     let got = rf.payloads.get(&t.name).ok_or_else(|| {
                         anyhow::anyhow!("missing tensor {}", t.name)
                     })?;
-                    let want: Vec<u8> = match &t.data {
-                        TensorData::Host(b) => b.as_ref().clone(),
+                    // compare against borrowed views: host tensors (the
+                    // dominant payload) are checked in place; only
+                    // device tensors stage into a scratch buffer
+                    let (matches, want_len) = match &t.data {
+                        TensorData::Host(b) => {
+                            (got.as_slice() == b.as_slice(), b.len())
+                        }
                         TensorData::Device(d) => {
                             let mut v = vec![0u8; d.size_bytes()];
                             d.stage_into(&mut v)?;
-                            v
+                            (*got == v, v.len())
                         }
                     };
                     anyhow::ensure!(
-                        *got == want,
+                        matches,
                         "tensor {} content mismatch ({} vs {} bytes)",
                         t.name,
                         got.len(),
-                        want.len()
+                        want_len
                     );
                 }
                 StateItem::Object { name, obj } => {

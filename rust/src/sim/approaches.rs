@@ -39,8 +39,17 @@ pub struct EngineModel {
     pub chunk_files: bool,
     /// Chunk size for the chunk-file model.
     pub chunk_bytes: u64,
-    /// D2H staging bandwidth, bytes/s.
+    /// D2H staging bandwidth, bytes/s — the aggregate the paper
+    /// calibrates for this engine (all copy streams together).
     pub d2h_bps: f64,
+    /// Bandwidth ONE staging lane (a single copy stream / memcpy
+    /// thread) achieves, bytes/s. A single stream does not saturate
+    /// the pinned PCIe path — the paper models capture as CONCURRENT
+    /// copy streams; with an explicit lane count the effective capture
+    /// rate is `min(lanes × d2h_stream_bps, d2h_bps)`. Only consulted
+    /// when `SimConfig::stager_lanes` is set (the multi-lane staging
+    /// ablation); the calibrated default figures use `d2h_bps`.
+    pub d2h_stream_bps: f64,
     /// Fraction of the per-rank fair share of node write bandwidth
     /// actually achieved.
     pub write_eff: f64,
@@ -66,6 +75,7 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_files: false,
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pageable_bps * 0.8, // blocking pageable copies
+            d2h_stream_bps: tb.pcie_pageable_bps * 0.8, // one sync stream IS the path
             write_eff: 0.30,
             write_cap_bps: 0.74e9, // single-threaded torch.save
             launch_per_file_s: 2e-3,
@@ -80,6 +90,7 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_files: true,
             chunk_bytes: 512 << 20, // 512 MB chunk files
             d2h_bps: tb.pcie_pageable_bps, // non-pinned staging buffers
+            d2h_stream_bps: 6e9, // single pageable memcpy stream
             write_eff: 0.42,
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 1.2e-3,
@@ -94,6 +105,7 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_files: false,
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pinned_bps, // pinned pool
+            d2h_stream_bps: 14e9, // one pinned copy stream (~0.55 of PCIe)
             write_eff: 0.55,             // single background writer
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 1.0e-3,
@@ -108,6 +120,7 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_files: false,
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pinned_bps,
+            d2h_stream_bps: 14e9, // one pinned copy stream (~0.55 of PCIe)
             write_eff: 0.95, // io_uring + O_DIRECT streaming writes
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 0.8e-3,
@@ -139,6 +152,18 @@ mod tests {
         }
         assert!(engine_model(EngineKind::TorchSnapshot, &tb).d2h_bps
                 < tb.pcie_pinned_bps);
+    }
+
+    #[test]
+    fn single_stream_undersells_the_pinned_path() {
+        // a lone staging lane cannot saturate pinned PCIe; two can
+        let tb = Testbed::polaris();
+        for kind in [EngineKind::DataStatesOld, EngineKind::DataStatesLlm]
+        {
+            let m = engine_model(kind, &tb);
+            assert!(m.d2h_stream_bps < m.d2h_bps);
+            assert!(2.0 * m.d2h_stream_bps >= m.d2h_bps);
+        }
     }
 
     #[test]

@@ -39,6 +39,11 @@ impl LocalFs {
 struct LocalFile {
     file: File,
     throttle: Option<Arc<Throttle>>,
+    /// Serializes gather writes: vectored I/O goes through the shared
+    /// file cursor (`seek` + `write_vectored`), unlike the cursor-free
+    /// `pwrite`-style `write_at` path, so concurrent gathers on one
+    /// file must not interleave their seeks.
+    cursor: std::sync::Mutex<()>,
 }
 
 impl BackendFile for LocalFile {
@@ -47,6 +52,52 @@ impl BackendFile for LocalFile {
             t.acquire(data.len() as u64);
         }
         self.file.write_all_at(data, offset)?;
+        Ok(())
+    }
+
+    fn write_gather_at(&self, offset: u64, extents: &[&[u8]])
+        -> anyhow::Result<()> {
+        if extents.len() == 1 {
+            // lone extent: stay on the cursor-free pwrite path
+            return self.write_at(offset, extents[0]);
+        }
+        let total: u64 = extents.iter().map(|e| e.len() as u64).sum();
+        if total == 0 {
+            return Ok(());
+        }
+        if let Some(t) = &self.throttle {
+            // one reservation for the whole gathered write
+            t.acquire(total);
+        }
+        use std::io::{IoSlice, Seek, SeekFrom, Write};
+        let _cursor = self.cursor.lock().unwrap();
+        let mut f = &self.file;
+        f.seek(SeekFrom::Start(offset))?;
+        // write_vectored may land a prefix; re-submit the remainder
+        let mut rem: Vec<&[u8]> =
+            extents.iter().filter(|e| !e.is_empty()).copied().collect();
+        while !rem.is_empty() {
+            let iov: Vec<IoSlice<'_>> =
+                rem.iter().map(|e| IoSlice::new(e)).collect();
+            // retry EINTR like write_all_at does on the flat path
+            let mut n = match f.write_vectored(&iov) {
+                Ok(n) => n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            anyhow::ensure!(n > 0, "write_vectored wrote 0 bytes");
+            let mut done = 0;
+            while done < rem.len() && n >= rem[done].len() {
+                n -= rem[done].len();
+                done += 1;
+            }
+            rem.drain(..done);
+            if let Some(first) = rem.first_mut() {
+                *first = &first[n..];
+            }
+        }
         Ok(())
     }
 
@@ -69,6 +120,7 @@ impl Backend for LocalFs {
         Ok(Box::new(LocalFile {
             file: File::create(path)?,
             throttle: self.throttle.clone(),
+            cursor: std::sync::Mutex::new(()),
         }))
     }
 
@@ -155,6 +207,42 @@ mod tests {
         assert_eq!(&buf, b"headtail");
         assert_eq!(fs.list("v000001").unwrap(), vec!["a.ds".to_string()]);
         assert!(fs.list("v000099").unwrap().is_empty());
+    }
+
+    #[test]
+    fn gather_write_matches_flat_write() {
+        let dir = crate::util::TempDir::new("localfs-gather").unwrap();
+        let fs = LocalFs::new(dir.path());
+        let parts: Vec<Vec<u8>> = vec![
+            vec![1u8; 5],
+            vec![],
+            vec![2u8; 4096],
+            vec![3u8; 1],
+            vec![4u8; 333],
+        ];
+        let refs: Vec<&[u8]> = parts.iter().map(|p| p.as_slice()).collect();
+        let flat: Vec<u8> = parts.concat();
+
+        let g = fs.create("g").unwrap();
+        g.write_at(0, &[9u8; 7]).unwrap(); // gather lands mid-file
+        g.write_gather_at(7, &refs).unwrap();
+        g.finalize().unwrap();
+
+        let f = fs.create("f").unwrap();
+        f.write_at(0, &[9u8; 7]).unwrap();
+        f.write_at(7, &flat).unwrap();
+        f.finalize().unwrap();
+
+        let got_g = std::fs::read(dir.path().join("g")).unwrap();
+        let got_f = std::fs::read(dir.path().join("f")).unwrap();
+        assert_eq!(got_g, got_f);
+        assert_eq!(&got_g[7..], &flat[..]);
+        // single-extent and empty gathers are fine too
+        g.write_gather_at(0, &[&[8u8; 3][..]]).unwrap();
+        g.write_gather_at(3, &[]).unwrap();
+        let got = std::fs::read(dir.path().join("g")).unwrap();
+        assert_eq!(&got[..3], &[8u8; 3]);
+        assert_eq!(&got[3..7], &[9u8; 4]);
     }
 
     #[test]

@@ -120,6 +120,26 @@ impl ReadAt for std::fs::File {
 /// (fsync on a filesystem, a no-op marker in memory).
 pub trait BackendFile: Send + Sync {
     fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()>;
+
+    /// Gather write: land `extents` back-to-back starting at `offset`
+    /// as one logical positioned write. This is how the engine's
+    /// coalesced runs reach storage without ever being concatenated in
+    /// host memory (the extent list IS the merge). The default is a
+    /// correct loop of positioned writes; tiers override it with a
+    /// genuinely scattered submission ([`LocalFs`] issues vectored I/O
+    /// under the file's write lock, [`HostCache`] copies each extent
+    /// straight into its backing buffer) and charge their [`Throttle`]
+    /// ONCE for the total gathered bytes.
+    fn write_gather_at(&self, offset: u64, extents: &[&[u8]])
+        -> anyhow::Result<()> {
+        let mut off = offset;
+        for e in extents {
+            self.write_at(off, e)?;
+            off += e.len() as u64;
+        }
+        Ok(())
+    }
+
     fn finalize(&self) -> anyhow::Result<()>;
 }
 
