@@ -27,7 +27,12 @@ pub fn single_tier_pipeline(engine: &str, cfg: &EngineConfig,
         Some(bps) => LocalFs::throttled(cfg.ckpt_dir.clone(), bps),
         None => LocalFs::new(cfg.ckpt_dir.clone()),
     };
-    TierPipeline::single(Arc::new(fs), timeline)
+    let pipeline = TierPipeline::single(Arc::new(fs), timeline);
+    // restore paths through this pipeline honor the config's
+    // reader/lane knobs, same as the DataStates engine
+    pipeline.set_restore_config(
+        crate::restore::ReadEngineConfig::from_engine(cfg));
+    pipeline
 }
 
 /// Synchronous D2H: copy a (possibly device-resident) tensor into a fresh

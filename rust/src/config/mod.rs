@@ -145,6 +145,14 @@ pub struct EngineConfig {
     /// round-robin across lanes; the pool's blocking free list is the
     /// shared backpressure point. Clamped to >= 1.
     pub stager_lanes: usize,
+    /// Restore-side H2D upload lanes (`restore::ReadEngine`): the
+    /// mirror of `stager_lanes` for the read path — coalesced gather
+    /// reads land in the shared staging pool and are dealt round-robin
+    /// across this many upload threads. Clamped to >= 1.
+    pub restore_lanes: usize,
+    /// Restore-side reader-pool threads issuing the gather reads (the
+    /// read mirror of `writer_threads`).
+    pub reader_threads: usize,
     /// Directory checkpoints are written to (the root of the terminal
     /// filesystem tier).
     pub ckpt_dir: std::path::PathBuf,
@@ -172,6 +180,8 @@ impl Default for EngineConfig {
             coalesce_bytes: 16 << 20, // merge contiguous chunks up to 16 MiB
             gather_writes: true,
             stager_lanes: 2,
+            restore_lanes: 2,
+            reader_threads: 4,
             ckpt_dir: std::path::PathBuf::from("/tmp/datastates-ckpt"),
             pinned: true,
             direct_io: false,

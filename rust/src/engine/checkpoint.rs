@@ -410,6 +410,11 @@ impl DataStatesEngine {
             Some(cfg.host_cache_bytes),
             timeline.clone(),
         )?;
+        // restore paths through this pipeline (read_version /
+        // restore_newest / reshard over live engines) honor the
+        // config's restore_lanes / reader_threads knobs
+        pipeline.set_restore_config(
+            crate::restore::ReadEngineConfig::from_engine(&cfg));
         let (pump_tx, pump_rx) = crate::util::channel::unbounded::<PumpMsg>();
         let pump_notifier = notifier.clone();
         let pump_pipeline = pipeline.clone();

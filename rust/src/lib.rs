@@ -43,7 +43,10 @@
 //!   restore-time resharding: [`restore::reshard::restore_for_topology`]
 //!   materializes any rank of any topology from the logical state index
 //!   ([`state::index::LogicalIndex`]) built from the self-describing
-//!   trailers.
+//!   trailers. Every directory/version-level read runs on the parallel
+//!   gather-read engine ([`restore::ReadEngine`]): coalesced vectored
+//!   reads over a tier-aware reader pool, staged through a pinned pool
+//!   and multi-lane H2D upload.
 //! - [`metrics`] — throughput/blocked-time accounting and the per-tensor
 //!   multi-tier timelines of Fig 15.
 //! - [`harness`] — one driver per paper table/figure.

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            files>
+//!            restore|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -13,6 +13,14 @@
 //!            [--json PATH]         (quick real-plane flush sweep;
 //!                                   records coalesced/gather write
 //!                                   savings + per-lane D2H spans)
+//!   bench-restore [--dir DIR] [--json PATH]
+//!                                  (parallel-restore sweep: H2D lanes
+//!                                   1/2/4 x read coalescing on/off;
+//!                                   records gather-read savings,
+//!                                   time-to-first-tensor vs
+//!                                   time-to-complete, per-lane H2D
+//!                                   busy time + the calibrated sim
+//!                                   restore model)
 //!   reshard [--model M] [--from-tp T --from-pp P --from-dp D]
 //!           [--to-tp T --to-pp P --to-dp D] [--steps N]
 //!           [--interval K] [--scale S] [--ckpt-dir DIR]
@@ -91,13 +99,15 @@ fn run() -> anyhow::Result<()> {
         Some("fsck") => fsck(&args),
         Some("partition") => partition(&args),
         Some("bench-io") => bench_io(&args),
+        Some("bench-restore") => bench_restore(&args),
         Some("world") => world(&args),
         Some("reshard") => reshard(&args),
         _ => {
             eprintln!(
                 "usage: datastates <figures|train|world|reshard|fsck|\
-                 partition|bench-io> [options]\n  tier knobs: --tiers \
-                 hostcache,localfs --throttle-mbps M --durability TIER\n  \
+                 partition|bench-io|bench-restore> [options]\n  tier \
+                 knobs: --tiers hostcache,localfs --throttle-mbps M \
+                 --durability TIER\n  \
                  reshard knobs: --from-tp/--from-pp/--from-dp \
                  --to-tp/--to-pp/--to-dp\n  \
                  see rust/src/main.rs for all flags"
@@ -196,6 +206,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "tiers" => harness::tiers()?,
         "reshard" => harness::reshard()?,
         "gather" => harness::gather()?,
+        "restore" => harness::restore()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -226,22 +237,27 @@ fn train(args: &Args) -> anyhow::Result<()> {
         session.manifest.seq_len
     );
 
-    if args.get("resume").is_some() {
-        if let Some((v, dir)) =
-            datastates::restore::latest_version(&ckpt_dir)?
-        {
-            let it = session.restore_from(&dir)?;
-            println!("resumed from v{v} (iteration {it})");
-        } else {
-            println!("no checkpoint found; starting fresh");
-        }
-    }
-
     let mut cfg = EngineConfig::with_dir(&ckpt_dir);
     // e2e state is ~1.1 GB; keep a full snapshot resident
     cfg.host_cache_bytes = 1400 << 20;
     if let Some(tiers) = tier_specs(args)? {
         cfg.tiers = tiers;
+    }
+
+    if args.get("resume").is_some() {
+        if let Some((v, dir)) =
+            datastates::restore::latest_version(&ckpt_dir)?
+        {
+            // resume reads honor the config's restore knobs
+            // (reader_threads / restore_lanes)
+            let it = session.restore_from_with(
+                &dir,
+                datastates::restore::ReadEngineConfig::from_engine(&cfg),
+            )?;
+            println!("resumed from v{v} (iteration {it})");
+        } else {
+            println!("no checkpoint found; starting fresh");
+        }
     }
     let drain_tier = match args.get("durability") {
         Some(s) => Some(TierKind::parse(s).ok_or_else(|| {
@@ -437,6 +453,145 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             BENCH_COALESCE_BYTES,
             EngineConfig::default().stager_lanes,
             rows.join(",")
+        );
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Quick real-plane restore sweep: write one scaled 7B rank checkpoint,
+/// then restore it through the parallel `restore::ReadEngine` under
+/// H2D lanes 1/2/4 × read-coalescing on/off, verifying byte-identity
+/// every time. `--json PATH` records the gather-read attribution
+/// (`read_extents`/`gather_reads`/`extents_merged`), time-to-first-
+/// tensor vs time-to-complete and per-lane H2D busy time for
+/// BENCH_*.json tracking, plus the calibrated sim restore model.
+fn bench_restore(args: &Args) -> anyhow::Result<()> {
+    use datastates::engine::{CheckpointEngine, DataStatesEngine};
+    use datastates::restore::{ReadEngine, ReadEngineConfig};
+    use datastates::state::census as mk_census;
+    use datastates::state::partition::materialize;
+    const BENCH_CHUNK_BYTES: usize = 16 << 10;
+    const BENCH_COALESCE_BYTES: usize = 1 << 20;
+    let user_dir = args.get("dir");
+    let dir = std::path::PathBuf::from(
+        user_dir.unwrap_or("/tmp/datastates-bench-restore"));
+    if user_dir.is_none() {
+        // our own scratch default: safe to recycle
+        let _ = std::fs::remove_dir_all(&dir);
+    } else if dir.exists()
+        && dir
+            .read_dir()
+            .map(|mut d| d.next().is_some())
+            .unwrap_or(false)
+    {
+        // never silently destroy a user-named directory — the sweep
+        // writes a fresh checkpoint there (same guard as `reshard`)
+        anyhow::bail!(
+            "--dir {dir:?} is not empty; bench-restore writes a fresh \
+             checkpoint there — pass a new or empty directory"
+        );
+    }
+    let cfg = LlmConfig::by_name("7B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = mk_census(&cfg, &par);
+    let state = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
+    let mut ecfg = EngineConfig::with_dir(&dir);
+    ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
+    ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
+    let mut eng = DataStatesEngine::new(ecfg)?;
+    let ticket = eng.begin(0, &state)?;
+    ticket.wait_persisted()?;
+    let pipeline = eng.pipeline();
+
+    println!(
+        "{:<8}{:<10}{:>10}{:>14}{:>10}{:>11}{:>11}",
+        "lanes", "coalesce", "extents", "gather reads", "merged",
+        "ttft ms", "total ms"
+    );
+    let mut rows = Vec::new();
+    for lanes in [1usize, 2, 4] {
+        for coalesce in [true, false] {
+            let rd = ReadEngine::new(ReadEngineConfig {
+                restore_lanes: lanes,
+                coalesce_bytes: if coalesce {
+                    BENCH_COALESCE_BYTES
+                } else {
+                    0
+                },
+                ..Default::default()
+            });
+            let restored = rd.read_version(&pipeline, 0)?;
+            datastates::restore::verify_files_against(&restored,
+                                                      &state)?;
+            let m = rd.metrics();
+            println!(
+                "{:<8}{:<10}{:>10}{:>14}{:>10}{:>11.2}{:>11.2}",
+                lanes,
+                if coalesce { "on" } else { "off" },
+                m.read_extents,
+                m.gather_reads,
+                m.extents_merged,
+                m.time_to_first_tensor_s * 1e3,
+                m.time_to_complete_s * 1e3,
+            );
+            let lanes_json: Vec<String> = m
+                .h2d_lanes
+                .iter()
+                .map(|l| {
+                    format!(
+                        "{{\"lane\":{},\"bytes\":{},\"busy_s\":{:.6}}}",
+                        l.lane, l.bytes, l.busy_s
+                    )
+                })
+                .collect();
+            rows.push(format!(
+                "{{\"engine\":\"datastates-llm\",\
+                 \"restore_lanes\":{lanes},\"coalesce\":{coalesce},\
+                 \"read_extents\":{},\"gather_reads\":{},\
+                 \"extents_merged\":{},\"bytes\":{},\
+                 \"gap_bytes_read\":{},\
+                 \"time_to_first_tensor_s\":{:.6},\
+                 \"time_to_complete_s\":{:.6},\
+                 \"read_busy_s\":{:.6},\"h2d_lanes\":[{}]}}",
+                m.read_extents,
+                m.gather_reads,
+                m.extents_merged,
+                m.bytes,
+                m.gap_bytes_read,
+                m.time_to_first_tensor_s,
+                m.time_to_complete_s,
+                m.read_busy_s,
+                lanes_json.join(","),
+            ));
+        }
+    }
+    // calibrated sim restore model alongside the real-plane rows
+    let sim_cfg = datastates::sim::SimConfig::paper("7B", 15, 1);
+    let mut sim_rows = Vec::new();
+    for lanes in [1usize, 2, 4] {
+        for coalesce in [true, false] {
+            let est = datastates::sim::restore_time_s(
+                EngineKind::DataStatesLlm, &sim_cfg, lanes, coalesce);
+            sim_rows.push(format!(
+                "{{\"lanes\":{lanes},\"coalesced\":{coalesce},\
+                 \"read_s\":{:.4},\"h2d_s\":{:.4},\"ttft_s\":{:.4},\
+                 \"total_s\":{:.4}}}",
+                est.read_s, est.h2d_s, est.ttft_s, est.total_s
+            ));
+        }
+    }
+    if let Some(path) = args.get("json") {
+        let doc = format!(
+            "{{\"bench\":\"bench-restore\",\"model\":\"7B\",\
+             \"chunk_bytes\":{BENCH_CHUNK_BYTES},\
+             \"coalesce_bytes\":{BENCH_COALESCE_BYTES},\
+             \"restore_lanes_default\":{},\
+             \"rows\":[{}],\"sim\":[{}]}}\n",
+            EngineConfig::default().restore_lanes,
+            rows.join(","),
+            sim_rows.join(",")
         );
         std::fs::write(path, doc)?;
         println!("wrote {path}");

@@ -18,6 +18,12 @@ pub enum Tier {
     /// Storage-tier-to-storage-tier drain (host cache → local FS →
     /// parallel FS in the paper's hierarchy).
     Drain,
+    /// Restore-side storage → host gather reads (the reader pool's
+    /// coalesced vectored reads; lane = reader-thread index).
+    Read,
+    /// Restore-side host → device upload (the multi-lane mirror of D2H;
+    /// lane = upload-lane index).
+    H2D,
 }
 
 /// One interval on the Fig 15 timeline.
@@ -247,6 +253,48 @@ impl CkptMetrics {
             self.bytes as f64 / self.blocked_s
         }
     }
+}
+
+/// Per-lane restore accounting: bytes moved and busy time of one H2D
+/// upload lane (or one reader-pool thread on the `Read` tier).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaneStat {
+    pub lane: usize,
+    pub bytes: u64,
+    pub busy_s: f64,
+}
+
+/// Restore-side counterpart of [`CkptMetrics`]: what one restore pass
+/// through the parallel `restore::ReadEngine` actually did — how many
+/// positioned reads the plan called for, how many physical gather reads
+/// the coalescer issued instead, and how the bytes moved through the
+/// staging pool and the H2D upload lanes.
+#[derive(Debug, Clone, Default)]
+pub struct RestoreMetrics {
+    /// Extents the read plan called for (one per layout-entry extent /
+    /// reshard slice — what the serial path would issue as individual
+    /// positioned reads).
+    pub read_extents: u64,
+    /// Physical reads actually issued (coalesced gather runs).
+    pub gather_reads: u64,
+    /// Reads eliminated by merging adjacent/near-adjacent extents
+    /// (a run covering k planned extents counts k-1).
+    pub extents_merged: u64,
+    /// Payload bytes materialized into restore destinations.
+    pub bytes: u64,
+    /// Bytes over-read to bridge sub-`gap_bytes` alignment holes inside
+    /// coalesced runs (the price paid for fewer, larger reads).
+    pub gap_bytes_read: u64,
+    /// Seconds until the FIRST tensor entry was fully materialized —
+    /// the restart-latency headline (a trainer can begin rebuilding
+    /// state while the rest streams in).
+    pub time_to_first_tensor_s: f64,
+    /// Seconds until the whole restore pass completed.
+    pub time_to_complete_s: f64,
+    /// Per-lane H2D upload accounting.
+    pub h2d_lanes: Vec<LaneStat>,
+    /// Reader-pool busy time (union across reader threads).
+    pub read_busy_s: f64,
 }
 
 /// Live byte counters for one checkpoint session, updated by the D2H

@@ -1,0 +1,1247 @@
+//! The parallel gather-read restore engine — the restore-side
+//! counterpart of the checkpoint pump (paper §V mirrored onto the read
+//! path; the "restore is the dominant recovery cost" finding of the LLM
+//! checkpoint I/O studies).
+//!
+//! The serial restore paths issue one synchronous positioned read per
+//! layout extent on one thread. A [`ReadEngine`] instead takes a read
+//! plan (whole-version restore, a reshard slice set, or a verify pass),
+//! groups the planned reads per (source rank, file), **coalesces
+//! adjacent / near-adjacent extents into large gather reads** (bridging
+//! sub-`gap_bytes` alignment holes so many small tensor extents become
+//! one vectored submission — [`crate::storage::ReadAt::read_gather_at`]),
+//! and fans the sealed runs out across a **tier-aware reader pool**:
+//!
+//! - each run resolves its source on the NEAREST tier holding a copy and
+//!   falls through to deeper tiers when a read hits a torn/truncated
+//!   copy (the same failover policy as the serial
+//!   `TierPipeline::open_nearest`, applied per run under concurrency);
+//! - filesystem tiers are capped at `fs_readers` concurrent reads (a
+//!   real PFS penalizes unbounded read fan-out) while host-cache runs
+//!   are uncapped, and every run charges the tier's existing
+//!   [`crate::storage::Throttle`] so restore reads and checkpoint writes
+//!   contend for one modeled device;
+//! - filesystem runs land in a shared pinned staging pool ([`PinnedPool`]
+//!   — blocking allocation is the read-ahead backpressure bound) and
+//!   drain through **multi-lane H2D upload** threads (the reverse of the
+//!   PR-4 D2H staging lanes, `EngineConfig::restore_lanes`), which
+//!   scatter each run's extents into the destination buffers and record
+//!   lane-attributed [`Tier::H2D`] spans;
+//! - host-cache runs skip the staging hop entirely: the backing buffer
+//!   serves every destination window under a single lock
+//!   (`read_gather_at`), scattering straight into the targets;
+//! - trailer/metadata decode of file N+1 happens on the planner thread
+//!   WHILE file N's bulk reads are in flight — the paper's
+//!   metadata/bulk-I/O overlap, applied to restore.
+//!
+//! Per-pass accounting lands in [`RestoreMetrics`] (planned extents vs
+//! physical gather reads, merged-extent savings, per-lane busy time,
+//! time-to-first-tensor vs time-to-complete). Output is byte-identical
+//! to the serial paths by construction and by property test
+//! (`rust/tests/restore_engine.rs`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::config::EngineConfig;
+use crate::engine::pool::PinnedPool;
+use crate::metrics::{LaneStat, RestoreMetrics, Tier, Timeline};
+use crate::provider::layout::{EntryKind, FileLayout};
+use crate::restore::reshard::{CheckpointWorld, ReshardPlan};
+use crate::restore::RestoredFile;
+use crate::state::shard::{RankState, ShardFile, StateItem};
+use crate::state::tensor::{DType, TensorShard};
+use crate::storage::{LocalFs, ReadAt, RestoredVersion, TierKind,
+                     TierPipeline};
+use crate::util::channel::{Receiver, Sender};
+
+/// Fallback piece granularity when coalescing is off (matches the
+/// serial stream's `DEFAULT_CHUNK_BYTES`).
+const DEFAULT_PIECE_BYTES: usize = 4 << 20;
+
+/// One planned output file: name, decoded layout, and the per-entry
+/// destination buffers being filled by the pass.
+type PlannedFile = (String, FileLayout, Vec<(String, Arc<SharedBuf>)>);
+
+/// Source-file key of a reshard read: (source rank, file name).
+type SrcKey = (usize, String);
+
+/// Marker prefix on deterministic plan/layout-mismatch errors (a
+/// missing entry, a slice range beyond its entry): these fail
+/// identically on the serial path, so the reshard wrapper propagates
+/// them instead of re-running the whole read pass serially.
+const PLAN_ERROR: &str = "reshard plan invalid";
+
+/// True when `e` is a deterministic plan/layout error the serial
+/// fallback could not fix either.
+pub fn is_plan_error(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains(PLAN_ERROR)
+}
+
+/// Tuning knobs of the parallel restore engine.
+#[derive(Debug, Clone)]
+pub struct ReadEngineConfig {
+    /// Reader-pool threads issuing the gather reads (the read mirror of
+    /// `EngineConfig::writer_threads`). Clamped >= 1.
+    pub readers: usize,
+    /// H2D upload lanes draining the staging pool (the read mirror of
+    /// `EngineConfig::stager_lanes`). Clamped >= 1.
+    pub restore_lanes: usize,
+    /// Coalesced-read ceiling: adjacent/near-adjacent planned extents
+    /// merge into gather runs up to this many file bytes (clamped to
+    /// half the staging pool). `0` disables coalescing — every planned
+    /// extent becomes its own read, the serial pattern (ablations).
+    pub coalesce_bytes: usize,
+    /// Largest alignment hole bridged INSIDE a run: merging two extents
+    /// separated by up to this many bytes over-reads the gap (tensors
+    /// are 64-byte aligned, so holes are tiny; one large read beats two
+    /// small ones by far).
+    pub gap_bytes: usize,
+    /// Pinned staging pool capacity shared by all reader threads;
+    /// blocking allocation bounds read-ahead.
+    pub pool_bytes: usize,
+    /// Concurrent-read cap per FILESYSTEM tier (host-cache reads are
+    /// uncapped). Clamped >= 1.
+    pub fs_readers: usize,
+}
+
+impl Default for ReadEngineConfig {
+    fn default() -> Self {
+        ReadEngineConfig {
+            readers: 4,
+            restore_lanes: 2,
+            coalesce_bytes: 16 << 20,
+            gap_bytes: 4096,
+            pool_bytes: 32 << 20,
+            fs_readers: 4,
+        }
+    }
+}
+
+impl ReadEngineConfig {
+    /// Derive restore knobs from an engine config (the write-side knobs
+    /// mirror onto the read side).
+    pub fn from_engine(cfg: &EngineConfig) -> ReadEngineConfig {
+        ReadEngineConfig {
+            readers: cfg.reader_threads.max(1),
+            restore_lanes: cfg.restore_lanes.max(1),
+            // read coalescing is its OWN ablation dimension: the
+            // write-side `coalesce_bytes` (incl. its 0=off setting)
+            // deliberately does not leak into restores — construct a
+            // ReadEngine directly to ablate the read side
+            // restore staging needs a few runs in flight, not the full
+            // checkpoint cache (the pool is also allocated lazily)
+            pool_bytes: cfg.host_cache_bytes.clamp(1 << 20, 64 << 20),
+            ..Default::default()
+        }
+    }
+}
+
+// ---- shared destination buffers -----------------------------------------
+
+/// A shared restore destination buffer. Discipline (the same as
+/// [`crate::engine::pool::Segment`]): the planner hands out disjoint
+/// `(offset, len)` windows, each window is written by exactly ONE
+/// reader/upload thread before the buffer is taken, and nothing reads
+/// the buffer until every window landed (the pass join is the barrier).
+struct SharedBuf {
+    buf: Box<[u8]>,
+}
+
+impl SharedBuf {
+    fn new(len: usize) -> Arc<SharedBuf> {
+        Arc::new(SharedBuf { buf: vec![0u8; len].into_boxed_slice() })
+    }
+
+    /// Mutable view of one window. Safety: caller upholds the
+    /// disjoint-window single-writer discipline above.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn window(&self, off: usize, len: usize) -> &mut [u8] {
+        std::slice::from_raw_parts_mut(
+            self.buf.as_ptr().add(off) as *mut u8,
+            len,
+        )
+    }
+
+    fn write_at(&self, off: usize, src: &[u8]) {
+        // Safety: disjoint window per the type discipline.
+        unsafe { self.window(off, src.len()) }.copy_from_slice(src);
+    }
+
+    /// Reclaim the bytes once the pass joined (sole owner by then; the
+    /// copying fallback is defensive only).
+    fn take(this: Arc<SharedBuf>) -> Vec<u8> {
+        match Arc::try_unwrap(this) {
+            Ok(s) => s.buf.into_vec(),
+            Err(arc) => arc.buf.to_vec(),
+        }
+    }
+}
+
+/// One restore destination entry (a layout entry or a reshard target
+/// tensor) and its completion countdown. `remaining` starts at 1 — a
+/// planning guard released only when the planner has emitted every read
+/// for this sink — so concurrent completions can never hit zero while
+/// later reads are still being planned.
+struct EntrySink {
+    name: String,
+    is_tensor: bool,
+    buf: Arc<SharedBuf>,
+    remaining: AtomicU64,
+}
+
+impl EntrySink {
+    fn new(name: impl Into<String>, is_tensor: bool, len: usize)
+        -> Arc<EntrySink> {
+        Arc::new(EntrySink {
+            name: name.into(),
+            is_tensor,
+            buf: SharedBuf::new(len),
+            remaining: AtomicU64::new(1), // planning guard
+        })
+    }
+}
+
+// ---- plan types ---------------------------------------------------------
+
+/// One planned positioned read: `len` file bytes at `file_offset`,
+/// landing at `dst_offset` of `entry`'s buffer.
+struct PlannedRead {
+    file_offset: u64,
+    len: u64,
+    dst_offset: u64,
+    entry: Arc<EntrySink>,
+    /// Starts a fresh raw extent (pieces split from one extent carry
+    /// `false` after the first — merged-extent metrics count raw
+    /// extents, not split pieces).
+    new_extent: bool,
+}
+
+/// One sealed gather run: a contiguous file span (gaps included)
+/// covering one or more planned reads of one source file.
+struct GatherRun {
+    src: usize,
+    start: u64,
+    span: u64,
+    /// Reads in file order. Overlapping reads (replicated target
+    /// slices) force the staging-pool path.
+    reads: Vec<PlannedRead>,
+    overlap: bool,
+}
+
+// ---- sources with tier failover -----------------------------------------
+
+/// One source checkpoint file, lazily resolved to a reader on its
+/// nearest readable tier and re-resolved deeper on torn-copy failures.
+struct Source<'a> {
+    pipeline: &'a TierPipeline,
+    rel: String,
+    resolved: Mutex<Option<Resolved>>,
+}
+
+#[derive(Clone)]
+struct Resolved {
+    tier: usize,
+    kind: TierKind,
+    reader: Arc<dyn ReadAt>,
+    throttle: Option<Arc<crate::storage::Throttle>>,
+}
+
+impl<'a> Source<'a> {
+    fn new(pipeline: &'a TierPipeline, rel: String) -> Source<'a> {
+        Source { pipeline, rel, resolved: Mutex::new(None) }
+    }
+
+    /// Open the nearest tier >= `from` holding a copy, caching the
+    /// resolution so concurrent runs share one reader handle.
+    fn resolve(&self, from: usize) -> anyhow::Result<Resolved> {
+        let mut slot = self.resolved.lock().unwrap();
+        if let Some(r) = slot.as_ref() {
+            if r.tier >= from {
+                return Ok(r.clone());
+            }
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for (i, tier) in
+            self.pipeline.tiers().iter().enumerate().skip(from)
+        {
+            if !tier.exists(&self.rel) {
+                continue;
+            }
+            match tier.open(&self.rel) {
+                Ok(r) => {
+                    let res = Resolved {
+                        tier: i,
+                        kind: tier.kind(),
+                        reader: Arc::from(r),
+                        throttle: tier.throttle(),
+                    };
+                    *slot = Some(res.clone());
+                    return Ok(res);
+                }
+                Err(e) => {
+                    last = Some(anyhow::anyhow!(
+                        "{} on {} tier: {e:#}",
+                        self.rel,
+                        tier.kind().label()
+                    ));
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            anyhow::anyhow!("{}: no readable copy on any remaining tier",
+                            self.rel)
+        }))
+    }
+
+    /// Drop a cached resolution that just failed, so the next attempt
+    /// re-resolves from a deeper tier.
+    fn invalidate(&self, tier: usize) {
+        let mut slot = self.resolved.lock().unwrap();
+        if slot.as_ref().map(|r| r.tier) == Some(tier) {
+            *slot = None;
+        }
+    }
+}
+
+// ---- small synchronization helpers --------------------------------------
+
+/// Counting semaphore for the per-filesystem-tier read cap.
+struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    fn new(n: usize) -> Semaphore {
+        Semaphore { permits: Mutex::new(n.max(1)), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) -> SemGuard<'_> {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        SemGuard { sem: self }
+    }
+}
+
+struct SemGuard<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemGuard<'_> {
+    fn drop(&mut self) {
+        *self.sem.permits.lock().unwrap() += 1;
+        self.sem.cv.notify_one();
+    }
+}
+
+/// One extent's hop from the staging pool into its destination buffer —
+/// the H2D upload unit dealt round-robin across the lanes.
+struct UploadJob {
+    seg: Arc<crate::engine::pool::Segment>,
+    seg_off: usize,
+    len: usize,
+    dst_offset: usize,
+    entry: Arc<EntrySink>,
+}
+
+/// State shared by the planner, the reader pool and the upload lanes of
+/// one pass.
+struct ExecShared<'a> {
+    timeline: &'a Timeline,
+    t0: f64,
+    /// Lazily-created staging pool (see [`ReadEngine::pool`]).
+    staging: &'a Mutex<Option<PinnedPool>>,
+    pool_bytes: usize,
+    /// Per-TIER read caps: one semaphore per distinct filesystem
+    /// backend (keyed by backend identity), so two filesystem tiers —
+    /// of one pipeline or of several reshard source pipelines sharing
+    /// a device — each get their own `fs_readers` budget.
+    fs_cap: usize,
+    fs_sems: Mutex<HashMap<usize, Arc<Semaphore>>>,
+    first_tensor: Mutex<Option<f64>>,
+    error: Mutex<Option<String>>,
+    failed: AtomicBool,
+    next_lane: AtomicUsize,
+    read_extents: AtomicU64,
+    gather_reads: AtomicU64,
+    extents_merged: AtomicU64,
+    bytes: AtomicU64,
+    gap_bytes: AtomicU64,
+}
+
+impl ExecShared<'_> {
+    /// The staging pool, created on first use (filesystem runs only).
+    fn staging_pool(&self) -> PinnedPool {
+        let mut slot = self.staging.lock().unwrap();
+        slot.get_or_insert_with(|| PinnedPool::new(self.pool_bytes))
+            .clone()
+    }
+
+    /// The read-cap semaphore of one filesystem tier.
+    fn fs_permit(
+        &self,
+        tier: &Arc<dyn crate::storage::Backend>,
+    ) -> Arc<Semaphore> {
+        let key = Arc::as_ptr(tier) as *const u8 as usize;
+        self.fs_sems
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(Semaphore::new(self.fs_cap)))
+            .clone()
+    }
+
+    fn fail(&self, e: &anyhow::Error) {
+        self.failed.store(true, Ordering::Release);
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("{e:#}"));
+        }
+    }
+
+    /// Count one landed read against its sink; the last one (guard
+    /// included) notes the first fully-materialized tensor.
+    fn complete_one(&self, entry: &EntrySink) {
+        if entry.remaining.fetch_sub(1, Ordering::AcqRel) == 1
+            && entry.is_tensor
+        {
+            let mut ft = self.first_tensor.lock().unwrap();
+            if ft.is_none() {
+                *ft = Some(self.timeline.now_s() - self.t0);
+            }
+        }
+    }
+}
+
+// ---- the engine ---------------------------------------------------------
+
+/// The parallel gather-read restore engine. One instance may serve any
+/// number of restore passes; the staging pool and metrics are reused
+/// across them.
+pub struct ReadEngine {
+    cfg: ReadEngineConfig,
+    /// Effective run/piece ceiling (coalesce clamped to pool/2).
+    run_cap: usize,
+    /// Staging pool, created LAZILY on the first filesystem run — a
+    /// pure host-cache restore (zero-staging scatter path) never pays
+    /// the allocation, and neither does constructing an engine for a
+    /// version that turns out not to exist.
+    pool: Mutex<Option<PinnedPool>>,
+    pool_bytes: usize,
+    timeline: Arc<Timeline>,
+    metrics: Mutex<RestoreMetrics>,
+}
+
+impl ReadEngine {
+    pub fn new(cfg: ReadEngineConfig) -> ReadEngine {
+        let pool_bytes = cfg.pool_bytes.max(2);
+        let base = if cfg.coalesce_bytes > 0 {
+            cfg.coalesce_bytes
+        } else {
+            DEFAULT_PIECE_BYTES
+        };
+        let run_cap = base.min(pool_bytes / 2).max(1);
+        ReadEngine {
+            pool: Mutex::new(None),
+            pool_bytes,
+            run_cap,
+            timeline: Arc::new(Timeline::new()),
+            metrics: Mutex::new(RestoreMetrics::default()),
+            cfg,
+        }
+    }
+
+    /// Engine with the restore knobs of an [`EngineConfig`].
+    pub fn from_engine(cfg: &EngineConfig) -> ReadEngine {
+        Self::new(ReadEngineConfig::from_engine(cfg))
+    }
+
+    pub fn timeline(&self) -> &Arc<Timeline> {
+        &self.timeline
+    }
+
+    /// Cumulative restore metrics (times are of the latest pass; lane
+    /// and busy stats come from the engine timeline).
+    pub fn metrics(&self) -> RestoreMetrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.h2d_lanes = (0..self.timeline.lanes_used(Tier::H2D))
+            .map(|lane| {
+                let (bytes, busy_s) =
+                    self.timeline.lane_summary(Tier::H2D, lane);
+                LaneStat { lane, bytes, busy_s }
+            })
+            .collect();
+        m.read_busy_s = self.timeline.tier_summary(Tier::Read).1;
+        m
+    }
+
+    // ---- public restore operations --------------------------------------
+
+    /// Read one checkpoint version of a tier pipeline — every file from
+    /// its nearest readable tier, payloads via coalesced parallel gather
+    /// reads. The parallel sibling of
+    /// [`TierPipeline::read_version_serial`], byte-identical output.
+    pub fn read_version(&self, pipeline: &TierPipeline, version: u64)
+        -> anyhow::Result<RestoredVersion> {
+        let dir = format!("v{version:06}");
+        let files = pipeline.version_file_names(version)?;
+        anyhow::ensure!(!files.is_empty(),
+                        "no files recorded or stored for v{version}");
+        let named: Vec<(String, String)> = files
+            .into_iter()
+            .map(|f| {
+                let rel = format!("{dir}/{f}");
+                (f, rel)
+            })
+            .collect();
+        self.read_files(pipeline, &named)
+    }
+
+    /// Restore the newest version with a complete readable copy
+    /// (newest-first walk, nearest-tier reads) — the engine-backed
+    /// restart entry point.
+    pub fn restore_newest(&self, pipeline: &TierPipeline)
+        -> anyhow::Result<Option<(u64, RestoredVersion)>> {
+        for v in pipeline.versions()?.into_iter().rev() {
+            if let Ok(files) = self.read_version(pipeline, v) {
+                return Ok(Some((v, files)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Read every checkpoint file directly under a plain directory (a
+    /// version directory on disk) — the one directory-scan read path:
+    /// `read_version_dir`, `read_version_dir_parallel`, `verify_against`
+    /// and the CLI restore all funnel through here.
+    pub fn read_dir(&self, dir: &Path)
+        -> anyhow::Result<HashMap<String, RestoredFile>> {
+        let fs: Arc<dyn crate::storage::Backend> =
+            Arc::new(LocalFs::new(dir));
+        let pipeline =
+            TierPipeline::single(fs, Arc::new(Timeline::new()));
+        let mut named = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                let name =
+                    entry.file_name().to_string_lossy().into_owned();
+                named.push((name.clone(), name));
+            }
+        }
+        named.sort();
+        self.read_files(&pipeline, &named)
+    }
+
+    /// Read a named set of checkpoint files (`(name, tier-relative
+    /// path)`) out of one pipeline. Trailer decode of file N+1 overlaps
+    /// file N's payload reads.
+    pub fn read_files(&self, pipeline: &TierPipeline,
+                      files: &[(String, String)])
+        -> anyhow::Result<HashMap<String, RestoredFile>> {
+        let sources: Vec<Source<'_>> = files
+            .iter()
+            .map(|(_, rel)| Source::new(pipeline, rel.clone()))
+            .collect();
+        // (file name, layout, per-entry payload buffers) collected by
+        // the planner as it decodes each trailer
+        let mut outputs: Vec<PlannedFile> =
+            Vec::with_capacity(files.len());
+        self.run_pass(&sources, |ctx| {
+            for (si, (name, rel)) in files.iter().enumerate() {
+                // trailer decode (nearest readable tier, torn-copy
+                // fall-through) — overlaps earlier files' bulk reads
+                let layout = pipeline
+                    .chunk_source_nearest(rel)?
+                    .layout()
+                    .clone();
+                let mut reads = Vec::new();
+                let mut guards: Vec<Arc<EntrySink>> =
+                    Vec::with_capacity(layout.entries.len());
+                let mut bufs = Vec::with_capacity(layout.entries.len());
+                for entry in &layout.entries {
+                    let total = entry.total_len() as usize;
+                    let sink = EntrySink::new(
+                        &entry.name,
+                        matches!(entry.kind, EntryKind::Tensor { .. }),
+                        total,
+                    );
+                    let mut pos = 0u64;
+                    for &(off, len) in &entry.extents {
+                        ctx.plan_window(&mut reads, &sink, off, len,
+                                        pos);
+                        pos += len;
+                    }
+                    bufs.push((entry.name.clone(), sink.buf.clone()));
+                    guards.push(sink);
+                }
+                ctx.emit(si, reads)?;
+                // this file's sinks are fully planned (each sink
+                // belongs to exactly ONE file): release their guards
+                // NOW, so time-to-first-tensor reflects the first
+                // tensor's actual landing, not the end of all planning
+                for sink in guards {
+                    ctx.shared.complete_one(&sink);
+                }
+                outputs.push((name.clone(), layout, bufs));
+            }
+            Ok(())
+        })?;
+        let mut out = HashMap::with_capacity(outputs.len());
+        for (name, layout, bufs) in outputs {
+            let mut payloads = HashMap::with_capacity(bufs.len());
+            for (entry, buf) in bufs {
+                payloads.insert(entry, SharedBuf::take(buf));
+            }
+            out.insert(name, RestoredFile { layout, payloads });
+        }
+        Ok(out)
+    }
+
+    /// Execute a reshard plan with coalesced parallel reads: slices are
+    /// grouped per (source rank, file), mapped to file extents through
+    /// each source trailer, merged into gather runs and fanned out
+    /// across the reader pool. Tier failover is handled per run;
+    /// replica-ALTERNATE failover stays with the serial executor —
+    /// [`crate::restore::reshard::execute_plan`] falls back to it when
+    /// this returns an error.
+    pub fn execute_plan(&self, world: &CheckpointWorld, version: u64,
+                        plan: &ReshardPlan)
+        -> anyhow::Result<Vec<RankState>> {
+        self.execute_plan_with_layouts(world, version, plan,
+                                       &HashMap::new())
+    }
+
+    /// [`ReadEngine::execute_plan`] reusing already-decoded source
+    /// trailers (keyed by `(source rank, file name)`): the index build
+    /// behind `restore_for_topology` hands its layouts over, so no
+    /// source trailer is decoded twice per restore. Sources absent from
+    /// the map are decoded on the planner thread as usual.
+    pub fn execute_plan_with_layouts(
+        &self,
+        world: &CheckpointWorld,
+        version: u64,
+        plan: &ReshardPlan,
+        layouts: &HashMap<SrcKey, FileLayout>,
+    ) -> anyhow::Result<Vec<RankState>> {
+        // destination sinks, one per target tensor, plus the pending
+        // slice list grouped per source (rank, file)
+        struct Pending {
+            entry: String,
+            entry_offset: u64,
+            len: u64,
+            dst_offset: u64,
+            sink: Arc<EntrySink>,
+        }
+        type RankSinks = Vec<Vec<Arc<EntrySink>>>;
+        let mut sinks: Vec<RankSinks> = Vec::new();
+        let mut by_src: Vec<(SrcKey, Vec<Pending>)> = Vec::new();
+        let mut src_index: HashMap<SrcKey, usize> = HashMap::new();
+        for rp in &plan.ranks {
+            let mut rank_sinks = Vec::with_capacity(rp.files.len());
+            for tf in &rp.files {
+                let mut file_sinks = Vec::with_capacity(tf.tensors.len());
+                for tt in &tf.tensors {
+                    let sink = EntrySink::new(
+                        &tt.name, true, tt.logical.len() as usize);
+                    for sr in &tt.reads {
+                        let key =
+                            (sr.extent.rank, sr.extent.file.clone());
+                        let si = *src_index
+                            .entry(key.clone())
+                            .or_insert_with(|| {
+                                by_src.push((key, Vec::new()));
+                                by_src.len() - 1
+                            });
+                        by_src[si].1.push(Pending {
+                            entry: sr.extent.entry.clone(),
+                            entry_offset: sr.entry_offset,
+                            len: sr.len,
+                            dst_offset: sr.dst_offset,
+                            sink: sink.clone(),
+                        });
+                    }
+                    file_sinks.push(sink);
+                }
+                rank_sinks.push(file_sinks);
+            }
+            sinks.push(rank_sinks);
+        }
+        let sources: Vec<Source<'_>> = by_src
+            .iter()
+            .map(|((rank, file), _)| {
+                Ok(Source::new(
+                    world.pipeline(*rank)?,
+                    format!("v{version:06}/{file}"),
+                ))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        self.run_pass(&sources, |ctx| {
+            for (si, ((rank, file), pendings)) in
+                by_src.iter().enumerate()
+            {
+                // source trailer: reuse the caller's decoded layout
+                // when present, else decode here — either way the
+                // planner overlaps earlier sources' payload reads
+                let owned;
+                let layout: &FileLayout = match layouts
+                    .get(&(*rank, file.clone()))
+                {
+                    Some(l) => l,
+                    None => {
+                        owned = world.source(*rank, version, file)?;
+                        owned.layout()
+                    }
+                };
+                let mut reads = Vec::new();
+                for p in pendings {
+                    let entry = layout
+                        .entries
+                        .iter()
+                        .find(|e| e.name == p.entry)
+                        .ok_or_else(|| anyhow::anyhow!(
+                            "{PLAN_ERROR}: rank {rank} {file}: no \
+                             entry {}", p.entry))?;
+                    anyhow::ensure!(
+                        p.entry_offset + p.len <= entry.total_len(),
+                        "{PLAN_ERROR}: rank {rank} {file} {}: range \
+                         {}+{} beyond entry len {}",
+                        p.entry, p.entry_offset, p.len,
+                        entry.total_len()
+                    );
+                    // walk the entry's extents in payload order,
+                    // mapping the requested window to file ranges —
+                    // exactly the serial `read_entry_range_into` walk
+                    let mut pos = 0u64;
+                    for &(ext_off, ext_len) in &entry.extents {
+                        let lo = p.entry_offset.max(pos);
+                        let hi = (p.entry_offset + p.len)
+                            .min(pos + ext_len);
+                        if lo < hi {
+                            ctx.plan_window(
+                                &mut reads,
+                                &p.sink,
+                                ext_off + (lo - pos),
+                                hi - lo,
+                                p.dst_offset + (lo - p.entry_offset),
+                            );
+                        }
+                        pos += ext_len;
+                        if pos >= p.entry_offset + p.len {
+                            break;
+                        }
+                    }
+                }
+                ctx.emit(si, reads)?;
+            }
+            for rank_sinks in &sinks {
+                for file_sinks in rank_sinks {
+                    for sink in file_sinks {
+                        ctx.shared.complete_one(sink);
+                    }
+                }
+            }
+            Ok(())
+        })?;
+        // release the plan-side sink references BEFORE assembly: each
+        // Pending holds an EntrySink Arc, and keeping them alive would
+        // force SharedBuf::take onto its copying fallback for every
+        // restored tensor
+        drop(by_src);
+        drop(src_index);
+        // assemble target rank states exactly as the serial executor
+        let mut out = Vec::with_capacity(plan.ranks.len());
+        for (rp, rank_sinks) in plan.ranks.iter().zip(sinks) {
+            let mut files = Vec::with_capacity(rp.files.len());
+            for (tf, file_sinks) in rp.files.iter().zip(rank_sinks) {
+                let mut items = Vec::with_capacity(tf.tensors.len());
+                for (tt, sink) in tf.tensors.iter().zip(file_sinks) {
+                    // the pass joined, so the sink (and its planning
+                    // reads) are gone — this Arc is the sole buffer
+                    // owner and `take` reclaims without copying
+                    let buf_arc = sink.buf.clone();
+                    drop(sink);
+                    let buf = SharedBuf::take(buf_arc);
+                    let esz = tt.dtype.size_bytes();
+                    let (dtype, shape) = if esz > 0
+                        && buf.len() % esz == 0
+                    {
+                        (tt.dtype, vec![buf.len() / esz])
+                    } else {
+                        (DType::U8, vec![buf.len()])
+                    };
+                    items.push(StateItem::Tensor(
+                        TensorShard::host(&tt.name, dtype, shape, buf)
+                            .with_logical(Some(tt.logical.clone())),
+                    ));
+                }
+                files.push(ShardFile {
+                    name: tf.name.clone(),
+                    kind: tf.kind,
+                    items,
+                });
+            }
+            out.push(RankState { rank: rp.rank, files });
+        }
+        Ok(out)
+    }
+
+    // ---- pass execution --------------------------------------------------
+
+    /// Run one restore pass: spawn the upload lanes and the reader pool,
+    /// then run `feed` (the planner) on the calling thread, streaming
+    /// sealed gather runs into the pool while earlier runs execute.
+    fn run_pass<F>(&self, sources: &[Source<'_>], feed: F)
+        -> anyhow::Result<()>
+    where
+        F: for<'s, 'e> FnOnce(&mut PlanCtx<'s, 'e>)
+            -> anyhow::Result<()>,
+    {
+        let shared = ExecShared {
+            timeline: &self.timeline,
+            t0: self.timeline.now_s(),
+            staging: &self.pool,
+            pool_bytes: self.pool_bytes,
+            fs_cap: self.cfg.fs_readers.max(1),
+            fs_sems: Mutex::new(HashMap::new()),
+            first_tensor: Mutex::new(None),
+            error: Mutex::new(None),
+            failed: AtomicBool::new(false),
+            next_lane: AtomicUsize::new(0),
+            read_extents: AtomicU64::new(0),
+            gather_reads: AtomicU64::new(0),
+            extents_merged: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            gap_bytes: AtomicU64::new(0),
+        };
+        let lanes = self.cfg.restore_lanes.max(1);
+        let readers = self.cfg.readers.max(1);
+        let (run_tx, run_rx) =
+            crate::util::channel::unbounded::<GatherRun>();
+        let mut lane_txs: Vec<Sender<UploadJob>> =
+            Vec::with_capacity(lanes);
+        let mut lane_rxs: Vec<Receiver<UploadJob>> =
+            Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            let (tx, rx) = crate::util::channel::unbounded::<UploadJob>();
+            lane_txs.push(tx);
+            lane_rxs.push(rx);
+        }
+        let plan_res = std::thread::scope(|s| {
+            let shared = &shared;
+            for (lane, rx) in lane_rxs.into_iter().enumerate() {
+                s.spawn(move || Self::lane_loop(rx, lane, shared));
+            }
+            for ridx in 0..readers {
+                let rx = run_rx.clone();
+                let txs = lane_txs.clone();
+                s.spawn(move || {
+                    Self::reader_loop(rx, ridx, sources, txs, shared)
+                });
+            }
+            drop(run_rx);
+            drop(lane_txs);
+            let mut ctx = PlanCtx {
+                shared,
+                run_tx,
+                run_cap: self.run_cap as u64,
+                gap: if self.cfg.coalesce_bytes > 0 {
+                    self.cfg.gap_bytes as u64
+                } else {
+                    0
+                },
+                coalesce: self.cfg.coalesce_bytes > 0,
+            };
+            let res = feed(&mut ctx);
+            if let Err(e) = &res {
+                shared.fail(e);
+            }
+            drop(ctx); // drops run_tx: readers drain and exit
+            res
+        });
+        // the scope joined: every reader and lane finished
+        if let Some(e) = shared.error.lock().unwrap().take() {
+            anyhow::bail!("{e}");
+        }
+        plan_res?;
+        let total = self.timeline.now_s() - shared.t0;
+        let mut m = self.metrics.lock().unwrap();
+        m.read_extents += shared.read_extents.load(Ordering::Acquire);
+        m.gather_reads += shared.gather_reads.load(Ordering::Acquire);
+        m.extents_merged +=
+            shared.extents_merged.load(Ordering::Acquire);
+        m.bytes += shared.bytes.load(Ordering::Acquire);
+        m.gap_bytes_read += shared.gap_bytes.load(Ordering::Acquire);
+        m.time_to_complete_s = total;
+        m.time_to_first_tensor_s = shared
+            .first_tensor
+            .lock()
+            .unwrap()
+            .unwrap_or(total);
+        Ok(())
+    }
+
+    fn reader_loop(rx: Receiver<GatherRun>, reader_idx: usize,
+                   sources: &[Source<'_>], lane_txs: Vec<Sender<UploadJob>>,
+                   shared: &ExecShared<'_>) {
+        while let Ok(run) = rx.recv() {
+            if shared.failed.load(Ordering::Acquire) {
+                continue; // drain without work; the pass will error
+            }
+            if let Err(e) =
+                Self::exec_run(&run, sources, &lane_txs, shared,
+                               reader_idx)
+            {
+                shared.fail(&e);
+            }
+        }
+        // lane senders drop here; lanes exit once every reader did
+    }
+
+    /// Execute one gather run with nearest-tier resolution and
+    /// torn-copy fall-through to deeper tiers.
+    fn exec_run(run: &GatherRun, sources: &[Source<'_>],
+                lane_txs: &[Sender<UploadJob>], shared: &ExecShared<'_>,
+                reader_idx: usize) -> anyhow::Result<()> {
+        let src = &sources[run.src];
+        let n_tiers = src.pipeline.tiers().len();
+        let mut from = 0usize;
+        loop {
+            let r = src.resolve(from)?;
+            match Self::try_run(&r, run, src, lane_txs, shared,
+                                reader_idx) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    src.invalidate(r.tier);
+                    from = r.tier + 1;
+                    if from >= n_tiers {
+                        return Err(e);
+                    }
+                    eprintln!(
+                        "[restore] {} on {} tier: {e:#}; falling \
+                         through to a deeper tier",
+                        src.rel,
+                        r.kind.label()
+                    );
+                }
+            }
+        }
+    }
+
+    fn try_run(r: &Resolved, run: &GatherRun, src: &Source<'_>,
+               lane_txs: &[Sender<UploadJob>], shared: &ExecShared<'_>,
+               reader_idx: usize) -> anyhow::Result<()> {
+        // filesystem tiers: bounded concurrent readers, per tier
+        let sem = (r.kind == TierKind::LocalFs).then(|| {
+            shared.fs_permit(&src.pipeline.tiers()[r.tier])
+        });
+        let _guard = sem.as_ref().map(|s| s.acquire());
+        // reads charge the SAME token bucket as the tier's writes
+        if let Some(th) = &r.throttle {
+            th.acquire(run.span);
+        }
+        let t0 = shared.timeline.now_s();
+        if r.kind == TierKind::HostCache && !run.overlap {
+            // zero-staging fast path: the cache's backing buffer
+            // scatters every window straight into the destinations
+            // under one lock; alignment holes land in scratch
+            let mut scratch: Vec<Vec<u8>> = Vec::new();
+            let mut cursor = run.start;
+            for read in &run.reads {
+                if read.file_offset > cursor {
+                    scratch.push(vec![
+                        0u8;
+                        (read.file_offset - cursor) as usize
+                    ]);
+                }
+                cursor = read.file_offset + read.len;
+            }
+            let mut holes = scratch.iter_mut();
+            let mut dsts: Vec<&mut [u8]> =
+                Vec::with_capacity(run.reads.len() + scratch.len());
+            let mut cursor = run.start;
+            for read in &run.reads {
+                if read.file_offset > cursor {
+                    dsts.push(
+                        holes.next().expect("hole per gap").as_mut_slice(),
+                    );
+                }
+                // Safety: windows are disjoint per the plan (the
+                // coalescer routes overlapping reads to the pool path)
+                // and written once, here.
+                dsts.push(unsafe {
+                    read.entry.buf.window(read.dst_offset as usize,
+                                          read.len as usize)
+                });
+                cursor = read.file_offset + read.len;
+            }
+            r.reader.read_gather_at(run.start, &mut dsts)?;
+            drop(dsts);
+            shared.timeline.record_on_lane(Tier::Read, &src.rel,
+                                           run.span, t0,
+                                           shared.timeline.now_s(),
+                                           reader_idx);
+            for read in &run.reads {
+                shared.complete_one(&read.entry);
+            }
+        } else {
+            // staging path: the run's span lands in the pinned pool
+            // through the vectored primitive (on LocalFs that is one
+            // cursor-free `preadv` submission), then the H2D lanes
+            // scatter the extents into the destinations
+            let (seg, _waited) = shared
+                .staging_pool()
+                .alloc_blocking(run.span as usize)?;
+            seg.with_mut(|b| {
+                let mut dsts: Vec<&mut [u8]> = vec![b];
+                r.reader.read_gather_at(run.start, &mut dsts)
+            })?;
+            shared.timeline.record_on_lane(Tier::Read, &src.rel,
+                                           run.span, t0,
+                                           shared.timeline.now_s(),
+                                           reader_idx);
+            for read in &run.reads {
+                let lane = shared
+                    .next_lane
+                    .fetch_add(1, Ordering::Relaxed)
+                    % lane_txs.len();
+                lane_txs[lane]
+                    .send(UploadJob {
+                        seg: seg.clone(),
+                        seg_off: (read.file_offset - run.start) as usize,
+                        len: read.len as usize,
+                        dst_offset: read.dst_offset as usize,
+                        entry: read.entry.clone(),
+                    })
+                    .map_err(|_| {
+                        anyhow::anyhow!("H2D upload lane died")
+                    })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn lane_loop(rx: Receiver<UploadJob>, lane: usize,
+                 shared: &ExecShared<'_>) {
+        while let Ok(job) = rx.recv() {
+            let t0 = shared.timeline.now_s();
+            job.entry.buf.write_at(
+                job.dst_offset,
+                &job.seg.as_slice()[job.seg_off..job.seg_off + job.len],
+            );
+            shared.timeline.record_on_lane(Tier::H2D, &job.entry.name,
+                                           job.len as u64, t0,
+                                           shared.timeline.now_s(),
+                                           lane);
+            shared.complete_one(&job.entry);
+            // job.seg drops here: pool space frees, readers wake
+        }
+    }
+}
+
+/// Planner-side context: collects planned reads, seals them into
+/// coalesced gather runs and streams the runs to the reader pool.
+struct PlanCtx<'s, 'a> {
+    shared: &'s ExecShared<'a>,
+    run_tx: Sender<GatherRun>,
+    run_cap: u64,
+    gap: u64,
+    coalesce: bool,
+}
+
+impl PlanCtx<'_, '_> {
+    /// Plan one file window (a raw layout extent, or the covered part
+    /// of one): split into run-cap-sized pieces and bump the sink's
+    /// completion count.
+    fn plan_window(&self, reads: &mut Vec<PlannedRead>,
+                   sink: &Arc<EntrySink>, file_offset: u64, len: u64,
+                   dst_offset: u64) {
+        if len == 0 {
+            return;
+        }
+        self.shared.read_extents.fetch_add(1, Ordering::Relaxed);
+        self.shared.bytes.fetch_add(len, Ordering::Relaxed);
+        let mut k = 0u64;
+        while k < len {
+            let piece = (len - k).min(self.run_cap);
+            sink.remaining.fetch_add(1, Ordering::AcqRel);
+            reads.push(PlannedRead {
+                file_offset: file_offset + k,
+                len: piece,
+                dst_offset: dst_offset + k,
+                entry: sink.clone(),
+                new_extent: k == 0,
+            });
+            k += piece;
+        }
+    }
+
+    /// Seal a source file's planned reads into gather runs and stream
+    /// them to the reader pool.
+    fn emit(&self, src: usize, mut reads: Vec<PlannedRead>)
+        -> anyhow::Result<()> {
+        reads.sort_by_key(|r| (r.file_offset, r.dst_offset));
+        let mut runs: Vec<GatherRun> = Vec::new();
+        let mut cur: Option<GatherRun> = None;
+        for r in reads {
+            let extended = match &mut cur {
+                Some(run) if self.coalesce => {
+                    let end = run.start + run.span;
+                    let new_end = (r.file_offset + r.len).max(end);
+                    if r.file_offset <= end + self.gap
+                        && new_end - run.start <= self.run_cap
+                    {
+                        run.overlap |= r.file_offset < end;
+                        run.span = new_end - run.start;
+                        run.reads.push(r);
+                        None
+                    } else {
+                        Some(r)
+                    }
+                }
+                _ => Some(r),
+            };
+            if let Some(r) = extended {
+                if let Some(run) = cur.take() {
+                    runs.push(run);
+                }
+                cur = Some(GatherRun {
+                    src,
+                    start: r.file_offset,
+                    span: r.len,
+                    overlap: false,
+                    reads: vec![r],
+                });
+            }
+        }
+        if let Some(run) = cur.take() {
+            runs.push(run);
+        }
+        for run in runs {
+            let raw: u64 =
+                run.reads.iter().filter(|r| r.new_extent).count() as u64;
+            self.shared
+                .extents_merged
+                .fetch_add(raw.saturating_sub(1), Ordering::Relaxed);
+            let payload: u64 = run.reads.iter().map(|r| r.len).sum();
+            self.shared.gap_bytes.fetch_add(
+                run.span.saturating_sub(payload),
+                Ordering::Relaxed,
+            );
+            self.shared.gather_reads.fetch_add(1, Ordering::Relaxed);
+            self.run_tx
+                .send(run)
+                .map_err(|_| anyhow::anyhow!("reader pool died"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::state::partition::{census, materialize};
+    use crate::config::{LlmConfig, Parallelism};
+    use crate::util::TempDir;
+
+    fn write_one(cfg: EngineConfig) -> crate::state::RankState {
+        let model = LlmConfig::by_name("3B").unwrap();
+        let par = Parallelism::paper_default(&model);
+        let cs = census(&model, &par);
+        let state = materialize(&cs.ranks[0], 2e-5, 0.05, 4242);
+        let mut eng = DataStatesEngine::new(cfg).unwrap();
+        let ticket = eng.begin(0, &state).unwrap();
+        ticket.wait_persisted().unwrap();
+        state
+    }
+
+    #[test]
+    fn engine_read_version_matches_serial_and_merges_extents() {
+        let dir = TempDir::new("rde-basic").unwrap();
+        let mut cfg = EngineConfig::with_dir(dir.path());
+        cfg.chunk_bytes = 16 << 10; // plenty of extents to merge
+        let state = write_one(cfg);
+        let eng = ReadEngine::new(ReadEngineConfig::default());
+        let pipeline = {
+            let fs: Arc<dyn crate::storage::Backend> =
+                Arc::new(LocalFs::new(dir.path()));
+            TierPipeline::single(fs, Arc::new(Timeline::new()))
+        };
+        let par = eng.read_version(&pipeline, 0).unwrap();
+        let serial = pipeline.read_version_serial(0).unwrap();
+        assert_eq!(par.len(), serial.len());
+        for (name, rf) in &serial {
+            assert_eq!(par[name].payloads, rf.payloads, "{name}");
+        }
+        crate::restore::verify_files_against(&par, &state).unwrap();
+        let m = eng.metrics();
+        assert!(m.gather_reads > 0);
+        assert!(m.read_extents > m.gather_reads,
+                "nothing merged: {m:?}");
+        assert!(m.extents_merged > 0);
+        // every raw extent either became its own run or merged into a
+        // neighbor (runs from SPLIT extents can only add to the left)
+        assert!(m.extents_merged + m.gather_reads >= m.read_extents);
+        assert!(m.bytes > 0);
+        assert!(m.time_to_first_tensor_s <= m.time_to_complete_s);
+        assert!(!m.h2d_lanes.is_empty());
+    }
+
+    #[test]
+    fn coalescing_off_issues_one_read_per_extent() {
+        let dir = TempDir::new("rde-off").unwrap();
+        let cfg = EngineConfig::with_dir(dir.path());
+        write_one(cfg);
+        let eng = ReadEngine::new(ReadEngineConfig {
+            coalesce_bytes: 0,
+            ..Default::default()
+        });
+        let fs: Arc<dyn crate::storage::Backend> =
+            Arc::new(LocalFs::new(dir.path()));
+        let pipeline =
+            TierPipeline::single(fs, Arc::new(Timeline::new()));
+        eng.read_version(&pipeline, 0).unwrap();
+        let m = eng.metrics();
+        assert_eq!(m.extents_merged, 0);
+        // small extents are one read each (big ones may split)
+        assert!(m.gather_reads >= m.read_extents);
+    }
+
+    #[test]
+    fn read_dir_matches_serial_file_reads() {
+        let dir = TempDir::new("rde-dir").unwrap();
+        let cfg = EngineConfig::with_dir(dir.path());
+        let state = write_one(cfg);
+        let vdir = dir.path().join("v000000");
+        let eng = ReadEngine::new(ReadEngineConfig::default());
+        let got = eng.read_dir(&vdir).unwrap();
+        crate::restore::verify_files_against(&got, &state).unwrap();
+        for entry in std::fs::read_dir(&vdir).unwrap() {
+            let entry = entry.unwrap();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let serial =
+                crate::restore::read_file(&entry.path()).unwrap();
+            assert_eq!(got[&name].payloads, serial.payloads, "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_version_errors_cleanly() {
+        let dir = TempDir::new("rde-missing").unwrap();
+        let fs: Arc<dyn crate::storage::Backend> =
+            Arc::new(LocalFs::new(dir.path()));
+        let pipeline =
+            TierPipeline::single(fs, Arc::new(Timeline::new()));
+        let eng = ReadEngine::new(ReadEngineConfig::default());
+        assert!(eng.read_version(&pipeline, 3).is_err());
+        assert!(eng.restore_newest(&pipeline).unwrap().is_none());
+    }
+}

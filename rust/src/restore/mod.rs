@@ -3,13 +3,19 @@
 //!
 //! The low-level view is [`ChunkSource`] (`source.rs`): a read-side
 //! chunk stream over the same [`FileLayout`] the write-side providers
-//! produced, so restore pipelines mirror checkpoint pipelines. The
-//! helpers here build on it: whole-file reads, version-directory scans,
-//! parallel restore and integrity checks.
+//! produced, so restore pipelines mirror checkpoint pipelines.
+//! [`read_file`]/[`read_from`] are the SERIAL single-file reference
+//! path (one positioned read per extent — the byte oracle the engine is
+//! property-tested against); every directory/version-level restore
+//! routes through the parallel [`ReadEngine`] (`engine.rs`): coalesced
+//! gather reads over a tier-aware reader pool, staged through a pinned
+//! pool and multi-lane H2D upload.
 
+pub mod engine;
 pub mod reshard;
 pub mod source;
 
+pub use engine::{ReadEngine, ReadEngineConfig};
 pub use reshard::{plan_reshard, restore_for_topology, CheckpointWorld,
                   ReshardPlan};
 pub use source::ChunkSource;
@@ -119,18 +125,13 @@ pub fn verify_files_against(
     Ok(())
 }
 
-/// Read every file of a checkpoint version directory.
+/// Read every file of a checkpoint version directory, through the
+/// parallel [`ReadEngine`] — the ONE directory-level restore read path
+/// (`verify_against`, the CLI restore and the train-session resume all
+/// funnel here; `read_file` remains the serial per-file oracle).
 pub fn read_version_dir(dir: &Path)
     -> anyhow::Result<HashMap<String, RestoredFile>> {
-    let mut out = HashMap::new();
-    for entry in std::fs::read_dir(dir)? {
-        let entry = entry?;
-        if entry.file_type()?.is_file() {
-            let name = entry.file_name().to_string_lossy().into_owned();
-            out.insert(name, read_file(&entry.path())?);
-        }
-    }
-    Ok(out)
+    ReadEngine::new(ReadEngineConfig::default()).read_dir(dir)
 }
 
 /// Latest version directory under a checkpoint root (`v000042/`...).
@@ -186,51 +187,21 @@ pub fn read_raw(path: &Path) -> anyhow::Result<Vec<u8>> {
     Ok(buf)
 }
 
-/// Parallel restore: read a version directory with a reader-thread pool,
-/// one file per worker — the restart-path counterpart of the write-side
-/// flush pool (restart speed matters as much as checkpoint speed for the
-/// resilience scenarios in §I).
+/// Parallel restore of a version directory with an explicit reader
+/// count — the restart-path counterpart of the write-side flush pool
+/// (restart speed matters as much as checkpoint speed for the
+/// resilience scenarios in §I). The ad-hoc one-file-per-worker thread
+/// pool this used to spawn is folded into the [`ReadEngine`]: reads are
+/// now coalesced into gather runs and balanced across the pool at
+/// extent granularity, so one huge file no longer serializes on one
+/// worker.
 pub fn read_version_dir_parallel(dir: &Path, threads: usize)
     -> anyhow::Result<HashMap<String, RestoredFile>> {
-    let mut paths = Vec::new();
-    for entry in std::fs::read_dir(dir)? {
-        let entry = entry?;
-        if entry.file_type()?.is_file() {
-            paths.push((
-                entry.file_name().to_string_lossy().into_owned(),
-                entry.path(),
-            ));
-        }
-    }
-    let (tx, rx) = crate::util::channel::unbounded::<(String, PathBuf)>();
-    let (out_tx, out_rx) =
-        crate::util::channel::unbounded::<anyhow::Result<(String, RestoredFile)>>();
-    for (name, path) in paths.drain(..) {
-        tx.send((name, path)).ok();
-    }
-    drop(tx);
-    std::thread::scope(|s| {
-        for _ in 0..threads.max(1) {
-            let rx = rx.clone();
-            let out_tx = out_tx.clone();
-            s.spawn(move || {
-                while let Ok((name, path)) = rx.recv() {
-                    let res = read_file(&path).map(|rf| (name, rf));
-                    if out_tx.send(res).is_err() {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(out_tx);
-        drop(rx);
-        let mut out = HashMap::new();
-        while let Ok(res) = out_rx.recv() {
-            let (name, rf) = res?;
-            out.insert(name, rf);
-        }
-        Ok(out)
-    })
+    let cfg = ReadEngineConfig {
+        readers: threads.max(1),
+        ..Default::default()
+    };
+    ReadEngine::new(cfg).read_dir(dir)
 }
 
 #[cfg(test)]

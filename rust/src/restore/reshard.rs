@@ -29,6 +29,7 @@ use std::sync::Arc;
 
 use crate::config::{LlmConfig, Parallelism};
 use crate::metrics::Timeline;
+use crate::provider::layout::FileLayout;
 use crate::restore::ChunkSource;
 use crate::state::index::{LogicalIndex, LogicalIndexBuilder,
                           PhysicalExtent, SliceRead};
@@ -76,6 +77,25 @@ impl CheckpointWorld {
 
     pub fn n_ranks(&self) -> usize {
         self.pipelines.len()
+    }
+
+    /// The tier pipeline of one source rank (the parallel restore
+    /// engine resolves payload readers through it, nearest tier first).
+    pub fn pipeline(&self, rank: usize) -> anyhow::Result<&TierPipeline> {
+        self.pipelines
+            .get(rank)
+            .map(|p| p.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("no source rank {rank}"))
+    }
+
+    /// Restore-engine knobs for reads out of this world: the first
+    /// source pipeline's installed config (every rank shares one
+    /// `EngineConfig` in practice; defaults for an empty world).
+    pub fn restore_config(&self) -> crate::restore::ReadEngineConfig {
+        self.pipelines
+            .first()
+            .map(|p| p.restore_config())
+            .unwrap_or_default()
     }
 
     /// Open one source file as a positioned-read chunk stream from its
@@ -313,9 +333,40 @@ fn read_extent(
 }
 
 /// Execute a reshard plan against a saved checkpoint version,
-/// materializing every target rank's state.
+/// materializing every target rank's state. Reads go through the
+/// parallel restore engine (`restore::ReadEngine`): slices grouped per
+/// source file, coalesced into gather runs, fanned across the reader
+/// pool with nearest-tier resolution and torn-copy fall-through. If the
+/// engine cannot complete (e.g. a primary copy is torn on EVERY tier),
+/// the serial executor re-runs the plan with per-slice DP-replica
+/// alternate failover — so failover semantics are a strict superset of
+/// the serial path's.
 pub fn execute_plan(world: &CheckpointWorld, version: u64,
                     plan: &ReshardPlan)
+    -> anyhow::Result<Vec<RankState>> {
+    let engine =
+        crate::restore::ReadEngine::new(world.restore_config());
+    match engine.execute_plan(world, version, plan) {
+        Ok(states) => Ok(states),
+        // deterministic plan/layout mismatches would fail identically
+        // on the serial path — propagate instead of re-reading
+        // everything (mirrors the PR-3 resume-fallback narrowing)
+        Err(e) if crate::restore::engine::is_plan_error(&e) => Err(e),
+        Err(e) => {
+            eprintln!(
+                "[restore] parallel reshard read failed ({e:#}); \
+                 retrying on the serial replica-failover path"
+            );
+            execute_plan_serial(world, version, plan)
+        }
+    }
+}
+
+/// The serial reference executor: one positioned read per slice extent,
+/// with DP-replica alternate failover. The byte oracle for the parallel
+/// engine and the fallback when a primary copy is torn on every tier.
+pub fn execute_plan_serial(world: &CheckpointWorld, version: u64,
+                           plan: &ReshardPlan)
     -> anyhow::Result<Vec<RankState>> {
     execute_plan_with(world, version, plan, &mut HashMap::new())
 }
@@ -366,12 +417,33 @@ fn execute_plan_with(world: &CheckpointWorld, version: u64,
 pub fn restore_for_topology(world: &CheckpointWorld, version: u64,
                             model: &LlmConfig, target: &Parallelism)
     -> anyhow::Result<Vec<RankState>> {
-    // one source cache across index build and execution: each source
-    // file is opened and its trailer decoded exactly once per restore
     let mut cache = SourceCache::new();
     let index = world.index_with(version, &mut cache)?;
     let plan = plan_reshard(model, target, &index)?;
-    execute_plan_with(world, version, &plan, &mut cache)
+    // parallel gather-read execution, reusing the trailers the index
+    // build just decoded (no source trailer is decoded twice per
+    // restore); the already-opened source cache serves the serial
+    // replica-failover fallback if the engine cannot complete (torn
+    // primary on every tier)
+    let layouts: std::collections::HashMap<(usize, String), FileLayout> =
+        cache
+            .iter()
+            .map(|(k, src)| (k.clone(), src.layout().clone()))
+            .collect();
+    let engine =
+        crate::restore::ReadEngine::new(world.restore_config());
+    match engine.execute_plan_with_layouts(world, version, &plan,
+                                           &layouts) {
+        Ok(states) => Ok(states),
+        Err(e) if crate::restore::engine::is_plan_error(&e) => Err(e),
+        Err(e) => {
+            eprintln!(
+                "[restore] parallel reshard read failed ({e:#}); \
+                 retrying on the serial replica-failover path"
+            );
+            execute_plan_with(world, version, &plan, &mut cache)
+        }
+    }
 }
 
 #[cfg(test)]

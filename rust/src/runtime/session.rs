@@ -310,11 +310,25 @@ impl TrainSession {
     }
 
     /// Rebuild the flat state from a checkpoint version directory written
-    /// by the DataStates engine and resume from it.
+    /// by the DataStates engine and resume from it. Reads go through the
+    /// parallel gather-read restore engine (`restore::ReadEngine`) with
+    /// default knobs; a caller holding an `EngineConfig` should use
+    /// [`TrainSession::restore_from_with`] so its `reader_threads` /
+    /// `restore_lanes` settings take effect on the resume path.
     pub fn restore_from(&mut self, version_dir: &Path) -> anyhow::Result<u64> {
+        self.restore_from_with(version_dir, Default::default())
+    }
+
+    /// [`TrainSession::restore_from`] with explicit restore-engine
+    /// knobs (e.g. `ReadEngineConfig::from_engine(&engine_cfg)`).
+    pub fn restore_from_with(
+        &mut self,
+        version_dir: &Path,
+        read_cfg: crate::restore::ReadEngineConfig,
+    ) -> anyhow::Result<u64> {
         let m = &self.manifest;
-        let files =
-            crate::restore::read_version_dir_parallel(version_dir, 4)?;
+        let files = crate::restore::ReadEngine::new(read_cfg)
+            .read_dir(version_dir)?;
         let mut flat = vec![0f32; m.packed_len];
         let put = |flat: &mut [f32], base: usize, bytes: &[u8]| {
             for (i, c) in bytes.chunks_exact(4).enumerate() {

@@ -50,6 +50,19 @@ pub struct EngineModel {
     /// when `SimConfig::stager_lanes` is set (the multi-lane staging
     /// ablation); the calibrated default figures use `d2h_bps`.
     pub d2h_stream_bps: f64,
+    /// Bandwidth ONE restore H2D upload lane achieves, bytes/s — the
+    /// read-path mirror of `d2h_stream_bps` (PCIe is symmetric; one
+    /// copy stream cannot saturate it). With `lanes` explicit upload
+    /// lanes the effective restore upload rate is
+    /// `min(lanes × h2d_stream_bps, d2h_bps)`.
+    pub h2d_stream_bps: f64,
+    /// Fraction of the per-rank fair share of node bandwidth achieved
+    /// on restore READS (storage → host).
+    pub read_eff: f64,
+    /// Per-read overhead on the restore path (seek + syscall + PFS
+    /// metadata), seconds — what makes serial small-extent reads
+    /// metadata-blocked and what read coalescing amortizes.
+    pub read_extent_op_s: f64,
     /// Fraction of the per-rank fair share of node write bandwidth
     /// actually achieved.
     pub write_eff: f64,
@@ -76,6 +89,9 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pageable_bps * 0.8, // blocking pageable copies
             d2h_stream_bps: tb.pcie_pageable_bps * 0.8, // one sync stream IS the path
+            h2d_stream_bps: tb.pcie_pageable_bps * 0.8, // symmetric sync stream
+            read_eff: 0.30,
+            read_extent_op_s: 1.5e-3, // torch.load per-object overhead
             write_eff: 0.30,
             write_cap_bps: 0.74e9, // single-threaded torch.save
             launch_per_file_s: 2e-3,
@@ -91,6 +107,9 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_bytes: 512 << 20, // 512 MB chunk files
             d2h_bps: tb.pcie_pageable_bps, // non-pinned staging buffers
             d2h_stream_bps: 6e9, // single pageable memcpy stream
+            h2d_stream_bps: 6e9, // pageable upload stream, symmetric
+            read_eff: 0.42,
+            read_extent_op_s: 1.0e-3, // per chunk-file open + read
             write_eff: 0.42,
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 1.2e-3,
@@ -106,6 +125,9 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pinned_bps, // pinned pool
             d2h_stream_bps: 14e9, // one pinned copy stream (~0.55 of PCIe)
+            h2d_stream_bps: 14e9, // one pinned upload stream, symmetric
+            read_eff: 0.55,       // single restore reader
+            read_extent_op_s: 0.8e-3,
             write_eff: 0.55,             // single background writer
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 1.0e-3,
@@ -121,6 +143,9 @@ pub fn engine_model(kind: EngineKind, tb: &Testbed) -> EngineModel {
             chunk_bytes: u64::MAX,
             d2h_bps: tb.pcie_pinned_bps,
             d2h_stream_bps: 14e9, // one pinned copy stream (~0.55 of PCIe)
+            h2d_stream_bps: 14e9, // one pinned upload stream, symmetric
+            read_eff: 0.95,       // pooled vectored reads
+            read_extent_op_s: 0.5e-3,
             write_eff: 0.95, // io_uring + O_DIRECT streaming writes
             write_cap_bps: f64::INFINITY,
             launch_per_file_s: 0.8e-3,
@@ -164,6 +189,23 @@ mod tests {
             assert!(m.d2h_stream_bps < m.d2h_bps);
             assert!(2.0 * m.d2h_stream_bps >= m.d2h_bps);
         }
+    }
+
+    #[test]
+    fn restore_read_model_mirrors_the_write_side() {
+        let tb = Testbed::polaris();
+        for kind in EngineKind::all() {
+            let m = engine_model(kind, &tb);
+            // one upload lane never saturates the aggregate PCIe path
+            assert!(m.h2d_stream_bps <= m.d2h_bps);
+            assert!(m.read_eff > 0.0 && m.read_eff <= 1.0);
+            assert!(m.read_extent_op_s > 0.0);
+        }
+        // coalescing has the most to amortize on the engines with the
+        // slowest per-read overheads
+        let op = |k| engine_model(k, &tb).read_extent_op_s;
+        assert!(op(EngineKind::DataStatesLlm)
+                < op(EngineKind::DeepSpeedDefault));
     }
 
     #[test]

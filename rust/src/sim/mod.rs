@@ -105,6 +105,79 @@ pub fn effective_d2h_bps(em: &EngineModel, cfg: &SimConfig) -> f64 {
     }
 }
 
+/// Calibrated restore estimate for the slowest rank: how long a
+/// restart spends reading the checkpoint back and uploading it to the
+/// device, under an explicit H2D lane count and with/without read
+/// coalescing — the read-side mirror of [`capture_time_s`], behind
+/// `figures restore` and `bench-restore`.
+#[derive(Debug, Clone, Copy)]
+pub struct RestoreEstimate {
+    /// Storage → host read time (bulk + per-read overheads).
+    pub read_s: f64,
+    /// Host → device upload time under the lane count.
+    pub h2d_s: f64,
+    /// End-to-end restore (pipelined: uploads overlap reads after the
+    /// first gather run lands).
+    pub total_s: f64,
+    /// Time until the first tensor is fully materialized on device.
+    pub ttft_s: f64,
+}
+
+/// Model one rank's restore. The serial pattern streams the checkpoint
+/// in 4 MiB chunk reads (`ChunkSource`'s granularity, at least one per
+/// layout extent), each paying the per-read overhead
+/// (`EngineModel::read_extent_op_s`); coalescing collapses them into
+/// ~16 MiB gather runs (at least one per file). Uploads drain through
+/// `lanes` H2D streams (`min(lanes × h2d_stream_bps, d2h_bps)`),
+/// overlapped with the reads once the first run lands.
+pub fn restore_time_s(kind: EngineKind, cfg: &SimConfig, lanes: usize,
+                      coalesced: bool) -> RestoreEstimate {
+    const COALESCE_BYTES: u64 = 16 << 20;
+    /// `restore::source::DEFAULT_CHUNK_BYTES`.
+    const SERIAL_CHUNK_BYTES: u64 = 4 << 20;
+    let em = engine_model(kind, &cfg.testbed);
+    let cs = census(&cfg.model, &cfg.par);
+    let rc = cs
+        .ranks
+        .iter()
+        .max_by_key(|r| r.total_bytes())
+        .expect("ranks");
+    let load = rank_load(rc);
+    let payload =
+        load.dev_bytes + load.host_tensor_bytes + load.obj_bytes;
+    // one extent per tensor plus the object log per file — each is a
+    // separate positioned read (possibly several chunks) serially
+    let n_extents: u64 = rc
+        .files
+        .iter()
+        .map(|f| f.n_tensors as u64 + 1)
+        .sum();
+    let share =
+        cfg.testbed.node_write_bps / cfg.testbed.gpus_per_node as f64;
+    let read_bps = share * em.read_eff;
+    let reads = if coalesced {
+        payload.div_ceil(COALESCE_BYTES).max(load.n_files)
+    } else {
+        payload.div_ceil(SERIAL_CHUNK_BYTES).max(n_extents)
+    };
+    let read_s = payload as f64 / read_bps
+        + reads as f64 * em.read_extent_op_s;
+    let lane_bps = (lanes.max(1) as f64 * em.h2d_stream_bps)
+        .min(em.d2h_bps);
+    let h2d_s = payload as f64 / lane_bps;
+    // pipeline fill: uploads start once the first run/chunk landed
+    let first_bytes = if coalesced {
+        COALESCE_BYTES.min(payload)
+    } else {
+        SERIAL_CHUNK_BYTES.min(payload)
+    };
+    let fill_s =
+        first_bytes as f64 / read_bps + em.read_extent_op_s;
+    let total_s = fill_s + read_s.max(h2d_s);
+    let ttft_s = fill_s + first_bytes as f64 / lane_bps;
+    RestoreEstimate { read_s, h2d_s, total_s, ttft_s }
+}
+
 /// Calibrated capture (device→host staging) seconds for the slowest
 /// rank of `cfg` under `lanes` staging lanes — the quantity the
 /// `figures gather` ablation sweeps (lanes 1/2/4).
@@ -558,6 +631,34 @@ mod tests {
                 < 1.0);
         // default (no lanes set) keeps published figures bit-identical
         assert!((effective_d2h_bps(&em, &cfg) - em.d2h_bps).abs() < 1.0);
+    }
+
+    #[test]
+    fn coalesced_two_lane_restore_strictly_beats_serial() {
+        // the PR-5 acceptance claim in the calibrated plane:
+        // restore(lanes=2, coalesced) < restore(lanes=1, uncoalesced)
+        let cfg = SimConfig::paper("7B", 15, 1);
+        let kind = EngineKind::DataStatesLlm;
+        let fast = restore_time_s(kind, &cfg, 2, true);
+        let slow = restore_time_s(kind, &cfg, 1, false);
+        assert!(fast.total_s < slow.total_s,
+                "coalesced 2-lane {:.3}s !< serial {:.3}s",
+                fast.total_s, slow.total_s);
+        // each knob also helps on its own
+        assert!(restore_time_s(kind, &cfg, 1, true).read_s
+                < slow.read_s);
+        assert!(restore_time_s(kind, &cfg, 2, false).h2d_s
+                < slow.h2d_s);
+        // more lanes never hurt; beyond PCIe saturation they stop
+        // helping
+        let l4 = restore_time_s(kind, &cfg, 4, true);
+        assert!(l4.total_s <= fast.total_s + 1e-9);
+        // first tensor lands strictly before the full restore
+        for est in [fast, slow, l4] {
+            assert!(est.ttft_s < est.total_s,
+                    "ttft {:.3} !< total {:.3}", est.ttft_s,
+                    est.total_s);
+        }
     }
 
     #[test]

@@ -185,6 +185,10 @@ impl Backend for LocalFs {
     fn exists(&self, rel: &str) -> bool {
         self.abs(rel).is_file()
     }
+
+    fn throttle(&self) -> Option<Arc<Throttle>> {
+        self.throttle.clone()
+    }
 }
 
 #[cfg(test)]

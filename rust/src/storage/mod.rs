@@ -31,7 +31,7 @@ pub use local_fs::LocalFs;
 pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
                    VersionDrainJob};
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Which class of storage a tier is.
@@ -94,11 +94,34 @@ impl TierSpec {
 /// `std::fs::File` implements it directly; [`Backend::open`] returns one
 /// per stored file, which is what lets `restore::ChunkSource` parse a
 /// checkpoint out of ANY tier, including the in-memory host cache.
+/// `Sync` because the parallel restore engine shares one reader across
+/// its reader pool — both implementations are positioned (cursor-free),
+/// so concurrent reads never contend on shared state.
 #[allow(clippy::len_without_is_empty)]
-pub trait ReadAt: Send {
+pub trait ReadAt: Send + Sync {
     fn read_exact_at(&self, buf: &mut [u8], offset: u64)
         -> anyhow::Result<()>;
     fn len(&self) -> anyhow::Result<u64>;
+
+    /// Gather read — the mirror of [`BackendFile::write_gather_at`]:
+    /// fill `dsts` back-to-back from the contiguous file region starting
+    /// at `offset`, as one logical positioned read. This is how the
+    /// restore engine's coalesced runs leave storage without a
+    /// per-extent syscall each: many small adjacent extents become ONE
+    /// vectored submission whose destination list scatters straight into
+    /// the target buffers. The default is a correct loop of positioned
+    /// reads; [`std::fs::File`] overrides it with `preadv` (cursor-free,
+    /// partial-read resubmit), and the host-cache reader serves every
+    /// slice out of its backing buffer under a single lock.
+    fn read_gather_at(&self, offset: u64, dsts: &mut [&mut [u8]])
+        -> anyhow::Result<()> {
+        let mut off = offset;
+        for d in dsts.iter_mut() {
+            self.read_exact_at(d, off)?;
+            off += d.len() as u64;
+        }
+        Ok(())
+    }
 }
 
 impl ReadAt for std::fs::File {
@@ -111,6 +134,85 @@ impl ReadAt for std::fs::File {
 
     fn len(&self) -> anyhow::Result<u64> {
         Ok(self.metadata()?.len())
+    }
+
+    /// Vectored positioned read via `preadv`: cursor-free like `pread`
+    /// (safe for concurrent readers on one handle), submitted in
+    /// `IOV_MAX`-bounded batches with partial-read resubmit, mirroring
+    /// the `write_vectored` loop on the write side.
+    fn read_gather_at(&self, offset: u64, dsts: &mut [&mut [u8]])
+        -> anyhow::Result<()> {
+        use std::os::raw::c_int;
+        use std::os::unix::io::AsRawFd;
+        #[repr(C)]
+        struct IoVec {
+            base: *mut u8,
+            len: usize,
+        }
+        extern "C" {
+            fn preadv(fd: c_int, iov: *const IoVec, iovcnt: c_int,
+                      offset: i64) -> isize;
+        }
+        const IOV_MAX: usize = 1024;
+        let total: u64 = dsts.iter().map(|d| d.len() as u64).sum();
+        if total == 0 {
+            return Ok(());
+        }
+        let fd = self.as_raw_fd();
+        let mut di = 0usize; // first unfilled destination
+        let mut dpos = 0usize; // bytes already filled within dsts[di]
+        let mut off = offset;
+        while di < dsts.len() {
+            if dsts[di].len() == dpos {
+                di += 1;
+                dpos = 0;
+                continue;
+            }
+            let mut iov = Vec::with_capacity(
+                IOV_MAX.min(dsts.len() - di));
+            for (k, d) in dsts[di..].iter_mut().enumerate() {
+                if iov.len() == IOV_MAX {
+                    break;
+                }
+                let skip = if k == 0 { dpos } else { 0 };
+                if d.len() > skip {
+                    iov.push(IoVec {
+                        // Safety: pointer valid for `len - skip` bytes;
+                        // the kernel writes at most that many.
+                        base: unsafe { d.as_mut_ptr().add(skip) },
+                        len: d.len() - skip,
+                    });
+                }
+            }
+            // Safety: every iovec points into a live &mut window above.
+            let n = unsafe {
+                preadv(fd, iov.as_ptr(), iov.len() as c_int, off as i64)
+            };
+            if n < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    continue; // retry, like write_all_at's EINTR loop
+                }
+                return Err(anyhow::anyhow!("preadv at {off}: {e}"));
+            }
+            anyhow::ensure!(n > 0,
+                            "preadv: unexpected EOF at offset {off}");
+            let mut n = n as usize;
+            off += n as u64;
+            // advance (di, dpos) past the bytes that landed
+            while n > 0 {
+                let left = dsts[di].len() - dpos;
+                if n >= left {
+                    n -= left;
+                    di += 1;
+                    dpos = 0;
+                } else {
+                    dpos += n;
+                    n = 0;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -180,6 +282,15 @@ pub trait Backend: Send + Sync {
     /// the engine pump defers admitting new versions while the landing
     /// tier reports itself over capacity. `None` = unbounded.
     fn capacity_status(&self) -> Option<(u64, u64)> {
+        None
+    }
+
+    /// The tier's shared bandwidth cap, when one is configured. The
+    /// restore engine's reader pool charges the SAME token bucket the
+    /// write path uses, so checkpoint writes and restore reads contend
+    /// for one modeled device — the I/O-contention scenario, applied
+    /// symmetrically.
+    fn throttle(&self) -> Option<Arc<Throttle>> {
         None
     }
 }
@@ -266,5 +377,61 @@ mod tests {
         let mut buf = [0u8; 5];
         r.read_exact_at(&mut buf, 6).unwrap();
         assert_eq!(&buf, b"world");
+    }
+
+    #[test]
+    fn file_gather_read_scatters_one_region() {
+        let dir = crate::util::TempDir::new("storage-preadv").unwrap();
+        let p = dir.path().join("f");
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8)
+            .collect();
+        std::fs::write(&p, &data).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        // mixed window sizes, including empties, from a mid-file offset
+        let mut a = vec![0u8; 5];
+        let mut b = vec![0u8; 0];
+        let mut c = vec![0u8; 4096];
+        let mut d = vec![0u8; 1];
+        let mut e = vec![0u8; 777];
+        {
+            let mut dsts: Vec<&mut [u8]> = vec![
+                &mut a, &mut b, &mut c, &mut d, &mut e,
+            ];
+            ReadAt::read_gather_at(&f, 123, &mut dsts).unwrap();
+        }
+        let mut flat = Vec::new();
+        for part in [&a[..], &b[..], &c[..], &d[..], &e[..]] {
+            flat.extend_from_slice(part);
+        }
+        assert_eq!(flat, &data[123..123 + flat.len()]);
+        // reading past EOF fails like read_exact_at does
+        let mut tail = vec![0u8; 64];
+        let mut dsts: Vec<&mut [u8]> = vec![&mut tail];
+        assert!(ReadAt::read_gather_at(
+            &f, data.len() as u64 - 10, &mut dsts).is_err());
+        // empty gather is a no-op
+        let mut none: Vec<&mut [u8]> = Vec::new();
+        ReadAt::read_gather_at(&f, 0, &mut none).unwrap();
+    }
+
+    #[test]
+    fn file_gather_read_splits_past_iov_max() {
+        // > 1024 windows forces the IOV_MAX batch split + resubmit path
+        let dir = crate::util::TempDir::new("storage-iovmax").unwrap();
+        let p = dir.path().join("f");
+        let data: Vec<u8> = (0..3000u32).map(|i| (i % 241) as u8)
+            .collect();
+        std::fs::write(&p, &data).unwrap();
+        let f = std::fs::File::open(&p).unwrap();
+        let mut bufs: Vec<Vec<u8>> = (0..1500).map(|_| vec![0u8; 2])
+            .collect();
+        {
+            let mut dsts: Vec<&mut [u8]> =
+                bufs.iter_mut().map(|b| b.as_mut_slice()).collect();
+            ReadAt::read_gather_at(&f, 0, &mut dsts).unwrap();
+        }
+        let flat: Vec<u8> =
+            bufs.iter().flat_map(|b| b.iter().copied()).collect();
+        assert_eq!(flat, data);
     }
 }

@@ -256,6 +256,11 @@ struct PipelineShared {
     /// (admission backpressure uses this to tell "space will free soon"
     /// from "nothing left to evict").
     drains_pending: std::sync::atomic::AtomicUsize,
+    /// Restore-engine knobs used by this pipeline's read paths
+    /// (`read_version` / `restore_newest`). Defaults apply until the
+    /// owning engine installs its `EngineConfig`-derived settings
+    /// (`restore_lanes`, `reader_threads`, coalesce/pool sizing).
+    read_cfg: Mutex<crate::restore::ReadEngineConfig>,
 }
 
 impl PipelineShared {
@@ -380,6 +385,7 @@ impl TierPipeline {
             evict_fast,
             chunk_bytes: chunk_bytes.max(1),
             drains_pending: std::sync::atomic::AtomicUsize::new(0),
+            read_cfg: Mutex::new(Default::default()),
         });
         let (drain_tx, worker) = if shared.tiers.len() > 1 {
             let (tx, rx) =
@@ -661,9 +667,35 @@ impl TierPipeline {
         Ok(())
     }
 
+    /// Install the restore-engine knobs this pipeline's read paths use
+    /// (called by the checkpoint engines with their
+    /// `EngineConfig`-derived settings, so `restore_lanes` /
+    /// `reader_threads` take effect on every default restore path).
+    pub fn set_restore_config(&self,
+                              cfg: crate::restore::ReadEngineConfig) {
+        *self.shared.read_cfg.lock().unwrap() = cfg;
+    }
+
+    /// The restore-engine knobs currently installed on this pipeline.
+    pub fn restore_config(&self) -> crate::restore::ReadEngineConfig {
+        self.shared.read_cfg.lock().unwrap().clone()
+    }
+
     /// Read every file of a checkpoint version, each from its nearest
-    /// readable tier.
+    /// readable tier, through the parallel restore engine (coalesced
+    /// gather reads, tier-aware reader pool, multi-lane H2D upload —
+    /// see `restore::ReadEngine`). Byte-identical to
+    /// [`TierPipeline::read_version_serial`], property-tested.
     pub fn read_version(&self, version: u64)
+        -> anyhow::Result<RestoredVersion> {
+        crate::restore::ReadEngine::new(self.restore_config())
+            .read_version(self, version)
+    }
+
+    /// The serial reference restore path: one positioned read per
+    /// extent, one file at a time. Kept as the byte oracle the parallel
+    /// engine is tested against (and as the zero-thread fallback).
+    pub fn read_version_serial(&self, version: u64)
         -> anyhow::Result<RestoredVersion> {
         let dir = format!("v{version:06}");
         let files = self.version_files(version, &dir)?;
@@ -697,15 +729,12 @@ impl TierPipeline {
     }
 
     /// Restore the newest version with a complete readable copy, walking
-    /// versions newest-first and tiers nearest-first.
+    /// versions newest-first and tiers nearest-first. One parallel
+    /// restore engine (and its staging pool) is reused across the walk.
     pub fn restore_newest(&self)
         -> anyhow::Result<Option<(u64, RestoredVersion)>> {
-        for v in self.versions()?.into_iter().rev() {
-            if let Ok(files) = self.read_version(v) {
-                return Ok(Some((v, files)));
-            }
-        }
-        Ok(None)
+        crate::restore::ReadEngine::new(self.restore_config())
+            .restore_newest(self)
     }
 }
 

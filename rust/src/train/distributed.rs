@@ -22,7 +22,10 @@
 //! Restarting does not require the original topology: `resume_resharded`
 //! resolves `latest_committed` and materializes ANY target topology's
 //! rank states from it through the logical index
-//! (`restore::reshard::restore_for_topology`).
+//! (`restore::reshard::restore_for_topology`). The payload reads ride
+//! the parallel gather-read engine (`restore::ReadEngine`): coalesced
+//! vectored reads fanned across a tier-aware reader pool, with the
+//! serial replica-failover executor as the fallback.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
