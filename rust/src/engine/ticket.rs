@@ -173,6 +173,19 @@ impl CkptSession {
         st.metrics.memcpy_bytes_avoided += bytes;
     }
 
+    /// Account one drained file's content-addressed upload: how many
+    /// chunks it cut into, how many actually moved, and the bytes
+    /// dedupe skipped. Called by the pipeline's drain worker before it
+    /// resolves the remote tier's durability, so `wait_persisted`
+    /// metrics always include the version's full dedupe attribution.
+    pub fn add_content(&self, chunks_total: u64, chunks_uploaded: u64,
+                       dedup_bytes_skipped: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.metrics.chunks_total += chunks_total;
+        st.metrics.chunks_uploaded += chunks_uploaded;
+        st.metrics.dedup_bytes_skipped += dedup_bytes_skipped;
+    }
+
     /// Mark this version failed; waiters observe the error.
     pub fn fail(&self, err: String) {
         let mut st = self.state.lock().unwrap();

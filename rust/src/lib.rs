@@ -27,7 +27,11 @@
 //!   [`storage::TierPipeline`] that lands checkpoints on the fastest
 //!   tier, drains them tier-to-tier in the background (per-tier
 //!   durability futures on the ticket), and resolves restores from the
-//!   nearest complete copy via a cross-tier manifest.
+//!   nearest complete copy via a cross-tier manifest. The terminal hop
+//!   can be a content-addressed remote tier ([`storage::content`]):
+//!   files dedupe into checksum-keyed chunks so each checkpoint
+//!   uploads only what training dirtied, behind a simulated-WAN
+//!   latency/bandwidth shim.
 //! - [`baselines`] — faithful re-implementations of the compared engines:
 //!   DeepSpeed-default (`torch.save`-style), TorchSnapshot-like, and
 //!   DataStates-LLM-Old (HPDC'24).

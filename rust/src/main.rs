@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            restore|files>
+//!            restore|incremental|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -12,7 +12,16 @@
 //!   bench-io [--dir DIR] [--tiers T1,T2] [--throttle-mbps M]
 //!            [--json PATH]         (quick real-plane flush sweep;
 //!                                   records coalesced/gather write
-//!                                   savings + per-lane D2H spans)
+//!                                   savings + per-lane D2H spans +
+//!                                   remote-tier dedupe counters)
+//!   bench-io --incremental [--dirty F] [--content-chunk-kb KB]
+//!            [--remote-latency-ms L] [--remote-mbps M] [--json PATH]
+//!                                  (two-version incremental run over a
+//!                                   localfs+remote stack: v2 re-uploads
+//!                                   only content chunks the dirty
+//!                                   fraction touched, then both
+//!                                   versions are restored from the
+//!                                   remote tier ALONE and verified)
 //!   bench-restore [--dir DIR] [--json PATH]
 //!                                  (parallel-restore sweep: H2D lanes
 //!                                   1/2/4 x read coalescing on/off;
@@ -31,7 +40,14 @@
 //! Storage-tier knobs (tiered persistence pipeline, see DESIGN.md
 //! "Storage tiers"):
 //!   --tiers hostcache,localfs   tier stack, fastest first; the last
-//!                               tier is terminal (default: localfs)
+//!                               tier is terminal (default: localfs).
+//!                               `remote[:lat_ms[:mbps]]` adds the
+//!                               content-addressed object tier with a
+//!                               simulated per-request latency and
+//!                               upload-bandwidth cap, e.g.
+//!                               `--tiers localfs,remote:20:100`
+//!   --content-chunk-kb KB       content-chunk size of every remote
+//!                               tier in the stack (default 256)
 //!   --throttle-mbps M           cap the TERMINAL tier's write bandwidth
 //!                               at M MB/s (I/O-contention studies)
 //!   --durability hostcache      train: drain the run tail only to this
@@ -117,9 +133,53 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
-/// Parse `--tiers hostcache,localfs` (+ optional `--throttle-mbps M`
-/// applied to the terminal tier) into a tier stack. `--throttle-mbps`
-/// alone throttles the default single-LocalFs stack.
+/// Parse one `--tiers` element: `hostcache`, `localfs`, or
+/// `remote[:lat_ms[:mbps]]` (simulated per-request latency and upload
+/// bandwidth cap of the content-addressed object tier).
+fn parse_tier(part: &str) -> anyhow::Result<TierSpec> {
+    let mut fields = part.split(':');
+    let name = fields.next().unwrap_or("");
+    let kind = TierKind::parse(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown tier {part:?} \
+             (hostcache|localfs|remote[:lat_ms[:mbps]])")
+    })?;
+    let mut tier = match kind {
+        TierKind::HostCache => TierSpec::host_cache(),
+        TierKind::LocalFs => TierSpec::local_fs(),
+        TierKind::Remote => TierSpec::remote(0.0),
+    };
+    if kind == TierKind::Remote {
+        if let Some(ms) = fields.next() {
+            let ms: f64 = ms.parse().map_err(|_| {
+                anyhow::anyhow!("bad latency in tier {part:?}")
+            })?;
+            anyhow::ensure!(ms >= 0.0 && ms.is_finite(),
+                            "latency in tier {part:?} must be >= 0");
+            tier.latency_s = ms / 1e3;
+        }
+        if let Some(mbps) = fields.next() {
+            let mbps: f64 = mbps.parse().map_err(|_| {
+                anyhow::anyhow!("bad bandwidth in tier {part:?}")
+            })?;
+            anyhow::ensure!(mbps > 0.0 && mbps.is_finite(),
+                            "bandwidth in tier {part:?} must be > 0");
+            tier.throttle_bps = Some(mbps * 1e6);
+        }
+    }
+    anyhow::ensure!(
+        fields.next().is_none(),
+        "bad tier {part:?}: only remote takes options, as \
+         remote[:lat_ms[:mbps]]"
+    );
+    Ok(tier)
+}
+
+/// Parse `--tiers hostcache,localfs,remote:20:100` (+ optional
+/// `--throttle-mbps M` applied to the terminal tier and
+/// `--content-chunk-kb KB` applied to every remote tier) into a tier
+/// stack. `--throttle-mbps` alone throttles the default single-LocalFs
+/// stack.
 fn tier_specs(args: &Args) -> anyhow::Result<Option<Vec<TierSpec>>> {
     let throttle_bps = match args.get("throttle-mbps") {
         Some(mbps) => {
@@ -133,17 +193,10 @@ fn tier_specs(args: &Args) -> anyhow::Result<Option<Vec<TierSpec>>> {
         None => None,
     };
     let mut tiers = match args.get("tiers") {
-        Some(spec) => {
-            let mut tiers = Vec::new();
-            for part in spec.split(',') {
-                let kind = TierKind::parse(part).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown tier {part:?} (hostcache|localfs)")
-                })?;
-                tiers.push(TierSpec { kind, throttle_bps: None });
-            }
-            tiers
-        }
+        Some(spec) => spec
+            .split(',')
+            .map(parse_tier)
+            .collect::<anyhow::Result<Vec<TierSpec>>>()?,
         // throttle without an explicit stack: default single LocalFs
         None if throttle_bps.is_some() => vec![TierSpec::local_fs()],
         None => return Ok(None),
@@ -158,6 +211,17 @@ fn tier_specs(args: &Args) -> anyhow::Result<Option<Vec<TierSpec>>> {
     if let Some(bps) = throttle_bps {
         if let Some(last) = tiers.last_mut() {
             last.throttle_bps = Some(bps);
+        }
+    }
+    if let Some(kb) = args.get("content-chunk-kb") {
+        let kb: usize = kb.parse().map_err(|_| {
+            anyhow::anyhow!("bad --content-chunk-kb {kb}")
+        })?;
+        anyhow::ensure!(kb > 0, "--content-chunk-kb must be > 0");
+        for t in tiers.iter_mut() {
+            if t.kind == TierKind::Remote {
+                t.content_chunk_bytes = Some(kb << 10);
+            }
         }
     }
     Ok(Some(tiers))
@@ -207,6 +271,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "reshard" => harness::reshard()?,
         "gather" => harness::gather()?,
         "restore" => harness::restore()?,
+        "incremental" => harness::incremental()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -361,6 +426,9 @@ fn partition(args: &Args) -> anyhow::Result<()> {
 fn bench_io(args: &Args) -> anyhow::Result<()> {
     use datastates::state::census as mk_census;
     use datastates::state::partition::materialize;
+    if args.get("incremental").is_some() {
+        return bench_io_incremental(args);
+    }
     // sweep shape, recorded verbatim in the JSON header so the
     // committed BENCH_*.json trajectory can never drift from the
     // config the engines actually ran with
@@ -427,6 +495,8 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
              \"coalesced_writes\":{},\"coalesced_bytes\":{},\
              \"gather_writes\":{},\"gather_extents\":{},\
              \"memcpy_bytes_avoided\":{},\
+             \"chunks_total\":{},\"chunks_uploaded\":{},\
+             \"dedup_bytes_skipped\":{},\
              \"d2h_lanes\":[{}],\
              \"tiers\":[{}],\"transfer\":{}}}",
             kind.label(),
@@ -438,6 +508,9 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             m.gather_writes,
             m.gather_extents,
             m.memcpy_bytes_avoided,
+            m.chunks_total,
+            m.chunks_uploaded,
+            m.dedup_bytes_skipped,
             lanes_json.join(","),
             tiers_json.join(","),
             tier_throughput_json(&tl),
@@ -453,6 +526,144 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             BENCH_COALESCE_BYTES,
             EngineConfig::default().stager_lanes,
             rows.join(",")
+        );
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Two-version incremental checkpoint run over the content-addressed
+/// remote tier: write v1 in full, flip one byte in a `--dirty` fraction
+/// of every tensor's content chunks, write v2 — the drain worker should
+/// re-upload only the chunks the mutation touched — then restore BOTH
+/// versions from the remote tier ALONE (chunk checksums verified on
+/// every read) and compare them byte-for-byte against the source
+/// states, through the parallel restore engine and the serial oracle.
+fn bench_io_incremental(args: &Args) -> anyhow::Result<()> {
+    use datastates::engine::{CheckpointEngine, DataStatesEngine};
+    use datastates::state::census as mk_census;
+    use datastates::state::partition::{materialize, mutate_fraction};
+    use datastates::storage::TierPipeline;
+    const BENCH_CHUNK_BYTES: usize = 16 << 10;
+    const BENCH_COALESCE_BYTES: usize = 1 << 20;
+    let dir = std::path::PathBuf::from(
+        args.get("dir").unwrap_or("/tmp/datastates-bench-incremental"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dirty: f64 = args.num("dirty", 0.10);
+    let chunk_kb: usize = args.num("content-chunk-kb", 16);
+    let chunk_bytes = chunk_kb.max(1) << 10;
+    let latency_ms: f64 = args.num("remote-latency-ms", 0.0);
+    let tiers = match tier_specs(args)? {
+        Some(t) => {
+            anyhow::ensure!(
+                t.iter().any(|s| s.kind == TierKind::Remote),
+                "bench-io --incremental needs a remote tier in --tiers"
+            );
+            t
+        }
+        None => {
+            let mut remote = TierSpec::remote(latency_ms / 1e3)
+                .content_chunks(chunk_bytes);
+            if let Some(mbps) = args.get("remote-mbps") {
+                let mbps: f64 = mbps.parse().map_err(|_| {
+                    anyhow::anyhow!("bad --remote-mbps {mbps}")
+                })?;
+                anyhow::ensure!(mbps > 0.0 && mbps.is_finite(),
+                                "--remote-mbps must be > 0");
+                remote.throttle_bps = Some(mbps * 1e6);
+            }
+            vec![TierSpec::local_fs(), remote]
+        }
+    };
+    let cfg = LlmConfig::by_name("7B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = mk_census(&cfg, &par);
+    let v1 = materialize(&cs.ranks[0], 2e-4, 1.0, 7);
+    let v2 = mutate_fraction(&v1, dirty, chunk_bytes, 99);
+
+    let mut ecfg = EngineConfig::with_dir(&dir);
+    ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
+    ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
+    ecfg.tiers = tiers.clone();
+    let mut eng = DataStatesEngine::new(ecfg)?;
+    let m1 = {
+        let t = eng.begin(1, &v1)?;
+        t.wait_persisted()?
+    };
+    let m2 = {
+        let t = eng.begin(2, &v2)?;
+        t.wait_persisted()?
+    };
+    drop(eng);
+
+    println!(
+        "{:<8}{:>14}{:>16}{:>20}{:>14}",
+        "version", "chunks total", "chunks uploaded",
+        "dedup bytes skipped", "upload frac"
+    );
+    let frac = |up: u64, total: u64| up as f64 / total.max(1) as f64;
+    for (v, m) in [(1u64, &m1), (2, &m2)] {
+        println!(
+            "v{v:<7}{:>14}{:>16}{:>20}{:>14.3}",
+            m.chunks_total,
+            m.chunks_uploaded,
+            m.dedup_bytes_skipped,
+            frac(m.chunks_uploaded, m.chunks_total),
+        );
+    }
+
+    // disaster-recovery check: reassemble both versions from the remote
+    // tier alone
+    let remote_only: Vec<TierSpec> = tiers
+        .iter()
+        .filter(|t| t.kind == TierKind::Remote)
+        .cloned()
+        .collect();
+    let pipeline = TierPipeline::from_specs(
+        &remote_only,
+        &dir,
+        false,
+        BENCH_CHUNK_BYTES,
+        None,
+        std::sync::Arc::new(Timeline::new()),
+    )?;
+    for (v, state) in [(1u64, &v1), (2, &v2)] {
+        let restored = pipeline.read_version(v)?;
+        datastates::restore::verify_files_against(&restored, state)?;
+        let serial = pipeline.read_version_serial(v)?;
+        datastates::restore::verify_files_against(&serial, state)?;
+    }
+    println!(
+        "remote-only restore: v1 + v2 byte-identical (parallel engine \
+         and serial oracle)"
+    );
+
+    if let Some(path) = args.get("json") {
+        let versions: Vec<String> = [(1u64, &m1), (2, &m2)]
+            .iter()
+            .map(|(v, m)| {
+                format!(
+                    "{{\"version\":{v},\"bytes\":{},\
+                     \"chunks_total\":{},\"chunks_uploaded\":{},\
+                     \"dedup_bytes_skipped\":{},\
+                     \"upload_frac\":{:.6}}}",
+                    m.bytes,
+                    m.chunks_total,
+                    m.chunks_uploaded,
+                    m.dedup_bytes_skipped,
+                    frac(m.chunks_uploaded, m.chunks_total),
+                )
+            })
+            .collect();
+        let doc = format!(
+            "{{\"bench\":\"bench-io-incremental\",\"model\":\"7B\",\
+             \"dirty_frac\":{dirty},\
+             \"content_chunk_bytes\":{chunk_bytes},\
+             \"chunk_bytes\":{BENCH_CHUNK_BYTES},\
+             \"coalesce_bytes\":{BENCH_COALESCE_BYTES},\
+             \"versions\":[{}]}}\n",
+            versions.join(",")
         );
         std::fs::write(path, doc)?;
         println!("wrote {path}");

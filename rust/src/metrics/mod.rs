@@ -242,6 +242,15 @@ pub struct CkptMetrics {
     /// former merge-buffer volume (0 when `gather_writes` is disabled
     /// or nothing merged).
     pub memcpy_bytes_avoided: u64,
+    /// Content chunks the drain cut this version's files into on
+    /// content-addressed tiers (0 when no remote tier is configured).
+    pub chunks_total: u64,
+    /// Chunks actually uploaded — the rest were already present in the
+    /// chunk store (the incremental checkpoint's dirty set).
+    pub chunks_uploaded: u64,
+    /// Bytes deduplication kept off the remote tier (clean chunks whose
+    /// content was already stored).
+    pub dedup_bytes_skipped: u64,
 }
 
 impl CkptMetrics {

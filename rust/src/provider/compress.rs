@@ -8,6 +8,10 @@
 //! classes (fp32 noise compresses ~0%, control state and zero-heavy
 //! buffers compress well), quantifying §VII's claim that data reduction
 //! must be selective.
+//!
+//! Also the at-rest codec of the content-addressed chunk store
+//! (`storage::content::ChunkStore`): each blob is stored LZ-compressed
+//! when that is smaller than raw, behind a one-byte codec tag.
 
 use crate::util::codec::{Decoder, Encoder};
 

@@ -4,9 +4,14 @@
 //! only slightly and many control structures not at all. This module
 //! implements block-level delta encoding as a provider-compatible
 //! transform: a tensor payload is split into fixed blocks, each block is
-//! fingerprinted (FNV-1a), and only blocks whose fingerprint changed
+//! fingerprinted (XXH64, shared with the content-addressed chunk store —
+//! `storage::content`), and only blocks whose fingerprint changed
 //! since the reference version are emitted, preceded by a bitmap. The
 //! decoder reconstitutes the full payload from (reference, delta).
+//!
+//! The same [`BlockMap`] doubles as the chunker of the remote tier: the
+//! per-block fingerprints ARE the chunk-store content addresses, so the
+//! drain worker chunks and dedupes in a single pass over the shard file.
 //!
 //! The transform is honest about its trade-off: fp32 optimizer moments
 //! change almost everywhere every step, so deltas help mainly for
@@ -17,14 +22,12 @@ use crate::util::codec::{Decoder, Encoder};
 
 pub const DELTA_MAGIC: u32 = 0x444C_5431; // "DLT1"
 
-/// Fingerprint one block (FNV-1a 64).
+/// Fingerprint one block. XXH64 with seed 0 — the exact hash the
+/// content-addressed chunk store keys blobs by, so a `BlockMap` built on
+/// the drain worker can be reused verbatim as the chunk-id list of the
+/// remote tier (`storage::content::ChunkId { hash: fp, .. }`).
 fn fp(block: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in block {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::storage::content::xxh64(block, 0)
 }
 
 /// Per-version block fingerprints of one payload.

@@ -263,7 +263,10 @@ impl<'a> Source<'a> {
                 return Ok(r.clone());
             }
         }
-        let mut last: Option<anyhow::Error> = None;
+        // accumulate EVERY tier's failure — the final error must name
+        // each failing tier (and, on remote tiers, the torn chunk id),
+        // not just whichever tier failed last
+        let mut errs: Vec<String> = Vec::new();
         for (i, tier) in
             self.pipeline.tiers().iter().enumerate().skip(from)
         {
@@ -282,18 +285,18 @@ impl<'a> Source<'a> {
                     return Ok(res);
                 }
                 Err(e) => {
-                    last = Some(anyhow::anyhow!(
-                        "{} on {} tier: {e:#}",
-                        self.rel,
-                        tier.kind().label()
-                    ));
+                    errs.push(format!("on {} tier: {e:#}",
+                                      tier.kind().label()));
                 }
             }
         }
-        Err(last.unwrap_or_else(|| {
+        Err(if errs.is_empty() {
             anyhow::anyhow!("{}: no readable copy on any remaining tier",
                             self.rel)
-        }))
+        } else {
+            anyhow::anyhow!("{}: no tier holds a readable copy: {}",
+                            self.rel, errs.join("; "))
+        })
     }
 
     /// Drop a cached resolution that just failed, so the next attempt

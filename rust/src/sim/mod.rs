@@ -195,6 +195,61 @@ pub fn capture_time_s(kind: EngineKind, cfg: &SimConfig, lanes: usize)
     load.dev_bytes as f64 / effective_d2h_bps(&em, &cfg)
 }
 
+/// Calibrated incremental-upload estimate for the content-addressed
+/// remote tier (`storage::content`): what the v2 upload of a two-version
+/// incremental run costs over a WAN link, versus re-uploading the full
+/// checkpoint — the model behind `figures incremental`.
+#[derive(Debug, Clone, Copy)]
+pub struct IncrementalEstimate {
+    /// Content chunks in the full checkpoint.
+    pub chunks_total: u64,
+    /// Chunks the dirty fraction forces back over the wire.
+    pub chunks_uploaded: u64,
+    /// Bytes actually uploaded (dedup'd chunks cost nothing).
+    pub upload_bytes: u64,
+    /// Incremental upload seconds (latency + throttled dirty bytes).
+    pub upload_s: f64,
+    /// Full re-upload seconds for comparison.
+    pub full_s: f64,
+}
+
+impl IncrementalEstimate {
+    /// Full-upload over incremental-upload time.
+    pub fn speedup(&self) -> f64 {
+        if self.upload_s > 0.0 {
+            self.full_s / self.upload_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Model the v2 upload of an incremental checkpoint: `dirty_frac` of the
+/// `chunk_bytes`-aligned content chunks changed since v1 and must be
+/// re-uploaded through a `remote_bps` token bucket after one
+/// `latency_s` request round-trip (the WAN shim charges latency once
+/// per file commit and bandwidth on uploaded bytes only — dedup'd
+/// chunks are metadata-only).
+pub fn incremental_upload_time_s(total_bytes: u64, dirty_frac: f64,
+                                 chunk_bytes: usize, remote_bps: f64,
+                                 latency_s: f64) -> IncrementalEstimate {
+    let chunk_bytes = chunk_bytes.max(64) as u64;
+    let dirty = dirty_frac.clamp(0.0, 1.0);
+    let chunks_total = total_bytes.div_ceil(chunk_bytes);
+    let chunks_uploaded =
+        ((chunks_total as f64 * dirty).ceil() as u64).min(chunks_total);
+    let upload_bytes = (chunks_uploaded * chunk_bytes).min(total_bytes);
+    let upload_s = latency_s + upload_bytes as f64 / remote_bps;
+    let full_s = latency_s + total_bytes as f64 / remote_bps;
+    IncrementalEstimate {
+        chunks_total,
+        chunks_uploaded,
+        upload_bytes,
+        upload_s,
+        full_s,
+    }
+}
+
 /// Per-iteration simulated outcome (slowest rank).
 #[derive(Debug, Clone, Default)]
 pub struct IterSample {
@@ -583,6 +638,35 @@ mod tests {
             assert!(large > small,
                     "{}: 3B={small:.2e} 70B={large:.2e}", kind.label());
         }
+    }
+
+    #[test]
+    fn incremental_upload_model_is_monotone_and_bounded() {
+        let total = 1u64 << 30;
+        let est = |dirty: f64, bps: f64| {
+            incremental_upload_time_s(total, dirty, 256 << 10, bps, 0.05)
+        };
+        // more dirt -> more chunks, more bytes, more time
+        let mut prev = est(0.0, 100e6);
+        for dirty in [0.02, 0.1, 0.5, 1.0] {
+            let e = est(dirty, 100e6);
+            assert!(e.chunks_uploaded >= prev.chunks_uploaded);
+            assert!(e.upload_bytes >= prev.upload_bytes);
+            assert!(e.upload_s >= prev.upload_s, "{dirty}");
+            assert!(e.upload_s <= e.full_s);
+            assert!(e.chunks_uploaded <= e.chunks_total);
+            prev = e;
+        }
+        // full dirt degenerates to the full upload
+        let full = est(1.0, 100e6);
+        assert_eq!(full.chunks_uploaded, full.chunks_total);
+        assert!((full.upload_s - full.full_s).abs() < 1e-2);
+        assert!((full.speedup() - 1.0).abs() < 0.05);
+        // 10% dirty over WAN: order-of-magnitude faster than full
+        let incr = est(0.1, 100e6);
+        assert!(incr.speedup() > 4.0, "speedup {}", incr.speedup());
+        // faster link -> less time
+        assert!(est(0.1, 1e9).upload_s < est(0.1, 100e6).upload_s);
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod tensor;
 pub use index::{flatten_states, LogicalIndex, LogicalIndexBuilder,
                 LogicalTensor, PhysicalExtent, SliceRead};
 pub use object::PyObj;
-pub use partition::{census, materialize, table1_rows, Census, FileDesc,
-                    FileLogical, RankCensus};
+pub use partition::{census, materialize, mutate_fraction, table1_rows,
+                    Census, FileDesc, FileLogical, RankCensus};
 pub use shard::{FileKind, RankState, ShardFile, StateItem};
 pub use tensor::{DType, DeviceTensor, GlobalTensorId, LogicalRef,
                  SimDeviceTensor, TensorData, TensorShard};

@@ -20,8 +20,8 @@
 use crate::config::{LlmConfig, Parallelism};
 use crate::state::object::PyObj;
 use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
-use crate::state::tensor::{DType, LogicalRef, SimDeviceTensor,
-                           TensorShard};
+use crate::state::tensor::{DType, DeviceTensor, LogicalRef,
+                           SimDeviceTensor, TensorData, TensorShard};
 
 /// How a file's tensors map onto the job's *logical* tensors — the
 /// topology-independent identity that makes restore-time resharding
@@ -370,6 +370,69 @@ pub fn materialize(rank: &RankCensus, scale: f64, obj_scale: f64,
     RankState { rank: rank.rank, files }
 }
 
+/// Return a copy of `state` with roughly `dirty_frac` of every tensor's
+/// `block_bytes`-sized blocks perturbed by a single byte flip — the
+/// synthetic "one training step elapsed" state used by the incremental
+/// checkpoint benchmarks. Objects (and everything else) are left
+/// untouched, device residency is preserved (device tensors are staged,
+/// mutated, and re-wrapped in a [`SimDeviceTensor`]), and the dirty block
+/// set is a deterministic function of `seed`.
+pub fn mutate_fraction(state: &RankState, dirty_frac: f64,
+                       block_bytes: usize, seed: u64) -> RankState {
+    let block_bytes = block_bytes.max(64);
+    // splitmix64-style per-block coin flip
+    let coin = |x: u64| {
+        let mut x = x.wrapping_mul(0x9E3779B97F4A7C15);
+        x ^= x >> 29;
+        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+        x ^= x >> 32;
+        (x >> 11) as f64 / (1u64 << 53) as f64
+    };
+    let mut files = Vec::with_capacity(state.files.len());
+    for (fi, f) in state.files.iter().enumerate() {
+        let mut items = Vec::with_capacity(f.items.len());
+        for (ii, item) in f.items.iter().enumerate() {
+            let StateItem::Tensor(t) = item else {
+                items.push(item.clone());
+                continue;
+            };
+            let mut bytes = match &t.data {
+                TensorData::Host(b) => b.as_ref().clone(),
+                TensorData::Device(d) => {
+                    let mut v = vec![0u8; d.size_bytes()];
+                    d.stage_into(&mut v)
+                        .expect("stage simulated device tensor");
+                    v
+                }
+            };
+            let n_blocks = bytes.len().div_ceil(block_bytes);
+            for b in 0..n_blocks {
+                let key = seed
+                    ^ ((fi as u64) << 42)
+                    ^ ((ii as u64) << 21)
+                    ^ b as u64;
+                if coin(key) < dirty_frac {
+                    bytes[b * block_bytes] ^= 0x5A;
+                }
+            }
+            let data = if t.data.is_device() {
+                TensorData::Device(SimDeviceTensor::new(bytes))
+            } else {
+                TensorData::Host(std::sync::Arc::new(bytes))
+            };
+            items.push(StateItem::Tensor(TensorShard {
+                name: t.name.clone(),
+                dtype: t.dtype,
+                shape: t.shape.clone(),
+                data,
+                logical: t.logical.clone(),
+            }));
+        }
+        files.push(ShardFile { name: f.name.clone(), kind: f.kind, items });
+    }
+    RankState { rank: state.rank, files }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -515,6 +578,60 @@ mod tests {
         for item in &meta.items {
             if let StateItem::Tensor(t) = item {
                 assert!(t.logical.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn mutate_fraction_dirties_roughly_the_requested_share() {
+        use crate::state::tensor::TensorData;
+        let c = cfg("3B");
+        let par = Parallelism::paper_default(&c);
+        let cs = census(&c, &par);
+        let v1 = materialize(&cs.ranks[0], 1e-4, 0.02, 7);
+        let v2 = mutate_fraction(&v1, 0.10, 4 << 10, 99);
+        let extract = |t: &TensorShard| -> Vec<u8> {
+            match &t.data {
+                TensorData::Host(b) => b.as_ref().clone(),
+                TensorData::Device(d) => {
+                    let mut v = vec![0u8; d.size_bytes()];
+                    d.stage_into(&mut v).unwrap();
+                    v
+                }
+            }
+        };
+        let (mut total, mut dirty) = (0usize, 0usize);
+        for (f1, f2) in v1.files.iter().zip(&v2.files) {
+            for (i1, i2) in f1.items.iter().zip(&f2.items) {
+                let (StateItem::Tensor(a), StateItem::Tensor(b)) = (i1, i2)
+                else {
+                    continue;
+                };
+                assert_eq!(a.data.is_device(), b.data.is_device(), "{}",
+                           a.name);
+                let (ba, bb) = (extract(a), extract(b));
+                assert_eq!(ba.len(), bb.len());
+                for (ca, cb) in
+                    ba.chunks(4 << 10).zip(bb.chunks(4 << 10))
+                {
+                    total += 1;
+                    if ca != cb {
+                        dirty += 1;
+                    }
+                }
+            }
+        }
+        let frac = dirty as f64 / total as f64;
+        assert!((0.03..0.25).contains(&frac), "dirty fraction {frac}");
+        // a zero dirty fraction is the identity on tensor payloads
+        let same = mutate_fraction(&v1, 0.0, 4 << 10, 99);
+        for (f1, f2) in v1.files.iter().zip(&same.files) {
+            for (i1, i2) in f1.items.iter().zip(&f2.items) {
+                if let (StateItem::Tensor(a), StateItem::Tensor(b)) =
+                    (i1, i2)
+                {
+                    assert_eq!(extract(a), extract(b), "{}", a.name);
+                }
             }
         }
     }

@@ -1,0 +1,179 @@
+//! The content manifest: tier-relative file name → ordered chunk list.
+//!
+//! One small text file (`CONTENT.manifest` at the remote root) maps
+//! every file the remote tier holds to its length and the [`ChunkId`]s
+//! that reassemble it, in order. It is rewritten whole on every update
+//! and published through a temp file + atomic rename — the same
+//! discipline `TierPipeline::persist_manifest` uses for the cross-tier
+//! MANIFEST — so a crash mid-rewrite can never leave a torn manifest.
+//! Parsing is garbage-tolerant line by line: a damaged line drops that
+//! entry (restore then falls through to a deeper tier), never the whole
+//! store.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::ChunkId;
+
+/// One remote file: its exact length and the chunks covering it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FileEntry {
+    pub len: u64,
+    pub chunks: Vec<ChunkId>,
+}
+
+pub struct ContentManifest {
+    path: PathBuf,
+    entries: Mutex<BTreeMap<String, FileEntry>>,
+}
+
+impl ContentManifest {
+    /// Load the manifest at `path` (empty when absent or unreadable).
+    pub fn load(path: impl Into<PathBuf>) -> ContentManifest {
+        let path = path.into();
+        let mut entries = BTreeMap::new();
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            for line in text.lines() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let mut parts = line.split('\t');
+                let (Some(rel), Some(len), Some(ids)) =
+                    (parts.next(), parts.next(), parts.next())
+                else {
+                    continue;
+                };
+                let Ok(len) = len.parse::<u64>() else { continue };
+                let chunks: Option<Vec<ChunkId>> = if ids.is_empty() {
+                    Some(Vec::new())
+                } else {
+                    ids.split(',')
+                        .map(ChunkId::parse_object_name)
+                        .collect()
+                };
+                let Some(chunks) = chunks else { continue };
+                // a damaged line must not vouch for bytes it cannot
+                // cover: the chunk lengths have to add up to `len`
+                let covered: u64 =
+                    chunks.iter().map(|c| c.len as u64).sum();
+                if covered != len {
+                    continue;
+                }
+                entries.insert(rel.to_string(),
+                               FileEntry { len, chunks });
+            }
+        }
+        ContentManifest { path, entries: Mutex::new(entries) }
+    }
+
+    /// Rewrite the manifest on disk through `<path>.tmp` + rename.
+    pub fn persist(&self) -> anyhow::Result<()> {
+        let mut out = String::from("# datastates content manifest v1\n");
+        for (rel, e) in self.entries.lock().unwrap().iter() {
+            let ids: Vec<String> =
+                e.chunks.iter().map(|c| c.object_name()).collect();
+            out.push_str(&format!("{rel}\t{}\t{}\n", e.len,
+                                  ids.join(",")));
+        }
+        let tmp = self.path.with_extension("manifest.tmp");
+        std::fs::write(&tmp, out.as_bytes())?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(())
+    }
+
+    pub fn get(&self, rel: &str) -> Option<FileEntry> {
+        self.entries.lock().unwrap().get(rel).cloned()
+    }
+
+    pub fn contains(&self, rel: &str) -> bool {
+        self.entries.lock().unwrap().contains_key(rel)
+    }
+
+    /// Install (replace) an entry; returns the displaced one so the
+    /// caller can release its chunk references.
+    pub fn insert(&self, rel: &str, entry: FileEntry)
+        -> Option<FileEntry> {
+        self.entries.lock().unwrap().insert(rel.to_string(), entry)
+    }
+
+    /// Remove an entry; returns it so the caller can release its chunk
+    /// references.
+    pub fn remove(&self, rel: &str) -> Option<FileEntry> {
+        self.entries.lock().unwrap().remove(rel)
+    }
+
+    /// All file names, sorted (BTreeMap order).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Snapshot of every entry (refcount rebuild at open).
+    pub fn entries(&self) -> Vec<(String, FileEntry)> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn entry(payloads: &[&[u8]]) -> FileEntry {
+        let chunks: Vec<ChunkId> =
+            payloads.iter().map(|p| ChunkId::of(p)).collect();
+        FileEntry {
+            len: payloads.iter().map(|p| p.len() as u64).sum(),
+            chunks,
+        }
+    }
+
+    #[test]
+    fn persist_load_roundtrip() {
+        let dir = TempDir::new("content-manifest").unwrap();
+        let path = dir.path().join("CONTENT.manifest");
+        let m = ContentManifest::load(&path);
+        m.insert("v000001/a.pt", entry(&[b"aaaa", b"bb"]));
+        m.insert("v000001/b.pt", entry(&[b"cccccc"]));
+        m.insert("empty", entry(&[]));
+        m.persist().unwrap();
+
+        let back = ContentManifest::load(&path);
+        assert_eq!(back.names(),
+                   vec!["empty", "v000001/a.pt", "v000001/b.pt"]);
+        assert_eq!(back.get("v000001/a.pt"),
+                   m.get("v000001/a.pt"));
+        assert_eq!(back.get("empty").unwrap().len, 0);
+        assert!(!back.contains("v000009/x"));
+        // no torn .tmp left behind
+        assert!(!path.with_extension("manifest.tmp").exists());
+    }
+
+    #[test]
+    fn damaged_lines_drop_only_their_entry() {
+        let dir = TempDir::new("content-manifest-tol").unwrap();
+        let path = dir.path().join("CONTENT.manifest");
+        let good = entry(&[b"payload bytes"]);
+        let good_ids = good.chunks[0].object_name();
+        std::fs::write(
+            &path,
+            format!(
+                "# header\n\
+                 garbage line without tabs\n\
+                 bad-len\tnot-a-number\t{good_ids}\n\
+                 short-cover\t999\t{good_ids}\n\
+                 ok\t13\t{good_ids}\n"
+            ),
+        )
+        .unwrap();
+        let m = ContentManifest::load(&path);
+        assert_eq!(m.names(), vec!["ok"]);
+        assert_eq!(m.get("ok").unwrap(), good);
+    }
+}

@@ -1,0 +1,561 @@
+//! The remote tier: a [`Backend`] over the content-addressed chunk
+//! store, with a simulated WAN shim.
+//!
+//! Writes buffer in memory at provider-assigned offsets (the drain
+//! worker's copy loop lands sequentially; gather writes fall back to
+//! the positioned default) and commit at `finalize` ON THE DRAIN
+//! WORKER: the buffered file is cut into fixed-size content chunks
+//! whose XXH64 fingerprints come from the delta provider's
+//! [`BlockMap`], chunks already present in the store are *skipped*
+//! (that is the incremental checkpoint — clean blocks of version N+1
+//! hash identically to version N's and move zero bytes), and only
+//! dirty chunks pay the bandwidth throttle. Per-file upload accounting
+//! is surfaced through [`BackendFile::upload_stats`] so the drain
+//! worker can attribute `chunks_total` / `chunks_uploaded` /
+//! `dedup_bytes_skipped` to the checkpoint session.
+//!
+//! Reads resolve through the [`ContentManifest`]: `open` plans the
+//! chunk list, and every fetched chunk is checksum-verified by the
+//! store — a torn chunk surfaces as an error naming the file and the
+//! chunk id, which the nearest-tier fall-through reports verbatim.
+//!
+//! The WAN shim charges one request latency per `open`/`finalize`
+//! round trip and meters uploaded bytes through the tier's shared
+//! [`Throttle`] (`--tiers remote:<latency_ms>:<mbps>`).
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::manifest::FileEntry;
+use super::{ChunkId, ChunkStore, ContentManifest};
+use crate::provider::delta::BlockMap;
+use crate::storage::{Backend, BackendFile, ReadAt, Throttle, TierKind,
+                     UploadStats};
+
+/// Manifest file name at the remote root.
+const CONTENT_MANIFEST: &str = "CONTENT.manifest";
+
+struct Shared {
+    store: ChunkStore,
+    manifest: ContentManifest,
+    chunk_bytes: usize,
+    latency_s: f64,
+    throttle: Option<Arc<Throttle>>,
+}
+
+impl Shared {
+    fn request_latency(&self) {
+        if self.latency_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                self.latency_s));
+        }
+    }
+
+    /// Chunk `bytes`, upload what the store does not already hold,
+    /// retain every reference, and install the manifest entry for
+    /// `rel` (releasing the entry it replaces). The single commit path
+    /// shared by `finalize` and `truncate`.
+    fn install(&self, rel: &str, bytes: &[u8])
+        -> anyhow::Result<UploadStats> {
+        let map = BlockMap::build(bytes, self.chunk_bytes);
+        let mut chunks = Vec::with_capacity(map.fps.len());
+        let mut st = UploadStats::default();
+        for (chunk, &fp) in bytes.chunks(map.block_bytes).zip(&map.fps) {
+            let id = ChunkId { hash: fp, len: chunk.len() as u32 };
+            st.chunks_total += 1;
+            if self.store.contains(id) {
+                // the incremental path: content already remote
+                st.dedup_bytes_skipped += chunk.len() as u64;
+            } else {
+                if let Some(t) = &self.throttle {
+                    t.acquire(chunk.len() as u64);
+                }
+                let (stored, _) = self.store.put(chunk)?;
+                anyhow::ensure!(
+                    stored == id,
+                    "{rel}: chunker fingerprint {id} disagrees with \
+                     stored id {stored}"
+                );
+                st.chunks_uploaded += 1;
+                st.bytes_uploaded += chunk.len() as u64;
+            }
+            self.store.retain(id);
+            chunks.push(id);
+        }
+        let old = self.manifest.insert(
+            rel, FileEntry { len: bytes.len() as u64, chunks });
+        if let Some(old) = old {
+            for id in old.chunks {
+                self.store.release(id);
+            }
+        }
+        self.manifest.persist()?;
+        Ok(st)
+    }
+}
+
+/// Content-addressed remote storage tier.
+pub struct RemoteStore {
+    shared: Arc<Shared>,
+}
+
+impl RemoteStore {
+    /// Open (create) the store rooted at `root`. Refcounts are rebuilt
+    /// from the persisted manifest and unreferenced blobs — uploads
+    /// orphaned by a crash before their manifest entry landed — are
+    /// swept.
+    pub fn open(root: &Path, chunk_bytes: usize, latency_s: f64,
+                throttle_bps: Option<f64>)
+        -> anyhow::Result<RemoteStore> {
+        std::fs::create_dir_all(root)?;
+        let store = ChunkStore::open(root)?;
+        let manifest = ContentManifest::load(root.join(CONTENT_MANIFEST));
+        for (_, entry) in manifest.entries() {
+            for id in entry.chunks {
+                store.retain(id);
+            }
+        }
+        store.sweep_unreferenced()?;
+        Ok(RemoteStore {
+            shared: Arc::new(Shared {
+                store,
+                manifest,
+                chunk_bytes: chunk_bytes.max(64),
+                latency_s: latency_s.max(0.0),
+                throttle: throttle_bps.map(|b| Arc::new(Throttle::new(b))),
+            }),
+        })
+    }
+
+    /// The underlying chunk store (GC tests, dedupe accounting).
+    pub fn chunk_store(&self) -> &ChunkStore {
+        &self.shared.store
+    }
+
+    /// The content manifest (file → chunk list).
+    pub fn content_manifest(&self) -> &ContentManifest {
+        &self.shared.manifest
+    }
+
+    pub fn chunk_bytes(&self) -> usize {
+        self.shared.chunk_bytes
+    }
+}
+
+/// A file being written to the remote tier: buffered until `finalize`
+/// commits it through the chunk store.
+struct RemoteFile {
+    shared: Arc<Shared>,
+    rel: String,
+    buf: Mutex<Vec<u8>>,
+    stats: Mutex<Option<UploadStats>>,
+}
+
+impl BackendFile for RemoteFile {
+    fn write_at(&self, offset: u64, data: &[u8]) -> anyhow::Result<()> {
+        let mut buf = self.buf.lock().unwrap();
+        let end = offset as usize + data.len();
+        if buf.len() < end {
+            buf.resize(end, 0);
+        }
+        buf[offset as usize..end].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn finalize(&self) -> anyhow::Result<()> {
+        // one simulated round trip for the commit batch
+        self.shared.request_latency();
+        let buf = self.buf.lock().unwrap();
+        let st = self.shared.install(&self.rel, &buf)?;
+        *self.stats.lock().unwrap() = Some(st);
+        Ok(())
+    }
+
+    fn upload_stats(&self) -> Option<UploadStats> {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Manifest-planned reader: every chunk fetch is checksum-verified by
+/// the store; errors name the file and the chunk id.
+struct RemoteReader {
+    shared: Arc<Shared>,
+    rel: String,
+    len: u64,
+    /// `(start_offset, id)` per chunk, ascending.
+    chunks: Vec<(u64, ChunkId)>,
+    /// Most recently fetched chunk (index, decoded bytes) — restore
+    /// reads walk a file in many small extents, and without this every
+    /// extent would re-fetch and re-verify its covering chunk.
+    cache: Mutex<Option<(usize, Arc<Vec<u8>>)>>,
+}
+
+impl RemoteReader {
+    fn fetch(&self, i: usize) -> anyhow::Result<Arc<Vec<u8>>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some((ci, data)) = cache.as_ref() {
+            if *ci == i {
+                return Ok(data.clone());
+            }
+        }
+        let id = self.chunks[i].1;
+        let data = self.shared.store.get(id).map_err(|e| {
+            anyhow::anyhow!("{}: {e:#}", self.rel)
+        })?;
+        let data = Arc::new(data);
+        *cache = Some((i, data.clone()));
+        Ok(data)
+    }
+}
+
+impl ReadAt for RemoteReader {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+        -> anyhow::Result<()> {
+        anyhow::ensure!(
+            offset + buf.len() as u64 <= self.len,
+            "{}: read past EOF ({} + {} > {})",
+            self.rel, offset, buf.len(), self.len
+        );
+        if buf.is_empty() {
+            return Ok(());
+        }
+        // first chunk whose end covers `offset`
+        let mut i = self.chunks.partition_point(|(start, id)| {
+            start + id.len as u64 <= offset
+        });
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let (start, id) = self.chunks[i];
+            let data = self.fetch(i)?;
+            let pos = offset + filled as u64;
+            let within = (pos - start) as usize;
+            let take = (id.len as usize - within)
+                .min(buf.len() - filled);
+            buf[filled..filled + take]
+                .copy_from_slice(&data[within..within + take]);
+            filled += take;
+            i += 1;
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> anyhow::Result<u64> {
+        Ok(self.len)
+    }
+}
+
+impl Backend for RemoteStore {
+    fn kind(&self) -> TierKind {
+        TierKind::Remote
+    }
+
+    fn create(&self, rel: &str) -> anyhow::Result<Box<dyn BackendFile>> {
+        Ok(Box::new(RemoteFile {
+            shared: self.shared.clone(),
+            rel: rel.to_string(),
+            buf: Mutex::new(Vec::new()),
+            stats: Mutex::new(None),
+        }))
+    }
+
+    fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
+        // one simulated round trip to plan the read
+        self.shared.request_latency();
+        let entry = self.shared.manifest.get(rel).ok_or_else(|| {
+            anyhow::anyhow!("{rel}: not on remote tier")
+        })?;
+        let mut chunks = Vec::with_capacity(entry.chunks.len());
+        let mut off = 0u64;
+        for id in entry.chunks {
+            chunks.push((off, id));
+            off += id.len as u64;
+        }
+        Ok(Box::new(RemoteReader {
+            shared: self.shared.clone(),
+            rel: rel.to_string(),
+            len: entry.len,
+            chunks,
+            cache: Mutex::new(None),
+        }))
+    }
+
+    fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let prefix = if rel_dir.is_empty() {
+            String::new()
+        } else {
+            format!("{rel_dir}/")
+        };
+        Ok(self
+            .shared
+            .manifest
+            .names()
+            .into_iter()
+            .filter_map(|n| {
+                n.strip_prefix(&prefix)
+                    .filter(|rest| !rest.contains('/'))
+                    .map(str::to_string)
+            })
+            .collect())
+    }
+
+    fn list_dirs(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
+        let prefix = if rel_dir.is_empty() {
+            String::new()
+        } else {
+            format!("{rel_dir}/")
+        };
+        let mut out: Vec<String> = self
+            .shared
+            .manifest
+            .names()
+            .into_iter()
+            .filter_map(|n| {
+                n.strip_prefix(&prefix)
+                    .and_then(|rest| rest.split_once('/'))
+                    .map(|(dir, _)| dir.to_string())
+            })
+            .collect();
+        out.dedup(); // names are sorted, duplicates are adjacent
+        Ok(out)
+    }
+
+    fn remove(&self, rel: &str) -> anyhow::Result<()> {
+        let entry = self.shared.manifest.remove(rel).ok_or_else(|| {
+            anyhow::anyhow!("{rel}: not on remote tier")
+        })?;
+        for id in entry.chunks {
+            self.shared.store.release(id);
+        }
+        self.shared.manifest.persist()
+    }
+
+    fn rename(&self, from: &str, to: &str) -> anyhow::Result<()> {
+        let entry = self.shared.manifest.remove(from).ok_or_else(|| {
+            anyhow::anyhow!("{from}: not on remote tier")
+        })?;
+        if let Some(old) = self.shared.manifest.insert(to, entry) {
+            for id in old.chunks {
+                self.shared.store.release(id);
+            }
+        }
+        self.shared.manifest.persist()
+    }
+
+    fn truncate(&self, rel: &str, len: u64) -> anyhow::Result<()> {
+        let reader = self.open(rel)?;
+        let keep = len.min(reader.len()?) as usize;
+        let mut bytes = vec![0u8; keep];
+        reader.read_exact_at(&mut bytes, 0)?;
+        bytes.resize(len as usize, 0); // extend-with-zeros like set_len
+        self.shared.install(rel, &bytes)?;
+        Ok(())
+    }
+
+    fn exists(&self, rel: &str) -> bool {
+        self.shared.manifest.contains(rel)
+    }
+
+    fn throttle(&self) -> Option<Arc<Throttle>> {
+        self.shared.throttle.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn open_store(dir: &Path, chunk_bytes: usize) -> RemoteStore {
+        RemoteStore::open(dir, chunk_bytes, 0.0, None).unwrap()
+    }
+
+    /// The cross-module contract the chunker relies on: the delta
+    /// provider's block fingerprints ARE the chunk-store addresses.
+    #[test]
+    fn blockmap_fingerprints_match_chunk_ids() {
+        let mut data = vec![0u8; 10_000];
+        crate::util::Rng::new(3).fill_bytes(&mut data);
+        let map = BlockMap::build(&data, 1024);
+        for (chunk, &fp) in data.chunks(map.block_bytes).zip(&map.fps) {
+            assert_eq!(ChunkId::of(chunk).hash, fp);
+        }
+    }
+
+    #[test]
+    fn create_write_finalize_open_roundtrip() {
+        let dir = TempDir::new("remote-rt").unwrap();
+        let rs = open_store(dir.path(), 256);
+        let f = rs.create("v000001/a.ds").unwrap();
+        f.write_at(4, b"tail").unwrap();
+        f.write_at(0, b"head").unwrap();
+        f.finalize().unwrap();
+        assert!(rs.exists("v000001/a.ds"));
+        let st = f.upload_stats().unwrap();
+        assert_eq!(st.chunks_total, 1);
+        assert_eq!(st.chunks_uploaded, 1);
+
+        let r = rs.open("v000001/a.ds").unwrap();
+        assert_eq!(r.len().unwrap(), 8);
+        let mut buf = [0u8; 8];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"headtail");
+        let mut mid = [0u8; 4];
+        r.read_exact_at(&mut mid, 2).unwrap();
+        assert_eq!(&mid, b"adta");
+        assert!(r.read_exact_at(&mut buf, 4).is_err(), "past EOF");
+        assert_eq!(rs.list("v000001").unwrap(), vec!["a.ds".to_string()]);
+        assert_eq!(rs.list_dirs("").unwrap(),
+                   vec!["v000001".to_string()]);
+        assert!(rs.list("v000099").unwrap().is_empty());
+    }
+
+    #[test]
+    fn identical_content_uploads_once_across_files() {
+        let dir = TempDir::new("remote-dedupe").unwrap();
+        let rs = open_store(dir.path(), 1024);
+        let payload = vec![7u8; 10 << 10];
+        let a = rs.create("v000001/w.pt").unwrap();
+        a.write_at(0, &payload).unwrap();
+        a.finalize().unwrap();
+        let first = a.upload_stats().unwrap();
+        assert!(first.chunks_uploaded >= 1);
+
+        let b = rs.create("v000002/w.pt").unwrap();
+        b.write_at(0, &payload).unwrap();
+        b.finalize().unwrap();
+        let second = b.upload_stats().unwrap();
+        assert_eq!(second.chunks_uploaded, 0,
+                   "identical content must not re-upload");
+        assert_eq!(second.dedup_bytes_skipped, payload.len() as u64);
+        assert_eq!(second.chunks_total, first.chunks_total);
+    }
+
+    #[test]
+    fn sparse_update_uploads_only_dirty_chunks() {
+        let dir = TempDir::new("remote-dirty").unwrap();
+        let rs = open_store(dir.path(), 1024);
+        let mut payload = vec![0u8; 64 << 10];
+        crate::util::Rng::new(11).fill_bytes(&mut payload);
+        let v1 = rs.create("v000001/w.pt").unwrap();
+        v1.write_at(0, &payload).unwrap();
+        v1.finalize().unwrap();
+
+        payload[5_000] ^= 0xFF; // dirties exactly one 1 KiB chunk
+        let v2 = rs.create("v000002/w.pt").unwrap();
+        v2.write_at(0, &payload).unwrap();
+        v2.finalize().unwrap();
+        let st = v2.upload_stats().unwrap();
+        assert_eq!(st.chunks_total, 64);
+        assert_eq!(st.chunks_uploaded, 1);
+        assert_eq!(st.dedup_bytes_skipped, 63 << 10);
+        // both versions read back intact
+        for rel in ["v000001/w.pt", "v000002/w.pt"] {
+            let r = rs.open(rel).unwrap();
+            let mut back = vec![0u8; r.len().unwrap() as usize];
+            r.read_exact_at(&mut back, 0).unwrap();
+            if rel == "v000002/w.pt" {
+                assert_eq!(back, payload);
+            } else {
+                assert_ne!(back, payload);
+            }
+        }
+    }
+
+    #[test]
+    fn remove_and_rename_release_references() {
+        let dir = TempDir::new("remote-gc").unwrap();
+        let rs = open_store(dir.path(), 512);
+        let mut p1 = vec![0u8; 4 << 10];
+        crate::util::Rng::new(21).fill_bytes(&mut p1);
+        let f = rs.create("v000001/a").unwrap();
+        f.write_at(0, &p1).unwrap();
+        f.finalize().unwrap();
+        let g = rs.create("v000001/b").unwrap();
+        g.write_at(0, &p1).unwrap(); // same content, refcount 2 each
+        g.finalize().unwrap();
+        let n_blobs = rs.chunk_store().objects_on_disk().unwrap().len();
+
+        rs.remove("v000001/a").unwrap();
+        assert_eq!(rs.chunk_store().objects_on_disk().unwrap().len(),
+                   n_blobs, "b still references every chunk");
+        rs.rename("v000001/b", "v000001/c").unwrap();
+        assert!(rs.exists("v000001/c") && !rs.exists("v000001/b"));
+        rs.remove("v000001/c").unwrap();
+        assert!(rs.chunk_store().objects_on_disk().unwrap().is_empty(),
+                "last release must GC every blob");
+        assert!(rs.remove("v000001/zzz").is_err());
+    }
+
+    #[test]
+    fn reopen_rebuilds_refcounts_and_sweeps_orphans() {
+        let dir = TempDir::new("remote-reopen").unwrap();
+        let mut payload = vec![0u8; 8 << 10];
+        crate::util::Rng::new(31).fill_bytes(&mut payload);
+        {
+            let rs = open_store(dir.path(), 1024);
+            let f = rs.create("v000001/w.pt").unwrap();
+            f.write_at(0, &payload).unwrap();
+            f.finalize().unwrap();
+            // orphan: uploaded but never referenced by the manifest
+            rs.chunk_store().put(b"orphaned upload").unwrap();
+        }
+        let rs = open_store(dir.path(), 1024);
+        assert_eq!(rs.chunk_store().objects_on_disk().unwrap().len(), 8,
+                   "orphan must be swept, live chunks kept");
+        let r = rs.open("v000001/w.pt").unwrap();
+        let mut back = vec![0u8; payload.len()];
+        r.read_exact_at(&mut back, 0).unwrap();
+        assert_eq!(back, payload);
+        // and a remove after reopen still GCs to empty
+        rs.remove("v000001/w.pt").unwrap();
+        assert!(rs.chunk_store().objects_on_disk().unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncate_rechunks_prefix() {
+        let dir = TempDir::new("remote-trunc").unwrap();
+        let rs = open_store(dir.path(), 256);
+        let mut payload = vec![0u8; 2 << 10];
+        crate::util::Rng::new(41).fill_bytes(&mut payload);
+        let f = rs.create("x").unwrap();
+        f.write_at(0, &payload).unwrap();
+        f.finalize().unwrap();
+        rs.truncate("x", 700).unwrap();
+        let r = rs.open("x").unwrap();
+        assert_eq!(r.len().unwrap(), 700);
+        let mut back = vec![0u8; 700];
+        r.read_exact_at(&mut back, 0).unwrap();
+        assert_eq!(back, payload[..700]);
+    }
+
+    #[test]
+    fn torn_chunk_read_names_file_and_chunk() {
+        let dir = TempDir::new("remote-torn").unwrap();
+        let rs = open_store(dir.path(), 512);
+        let mut payload = vec![0u8; 4 << 10];
+        crate::util::Rng::new(51).fill_bytes(&mut payload);
+        let f = rs.create("v000001/w.pt").unwrap();
+        f.write_at(0, &payload).unwrap();
+        f.finalize().unwrap();
+        // corrupt the blob of the THIRD chunk on disk
+        let id = rs.content_manifest().get("v000001/w.pt").unwrap()
+            .chunks[2];
+        let blob = dir.path().join("objects").join(id.object_name());
+        let mut raw = std::fs::read(&blob).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        std::fs::write(&blob, &raw).unwrap();
+
+        let r = rs.open("v000001/w.pt").unwrap();
+        let mut back = vec![0u8; payload.len()];
+        let err = r.read_exact_at(&mut back, 0).unwrap_err().to_string();
+        assert!(err.contains("v000001/w.pt"),
+                "error must name the file: {err}");
+        assert!(err.contains(&format!("{id}")),
+                "error must name the chunk: {err}");
+        // reads that avoid the torn chunk still succeed
+        let mut head = vec![0u8; 1024];
+        r.read_exact_at(&mut head, 0).unwrap();
+        assert_eq!(head, payload[..1024]);
+    }
+}

@@ -1,0 +1,264 @@
+//! Write-once, refcounted chunk store.
+//!
+//! Blobs live flat under `<root>/objects/` named by their [`ChunkId`]
+//! (`x<hash:016x>-<len:08x>`), so existence IS the dedupe check: a
+//! chunk whose blob is already on disk is never uploaded again. Blobs
+//! are published through a temp file + rename (write-once — a chunk's
+//! content never changes once stored) and carry a 1-byte at-rest codec
+//! tag: raw, or LZ-compressed via `provider::compress` when that is
+//! smaller. Every [`ChunkStore::get`] decodes and re-verifies the
+//! XXH64 checksum + length against the id, so a torn or bit-flipped
+//! blob is detected at read time and named precisely.
+//!
+//! Reference counts are *derived* state: they are rebuilt from the
+//! persisted [`super::ContentManifest`] at open (`retain` per
+//! referenced chunk, then [`ChunkStore::sweep_unreferenced`] deletes
+//! blobs no manifest entry reaches — crash-orphaned uploads), and
+//! maintained by the owning [`super::RemoteStore`] as entries are
+//! added, replaced, and removed. A release that hits zero deletes the
+//! blob — the GC the property test checks against a brute-force
+//! mark-and-sweep oracle.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::ChunkId;
+use crate::provider::compress;
+
+/// At-rest blob codec tags.
+const TAG_RAW: u8 = 0;
+const TAG_LZ: u8 = 1;
+
+pub struct ChunkStore {
+    objects: PathBuf,
+    refs: Mutex<HashMap<ChunkId, u64>>,
+}
+
+impl ChunkStore {
+    /// Open (create) a store rooted at `root`; blobs live under
+    /// `root/objects/`. Refcounts start empty — the owner rebuilds them
+    /// from its manifest and then sweeps unreferenced blobs.
+    pub fn open(root: &Path) -> anyhow::Result<ChunkStore> {
+        let objects = root.join("objects");
+        std::fs::create_dir_all(&objects)?;
+        Ok(ChunkStore { objects, refs: Mutex::new(HashMap::new()) })
+    }
+
+    fn blob_path(&self, id: ChunkId) -> PathBuf {
+        self.objects.join(id.object_name())
+    }
+
+    /// Whether the chunk's blob is already stored (the dedupe check).
+    pub fn contains(&self, id: ChunkId) -> bool {
+        self.blob_path(id).is_file()
+    }
+
+    /// Store `data` write-once. Returns `(id, newly_stored)`:
+    /// `newly_stored == false` means the blob already existed and no
+    /// bytes need to move — the caller skips its upload accounting.
+    pub fn put(&self, data: &[u8]) -> anyhow::Result<(ChunkId, bool)> {
+        let id = ChunkId::of(data);
+        let path = self.blob_path(id);
+        if path.is_file() {
+            return Ok((id, false));
+        }
+        // at-rest codec: keep the smaller of raw vs LZ
+        let lz = compress::compress(data);
+        let mut blob = Vec::with_capacity(1 + data.len().min(lz.len()));
+        if lz.len() < data.len() {
+            blob.push(TAG_LZ);
+            blob.extend_from_slice(&lz);
+        } else {
+            blob.push(TAG_RAW);
+            blob.extend_from_slice(data);
+        }
+        // publish through a temp name + rename: a crash mid-write can
+        // leave a stray .tmp (swept at open), never a torn blob
+        let tmp = self.objects.join(format!("{}.tmp", id.object_name()));
+        std::fs::write(&tmp, &blob)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok((id, true))
+    }
+
+    /// Fetch and verify one chunk. Any failure — missing blob, bad
+    /// codec tag, checksum or length mismatch after decode — names the
+    /// chunk id, so tier fall-through errors can say WHICH chunk tore.
+    pub fn get(&self, id: ChunkId) -> anyhow::Result<Vec<u8>> {
+        let blob = std::fs::read(self.blob_path(id)).map_err(|e| {
+            anyhow::anyhow!("chunk {id}: blob unreadable: {e}")
+        })?;
+        let data = match blob.split_first() {
+            Some((&TAG_RAW, rest)) => rest.to_vec(),
+            Some((&TAG_LZ, rest)) => {
+                compress::decompress(rest).map_err(|e| {
+                    anyhow::anyhow!("chunk {id}: blob decode: {e:#}")
+                })?
+            }
+            Some((tag, _)) => anyhow::bail!(
+                "chunk {id}: unknown blob codec tag {tag}"),
+            None => anyhow::bail!("chunk {id}: empty blob"),
+        };
+        let got = ChunkId::of(&data);
+        anyhow::ensure!(
+            got == id,
+            "chunk {id}: checksum mismatch (stored bytes hash to {got})"
+        );
+        Ok(data)
+    }
+
+    /// Add one reference to a stored chunk.
+    pub fn retain(&self, id: ChunkId) {
+        *self.refs.lock().unwrap().entry(id).or_insert(0) += 1;
+    }
+
+    /// Drop one reference; the last release deletes the blob. Returns
+    /// whether the blob was deleted.
+    pub fn release(&self, id: ChunkId) -> bool {
+        let mut refs = self.refs.lock().unwrap();
+        match refs.get_mut(&id) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
+                false
+            }
+            Some(_) => {
+                refs.remove(&id);
+                let _ = std::fs::remove_file(self.blob_path(id));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Snapshot of the live refcounts (GC oracle tests).
+    pub fn refcounts(&self) -> HashMap<ChunkId, u64> {
+        self.refs.lock().unwrap().clone()
+    }
+
+    /// Every blob currently on disk (GC oracle tests + sweep).
+    pub fn objects_on_disk(&self) -> anyhow::Result<Vec<ChunkId>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.objects)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if let Some(id) = ChunkId::parse_object_name(&name) {
+                out.push(id);
+            } else if name.ends_with(".tmp") {
+                // crash-orphaned partial publish
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Mark-and-sweep at open: delete every blob no live reference
+    /// reaches (uploads orphaned by a crash before their manifest entry
+    /// landed). Returns the number of blobs removed.
+    pub fn sweep_unreferenced(&self) -> anyhow::Result<usize> {
+        let refs = self.refs.lock().unwrap();
+        let mut removed = 0;
+        for entry in std::fs::read_dir(&self.objects)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let live = ChunkId::parse_object_name(&name)
+                .map(|id| refs.get(&id).copied().unwrap_or(0) > 0)
+                .unwrap_or(false);
+            if !live {
+                let _ = std::fs::remove_file(entry.path());
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn put_get_roundtrip_and_write_once_dedupe() {
+        let dir = TempDir::new("chunkstore").unwrap();
+        let cs = ChunkStore::open(dir.path()).unwrap();
+        let data = b"hello content-addressed world".repeat(100);
+        let (id, stored) = cs.put(&data).unwrap();
+        assert!(stored);
+        assert!(cs.contains(id));
+        // second put of identical bytes moves nothing
+        let (id2, stored2) = cs.put(&data).unwrap();
+        assert_eq!(id, id2);
+        assert!(!stored2);
+        assert_eq!(cs.get(id).unwrap(), data);
+        // distinct content gets a distinct blob
+        let (other, _) = cs.put(b"something else").unwrap();
+        assert_ne!(other, id);
+        assert_eq!(cs.objects_on_disk().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn compressible_chunks_are_stored_compressed() {
+        let dir = TempDir::new("chunkstore-lz").unwrap();
+        let cs = ChunkStore::open(dir.path()).unwrap();
+        let zeros = vec![0u8; 64 << 10];
+        let (id, _) = cs.put(&zeros).unwrap();
+        let on_disk = std::fs::metadata(
+            dir.path().join("objects").join(id.object_name()))
+            .unwrap()
+            .len();
+        assert!(on_disk < 8 << 10, "blob not compressed: {on_disk}");
+        assert_eq!(cs.get(id).unwrap(), zeros);
+    }
+
+    #[test]
+    fn torn_blob_is_detected_and_names_the_chunk() {
+        let dir = TempDir::new("chunkstore-torn").unwrap();
+        let cs = ChunkStore::open(dir.path()).unwrap();
+        let mut data = vec![0u8; 32 << 10];
+        crate::util::Rng::new(7).fill_bytes(&mut data);
+        let (id, _) = cs.put(&data).unwrap();
+        // flip one stored byte past the codec tag
+        let path = dir.path().join("objects").join(id.object_name());
+        let mut blob = std::fs::read(&path).unwrap();
+        let mid = blob.len() / 2;
+        blob[mid] ^= 0xFF;
+        std::fs::write(&path, &blob).unwrap();
+        let err = cs.get(id).unwrap_err().to_string();
+        assert!(err.contains(&format!("{id}")), "unnamed chunk: {err}");
+        // a missing blob is named too
+        std::fs::remove_file(&path).unwrap();
+        let err = cs.get(id).unwrap_err().to_string();
+        assert!(err.contains("unreadable"), "{err}");
+    }
+
+    #[test]
+    fn release_to_zero_deletes_blob() {
+        let dir = TempDir::new("chunkstore-gc").unwrap();
+        let cs = ChunkStore::open(dir.path()).unwrap();
+        let (id, _) = cs.put(b"refcounted bytes refcounted bytes").unwrap();
+        cs.retain(id);
+        cs.retain(id);
+        assert!(!cs.release(id), "first release must keep the blob");
+        assert!(cs.contains(id));
+        assert!(cs.release(id), "last release must delete");
+        assert!(!cs.contains(id));
+        // double release of a dead chunk is a no-op
+        assert!(!cs.release(id));
+    }
+
+    #[test]
+    fn sweep_removes_unreferenced_and_tmp_orphans() {
+        let dir = TempDir::new("chunkstore-sweep").unwrap();
+        let cs = ChunkStore::open(dir.path()).unwrap();
+        let (live, _) = cs.put(b"live chunk live chunk").unwrap();
+        let (dead, _) = cs.put(b"orphaned upload bytes").unwrap();
+        cs.retain(live);
+        std::fs::write(dir.path().join("objects/garbage.tmp"), b"x")
+            .unwrap();
+        let removed = cs.sweep_unreferenced().unwrap();
+        assert_eq!(removed, 2); // dead blob + tmp orphan
+        assert!(cs.contains(live));
+        assert!(!cs.contains(dead));
+    }
+}

@@ -22,10 +22,12 @@
 //!   manifest records where each version lives so restore can resolve
 //!   the newest complete copy from the nearest tier.
 
+pub mod content;
 pub mod host_cache;
 pub mod local_fs;
 pub mod pipeline;
 
+pub use content::RemoteStore;
 pub use host_cache::HostCache;
 pub use local_fs::LocalFs;
 pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
@@ -41,6 +43,9 @@ pub enum TierKind {
     HostCache,
     /// A real filesystem directory: the durable (terminal) tier.
     LocalFs,
+    /// Content-addressed remote store behind a simulated WAN
+    /// (latency + bandwidth shim): the deepest, incremental tier.
+    Remote,
 }
 
 impl TierKind {
@@ -48,17 +53,19 @@ impl TierKind {
         match self {
             TierKind::HostCache => "host-cache",
             TierKind::LocalFs => "local-fs",
+            TierKind::Remote => "remote",
         }
     }
 
     /// Parse a CLI tier name ("hostcache"/"host-cache", "localfs"/
-    /// "local-fs"/"fs").
+    /// "local-fs"/"fs", "remote"/"s3").
     pub fn parse(s: &str) -> Option<TierKind> {
         match s.trim().to_ascii_lowercase().as_str() {
             "hostcache" | "host-cache" | "host" | "cache" => {
                 Some(TierKind::HostCache)
             }
             "localfs" | "local-fs" | "fs" | "disk" => Some(TierKind::LocalFs),
+            "remote" | "s3" | "object" => Some(TierKind::Remote),
             _ => None,
         }
     }
@@ -70,22 +77,56 @@ impl TierKind {
 #[derive(Debug, Clone)]
 pub struct TierSpec {
     pub kind: TierKind,
-    /// Optional write-bandwidth cap in bytes/s (I/O-contention studies).
+    /// Optional write-bandwidth cap in bytes/s (I/O-contention studies;
+    /// on remote tiers, the simulated WAN bandwidth).
     pub throttle_bps: Option<f64>,
+    /// Simulated per-request round-trip latency in seconds (remote
+    /// tiers only; charged per upload commit and per read open).
+    pub latency_s: f64,
+    /// Content-chunk size for remote tiers; `None` uses
+    /// [`content::DEFAULT_CONTENT_CHUNK_BYTES`].
+    pub content_chunk_bytes: Option<usize>,
 }
 
 impl TierSpec {
     pub fn host_cache() -> TierSpec {
-        TierSpec { kind: TierKind::HostCache, throttle_bps: None }
+        TierSpec {
+            kind: TierKind::HostCache,
+            throttle_bps: None,
+            latency_s: 0.0,
+            content_chunk_bytes: None,
+        }
     }
 
     pub fn local_fs() -> TierSpec {
-        TierSpec { kind: TierKind::LocalFs, throttle_bps: None }
+        TierSpec {
+            kind: TierKind::LocalFs,
+            throttle_bps: None,
+            latency_s: 0.0,
+            content_chunk_bytes: None,
+        }
+    }
+
+    /// A content-addressed remote tier simulating `latency_s` seconds
+    /// of per-request latency (bandwidth via [`TierSpec::throttled`]).
+    pub fn remote(latency_s: f64) -> TierSpec {
+        TierSpec {
+            kind: TierKind::Remote,
+            throttle_bps: None,
+            latency_s,
+            content_chunk_bytes: None,
+        }
     }
 
     /// Cap this tier's write bandwidth at `bps` bytes/s.
     pub fn throttled(mut self, bps: f64) -> TierSpec {
         self.throttle_bps = Some(bps);
+        self
+    }
+
+    /// Set the remote tier's content-chunk size.
+    pub fn content_chunks(mut self, bytes: usize) -> TierSpec {
+        self.content_chunk_bytes = Some(bytes);
         self
     }
 }
@@ -216,6 +257,18 @@ impl ReadAt for std::fs::File {
     }
 }
 
+/// Per-file upload accounting reported by content-addressed tiers
+/// after `finalize`: how many chunks the file cut into, how many
+/// actually moved, and how many bytes deduplication skipped. The drain
+/// worker harvests this into `CkptMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UploadStats {
+    pub chunks_total: u64,
+    pub chunks_uploaded: u64,
+    pub bytes_uploaded: u64,
+    pub dedup_bytes_skipped: u64,
+}
+
 /// A file being written on one tier. Positioned writes at
 /// provider-assigned offsets (no shared cursor, writers never contend on
 /// position), then one `finalize` making it as durable as the tier gets
@@ -243,6 +296,12 @@ pub trait BackendFile: Send + Sync {
     }
 
     fn finalize(&self) -> anyhow::Result<()>;
+
+    /// Upload accounting after `finalize` on content-addressed tiers;
+    /// `None` on tiers that always move every byte.
+    fn upload_stats(&self) -> Option<UploadStats> {
+        None
+    }
 }
 
 /// One storage tier. Paths are tier-relative, '/'-separated
@@ -347,8 +406,11 @@ mod tests {
         assert_eq!(TierKind::parse("host-cache"), Some(TierKind::HostCache));
         assert_eq!(TierKind::parse("localfs"), Some(TierKind::LocalFs));
         assert_eq!(TierKind::parse("fs"), Some(TierKind::LocalFs));
+        assert_eq!(TierKind::parse("remote"), Some(TierKind::Remote));
+        assert_eq!(TierKind::parse("s3"), Some(TierKind::Remote));
         assert_eq!(TierKind::parse("nvme"), None);
         assert_eq!(TierKind::HostCache.label(), "host-cache");
+        assert_eq!(TierKind::Remote.label(), "remote");
     }
 
     #[test]

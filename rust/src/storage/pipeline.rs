@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::content::{RemoteStore, DEFAULT_CONTENT_CHUNK_BYTES};
 use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt, TierKind,
             TierSpec};
 use crate::engine::ticket::CkptSession;
@@ -306,6 +307,12 @@ impl PipelineShared {
             off += take as u64;
         }
         dst.finalize()?;
+        // content-addressed tiers report how much of the file actually
+        // moved — the incremental-checkpoint attribution
+        if let Some(st) = dst.upload_stats() {
+            session.add_content(st.chunks_total, st.chunks_uploaded,
+                                st.dedup_bytes_skipped);
+        }
         self.timeline
             .record(Tier::Drain, rel, len, start, self.timeline.now_s());
         session.progress_counters().add_drained(len);
@@ -429,6 +436,9 @@ impl TierPipeline {
         let last_fs = specs
             .iter()
             .rposition(|s| s.kind == TierKind::LocalFs);
+        let last_remote = specs
+            .iter()
+            .rposition(|s| s.kind == TierKind::Remote);
         let mut tiers: Vec<Arc<dyn Backend>> =
             Vec::with_capacity(specs.len());
         for (i, spec) in specs.iter().enumerate() {
@@ -447,6 +457,23 @@ impl TierPipeline {
                         Some(bps) => Arc::new(LocalFs::throttled(root, bps)),
                         None => Arc::new(LocalFs::new(root)),
                     }
+                }
+                TierKind::Remote => {
+                    // a stable root for the LAST remote spec, so a
+                    // later remote-only stack over the same ckpt_dir
+                    // resolves the same store (restart / DR restore)
+                    let root = if Some(i) == last_remote {
+                        ckpt_dir.join("remote")
+                    } else {
+                        ckpt_dir.join(format!("remote{i}"))
+                    };
+                    Arc::new(RemoteStore::open(
+                        &root,
+                        spec.content_chunk_bytes
+                            .unwrap_or(DEFAULT_CONTENT_CHUNK_BYTES),
+                        spec.latency_s,
+                        spec.throttle_bps,
+                    )?)
                 }
             };
             tiers.push(tier);
@@ -605,7 +632,11 @@ impl TierPipeline {
         rel: &str,
         parse: impl Fn(Box<dyn ReadAt>) -> anyhow::Result<T>,
     ) -> anyhow::Result<T> {
-        let mut last_err: Option<anyhow::Error> = None;
+        // Every tier's failure is kept, not just the last: when a
+        // chunk is torn on the remote tier the joined error names the
+        // file, each failing tier, and the offending chunk id, instead
+        // of whichever tier happened to fail last.
+        let mut errs: Vec<String> = Vec::new();
         for tier in &self.shared.tiers {
             if !tier.exists(rel) {
                 continue;
@@ -614,16 +645,17 @@ impl TierPipeline {
                 Ok(v) => return Ok(v),
                 Err(e) => {
                     // torn/truncated on this tier: try the next one
-                    last_err = Some(anyhow::anyhow!(
-                        "{rel} on {} tier: {e:#}",
-                        tier.kind().label()
-                    ));
+                    errs.push(format!("on {} tier: {e:#}",
+                                      tier.kind().label()));
                 }
             }
         }
-        Err(last_err.unwrap_or_else(|| {
+        Err(if errs.is_empty() {
             anyhow::anyhow!("{rel}: not found on any tier")
-        }))
+        } else {
+            anyhow::anyhow!("{rel}: no tier holds a readable copy: {}",
+                            errs.join("; "))
+        })
     }
 
     /// Open one checkpoint file of a version as a positioned-read chunk
@@ -838,6 +870,45 @@ mod tests {
                 notify: None,
             })
             .is_err());
+    }
+
+    #[test]
+    fn from_specs_builds_remote_tier_at_stable_root() {
+        let dir = crate::util::TempDir::new("pipe-remote").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::from_specs(
+            &[TierSpec::local_fs(),
+              TierSpec::remote(0.0).content_chunks(1024)],
+            dir.path(),
+            false,
+            1 << 20,
+            None,
+            tl.clone(),
+        )
+        .unwrap();
+        assert_eq!(p.tier_kinds(),
+                   vec![TierKind::LocalFs, TierKind::Remote]);
+        let f = p.terminal().create("v000001/x").unwrap();
+        f.write_at(0, b"remote bytes").unwrap();
+        f.finalize().unwrap();
+        assert!(dir.path().join("remote/objects").is_dir());
+        drop(p);
+
+        // a remote-ONLY stack over the same ckpt_dir resolves the same
+        // store: the version written above is still readable
+        let p2 = TierPipeline::from_specs(
+            &[TierSpec::remote(0.0).content_chunks(1024)],
+            dir.path(),
+            false,
+            1 << 20,
+            None,
+            tl,
+        )
+        .unwrap();
+        let r = p2.terminal().open("v000001/x").unwrap();
+        let mut buf = vec![0u8; 12];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(&buf, b"remote bytes");
     }
 
     #[test]
