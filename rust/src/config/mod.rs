@@ -169,6 +169,18 @@ pub struct EngineConfig {
     pub tiers: Vec<TierSpec>,
     /// Evict host-cache copies once they drained to the next tier.
     pub evict_fast_tier: bool,
+    /// Serve `LocalFs` gather I/O through a per-backend io_uring:
+    /// flush workers and restore readers become submitters (one batched
+    /// submission syscall per sealed run, completion-driven wakeups
+    /// from a single reaper thread) instead of blocking one OS thread
+    /// per in-flight syscall. A runtime probe falls back silently to
+    /// the thread-pool path on kernels or sandboxes without io_uring;
+    /// output files are byte-identical either way.
+    pub io_uring: bool,
+    /// Ring entries per `LocalFs` backend when `io_uring` is on — the
+    /// REAL queue depth bounding in-flight extents (submitters block
+    /// for a completion slot, not for the I/O).
+    pub uring_queue_depth: usize,
 }
 
 impl Default for EngineConfig {
@@ -187,6 +199,8 @@ impl Default for EngineConfig {
             direct_io: false,
             tiers: vec![TierSpec::local_fs()],
             evict_fast_tier: true,
+            io_uring: false,
+            uring_queue_depth: 64,
         }
     }
 }

@@ -42,7 +42,7 @@ use crate::provider::{
     TensorProvider,
 };
 use crate::state::{RankState, StateItem, TensorData};
-use crate::storage::{TierPipeline, VersionDrainJob};
+use crate::storage::{TierKind, TierPipeline, VersionDrainJob};
 
 /// Uniform handle-based interface over DataStates-LLM and the three
 /// baselines.
@@ -395,14 +395,27 @@ impl DataStatesEngine {
         let pool = PinnedPool::new(cfg.host_cache_bytes);
         // N concurrent copy streams over the shared pinned pool; the
         // pool's blocking free list is the shared backpressure point
-        let stager =
-            Stager::with_lanes(pool, timeline.clone(), cfg.stager_lanes);
+        let stager = Stager::with_lanes(pool.clone(), timeline.clone(),
+                                        cfg.stager_lanes);
         let serializer =
             SerializerPool::with_timeline(2, Some(timeline.clone()));
         let flush = FlushPool::new(cfg.writer_threads, timeline.clone());
         let notifier = Notifier::new();
+        // `--io-uring` asks every filesystem tier for a ring of
+        // `uring_queue_depth` entries; the per-backend probe falls back
+        // to the thread-pool path wherever the kernel refuses
+        let mut tiers = cfg.tiers.clone();
+        if cfg.io_uring {
+            for t in &mut tiers {
+                if t.kind == TierKind::LocalFs
+                    && t.uring_depth.is_none()
+                {
+                    t.uring_depth = Some(cfg.uring_queue_depth);
+                }
+            }
+        }
         let pipeline = TierPipeline::from_specs(
-            &cfg.tiers,
+            &tiers,
             &cfg.ckpt_dir,
             cfg.evict_fast_tier,
             cfg.chunk_bytes,
@@ -410,6 +423,11 @@ impl DataStatesEngine {
             Some(cfg.host_cache_bytes),
             timeline.clone(),
         )?;
+        // offer the pinned staging slab for fixed-buffer registration
+        // (WRITE_FIXED/READ_FIXED); the pool clone keeps the slab alive
+        // for as long as any ring holds it
+        pipeline.register_pinned(pool.slab_ptr(), pool.capacity(),
+                                 std::sync::Arc::new(pool.clone()));
         // restore paths through this pipeline (read_version /
         // restore_newest / reshard over live engines) honor the
         // config's restore_lanes / reader_threads knobs

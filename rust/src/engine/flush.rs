@@ -31,7 +31,7 @@ use std::sync::{Condvar, Mutex};
 use crate::metrics::{Tier, Timeline};
 use crate::provider::layout::FileLayout;
 use crate::provider::Bytes;
-use crate::storage::BackendFile;
+use crate::storage::{BackendFile, GatherSubmit, IoDone};
 
 /// Chunk accounting of one open file: a single mutex covers the issue
 /// and completion counters, so quiescence waits are a plain condvar loop
@@ -228,40 +228,67 @@ impl FlushPool {
                 std::thread::Builder::new()
                     .name(format!("ds-flush-{i}"))
                     .spawn(move || {
+                        // One completion path for both transports: the
+                        // `done` closure below fires either inline
+                        // after the blocking gather write, or from the
+                        // io_uring completion reaper — the worker is a
+                        // submitter, not a blocker, whenever the
+                        // backend has a ring.
                         while let Ok(Msg::Job(job)) = rx.recv() {
-                            let len = job.total_len();
-                            let slices: Vec<&[u8]> = job
-                                .extents
+                            let WriteJob {
+                                file,
+                                offset,
+                                extents,
+                                label,
+                                notify,
+                                progress,
+                            } = job;
+                            let len: u64 = extents
                                 .iter()
-                                .map(|b| b.as_slice())
-                                .collect();
+                                .map(|b| b.len() as u64)
+                                .sum();
                             let start = tl.now_s();
-                            match job
-                                .file
-                                .file
-                                .write_gather_at(job.offset, &slices)
-                            {
-                                Ok(()) => {
-                                    tl.record(
-                                        Tier::H2F,
-                                        &job.label,
-                                        len,
-                                        start,
-                                        tl.now_s(),
-                                    );
-                                    if let Some(p) = &job.progress {
-                                        p.add_flushed(len);
+                            let done: IoDone = {
+                                let tl = tl.clone();
+                                let file = file.clone();
+                                Box::new(move |r| match r {
+                                    Ok(()) => {
+                                        tl.record(
+                                            Tier::H2F,
+                                            &label,
+                                            len,
+                                            start,
+                                            tl.now_s(),
+                                        );
+                                        if let Some(p) = &progress {
+                                            p.add_flushed(len);
+                                        }
+                                        file.record_written();
+                                        if let Some(n) = &notify {
+                                            n.notify();
+                                        }
                                     }
-                                    job.file.record_written();
-                                    if let Some(n) = &job.notify {
-                                        n.notify();
+                                    Err(e) => {
+                                        file.record_error(
+                                            e.to_string());
+                                        if let Some(n) = &notify {
+                                            n.notify();
+                                        }
                                     }
-                                }
-                                Err(e) => {
-                                    job.file.record_error(e.to_string());
-                                    if let Some(n) = &job.notify {
-                                        n.notify();
-                                    }
+                                })
+                            };
+                            match file.file.submit_write_gather_at(
+                                offset, extents, done,
+                            ) {
+                                GatherSubmit::Submitted => {}
+                                GatherSubmit::Blocking(
+                                    extents, done) => {
+                                    let slices: Vec<&[u8]> = extents
+                                        .iter()
+                                        .map(|b| b.as_slice())
+                                        .collect();
+                                    done(file.file.write_gather_at(
+                                        offset, &slices));
                                 }
                             }
                         }

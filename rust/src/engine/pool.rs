@@ -141,6 +141,14 @@ impl PinnedPool {
         self.inner.capacity
     }
 
+    /// Base address of the backing slab — offered to io_uring backends
+    /// for fixed-buffer registration (`IORING_REGISTER_BUFFERS`). The
+    /// registrar keeps a clone of the pool, so the slab outlives the
+    /// ring's interest in it.
+    pub fn slab_ptr(&self) -> *const u8 {
+        self.inner.buf.as_ptr()
+    }
+
     pub fn in_use(&self) -> usize {
         self.inner.state.lock().unwrap().in_use
     }

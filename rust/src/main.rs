@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            restore|incremental|files>
+//!            restore|incremental|uring|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -52,6 +52,16 @@
 //!                               at M MB/s (I/O-contention studies)
 //!   --durability hostcache      train: drain the run tail only to this
 //!                               tier (background drain continues)
+//!
+//! Async I/O knobs (io_uring backend, see DESIGN.md "Async I/O
+//! backend"; accepted by train, bench-io and bench-restore):
+//!   --io-uring                  serve LocalFs gather I/O through a
+//!                               per-backend io_uring (batched
+//!                               submission, completion-driven wakeups);
+//!                               probes the kernel at startup and falls
+//!                               back silently to the thread-pool path
+//!   --uring-depth N             ring entries = in-flight op bound
+//!                               (default 64)
 
 use datastates::baselines::EngineKind;
 use datastates::config::{EngineConfig, LlmConfig, Parallelism};
@@ -227,6 +237,15 @@ fn tier_specs(args: &Args) -> anyhow::Result<Option<Vec<TierSpec>>> {
     Ok(Some(tiers))
 }
 
+/// Apply `--io-uring` / `--uring-depth N` to an engine config.
+fn uring_flags(args: &Args, cfg: &mut EngineConfig) {
+    if args.get("io-uring").is_some() {
+        cfg.io_uring = true;
+    }
+    cfg.uring_queue_depth =
+        args.num("uring-depth", cfg.uring_queue_depth);
+}
+
 /// Per-transfer-tier `{bytes, busy_s, bps}` JSON for one timeline.
 fn tier_throughput_json(tl: &Timeline) -> String {
     let entry = |tier: Tier| {
@@ -272,6 +291,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "gather" => harness::gather()?,
         "restore" => harness::restore()?,
         "incremental" => harness::incremental()?,
+        "uring" => harness::uring()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -308,6 +328,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
     if let Some(tiers) = tier_specs(args)? {
         cfg.tiers = tiers;
     }
+    uring_flags(args, &mut cfg);
 
     if args.get("resume").is_some() {
         if let Some((v, dir)) =
@@ -455,11 +476,15 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
         if let Some(t) = &tiers {
             ecfg.tiers = t.clone();
         }
+        uring_flags(args, &mut ecfg);
         let mut eng = kind.build(ecfg)?;
         let ticket = eng.begin(0, &state)?;
         ticket.wait_captured()?;
         let m = ticket.wait_persisted()?;
         let tl = eng.timeline();
+        // ring attribution (zeros on the thread-pool / fallback path
+        // and on baselines, which build their own flat LocalFs)
+        let u = eng.pipeline().uring_stats().unwrap_or_default();
         println!(
             "{:<22}{:>14.4}{:>16}{:>16}{:>16}",
             kind.label(),
@@ -497,6 +522,9 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
              \"memcpy_bytes_avoided\":{},\
              \"chunks_total\":{},\"chunks_uploaded\":{},\
              \"dedup_bytes_skipped\":{},\
+             \"uring_submits\":{},\"uring_sqes\":{},\
+             \"uring_completions\":{},\"uring_resubmits\":{},\
+             \"syscalls_avoided\":{},\
              \"d2h_lanes\":[{}],\
              \"tiers\":[{}],\"transfer\":{}}}",
             kind.label(),
@@ -511,20 +539,30 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             m.chunks_total,
             m.chunks_uploaded,
             m.dedup_bytes_skipped,
+            u.submits,
+            u.sqes,
+            u.completions,
+            u.resubmits,
+            u.syscalls_avoided,
             lanes_json.join(","),
             tiers_json.join(","),
             tier_throughput_json(&tl),
         ));
     }
     if let Some(path) = args.get("json") {
+        let mut probe = EngineConfig::default();
+        uring_flags(args, &mut probe);
         let doc = format!(
             "{{\"bench\":\"bench-io\",\"model\":\"7B\",\
              \"chunk_bytes\":{},\"coalesce_bytes\":{},\
              \"stager_lanes\":{},\
+             \"io_uring\":{},\"uring_queue_depth\":{},\
              \"engines\":[{}]}}\n",
             BENCH_CHUNK_BYTES,
             BENCH_COALESCE_BYTES,
             EngineConfig::default().stager_lanes,
+            probe.io_uring,
+            probe.uring_queue_depth,
             rows.join(",")
         );
         std::fs::write(path, doc)?;
@@ -711,9 +749,14 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
     let mut ecfg = EngineConfig::with_dir(&dir);
     ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
     ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
+    uring_flags(args, &mut ecfg);
+    let uring_requested = ecfg.io_uring;
+    let uring_depth = ecfg.uring_queue_depth;
     let mut eng = DataStatesEngine::new(ecfg)?;
     let ticket = eng.begin(0, &state)?;
     ticket.wait_persisted()?;
+    // the engine's pipeline carries the ring (when requested and the
+    // probe passed), so every restore below reads through it
     let pipeline = eng.pipeline();
 
     println!(
@@ -765,7 +808,10 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                  \"gap_bytes_read\":{},\
                  \"time_to_first_tensor_s\":{:.6},\
                  \"time_to_complete_s\":{:.6},\
-                 \"read_busy_s\":{:.6},\"h2d_lanes\":[{}]}}",
+                 \"read_busy_s\":{:.6},\
+                 \"uring_submits\":{},\"uring_sqes\":{},\
+                 \"uring_completions\":{},\"syscalls_avoided\":{},\
+                 \"h2d_lanes\":[{}]}}",
                 m.read_extents,
                 m.gather_reads,
                 m.extents_merged,
@@ -774,6 +820,10 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                 m.time_to_first_tensor_s,
                 m.time_to_complete_s,
                 m.read_busy_s,
+                m.uring_submits,
+                m.uring_sqes,
+                m.uring_completions,
+                m.syscalls_avoided,
                 lanes_json.join(","),
             ));
         }
@@ -793,12 +843,28 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
             ));
         }
     }
+    if uring_requested {
+        let u = pipeline.uring_stats().unwrap_or_default();
+        if u.active() {
+            println!(
+                "io_uring: {} submits / {} sqes ({} syscalls avoided)",
+                u.submits, u.sqes, u.syscalls_avoided
+            );
+        } else {
+            println!(
+                "io_uring: requested but unavailable here; ran the \
+                 thread-pool fallback"
+            );
+        }
+    }
     if let Some(path) = args.get("json") {
         let doc = format!(
             "{{\"bench\":\"bench-restore\",\"model\":\"7B\",\
              \"chunk_bytes\":{BENCH_CHUNK_BYTES},\
              \"coalesce_bytes\":{BENCH_COALESCE_BYTES},\
              \"restore_lanes_default\":{},\
+             \"io_uring\":{uring_requested},\
+             \"uring_queue_depth\":{uring_depth},\
              \"rows\":[{}],\"sim\":[{}]}}\n",
             EngineConfig::default().restore_lanes,
             rows.join(","),

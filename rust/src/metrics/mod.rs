@@ -304,6 +304,16 @@ pub struct RestoreMetrics {
     pub h2d_lanes: Vec<LaneStat>,
     /// Reader-pool busy time (union across reader threads).
     pub read_busy_s: f64,
+    /// io_uring submission syscalls the pass's reads cost (0 on the
+    /// thread-pool fallback path — see `storage::UringStats`).
+    pub uring_submits: u64,
+    /// SQEs the pass's reads pushed (one per gather slice).
+    pub uring_sqes: u64,
+    /// CQEs reaped for the pass's reads.
+    pub uring_completions: u64,
+    /// Read syscalls saved versus one positioned read per slice:
+    /// `uring_sqes - uring_submits`, floored at zero.
+    pub syscalls_avoided: u64,
 }
 
 /// Live byte counters for one checkpoint session, updated by the D2H

@@ -797,6 +797,26 @@ impl ReadEngine {
 
     // ---- pass execution --------------------------------------------------
 
+    /// Sum the ring counters of every DISTINCT source pipeline (reshard
+    /// passes read several ranks' pipelines; same-pipeline sources must
+    /// not double-count).
+    fn uring_snapshot(sources: &[Source<'_>])
+        -> crate::storage::UringStats {
+        let mut seen: Vec<*const TierPipeline> = Vec::new();
+        let mut total = crate::storage::UringStats::default();
+        for s in sources {
+            let p: *const TierPipeline = s.pipeline;
+            if seen.contains(&p) {
+                continue;
+            }
+            seen.push(p);
+            if let Some(st) = s.pipeline.uring_stats() {
+                total.merge(&st);
+            }
+        }
+        total
+    }
+
     /// Run one restore pass: spawn the upload lanes and the reader pool,
     /// then run `feed` (the planner) on the calling thread, streaming
     /// sealed gather runs into the pool while earlier runs execute.
@@ -806,6 +826,7 @@ impl ReadEngine {
         F: for<'s, 'e> FnOnce(&mut PlanCtx<'s, 'e>)
             -> anyhow::Result<()>,
     {
+        let uring0 = Self::uring_snapshot(sources);
         let shared = ExecShared {
             timeline: &self.timeline,
             t0: self.timeline.now_s(),
@@ -881,6 +902,17 @@ impl ReadEngine {
             shared.extents_merged.load(Ordering::Acquire);
         m.bytes += shared.bytes.load(Ordering::Acquire);
         m.gap_bytes_read += shared.gap_bytes.load(Ordering::Acquire);
+        // ring traffic attributable to this pass (delta across the
+        // pass; includes concurrent same-ring writers, if any — the
+        // benches restore from quiescent engines)
+        let uring1 = Self::uring_snapshot(sources);
+        m.uring_submits +=
+            uring1.submits.saturating_sub(uring0.submits);
+        m.uring_sqes += uring1.sqes.saturating_sub(uring0.sqes);
+        m.uring_completions +=
+            uring1.completions.saturating_sub(uring0.completions);
+        m.syscalls_avoided +=
+            uring1.syscalls_avoided.saturating_sub(uring0.syscalls_avoided);
         m.time_to_complete_s = total;
         m.time_to_first_tensor_s = shared
             .first_tensor
@@ -940,14 +972,22 @@ impl ReadEngine {
     fn try_run(r: &Resolved, run: &GatherRun, src: &Source<'_>,
                lane_txs: &[Sender<UploadJob>], shared: &ExecShared<'_>,
                reader_idx: usize) -> anyhow::Result<()> {
-        // filesystem tiers: bounded concurrent readers, per tier
-        let sem = (r.kind == TierKind::LocalFs).then(|| {
+        // filesystem tiers: bounded concurrent readers, per tier —
+        // unless the reader is async (io_uring): the ring's completion
+        // slots ARE the real concurrency bound, so a thread permit
+        // would only serialize submissions behind an artificial cap
+        let is_async = r.reader.is_async();
+        let sem = (r.kind == TierKind::LocalFs && !is_async).then(|| {
             shared.fs_permit(&src.pipeline.tiers()[r.tier])
         });
         let _guard = sem.as_ref().map(|s| s.acquire());
-        // reads charge the SAME token bucket as the tier's writes
+        // reads charge the SAME token bucket as the tier's writes; the
+        // async path charges at completion time (after the gather
+        // lands), matching the ring's write-side discipline
         if let Some(th) = &r.throttle {
-            th.acquire(run.span);
+            if !is_async {
+                th.acquire(run.span);
+            }
         }
         let t0 = shared.timeline.now_s();
         if r.kind == TierKind::HostCache && !run.overlap {
@@ -1005,6 +1045,11 @@ impl ReadEngine {
                 let mut dsts: Vec<&mut [u8]> = vec![b];
                 r.reader.read_gather_at(run.start, &mut dsts)
             })?;
+            if is_async {
+                if let Some(th) = &r.throttle {
+                    th.acquire(run.span);
+                }
+            }
             shared.timeline.record_on_lane(Tier::Read, &src.rel,
                                            run.span, t0,
                                            shared.timeline.now_s(),

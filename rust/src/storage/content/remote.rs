@@ -24,6 +24,7 @@
 //! [`Throttle`] (`--tiers remote:<latency_ms>:<mbps>`).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::manifest::FileEntry;
@@ -35,12 +36,19 @@ use crate::storage::{Backend, BackendFile, ReadAt, Throttle, TierKind,
 /// Manifest file name at the remote root.
 const CONTENT_MANIFEST: &str = "CONTENT.manifest";
 
+/// Default per-handle chunk-LRU capacity when the pipeline has not
+/// announced its reader fan-out yet.
+const DEFAULT_READ_LRU: usize = 4;
+
 struct Shared {
     store: ChunkStore,
     manifest: ContentManifest,
     chunk_bytes: usize,
     latency_s: f64,
     throttle: Option<Arc<Throttle>>,
+    /// Per-handle chunk-LRU capacity; sized from the restore engine's
+    /// reader concurrency via `Backend::set_read_concurrency`.
+    read_lru: AtomicUsize,
 }
 
 impl Shared {
@@ -123,6 +131,7 @@ impl RemoteStore {
                 chunk_bytes: chunk_bytes.max(64),
                 latency_s: latency_s.max(0.0),
                 throttle: throttle_bps.map(|b| Arc::new(Throttle::new(b))),
+                read_lru: AtomicUsize::new(DEFAULT_READ_LRU),
             }),
         })
     }
@@ -176,6 +185,37 @@ impl BackendFile for RemoteFile {
     }
 }
 
+/// Tiny move-to-front LRU of decoded chunks. The old single-slot cache
+/// thrashed under the parallel `ReadEngine`: concurrent gather runs on
+/// one handle interleave their chunk walks, and each run kept evicting
+/// the other's chunk — every extent re-fetched and re-verified its
+/// covering chunk. Capacity follows the announced reader concurrency.
+struct ChunkLru {
+    cap: usize,
+    /// `(chunk_index, decoded bytes)`, most recent first.
+    entries: Vec<(usize, Arc<Vec<u8>>)>,
+}
+
+impl ChunkLru {
+    fn new(cap: usize) -> ChunkLru {
+        ChunkLru { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    fn get(&mut self, i: usize) -> Option<Arc<Vec<u8>>> {
+        let pos = self.entries.iter().position(|(ci, _)| *ci == i)?;
+        let hit = self.entries.remove(pos);
+        let data = hit.1.clone();
+        self.entries.insert(0, hit);
+        Some(data)
+    }
+
+    fn put(&mut self, i: usize, data: Arc<Vec<u8>>) {
+        self.entries.retain(|(ci, _)| *ci != i);
+        self.entries.insert(0, (i, data));
+        self.entries.truncate(self.cap);
+    }
+}
+
 /// Manifest-planned reader: every chunk fetch is checksum-verified by
 /// the store; errors name the file and the chunk id.
 struct RemoteReader {
@@ -184,26 +224,23 @@ struct RemoteReader {
     len: u64,
     /// `(start_offset, id)` per chunk, ascending.
     chunks: Vec<(u64, ChunkId)>,
-    /// Most recently fetched chunk (index, decoded bytes) — restore
-    /// reads walk a file in many small extents, and without this every
-    /// extent would re-fetch and re-verify its covering chunk.
-    cache: Mutex<Option<(usize, Arc<Vec<u8>>)>>,
+    /// Recently fetched chunks — restore reads walk a file in many
+    /// small extents, and without this every extent would re-fetch and
+    /// re-verify its covering chunk.
+    cache: Mutex<ChunkLru>,
 }
 
 impl RemoteReader {
     fn fetch(&self, i: usize) -> anyhow::Result<Arc<Vec<u8>>> {
-        let mut cache = self.cache.lock().unwrap();
-        if let Some((ci, data)) = cache.as_ref() {
-            if *ci == i {
-                return Ok(data.clone());
-            }
+        if let Some(data) = self.cache.lock().unwrap().get(i) {
+            return Ok(data);
         }
         let id = self.chunks[i].1;
         let data = self.shared.store.get(id).map_err(|e| {
             anyhow::anyhow!("{}: {e:#}", self.rel)
         })?;
         let data = Arc::new(data);
-        *cache = Some((i, data.clone()));
+        self.cache.lock().unwrap().put(i, data.clone());
         Ok(data)
     }
 }
@@ -242,6 +279,54 @@ impl ReadAt for RemoteReader {
     fn len(&self) -> anyhow::Result<u64> {
         Ok(self.len)
     }
+
+    /// One chunk walk serves the whole coalesced run: the covering
+    /// chunk is located once (`partition_point`), then each decoded
+    /// chunk is scattered across every destination window it overlaps
+    /// — a chunk spanning a window boundary is fetched and verified
+    /// once, not once per window.
+    fn read_gather_at(&self, offset: u64, dsts: &mut [&mut [u8]])
+        -> anyhow::Result<()> {
+        let total: u64 = dsts.iter().map(|d| d.len() as u64).sum();
+        anyhow::ensure!(
+            offset + total <= self.len,
+            "{}: gather read past EOF ({} + {} > {})",
+            self.rel, offset, total, self.len
+        );
+        if total == 0 {
+            return Ok(());
+        }
+        let mut i = self.chunks.partition_point(|(start, id)| {
+            start + id.len as u64 <= offset
+        });
+        let end = offset + total;
+        let mut pos = offset;
+        let mut di = 0usize; // destination window being filled
+        let mut dpos = 0usize; // bytes already filled within it
+        while pos < end {
+            let (start, id) = self.chunks[i];
+            let data = self.fetch(i)?;
+            let mut src = (pos - start) as usize;
+            let mut take = (id.len as usize - src)
+                .min((end - pos) as usize);
+            while take > 0 {
+                if dsts[di].len() == dpos {
+                    di += 1;
+                    dpos = 0;
+                    continue;
+                }
+                let n = take.min(dsts[di].len() - dpos);
+                dsts[di][dpos..dpos + n]
+                    .copy_from_slice(&data[src..src + n]);
+                dpos += n;
+                src += n;
+                pos += n as u64;
+                take -= n;
+            }
+            i += 1;
+        }
+        Ok(())
+    }
 }
 
 impl Backend for RemoteStore {
@@ -275,7 +360,8 @@ impl Backend for RemoteStore {
             rel: rel.to_string(),
             len: entry.len,
             chunks,
-            cache: Mutex::new(None),
+            cache: Mutex::new(ChunkLru::new(
+                self.shared.read_lru.load(Ordering::Acquire))),
         }))
     }
 
@@ -357,6 +443,11 @@ impl Backend for RemoteStore {
 
     fn throttle(&self) -> Option<Arc<Throttle>> {
         self.shared.throttle.clone()
+    }
+
+    fn set_read_concurrency(&self, readers: usize) {
+        self.shared.read_lru.store(
+            readers.max(DEFAULT_READ_LRU), Ordering::Release);
     }
 }
 
@@ -526,6 +617,84 @@ mod tests {
         let mut back = vec![0u8; 700];
         r.read_exact_at(&mut back, 0).unwrap();
         assert_eq!(back, payload[..700]);
+    }
+
+    #[test]
+    fn gather_read_matches_scalar_reads_and_walks_once() {
+        let dir = TempDir::new("remote-gather").unwrap();
+        let rs = open_store(dir.path(), 512);
+        let mut payload = vec![0u8; 8 << 10];
+        crate::util::Rng::new(61).fill_bytes(&mut payload);
+        let f = rs.create("v000001/w.pt").unwrap();
+        f.write_at(0, &payload).unwrap();
+        f.finalize().unwrap();
+        let r = rs.open("v000001/w.pt").unwrap();
+        // windows straddle chunk boundaries and include empties
+        let mut a = vec![0u8; 300];
+        let mut b = vec![0u8; 0];
+        let mut c = vec![0u8; 1500];
+        let mut d = vec![0u8; 7];
+        r.read_gather_at(
+            100,
+            &mut [&mut a[..], &mut b[..], &mut c[..], &mut d[..]],
+        )
+        .unwrap();
+        let mut flat = a.clone();
+        flat.extend_from_slice(&c);
+        flat.extend_from_slice(&d);
+        assert_eq!(flat, payload[100..100 + flat.len()]);
+        // gather past EOF errors and names the file
+        let mut tail = vec![0u8; 64];
+        let err = r
+            .read_gather_at(payload.len() as u64 - 10,
+                            &mut [&mut tail[..]])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("v000001/w.pt"), "{err}");
+    }
+
+    #[test]
+    fn chunk_lru_survives_interleaved_runs() {
+        // the single-slot regression: two interleaved walks kept
+        // evicting each other's chunk
+        let mut lru = ChunkLru::new(2);
+        let c0 = Arc::new(vec![0u8]);
+        let c1 = Arc::new(vec![1u8]);
+        lru.put(0, c0.clone());
+        lru.put(1, c1.clone());
+        // both stay resident under interleaved access
+        assert!(lru.get(0).is_some());
+        assert!(lru.get(1).is_some());
+        assert!(lru.get(0).is_some());
+        // capacity evicts the least recently used (1, after 0 was
+        // touched last)
+        lru.put(2, Arc::new(vec![2u8]));
+        assert!(lru.get(1).is_none());
+        assert!(lru.get(0).is_some());
+        assert!(lru.get(2).is_some());
+        // re-putting an index never duplicates it
+        lru.put(0, c0);
+        assert_eq!(lru.entries.len(), 2);
+    }
+
+    #[test]
+    fn read_concurrency_sizes_the_handle_lru() {
+        let dir = TempDir::new("remote-lru-size").unwrap();
+        let rs = open_store(dir.path(), 256);
+        let f = rs.create("x").unwrap();
+        let nines = vec![9u8; 4 << 10];
+        f.write_at(0, &nines).unwrap();
+        f.finalize().unwrap();
+        rs.set_read_concurrency(16);
+        let r = rs.open("x").unwrap();
+        let mut buf = vec![0u8; 4 << 10];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert!(buf.iter().all(|&b| b == 9));
+        assert_eq!(rs.shared.read_lru.load(Ordering::Acquire), 16);
+        // never sized below the default floor
+        rs.set_read_concurrency(1);
+        assert_eq!(rs.shared.read_lru.load(Ordering::Acquire),
+                   DEFAULT_READ_LRU);
     }
 
     #[test]

@@ -1,22 +1,34 @@
 //! Filesystem-backed storage tier.
 
+use std::any::Any;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use super::{Backend, BackendFile, ReadAt, Throttle, TierKind};
+use super::{Backend, BackendFile, GatherSubmit, IoDone, ReadAt,
+            Throttle, TierKind, UringContext, UringStats};
+use crate::provider::Bytes;
 
 /// A storage tier rooted at a directory of a real filesystem — the
 /// terminal (durable) tier in most pipelines. `finalize` is an fsync.
+///
+/// With [`LocalFs::with_uring`], gather writes and gather reads go
+/// through a per-backend io_uring ([`UringContext`]): flush workers and
+/// restore readers become submitters, a single reaper thread drives
+/// completions, and the tier [`Throttle`] is charged at completion
+/// time. The runtime probe falling back keeps this byte-identical to
+/// the plain thread-pool backend.
 pub struct LocalFs {
     root: PathBuf,
     throttle: Option<Arc<Throttle>>,
+    ring: Option<Arc<UringContext>>,
 }
 
 impl LocalFs {
     pub fn new(root: impl Into<PathBuf>) -> LocalFs {
-        LocalFs { root: root.into(), throttle: None }
+        LocalFs { root: root.into(), throttle: None, ring: None }
     }
 
     /// Cap the tier's aggregate write bandwidth (contention studies).
@@ -24,7 +36,27 @@ impl LocalFs {
         LocalFs {
             root: root.into(),
             throttle: Some(Arc::new(Throttle::new(bps))),
+            ring: None,
         }
+    }
+
+    /// io_uring-backed variant: probe a ring of `depth` entries and use
+    /// it for gather I/O; on kernels or sandboxes without io_uring the
+    /// probe fails and this silently degrades to the thread-pool path
+    /// (`ring: None` — the exact same code as [`LocalFs::new`]).
+    pub fn with_uring(root: impl Into<PathBuf>,
+                      throttle_bps: Option<f64>, depth: usize)
+        -> LocalFs {
+        LocalFs {
+            root: root.into(),
+            throttle: throttle_bps.map(|b| Arc::new(Throttle::new(b))),
+            ring: UringContext::new(depth).ok(),
+        }
+    }
+
+    /// Is the ring actually live (probe succeeded)?
+    pub fn uring_active(&self) -> bool {
+        self.ring.is_some()
     }
 
     pub fn root(&self) -> &Path {
@@ -39,6 +71,7 @@ impl LocalFs {
 struct LocalFile {
     file: File,
     throttle: Option<Arc<Throttle>>,
+    ring: Option<Arc<UringContext>>,
     /// Serializes gather writes: vectored I/O goes through the shared
     /// file cursor (`seek` + `write_vectored`), unlike the cursor-free
     /// `pwrite`-style `write_at` path, so concurrent gathers on one
@@ -101,9 +134,65 @@ impl BackendFile for LocalFile {
         Ok(())
     }
 
+    /// Queue the run on the ring when one is live; the tier throttle
+    /// is charged from the completion reaper (the device, not the
+    /// submitter, pays for the bytes). Without a ring, ownership goes
+    /// back to the caller for the byte-identical blocking path.
+    ///
+    /// Safety of the async path: the flush pool only finalizes (and
+    /// then drops, closing the fd) a file once every issued write has
+    /// completed (`FlushFile` quiescence), so the kernel never sees a
+    /// stale fd; the run keeps the extents alive until its last CQE.
+    fn submit_write_gather_at(&self, offset: u64, extents: Vec<Bytes>,
+                              done: IoDone) -> GatherSubmit {
+        let Some(ring) = &self.ring else {
+            return GatherSubmit::Blocking(extents, done);
+        };
+        let total: u64 = extents.iter().map(|e| e.len() as u64).sum();
+        let throttle = self.throttle.clone();
+        let done: IoDone = Box::new(move |r: anyhow::Result<()>| {
+            if r.is_ok() {
+                if let Some(t) = &throttle {
+                    t.acquire(total);
+                }
+            }
+            done(r);
+        });
+        ring.submit_write(self.file.as_raw_fd(), offset, extents, done);
+        GatherSubmit::Submitted
+    }
+
     fn finalize(&self) -> anyhow::Result<()> {
         self.file.sync_all()?;
         Ok(())
+    }
+}
+
+/// Positioned reader over an io_uring: gather reads are submitted as
+/// one batched run and completed by the reaper (the caller parks on
+/// the run's notifier); scalar reads stay on the plain `pread` path.
+struct UringReader {
+    file: File,
+    ring: Arc<UringContext>,
+}
+
+impl ReadAt for UringReader {
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64)
+        -> anyhow::Result<()> {
+        ReadAt::read_exact_at(&self.file, buf, offset)
+    }
+
+    fn len(&self) -> anyhow::Result<u64> {
+        ReadAt::len(&self.file)
+    }
+
+    fn read_gather_at(&self, offset: u64, dsts: &mut [&mut [u8]])
+        -> anyhow::Result<()> {
+        self.ring.read_gather(self.file.as_raw_fd(), offset, dsts)
+    }
+
+    fn is_async(&self) -> bool {
+        true
     }
 }
 
@@ -120,12 +209,19 @@ impl Backend for LocalFs {
         Ok(Box::new(LocalFile {
             file: File::create(path)?,
             throttle: self.throttle.clone(),
+            ring: self.ring.clone(),
             cursor: std::sync::Mutex::new(()),
         }))
     }
 
     fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
-        Ok(Box::new(File::open(self.abs(rel))?))
+        let file = File::open(self.abs(rel))?;
+        Ok(match &self.ring {
+            Some(ring) => {
+                Box::new(UringReader { file, ring: ring.clone() })
+            }
+            None => Box::new(file),
+        })
     }
 
     fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
@@ -189,6 +285,17 @@ impl Backend for LocalFs {
     fn throttle(&self) -> Option<Arc<Throttle>> {
         self.throttle.clone()
     }
+
+    fn uring_stats(&self) -> Option<UringStats> {
+        self.ring.as_ref().map(|r| r.stats())
+    }
+
+    fn register_pinned(&self, ptr: *const u8, len: usize,
+                       keep: Arc<dyn Any + Send + Sync>) {
+        if let Some(ring) = &self.ring {
+            ring.register_pinned(ptr, len, keep);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +354,49 @@ mod tests {
         let got = std::fs::read(dir.path().join("g")).unwrap();
         assert_eq!(&got[..3], &[8u8; 3]);
         assert_eq!(&got[3..7], &[9u8; 4]);
+    }
+
+    #[test]
+    fn with_uring_roundtrips_whether_or_not_the_probe_succeeds() {
+        // On sandboxed kernels the probe fails and this IS the
+        // thread-pool path; on real kernels the ring serves the gather
+        // I/O. Output must be identical either way.
+        let dir = crate::util::TempDir::new("localfs-uring").unwrap();
+        let fs = LocalFs::with_uring(dir.path(), None, 8);
+        let f = fs.create("u").unwrap();
+        let extents = vec![
+            Bytes::from_vec(vec![5u8; 100]),
+            Bytes::from_vec(vec![6u8; 4096]),
+        ];
+        let (tx, rx) = std::sync::mpsc::channel();
+        match f.submit_write_gather_at(
+            3,
+            extents,
+            Box::new(move |r| tx.send(r).unwrap()),
+        ) {
+            GatherSubmit::Submitted => {
+                assert!(fs.uring_active());
+                rx.recv_timeout(std::time::Duration::from_secs(10))
+                    .unwrap()
+                    .unwrap();
+            }
+            GatherSubmit::Blocking(extents, done) => {
+                assert!(!fs.uring_active());
+                let slices: Vec<&[u8]> =
+                    extents.iter().map(|b| b.as_slice()).collect();
+                done(f.write_gather_at(3, &slices));
+                rx.recv().unwrap().unwrap();
+            }
+        }
+        f.finalize().unwrap();
+        let r = fs.open("u").unwrap();
+        let mut a = vec![0u8; 100];
+        let mut b = vec![0u8; 4096];
+        r.read_gather_at(3, &mut [&mut a[..], &mut b[..]]).unwrap();
+        assert!(a.iter().all(|&x| x == 5));
+        assert!(b.iter().all(|&x| x == 6));
+        assert_eq!(r.is_async(), fs.uring_active());
+        assert_eq!(fs.uring_stats().is_some(), fs.uring_active());
     }
 
     #[test]

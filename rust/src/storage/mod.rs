@@ -26,13 +26,17 @@ pub mod content;
 pub mod host_cache;
 pub mod local_fs;
 pub mod pipeline;
+pub mod uring;
 
 pub use content::RemoteStore;
 pub use host_cache::HostCache;
 pub use local_fs::LocalFs;
 pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
                    VersionDrainJob};
+pub use uring::{UringContext, UringStats};
 
+use crate::provider::Bytes;
+use std::any::Any;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -86,6 +90,10 @@ pub struct TierSpec {
     /// Content-chunk size for remote tiers; `None` uses
     /// [`content::DEFAULT_CONTENT_CHUNK_BYTES`].
     pub content_chunk_bytes: Option<usize>,
+    /// io_uring queue depth for `LocalFs` tiers; `None` keeps the
+    /// thread-pool path. The runtime probe falls back silently when
+    /// the kernel or sandbox refuses the ring.
+    pub uring_depth: Option<usize>,
 }
 
 impl TierSpec {
@@ -95,6 +103,7 @@ impl TierSpec {
             throttle_bps: None,
             latency_s: 0.0,
             content_chunk_bytes: None,
+            uring_depth: None,
         }
     }
 
@@ -104,6 +113,7 @@ impl TierSpec {
             throttle_bps: None,
             latency_s: 0.0,
             content_chunk_bytes: None,
+            uring_depth: None,
         }
     }
 
@@ -115,6 +125,7 @@ impl TierSpec {
             throttle_bps: None,
             latency_s,
             content_chunk_bytes: None,
+            uring_depth: None,
         }
     }
 
@@ -127,6 +138,13 @@ impl TierSpec {
     /// Set the remote tier's content-chunk size.
     pub fn content_chunks(mut self, bytes: usize) -> TierSpec {
         self.content_chunk_bytes = Some(bytes);
+        self
+    }
+
+    /// Ask `LocalFs` tiers for an io_uring of `depth` entries (falls
+    /// back to the thread-pool path when the probe fails).
+    pub fn uring(mut self, depth: usize) -> TierSpec {
+        self.uring_depth = Some(depth);
         self
     }
 }
@@ -162,6 +180,15 @@ pub trait ReadAt: Send + Sync {
             off += d.len() as u64;
         }
         Ok(())
+    }
+
+    /// True when gather reads are served by a completion-driven ring
+    /// (io_uring) rather than a blocking syscall per call. The restore
+    /// engine skips its `fs_readers` semaphore for async readers — the
+    /// ring's queue depth is the real concurrency limit — and charges
+    /// the tier throttle at completion time instead of submission time.
+    fn is_async(&self) -> bool {
+        false
     }
 }
 
@@ -269,6 +296,22 @@ pub struct UploadStats {
     pub dedup_bytes_skipped: u64,
 }
 
+/// Completion callback for an asynchronously submitted write: fires
+/// exactly once, from the ring's completion reaper (async path) or
+/// inline after the blocking write (fallback path).
+pub type IoDone = Box<dyn FnOnce(anyhow::Result<()>) + Send>;
+
+/// Outcome of [`BackendFile::submit_write_gather_at`]: either the
+/// backend queued the run on its ring (the callback fires later from
+/// the completion reaper), or it has no async path and hands the
+/// extents AND the callback straight back so the caller runs the
+/// byte-identical blocking gather write itself — one completion path,
+/// two transports.
+pub enum GatherSubmit {
+    Submitted,
+    Blocking(Vec<Bytes>, IoDone),
+}
+
 /// A file being written on one tier. Positioned writes at
 /// provider-assigned offsets (no shared cursor, writers never contend on
 /// position), then one `finalize` making it as durable as the tier gets
@@ -293,6 +336,20 @@ pub trait BackendFile: Send + Sync {
             off += e.len() as u64;
         }
         Ok(())
+    }
+
+    /// Asynchronous gather write: queue `extents` (landing back-to-back
+    /// at `offset`) and return immediately; `done` fires from the
+    /// backend's completion reaper once every extent is on stable
+    /// storage, charging the tier [`Throttle`] at completion time. The
+    /// default returns [`GatherSubmit::Blocking`] — ownership of the
+    /// extents and the callback goes back to the caller, which performs
+    /// the synchronous [`BackendFile::write_gather_at`] and invokes
+    /// `done` itself. Only the io_uring-backed `LocalFs` file overrides
+    /// this.
+    fn submit_write_gather_at(&self, _offset: u64, extents: Vec<Bytes>,
+                              done: IoDone) -> GatherSubmit {
+        GatherSubmit::Blocking(extents, done)
     }
 
     fn finalize(&self) -> anyhow::Result<()>;
@@ -352,6 +409,23 @@ pub trait Backend: Send + Sync {
     fn throttle(&self) -> Option<Arc<Throttle>> {
         None
     }
+
+    /// Ring attribution counters, when this tier runs an io_uring.
+    fn uring_stats(&self) -> Option<UringStats> {
+        None
+    }
+
+    /// Hint how many concurrent readers the restore engine will run
+    /// against this tier (the remote tier sizes its per-handle chunk
+    /// LRU from this so parallel gather runs stop evicting each
+    /// other's chunks).
+    fn set_read_concurrency(&self, _readers: usize) {}
+
+    /// Offer a pinned slab for fixed-buffer registration
+    /// (`IORING_REGISTER_BUFFERS`); `keep` ties the slab's lifetime to
+    /// the ring. No-op on tiers without a ring.
+    fn register_pinned(&self, _ptr: *const u8, _len: usize,
+                       _keep: Arc<dyn Any + Send + Sync>) {}
 }
 
 /// Token-bucket-style bandwidth cap shared by every writer of one tier:

@@ -27,7 +27,7 @@ use std::time::Instant;
 
 use super::content::{RemoteStore, DEFAULT_CONTENT_CHUNK_BYTES};
 use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt, TierKind,
-            TierSpec};
+            TierSpec, UringStats};
 use crate::engine::ticket::CkptSession;
 use crate::metrics::{Tier, Timeline};
 use crate::restore::RestoredFile;
@@ -453,9 +453,15 @@ impl TierPipeline {
                     } else {
                         ckpt_dir.join(format!("tier{i}"))
                     };
-                    match spec.throttle_bps {
-                        Some(bps) => Arc::new(LocalFs::throttled(root, bps)),
-                        None => Arc::new(LocalFs::new(root)),
+                    match (spec.uring_depth, spec.throttle_bps) {
+                        // with_uring probes at construction and falls
+                        // back to the thread-pool path on refusal
+                        (Some(depth), bps) => Arc::new(
+                            LocalFs::with_uring(root, bps, depth)),
+                        (None, Some(bps)) => {
+                            Arc::new(LocalFs::throttled(root, bps))
+                        }
+                        (None, None) => Arc::new(LocalFs::new(root)),
                     }
                 }
                 TierKind::Remote => {
@@ -705,7 +711,34 @@ impl TierPipeline {
     /// `reader_threads` take effect on every default restore path).
     pub fn set_restore_config(&self,
                               cfg: crate::restore::ReadEngineConfig) {
+        // tiers that size per-handle state from reader concurrency
+        // (the remote chunk LRU) hear about the new fan-out
+        for t in &self.shared.tiers {
+            t.set_read_concurrency(cfg.readers.max(cfg.fs_readers));
+        }
         *self.shared.read_cfg.lock().unwrap() = cfg;
+    }
+
+    /// Ring attribution summed across every tier that runs an io_uring
+    /// (`None` when no tier does — probe refused or not requested).
+    pub fn uring_stats(&self) -> Option<UringStats> {
+        let mut agg: Option<UringStats> = None;
+        for t in &self.shared.tiers {
+            if let Some(s) = t.uring_stats() {
+                agg.get_or_insert_with(UringStats::default)
+                    .merge(&s);
+            }
+        }
+        agg
+    }
+
+    /// Offer the pinned staging slab to every tier for fixed-buffer
+    /// registration (no-op on tiers without a ring).
+    pub fn register_pinned(&self, ptr: *const u8, len: usize,
+                           keep: Arc<dyn std::any::Any + Send + Sync>) {
+        for t in &self.shared.tiers {
+            t.register_pinned(ptr, len, keep.clone());
+        }
     }
 
     /// The restore-engine knobs currently installed on this pipeline.
