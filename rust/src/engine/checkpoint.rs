@@ -457,6 +457,18 @@ impl DataStatesEngine {
         })
     }
 
+    /// Serve this LIVE engine's checkpoints to concurrent readers: the
+    /// returned [`crate::serve::CheckpointService`] wraps the engine's
+    /// own pipeline `Arc`, so served reads share the engine's tiers,
+    /// manifest and throttles — reads contend with in-flight
+    /// checkpoint writes on the same modeled devices, which is exactly
+    /// what the serving QoS weights arbitrate.
+    pub fn serve(&self, cfg: crate::serve::ServeConfig)
+        -> Arc<crate::serve::CheckpointService> {
+        crate::serve::CheckpointService::new(
+            vec![self.pipeline.clone()], cfg)
+    }
+
     /// Admit one requested checkpoint into the pump's active set; a
     /// failed activation (file creation on the landing tier) fails its
     /// session.

@@ -803,6 +803,218 @@ pub fn uring() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Serving-at-scale sweep: run cache on/off × concurrent readers, every
+/// session a real restore or reshard through ONE shared, deliberately
+/// throttled tier pipeline with a live writer checkpointing mid-flight.
+/// Real plane: a scaled 3B rank is served to 8 and 64 concurrent
+/// sessions (mixed interactive/standard/background QoS; every eighth
+/// session a reshard) through `DataStatesEngine::serve`; every restore
+/// is verified byte-identical against the source state and every
+/// reshard against the flattened logical source. Asserted: at 64
+/// readers the gather-run cache hit rate exceeds 50% and the p99
+/// time-to-first-tensor is strictly below the cache-off ablation
+/// (cache hits skip both the tier read and its throttle charge);
+/// per-request cache accounting (`hits + misses == runs` cached,
+/// `== 0` uncached); admission queueing is visible at 64 sessions over
+/// 16 inflight slots. Sim plane: the calibrated serving model
+/// (`sim::serve_time_s`) — tail TTFT strictly grows with fan-out and
+/// strictly falls with cache hit fraction.
+pub fn serve() -> anyhow::Result<()> {
+    hr("Serving at scale: shared pipeline × run cache × QoS");
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::restore::reshard::CheckpointWorld;
+    use crate::serve::{Qos, ServeConfig};
+    use crate::state::index::flatten_states;
+    use crate::state::partition::{census as mk_census, materialize};
+    use crate::storage::TierSpec;
+    use crate::util::bench::percentiles;
+    use std::sync::Arc;
+
+    let model = LlmConfig::by_name("3B").unwrap();
+    let from = Parallelism::new(1, 1, 1);
+    let cs = mk_census(&model, &from);
+    let state = materialize(&cs.ranks[0], 1e-4, 1.0, 41);
+    let flat_src =
+        Arc::new(flatten_states(std::slice::from_ref(&state))?);
+    let state = Arc::new(state);
+
+    let tmp = crate::util::TempDir::new("ds-serve")?;
+    let mut ecfg = EngineConfig::with_dir(tmp.path());
+    ecfg.chunk_bytes = 64 << 10;
+    ecfg.coalesce_bytes = 1 << 20;
+    // one deliberately tight disk: every tier read charges this
+    // throttle, cache hits skip it — the serving effect under test
+    ecfg.tiers = vec![TierSpec::local_fs().throttled(256e6)];
+    let mut eng = DataStatesEngine::new(ecfg)?;
+    eng.begin(0, &state)?.wait_persisted()?;
+
+    // the reshard sessions' read plan (index + plan are pure data;
+    // built once, executed through the service's shared pipeline)
+    let world = CheckpointWorld::from_pipelines(vec![eng.pipeline()]);
+    let index = world.index(0)?;
+    let plan = Arc::new(crate::restore::plan_reshard(
+        &model, &Parallelism::new(2, 1, 1), &index)?);
+
+    println!(
+        "{:<7}{:>9}{:>7}{:>8}{:>8}{:>7}{:>13}{:>13}{:>13}{:>13}",
+        "cache", "readers", "reqs", "hits", "misses", "hit%",
+        "ttft p50 ms", "ttft p99 ms", "done p99 ms", "wait p99 ms"
+    );
+    let mut cell = 0u64;
+    // p99 TTFT of the 64-reader cells, [cache on, cache off]
+    let mut tail64 = [f64::NAN; 2];
+    for (ci, cache_on) in [true, false].into_iter().enumerate() {
+        for readers in [8usize, 64] {
+            cell += 1;
+            let svc = eng.serve(ServeConfig {
+                run_cache_bytes: if cache_on { 256 << 20 } else { 0 },
+                max_inflight: 16,
+                ..Default::default()
+            });
+            let handles: Vec<_> = (0..readers)
+                .map(|i| {
+                    let svc = svc.clone();
+                    let state = state.clone();
+                    let plan = plan.clone();
+                    let flat = flat_src.clone();
+                    std::thread::spawn(
+                        move || -> anyhow::Result<(f64, f64, f64)> {
+                            let qos = Qos::ALL[i % 3];
+                            let (wait_s, rep) = if i % 8 == 5 {
+                                let sp =
+                                    svc.execute_plan(0, &plan, qos)?;
+                                anyhow::ensure!(
+                                    flatten_states(&sp.ranks)? == *flat,
+                                    "reshard session {i} not \
+                                     byte-identical"
+                                );
+                                (sp.wait_s, sp.report)
+                            } else {
+                                let sr =
+                                    svc.read_version(0, 0, qos)?;
+                                crate::restore::verify_files_against(
+                                    &sr.files, &state)?;
+                                (sr.wait_s, sr.report)
+                            };
+                            if cache_on {
+                                anyhow::ensure!(
+                                    rep.cache_hits + rep.cache_misses
+                                        == rep.runs,
+                                    "cached pass lost runs: {rep:?}"
+                                );
+                            } else {
+                                anyhow::ensure!(
+                                    rep.cache_hits == 0
+                                        && rep.cache_misses == 0,
+                                    "uncached pass touched the cache: \
+                                     {rep:?}"
+                                );
+                            }
+                            Ok((wait_s,
+                                rep.time_to_first_tensor_s,
+                                rep.time_to_complete_s))
+                        },
+                    )
+                })
+                .collect();
+            // the live writer: a checkpoint lands on the SAME throttled
+            // tier while every session above is being served
+            eng.begin(cell, &state)?.wait_persisted()?;
+            let (mut waits, mut ttfts, mut totals) =
+                (Vec::new(), Vec::new(), Vec::new());
+            for h in handles {
+                let (w, t, c) = h.join().unwrap()?;
+                waits.push(w);
+                ttfts.push(t);
+                totals.push(c);
+            }
+            let wp = percentiles(&mut waits);
+            let tp = percentiles(&mut ttfts);
+            let cp = percentiles(&mut totals);
+            let stats = svc.stats();
+            let (hits, misses, rate) = match stats.cache {
+                Some(c) => (c.hits, c.misses, c.hit_rate()),
+                None => (0, 0, 0.0),
+            };
+            println!(
+                "{:<7}{:>9}{:>7}{:>8}{:>8}{:>6.0}%{:>13.2}{:>13.2}\
+                 {:>13.2}{:>13.2}",
+                if cache_on { "on" } else { "off" },
+                readers, stats.requests, hits, misses, rate * 100.0,
+                tp.p50_s * 1e3, tp.p99_s * 1e3, cp.p99_s * 1e3,
+                wp.p99_s * 1e3,
+            );
+            anyhow::ensure!(stats.requests == readers as u64,
+                            "served {} of {readers} requests",
+                            stats.requests);
+            anyhow::ensure!(tp.p99_s >= tp.p50_s && cp.p99_s >= cp.p50_s,
+                            "tail below median: {tp:?} {cp:?}");
+            if readers == 64 {
+                tail64[ci] = tp.p99_s;
+                anyhow::ensure!(
+                    wp.p99_s > 0.0,
+                    "64 sessions over 16 inflight slots never queued"
+                );
+                if cache_on {
+                    anyhow::ensure!(
+                        rate > 0.5,
+                        "run-cache hit rate {rate:.3} <= 0.5 at 64 \
+                         readers"
+                    );
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        tail64[0] < tail64[1],
+        "cache-on p99 TTFT {:.4}s not below cache-off {:.4}s at 64 \
+         readers",
+        tail64[0], tail64[1]
+    );
+    println!(
+        "  64-reader p99 TTFT: cache on {:.2} ms vs off {:.2} ms",
+        tail64[0] * 1e3, tail64[1] * 1e3
+    );
+
+    println!(
+        "\nserving model, calibrated (7B slowest rank, shared tier):"
+    );
+    println!("{:<9}{:>7}{:>14}{:>14}{:>14}{:>9}", "readers", "hit",
+             "ttft p50 s", "ttft p99 s", "done p99 s", "util");
+    let kind = EngineKind::DataStatesLlm;
+    let sim_cfg = SimConfig::paper("7B", 15, 1);
+    let mut prev_tail = 0.0f64;
+    for readers in [4usize, 16, 64, 256] {
+        let mut prev_hit_tail = f64::INFINITY;
+        for hit in [0.0f64, 0.5, 0.9] {
+            let est =
+                crate::sim::serve_time_s(kind, &sim_cfg, readers, hit);
+            println!("{:<9}{:>7.2}{:>14.3}{:>14.3}{:>14.3}{:>9.3}",
+                     readers, hit, est.ttft_p50_s, est.ttft_p99_s,
+                     est.completion_p99_s, est.utilization);
+            anyhow::ensure!(
+                est.ttft_p99_s >= est.ttft_p50_s
+                    && (0.0..1.0).contains(&est.utilization),
+                "serving model out of range: {est:?}"
+            );
+            anyhow::ensure!(
+                est.ttft_p99_s < prev_hit_tail,
+                "tail TTFT must strictly fall with cache hit fraction"
+            );
+            prev_hit_tail = est.ttft_p99_s;
+            if hit == 0.0 {
+                anyhow::ensure!(
+                    est.ttft_p99_s > prev_tail,
+                    "tail TTFT must strictly grow with fan-out"
+                );
+                prev_tail = est.ttft_p99_s;
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Incremental-checkpoint sweep over the content-addressed remote tier
 /// (dirty fraction × content-chunk size), plus the calibrated WAN
 /// upload model across remote bandwidths. Real plane: a scaled 7B rank
@@ -968,6 +1180,7 @@ pub fn all() -> anyhow::Result<()> {
     gather()?;
     restore()?;
     uring()?;
+    serve()?;
     incremental()?;
     files_summary();
     ablations();

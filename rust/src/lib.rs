@@ -51,6 +51,12 @@
 //!   gather-read engine ([`restore::ReadEngine`]): coalesced vectored
 //!   reads over a tier-aware reader pool, staged through a pinned pool
 //!   and multi-lane H2D upload.
+//! - [`serve`] — checkpoint serving at scale: the
+//!   [`serve::CheckpointService`] shares one tier pipeline per source
+//!   rank across many concurrent restore/reshard/verify sessions, with
+//!   admission control, weighted QoS throttle charging, a
+//!   single-flight gather-run read cache ([`serve::RunCache`]) and
+//!   persistent per-class read engines.
 //! - [`metrics`] — throughput/blocked-time accounting and the per-tensor
 //!   multi-tier timelines of Fig 15.
 //! - [`harness`] — one driver per paper table/figure.
@@ -64,6 +70,7 @@ pub mod metrics;
 pub mod provider;
 pub mod restore;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod state;
 pub mod storage;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            restore|incremental|uring|files>
+//!            restore|incremental|uring|serve|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -30,6 +30,16 @@
 //!                                   time-to-complete, per-lane H2D
 //!                                   busy time + the calibrated sim
 //!                                   restore model)
+//!   bench-serve [--serve-readers N] [--qos C] [--run-cache-mb MB]
+//!               [--dir DIR] [--json PATH]
+//!                                  (checkpoint serving sweep: N
+//!                                   concurrent restore+verify sessions
+//!                                   through one CheckpointService
+//!                                   against a LIVE writer, run cache
+//!                                   on vs off; records p50/p95/p99
+//!                                   TTFT + completion tails, admission
+//!                                   waits, run-cache hit rate and
+//!                                   byte-identity per cell)
 //!   reshard [--model M] [--from-tp T --from-pp P --from-dp D]
 //!           [--to-tp T --to-pp P --to-dp D] [--steps N]
 //!           [--interval K] [--scale S] [--ckpt-dir DIR]
@@ -126,12 +136,14 @@ fn run() -> anyhow::Result<()> {
         Some("partition") => partition(&args),
         Some("bench-io") => bench_io(&args),
         Some("bench-restore") => bench_restore(&args),
+        Some("bench-serve") => bench_serve(&args),
         Some("world") => world(&args),
         Some("reshard") => reshard(&args),
         _ => {
             eprintln!(
                 "usage: datastates <figures|train|world|reshard|fsck|\
-                 partition|bench-io|bench-restore> [options]\n  tier \
+                 partition|bench-io|bench-restore|bench-serve> \
+                 [options]\n  tier \
                  knobs: --tiers hostcache,localfs --throttle-mbps M \
                  --durability TIER\n  \
                  reshard knobs: --from-tp/--from-pp/--from-dp \
@@ -292,6 +304,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "restore" => harness::restore()?,
         "incremental" => harness::incremental()?,
         "uring" => harness::uring()?,
+        "serve" => harness::serve()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -776,10 +789,22 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                 },
                 ..Default::default()
             });
-            let restored = rd.read_version(&pipeline, 0)?;
+            let (restored, rep0) =
+                rd.read_version_report(&pipeline, 0)?;
             datastates::restore::verify_files_against(&restored,
                                                       &state)?;
+            // single-pass counters for the table/row, THEN two more
+            // timing-only passes so the row carries tail percentiles
             let m = rd.metrics();
+            let mut ttfts = vec![rep0.time_to_first_tensor_s];
+            let mut totals = vec![rep0.time_to_complete_s];
+            for _ in 0..2 {
+                let (_, rep) = rd.read_version_report(&pipeline, 0)?;
+                ttfts.push(rep.time_to_first_tensor_s);
+                totals.push(rep.time_to_complete_s);
+            }
+            let tp = datastates::util::bench::percentiles(&mut ttfts);
+            let cp = datastates::util::bench::percentiles(&mut totals);
             println!(
                 "{:<8}{:<10}{:>10}{:>14}{:>10}{:>11.2}{:>11.2}",
                 lanes,
@@ -808,6 +833,9 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                  \"gap_bytes_read\":{},\
                  \"time_to_first_tensor_s\":{:.6},\
                  \"time_to_complete_s\":{:.6},\
+                 \"ttft_p50_s\":{:.6},\"ttft_p95_s\":{:.6},\
+                 \"ttft_p99_s\":{:.6},\"complete_p50_s\":{:.6},\
+                 \"complete_p99_s\":{:.6},\"latency_samples\":{},\
                  \"read_busy_s\":{:.6},\
                  \"uring_submits\":{},\"uring_sqes\":{},\
                  \"uring_completions\":{},\"syscalls_avoided\":{},\
@@ -819,6 +847,12 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                 m.gap_bytes_read,
                 m.time_to_first_tensor_s,
                 m.time_to_complete_s,
+                tp.p50_s,
+                tp.p95_s,
+                tp.p99_s,
+                cp.p50_s,
+                cp.p99_s,
+                tp.n,
                 m.read_busy_s,
                 m.uring_submits,
                 m.uring_sqes,
@@ -867,6 +901,171 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
              \"uring_queue_depth\":{uring_depth},\
              \"rows\":[{}],\"sim\":[{}]}}\n",
             EngineConfig::default().restore_lanes,
+            rows.join(","),
+            sim_rows.join(",")
+        );
+        std::fs::write(path, doc)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Checkpoint-serving sweep: N concurrent restore+verify sessions
+/// through one `CheckpointService` sharing a LIVE writer engine's tier
+/// pipeline, with the gather-run cache on vs off. Every session
+/// verifies byte-identity of what it read; the JSON rows carry the
+/// TTFT/completion tail percentiles and run-cache counters the CI
+/// smoke asserts on.
+fn bench_serve(args: &Args) -> anyhow::Result<()> {
+    use datastates::engine::{CheckpointEngine, DataStatesEngine};
+    use datastates::restore::ReadEngineConfig;
+    use datastates::serve::{Qos, ServeConfig};
+    use datastates::state::census as mk_census;
+    use datastates::state::partition::materialize;
+    use datastates::util::bench::percentiles;
+    use std::sync::Arc;
+    const BENCH_CHUNK_BYTES: usize = 64 << 10;
+    const BENCH_COALESCE_BYTES: usize = 1 << 20;
+    let readers: usize = args.num("serve-readers", 64).max(1);
+    let qos = Qos::parse(args.get("qos").unwrap_or("standard"))?;
+    let cache_mb: u64 = args.num("run-cache-mb", 256);
+    let user_dir = args.get("dir");
+    let dir = std::path::PathBuf::from(
+        user_dir.unwrap_or("/tmp/datastates-bench-serve"));
+    if user_dir.is_none() {
+        // our own scratch default: safe to recycle
+        let _ = std::fs::remove_dir_all(&dir);
+    } else if dir.exists()
+        && dir
+            .read_dir()
+            .map(|mut d| d.next().is_some())
+            .unwrap_or(false)
+    {
+        // never silently destroy a user-named directory (same guard as
+        // bench-restore)
+        anyhow::bail!(
+            "--dir {dir:?} is not empty; bench-serve writes a fresh \
+             checkpoint there — pass a new or empty directory"
+        );
+    }
+    let cfg = LlmConfig::by_name("3B").unwrap();
+    let par = Parallelism::paper_default(&cfg);
+    let cs = mk_census(&cfg, &par);
+    let state = Arc::new(materialize(&cs.ranks[0], 2e-4, 1.0, 11));
+    let mut ecfg = EngineConfig::with_dir(&dir);
+    ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
+    ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
+    if let Some(tiers) = tier_specs(args)? {
+        ecfg.tiers = tiers;
+    }
+    uring_flags(args, &mut ecfg);
+    let mut eng = DataStatesEngine::new(ecfg)?;
+    eng.begin(0, &state)?.wait_persisted()?;
+
+    println!(
+        "{:<7}{:>8}  {:<12}{:>9}{:>7}{:>13}{:>13}{:>13}{:>13}",
+        "cache", "readers", "qos", "hits", "hit%", "ttft p50 ms",
+        "ttft p99 ms", "cmpl p99 ms", "wait p99 ms"
+    );
+    let mut rows = Vec::new();
+    for (cell, cache_on) in [true, false].into_iter().enumerate() {
+        let svc = eng.serve(ServeConfig {
+            read: ReadEngineConfig::default(),
+            run_cache_bytes: if cache_on { cache_mb << 20 } else { 0 },
+            max_inflight: readers,
+        });
+        let mut handles = Vec::with_capacity(readers);
+        for _ in 0..readers {
+            let svc = svc.clone();
+            let state = state.clone();
+            handles.push(std::thread::spawn(
+                move || -> anyhow::Result<(f64, f64, f64)> {
+                    let served = svc.read_version(0, 0, qos)?;
+                    datastates::restore::verify_files_against(
+                        &served.files, &state)?;
+                    Ok((
+                        served.wait_s,
+                        served.report.time_to_first_tensor_s,
+                        served.report.time_to_complete_s,
+                    ))
+                },
+            ));
+        }
+        // the LIVE writer checkpoints a fresh version while the reader
+        // fleet hammers v0 — served reads and checkpoint writes share
+        // one pipeline, so they contend on the same tier throttles
+        eng.begin(1 + cell as u64, &state)?.wait_persisted()?;
+        let mut waits = Vec::with_capacity(readers);
+        let mut ttfts = Vec::with_capacity(readers);
+        let mut totals = Vec::with_capacity(readers);
+        for h in handles {
+            let (w, t, c) =
+                h.join().expect("serve session panicked")?;
+            waits.push(w);
+            ttfts.push(t);
+            totals.push(c);
+        }
+        let wp = percentiles(&mut waits);
+        let tp = percentiles(&mut ttfts);
+        let cp = percentiles(&mut totals);
+        let stats = svc.stats();
+        let (hits, misses, hit_rate) = stats
+            .cache
+            .map(|c| (c.hits, c.misses, c.hit_rate()))
+            .unwrap_or((0, 0, 0.0));
+        println!(
+            "{:<7}{:>8}  {:<12}{:>9}{:>7.1}{:>13.2}{:>13.2}{:>13.2}\
+             {:>13.2}",
+            if cache_on { "on" } else { "off" },
+            readers,
+            qos.label(),
+            hits,
+            hit_rate * 100.0,
+            tp.p50_s * 1e3,
+            tp.p99_s * 1e3,
+            cp.p99_s * 1e3,
+            wp.p99_s * 1e3,
+        );
+        rows.push(format!(
+            "{{\"cache\":{cache_on},\"readers\":{readers},\
+             \"qos\":\"{}\",\"run_cache_mb\":{cache_mb},\
+             \"requests\":{},\"run_cache_hits\":{hits},\
+             \"run_cache_misses\":{misses},\"hit_rate\":{hit_rate:.4},\
+             \"ttft_p50_s\":{:.6},\"ttft_p95_s\":{:.6},\
+             \"ttft_p99_s\":{:.6},\"complete_p50_s\":{:.6},\
+             \"complete_p95_s\":{:.6},\"complete_p99_s\":{:.6},\
+             \"wait_p99_s\":{:.6},\"byte_identity\":true}}",
+            qos.label(),
+            stats.requests,
+            tp.p50_s,
+            tp.p95_s,
+            tp.p99_s,
+            cp.p50_s,
+            cp.p95_s,
+            cp.p99_s,
+            wp.p99_s,
+        ));
+    }
+    // calibrated sim serving model alongside the measured rows
+    let sim_cfg = datastates::sim::SimConfig::paper("7B", 15, 1);
+    let mut sim_rows = Vec::new();
+    for hit in [0.0f64, 0.9] {
+        let est = datastates::sim::serve_time_s(
+            EngineKind::DataStatesLlm, &sim_cfg, readers, hit);
+        sim_rows.push(format!(
+            "{{\"readers\":{readers},\"cache_hit_frac\":{hit},\
+             \"ttft_p50_s\":{:.4},\"ttft_p99_s\":{:.4},\
+             \"completion_p99_s\":{:.4},\"utilization\":{:.4}}}",
+            est.ttft_p50_s, est.ttft_p99_s, est.completion_p99_s,
+            est.utilization
+        ));
+    }
+    if let Some(path) = args.get("json") {
+        let doc = format!(
+            "{{\"bench\":\"bench-serve\",\"model\":\"3B\",\
+             \"chunk_bytes\":{BENCH_CHUNK_BYTES},\
+             \"coalesce_bytes\":{BENCH_COALESCE_BYTES},\
+             \"rows\":[{}],\"sim\":[{}]}}\n",
             rows.join(","),
             sim_rows.join(",")
         );

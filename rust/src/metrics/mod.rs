@@ -314,6 +314,13 @@ pub struct RestoreMetrics {
     /// Read syscalls saved versus one positioned read per slice:
     /// `uring_sqes - uring_submits`, floored at zero.
     pub syscalls_avoided: u64,
+    /// Gather runs served out of the shared run cache instead of a
+    /// backing read (0 when the engine runs without a cache — see
+    /// `serve::RunCache`).
+    pub run_cache_hits: u64,
+    /// Gather runs that performed the backing read (single-flight
+    /// fills and cache bypasses included).
+    pub run_cache_misses: u64,
 }
 
 /// Live byte counters for one checkpoint session, updated by the D2H

@@ -51,11 +51,12 @@ use crate::metrics::{LaneStat, RestoreMetrics, Tier, Timeline};
 use crate::provider::layout::{EntryKind, FileLayout};
 use crate::restore::reshard::{CheckpointWorld, ReshardPlan};
 use crate::restore::RestoredFile;
+use crate::serve::{RunCache, RunKey};
 use crate::state::shard::{RankState, ShardFile, StateItem};
 use crate::state::tensor::{DType, TensorShard};
-use crate::storage::{LocalFs, ReadAt, RestoredVersion, TierKind,
-                     TierPipeline};
-use crate::util::channel::{Receiver, Sender};
+use crate::storage::{Backend, LocalFs, PipelineShared, ReadAt,
+                     RestoredVersion, TierKind, TierPipeline};
+use crate::util::channel::Sender;
 
 /// Fallback piece granularity when coalescing is off (matches the
 /// serial stream's `DEFAULT_CHUNK_BYTES`).
@@ -235,8 +236,10 @@ struct GatherRun {
 
 /// One source checkpoint file, lazily resolved to a reader on its
 /// nearest readable tier and re-resolved deeper on torn-copy failures.
-struct Source<'a> {
-    pipeline: &'a TierPipeline,
+/// Owns the tier stack by `Arc` — sealed gather runs carry no pipeline
+/// borrows, so they can flow to the engine's persistent worker threads.
+struct Source {
+    shared: Arc<PipelineShared>,
     rel: String,
     resolved: Mutex<Option<Resolved>>,
 }
@@ -249,9 +252,25 @@ struct Resolved {
     throttle: Option<Arc<crate::storage::Throttle>>,
 }
 
-impl<'a> Source<'a> {
-    fn new(pipeline: &'a TierPipeline, rel: String) -> Source<'a> {
-        Source { pipeline, rel, resolved: Mutex::new(None) }
+impl Source {
+    fn new(pipeline: &TierPipeline, rel: String) -> Source {
+        Source {
+            shared: pipeline.shared_state(),
+            rel,
+            resolved: Mutex::new(None),
+        }
+    }
+
+    fn tiers(&self) -> &[Arc<dyn Backend>] {
+        self.shared.tier_stack()
+    }
+
+    /// Run-cache namespace: the identity of the shared tier state, so
+    /// every engine serving one pipeline (restores AND reshard worlds
+    /// wrapping the same `Arc`s) shares cache keys, while distinct
+    /// pipelines can never collide.
+    fn cache_ns(&self) -> u64 {
+        Arc::as_ptr(&self.shared) as *const u8 as usize as u64
     }
 
     /// Open the nearest tier >= `from` holding a copy, caching the
@@ -267,9 +286,7 @@ impl<'a> Source<'a> {
         // each failing tier (and, on remote tiers, the torn chunk id),
         // not just whichever tier failed last
         let mut errs: Vec<String> = Vec::new();
-        for (i, tier) in
-            self.pipeline.tiers().iter().enumerate().skip(from)
-        {
+        for (i, tier) in self.tiers().iter().enumerate().skip(from) {
             if !tier.exists(&self.rel) {
                 continue;
             }
@@ -354,12 +371,13 @@ struct UploadJob {
 }
 
 /// State shared by the planner, the reader pool and the upload lanes of
-/// one pass.
-struct ExecShared<'a> {
-    timeline: &'a Timeline,
+/// one pass. Fully owned (no borrows) so it can ride inside an `Arc` to
+/// the engine's PERSISTENT worker threads, which outlive any one pass.
+struct PassShared {
+    timeline: Arc<Timeline>,
     t0: f64,
     /// Lazily-created staging pool (see [`ReadEngine::pool`]).
-    staging: &'a Mutex<Option<PinnedPool>>,
+    staging: Arc<Mutex<Option<PinnedPool>>>,
     pool_bytes: usize,
     /// Per-TIER read caps: one semaphore per distinct filesystem
     /// backend (keyed by backend identity), so two filesystem tiers —
@@ -376,9 +394,25 @@ struct ExecShared<'a> {
     extents_merged: AtomicU64,
     bytes: AtomicU64,
     gap_bytes: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    /// QoS weight charged on tier throttles (quantum sizing — see
+    /// `storage::Throttle::acquire_weighted`).
+    qos_weight: f64,
+    /// Shared gather-run read cache, when the owning engine serves
+    /// behind a `serve::CheckpointService`.
+    run_cache: Option<Arc<RunCache>>,
+    /// The pass's source files (owned; workers index by `GatherRun::src`).
+    sources: Vec<Source>,
+    /// Queued-but-unfinished gather runs + upload jobs. The pass is
+    /// complete when this returns to zero AFTER planning finished — the
+    /// join-free barrier persistent workers need.
+    outstanding: AtomicU64,
+    idle_mx: Mutex<()>,
+    idle_cv: Condvar,
 }
 
-impl ExecShared<'_> {
+impl PassShared {
     /// The staging pool, created on first use (filesystem runs only).
     fn staging_pool(&self) -> PinnedPool {
         let mut slot = self.staging.lock().unwrap();
@@ -420,13 +454,135 @@ impl ExecShared<'_> {
             }
         }
     }
+
+    /// Count one queued work unit (a gather run or an upload job).
+    /// Callers increment BEFORE sending, so the counter can never dip
+    /// to zero while work is in flight.
+    fn add_work(&self) {
+        self.outstanding.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Retire one work unit; the last one wakes the pass barrier.
+    fn work_done(&self) {
+        if self.outstanding.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.idle_mx.lock().unwrap();
+            self.idle_cv.notify_all();
+        }
+    }
+
+    /// Block until every queued run and upload job retired. Only valid
+    /// after planning finished (no further `add_work` for this pass).
+    fn wait_idle(&self) {
+        let mut g = self.idle_mx.lock().unwrap();
+        while self.outstanding.load(Ordering::Acquire) != 0 {
+            g = self.idle_cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Message types carried by the persistent worker channels: every
+/// message pairs the work item with the pass it belongs to, so one
+/// worker pool serves any number of concurrent passes.
+type RunMsg = (Arc<PassShared>, GatherRun);
+type LaneMsg = (Arc<PassShared>, UploadJob);
+
+/// The engine's persistent reader + H2D-lane threads, spawned once (on
+/// the first pass) and reused by every subsequent pass — under serving
+/// load, per-request thread spawn and teardown is pure overhead. The
+/// threads exit when the engine drops its run sender; readers dropping
+/// their lane senders then drains the lanes.
+struct PassWorkers {
+    run_tx: Option<Sender<RunMsg>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl PassWorkers {
+    fn spawn(readers: usize, lanes: usize) -> PassWorkers {
+        let (run_tx, run_rx) = crate::util::channel::unbounded::<RunMsg>();
+        let mut lane_txs: Vec<Sender<LaneMsg>> =
+            Vec::with_capacity(lanes);
+        let mut handles = Vec::new();
+        for lane in 0..lanes.max(1) {
+            let (tx, rx) = crate::util::channel::unbounded::<LaneMsg>();
+            lane_txs.push(tx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ds-restore-lane{lane}"))
+                    .spawn(move || {
+                        while let Ok((sh, job)) = rx.recv() {
+                            ReadEngine::lane_exec(&sh, job, lane);
+                            sh.work_done();
+                        }
+                    })
+                    .expect("spawn restore lane"),
+            );
+        }
+        for ridx in 0..readers.max(1) {
+            let rx = run_rx.clone();
+            let txs = lane_txs.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ds-restore-read{ridx}"))
+                    .spawn(move || {
+                        while let Ok((sh, run)) = rx.recv() {
+                            if !sh.failed.load(Ordering::Acquire) {
+                                if let Err(e) = ReadEngine::exec_run(
+                                    &run, &sh, &txs, ridx)
+                                {
+                                    sh.fail(&e);
+                                }
+                            }
+                            sh.work_done();
+                        }
+                        // this reader's lane senders drop here; lanes
+                        // exit once every reader did
+                    })
+                    .expect("spawn restore reader"),
+            );
+        }
+        PassWorkers { run_tx: Some(run_tx), handles }
+    }
+
+    fn sender(&self) -> Sender<RunMsg> {
+        self.run_tx.as_ref().expect("workers alive").clone()
+    }
+}
+
+impl Drop for PassWorkers {
+    fn drop(&mut self) {
+        // disconnect the run channel: readers drain queued runs and
+        // exit, their lane senders drop, lanes drain and exit
+        drop(self.run_tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 // ---- the engine ---------------------------------------------------------
 
+/// Per-pass latency + cache summary returned by the `_report` entry
+/// points — the serving plane's unit of measurement (one request = one
+/// pass = one report).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PassReport {
+    /// Time until the first tensor fully materialized (TTFT).
+    pub time_to_first_tensor_s: f64,
+    /// Wall time of the whole pass.
+    pub time_to_complete_s: f64,
+    /// Sealed gather runs this pass requested.
+    pub runs: u64,
+    /// Runs served from the shared run cache (0 without a cache).
+    pub cache_hits: u64,
+    /// Runs that required (or joined) a backing read.
+    pub cache_misses: u64,
+}
+
 /// The parallel gather-read restore engine. One instance may serve any
-/// number of restore passes; the staging pool and metrics are reused
-/// across them.
+/// number of restore passes — concurrently, under a
+/// [`crate::serve::CheckpointService`] — and the staging pool, the
+/// PERSISTENT reader/lane threads and the metrics are reused across
+/// them.
 pub struct ReadEngine {
     cfg: ReadEngineConfig,
     /// Effective run/piece ceiling (coalesce clamped to pool/2).
@@ -434,9 +590,17 @@ pub struct ReadEngine {
     /// Staging pool, created LAZILY on the first filesystem run — a
     /// pure host-cache restore (zero-staging scatter path) never pays
     /// the allocation, and neither does constructing an engine for a
-    /// version that turns out not to exist.
-    pool: Mutex<Option<PinnedPool>>,
+    /// version that turns out not to exist. `Arc` so owned pass state
+    /// can reach it from the worker threads.
+    pool: Arc<Mutex<Option<PinnedPool>>>,
     pool_bytes: usize,
+    /// Persistent reader + H2D-lane threads, spawned on the first pass
+    /// and reused by every later one (joined on engine drop).
+    workers: Mutex<Option<PassWorkers>>,
+    /// Throttle weight charged per gather run (serving QoS classes).
+    qos_weight: f64,
+    /// Shared gather-run cache (serving plane); `None` = no caching.
+    run_cache: Option<Arc<RunCache>>,
     timeline: Arc<Timeline>,
     metrics: Mutex<RestoreMetrics>,
 }
@@ -451,9 +615,12 @@ impl ReadEngine {
         };
         let run_cap = base.min(pool_bytes / 2).max(1);
         ReadEngine {
-            pool: Mutex::new(None),
+            pool: Arc::new(Mutex::new(None)),
             pool_bytes,
             run_cap,
+            workers: Mutex::new(None),
+            qos_weight: 1.0,
+            run_cache: None,
             timeline: Arc::new(Timeline::new()),
             metrics: Mutex::new(RestoreMetrics::default()),
             cfg,
@@ -463,6 +630,22 @@ impl ReadEngine {
     /// Engine with the restore knobs of an [`EngineConfig`].
     pub fn from_engine(cfg: &EngineConfig) -> ReadEngine {
         Self::new(ReadEngineConfig::from_engine(cfg))
+    }
+
+    /// Serve reads through a shared gather-run cache: runs hit/fill the
+    /// cache instead of reading per pass, with single-flight dedup
+    /// across concurrent passes (and across engines sharing the cache).
+    pub fn with_run_cache(mut self, cache: Arc<RunCache>) -> ReadEngine {
+        self.run_cache = Some(cache);
+        self
+    }
+
+    /// Weight this engine's throttle charges (QoS class weight; see
+    /// [`crate::storage::Throttle::acquire_weighted`]). Clamped to the
+    /// throttle's accepted range.
+    pub fn with_qos_weight(mut self, weight: f64) -> ReadEngine {
+        self.qos_weight = weight.clamp(0.125, 32.0);
+        self
     }
 
     pub fn timeline(&self) -> &Arc<Timeline> {
@@ -492,6 +675,14 @@ impl ReadEngine {
     /// [`TierPipeline::read_version_serial`], byte-identical output.
     pub fn read_version(&self, pipeline: &TierPipeline, version: u64)
         -> anyhow::Result<RestoredVersion> {
+        Ok(self.read_version_report(pipeline, version)?.0)
+    }
+
+    /// [`ReadEngine::read_version`] plus this pass's latency/cache
+    /// report — the serving plane's per-request measurement.
+    pub fn read_version_report(&self, pipeline: &TierPipeline,
+                               version: u64)
+        -> anyhow::Result<(RestoredVersion, PassReport)> {
         let dir = format!("v{version:06}");
         let files = pipeline.version_file_names(version)?;
         anyhow::ensure!(!files.is_empty(),
@@ -503,7 +694,7 @@ impl ReadEngine {
                 (f, rel)
             })
             .collect();
-        self.read_files(pipeline, &named)
+        self.read_files_report(pipeline, &named)
     }
 
     /// Restore the newest version with a complete readable copy
@@ -548,7 +739,14 @@ impl ReadEngine {
     pub fn read_files(&self, pipeline: &TierPipeline,
                       files: &[(String, String)])
         -> anyhow::Result<HashMap<String, RestoredFile>> {
-        let sources: Vec<Source<'_>> = files
+        Ok(self.read_files_report(pipeline, files)?.0)
+    }
+
+    /// [`ReadEngine::read_files`] plus this pass's latency/cache report.
+    pub fn read_files_report(&self, pipeline: &TierPipeline,
+                             files: &[(String, String)])
+        -> anyhow::Result<(HashMap<String, RestoredFile>, PassReport)> {
+        let sources: Vec<Source> = files
             .iter()
             .map(|(_, rel)| Source::new(pipeline, rel.clone()))
             .collect();
@@ -556,7 +754,7 @@ impl ReadEngine {
         // the planner as it decodes each trailer
         let mut outputs: Vec<PlannedFile> =
             Vec::with_capacity(files.len());
-        self.run_pass(&sources, |ctx| {
+        let report = self.run_pass(sources, |ctx| {
             for (si, (name, rel)) in files.iter().enumerate() {
                 // trailer decode (nearest readable tier, torn-copy
                 // fall-through) — overlaps earlier files' bulk reads
@@ -604,7 +802,7 @@ impl ReadEngine {
             }
             out.insert(name, RestoredFile { layout, payloads });
         }
-        Ok(out)
+        Ok((out, report))
     }
 
     /// Execute a reshard plan with coalesced parallel reads: slices are
@@ -621,6 +819,16 @@ impl ReadEngine {
                                        &HashMap::new())
     }
 
+    /// [`ReadEngine::execute_plan`] plus this pass's latency/cache
+    /// report — reshard sessions served behind a
+    /// [`crate::serve::CheckpointService`] report like restores.
+    pub fn execute_plan_report(&self, world: &CheckpointWorld,
+                               version: u64, plan: &ReshardPlan)
+        -> anyhow::Result<(Vec<RankState>, PassReport)> {
+        self.execute_plan_report_with_layouts(world, version, plan,
+                                              &HashMap::new())
+    }
+
     /// [`ReadEngine::execute_plan`] reusing already-decoded source
     /// trailers (keyed by `(source rank, file name)`): the index build
     /// behind `restore_for_topology` hands its layouts over, so no
@@ -633,6 +841,19 @@ impl ReadEngine {
         plan: &ReshardPlan,
         layouts: &HashMap<SrcKey, FileLayout>,
     ) -> anyhow::Result<Vec<RankState>> {
+        Ok(self
+            .execute_plan_report_with_layouts(world, version, plan,
+                                              layouts)?
+            .0)
+    }
+
+    fn execute_plan_report_with_layouts(
+        &self,
+        world: &CheckpointWorld,
+        version: u64,
+        plan: &ReshardPlan,
+        layouts: &HashMap<SrcKey, FileLayout>,
+    ) -> anyhow::Result<(Vec<RankState>, PassReport)> {
         // destination sinks, one per target tensor, plus the pending
         // slice list grouped per source (rank, file)
         struct Pending {
@@ -676,7 +897,7 @@ impl ReadEngine {
             }
             sinks.push(rank_sinks);
         }
-        let sources: Vec<Source<'_>> = by_src
+        let sources: Vec<Source> = by_src
             .iter()
             .map(|((rank, file), _)| {
                 Ok(Source::new(
@@ -685,7 +906,7 @@ impl ReadEngine {
                 ))
             })
             .collect::<anyhow::Result<_>>()?;
-        self.run_pass(&sources, |ctx| {
+        let report = self.run_pass(sources, |ctx| {
             for (si, ((rank, file), pendings)) in
                 by_src.iter().enumerate()
             {
@@ -792,7 +1013,7 @@ impl ReadEngine {
             }
             out.push(RankState { rank: rp.rank, files });
         }
-        Ok(out)
+        Ok((out, report))
     }
 
     // ---- pass execution --------------------------------------------------
@@ -800,37 +1021,37 @@ impl ReadEngine {
     /// Sum the ring counters of every DISTINCT source pipeline (reshard
     /// passes read several ranks' pipelines; same-pipeline sources must
     /// not double-count).
-    fn uring_snapshot(sources: &[Source<'_>])
-        -> crate::storage::UringStats {
-        let mut seen: Vec<*const TierPipeline> = Vec::new();
+    fn uring_snapshot(sources: &[Source]) -> crate::storage::UringStats {
+        let mut seen: Vec<*const PipelineShared> = Vec::new();
         let mut total = crate::storage::UringStats::default();
         for s in sources {
-            let p: *const TierPipeline = s.pipeline;
+            let p: *const PipelineShared = Arc::as_ptr(&s.shared);
             if seen.contains(&p) {
                 continue;
             }
             seen.push(p);
-            if let Some(st) = s.pipeline.uring_stats() {
+            if let Some(st) = s.shared.uring_stats_agg() {
                 total.merge(&st);
             }
         }
         total
     }
 
-    /// Run one restore pass: spawn the upload lanes and the reader pool,
-    /// then run `feed` (the planner) on the calling thread, streaming
-    /// sealed gather runs into the pool while earlier runs execute.
-    fn run_pass<F>(&self, sources: &[Source<'_>], feed: F)
-        -> anyhow::Result<()>
+    /// Run one restore pass: run `feed` (the planner) on the calling
+    /// thread, streaming sealed gather runs to the engine's persistent
+    /// reader pool while earlier runs execute, then wait on the pass's
+    /// outstanding-work barrier. Concurrent passes on one engine share
+    /// the worker threads; each pass carries its own [`PassShared`].
+    fn run_pass<F>(&self, sources: Vec<Source>, feed: F)
+        -> anyhow::Result<PassReport>
     where
-        F: for<'s, 'e> FnOnce(&mut PlanCtx<'s, 'e>)
-            -> anyhow::Result<()>,
+        F: FnOnce(&mut PlanCtx) -> anyhow::Result<()>,
     {
-        let uring0 = Self::uring_snapshot(sources);
-        let shared = ExecShared {
-            timeline: &self.timeline,
+        let uring0 = Self::uring_snapshot(&sources);
+        let shared = Arc::new(PassShared {
+            timeline: self.timeline.clone(),
             t0: self.timeline.now_s(),
-            staging: &self.pool,
+            staging: self.pool.clone(),
             pool_bytes: self.pool_bytes,
             fs_cap: self.cfg.fs_readers.max(1),
             fs_sems: Mutex::new(HashMap::new()),
@@ -843,58 +1064,53 @@ impl ReadEngine {
             extents_merged: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
             gap_bytes: AtomicU64::new(0),
-        };
-        let lanes = self.cfg.restore_lanes.max(1);
-        let readers = self.cfg.readers.max(1);
-        let (run_tx, run_rx) =
-            crate::util::channel::unbounded::<GatherRun>();
-        let mut lane_txs: Vec<Sender<UploadJob>> =
-            Vec::with_capacity(lanes);
-        let mut lane_rxs: Vec<Receiver<UploadJob>> =
-            Vec::with_capacity(lanes);
-        for _ in 0..lanes {
-            let (tx, rx) = crate::util::channel::unbounded::<UploadJob>();
-            lane_txs.push(tx);
-            lane_rxs.push(rx);
-        }
-        let plan_res = std::thread::scope(|s| {
-            let shared = &shared;
-            for (lane, rx) in lane_rxs.into_iter().enumerate() {
-                s.spawn(move || Self::lane_loop(rx, lane, shared));
-            }
-            for ridx in 0..readers {
-                let rx = run_rx.clone();
-                let txs = lane_txs.clone();
-                s.spawn(move || {
-                    Self::reader_loop(rx, ridx, sources, txs, shared)
-                });
-            }
-            drop(run_rx);
-            drop(lane_txs);
-            let mut ctx = PlanCtx {
-                shared,
-                run_tx,
-                run_cap: self.run_cap as u64,
-                gap: if self.cfg.coalesce_bytes > 0 {
-                    self.cfg.gap_bytes as u64
-                } else {
-                    0
-                },
-                coalesce: self.cfg.coalesce_bytes > 0,
-            };
-            let res = feed(&mut ctx);
-            if let Err(e) = &res {
-                shared.fail(e);
-            }
-            drop(ctx); // drops run_tx: readers drain and exit
-            res
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            qos_weight: self.qos_weight,
+            run_cache: self.run_cache.clone(),
+            sources,
+            outstanding: AtomicU64::new(0),
+            idle_mx: Mutex::new(()),
+            idle_cv: Condvar::new(),
         });
-        // the scope joined: every reader and lane finished
+        let run_tx = {
+            let mut workers = self.workers.lock().unwrap();
+            workers
+                .get_or_insert_with(|| {
+                    PassWorkers::spawn(self.cfg.readers.max(1),
+                                       self.cfg.restore_lanes.max(1))
+                })
+                .sender()
+        };
+        let mut ctx = PlanCtx {
+            shared: shared.clone(),
+            run_tx,
+            run_cap: self.run_cap as u64,
+            gap: if self.cfg.coalesce_bytes > 0 {
+                self.cfg.gap_bytes as u64
+            } else {
+                0
+            },
+            coalesce: self.cfg.coalesce_bytes > 0,
+        };
+        let plan_res = feed(&mut ctx);
+        if let Err(e) = &plan_res {
+            shared.fail(e);
+        }
+        drop(ctx); // planning done: no further add_work for this pass
+        shared.wait_idle();
+        // the barrier passed: every run and upload job of THIS pass
+        // retired (other passes may still be in flight on the workers)
         if let Some(e) = shared.error.lock().unwrap().take() {
             anyhow::bail!("{e}");
         }
         plan_res?;
         let total = self.timeline.now_s() - shared.t0;
+        let ttft = shared
+            .first_tensor
+            .lock()
+            .unwrap()
+            .unwrap_or(total);
         let mut m = self.metrics.lock().unwrap();
         m.read_extents += shared.read_extents.load(Ordering::Acquire);
         m.gather_reads += shared.gather_reads.load(Ordering::Acquire);
@@ -902,10 +1118,13 @@ impl ReadEngine {
             shared.extents_merged.load(Ordering::Acquire);
         m.bytes += shared.bytes.load(Ordering::Acquire);
         m.gap_bytes_read += shared.gap_bytes.load(Ordering::Acquire);
+        m.run_cache_hits += shared.cache_hits.load(Ordering::Acquire);
+        m.run_cache_misses +=
+            shared.cache_misses.load(Ordering::Acquire);
         // ring traffic attributable to this pass (delta across the
-        // pass; includes concurrent same-ring writers, if any — the
-        // benches restore from quiescent engines)
-        let uring1 = Self::uring_snapshot(sources);
+        // pass; includes concurrent same-ring readers/writers, if any —
+        // the benches restore from quiescent engines)
+        let uring1 = Self::uring_snapshot(&shared.sources);
         m.uring_submits +=
             uring1.submits.saturating_sub(uring0.submits);
         m.uring_sqes += uring1.sqes.saturating_sub(uring0.sqes);
@@ -914,43 +1133,33 @@ impl ReadEngine {
         m.syscalls_avoided +=
             uring1.syscalls_avoided.saturating_sub(uring0.syscalls_avoided);
         m.time_to_complete_s = total;
-        m.time_to_first_tensor_s = shared
-            .first_tensor
-            .lock()
-            .unwrap()
-            .unwrap_or(total);
-        Ok(())
-    }
-
-    fn reader_loop(rx: Receiver<GatherRun>, reader_idx: usize,
-                   sources: &[Source<'_>], lane_txs: Vec<Sender<UploadJob>>,
-                   shared: &ExecShared<'_>) {
-        while let Ok(run) = rx.recv() {
-            if shared.failed.load(Ordering::Acquire) {
-                continue; // drain without work; the pass will error
-            }
-            if let Err(e) =
-                Self::exec_run(&run, sources, &lane_txs, shared,
-                               reader_idx)
-            {
-                shared.fail(&e);
-            }
-        }
-        // lane senders drop here; lanes exit once every reader did
+        m.time_to_first_tensor_s = ttft;
+        Ok(PassReport {
+            time_to_first_tensor_s: ttft,
+            time_to_complete_s: total,
+            runs: shared.gather_reads.load(Ordering::Acquire),
+            cache_hits: shared.cache_hits.load(Ordering::Acquire),
+            cache_misses: shared.cache_misses.load(Ordering::Acquire),
+        })
     }
 
     /// Execute one gather run with nearest-tier resolution and
-    /// torn-copy fall-through to deeper tiers.
-    fn exec_run(run: &GatherRun, sources: &[Source<'_>],
-                lane_txs: &[Sender<UploadJob>], shared: &ExecShared<'_>,
-                reader_idx: usize) -> anyhow::Result<()> {
-        let src = &sources[run.src];
-        let n_tiers = src.pipeline.tiers().len();
+    /// torn-copy fall-through to deeper tiers. Runs on the persistent
+    /// reader threads.
+    fn exec_run(run: &GatherRun, sh: &Arc<PassShared>,
+                lane_txs: &[Sender<LaneMsg>], reader_idx: usize)
+        -> anyhow::Result<()> {
+        let src = &sh.sources[run.src];
+        if let Some(cache) = &sh.run_cache {
+            return Self::exec_run_cached(cache, run, src, sh,
+                                         reader_idx);
+        }
+        let n_tiers = src.tiers().len();
         let mut from = 0usize;
         loop {
             let r = src.resolve(from)?;
-            match Self::try_run(&r, run, src, lane_txs, shared,
-                                reader_idx) {
+            match Self::try_run(&r, run, src, sh, lane_txs, reader_idx)
+            {
                 Ok(()) => return Ok(()),
                 Err(e) => {
                     src.invalidate(r.tier);
@@ -969,27 +1178,120 @@ impl ReadEngine {
         }
     }
 
-    fn try_run(r: &Resolved, run: &GatherRun, src: &Source<'_>,
-               lane_txs: &[Sender<UploadJob>], shared: &ExecShared<'_>,
+    /// Serve one gather run through the shared run cache: a hit
+    /// scatters the cached bytes straight into the destinations (no
+    /// tier read, no throttle charge); a miss fills under single-flight
+    /// dedup, so K concurrent requests for one sealed run cost exactly
+    /// one backing read.
+    fn exec_run_cached(cache: &Arc<RunCache>, run: &GatherRun,
+                       src: &Source, sh: &Arc<PassShared>,
+                       reader_idx: usize) -> anyhow::Result<()> {
+        let key = RunKey {
+            ns: src.cache_ns(),
+            rel: src.rel.clone(),
+            start: run.start,
+            span: run.span,
+        };
+        let t0 = sh.timeline.now_s();
+        let (bytes, hit) = cache
+            .get_or_fill(key, || Self::fill_run_bytes(run, src, sh))?;
+        if hit {
+            sh.cache_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            sh.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        // scatter sequentially out of the shared immutable run image —
+        // overlapping source ranges are fine here (each copy is
+        // read-only on the run side)
+        for read in &run.reads {
+            let off = (read.file_offset - run.start) as usize;
+            read.entry.buf.write_at(
+                read.dst_offset as usize,
+                &bytes[off..off + read.len as usize],
+            );
+        }
+        sh.timeline.record_on_lane(Tier::Read, &src.rel, run.span, t0,
+                                   sh.timeline.now_s(), reader_idx);
+        for read in &run.reads {
+            sh.complete_one(&read.entry);
+        }
+        Ok(())
+    }
+
+    /// Read one sealed run's full span into a plain heap buffer (the
+    /// cache image) with the usual tier failover. Deliberately NOT the
+    /// pinned staging pool: cache fills must never contend with pass
+    /// staging for pool space, or a full cache could deadlock a pass.
+    fn fill_run_bytes(run: &GatherRun, src: &Source, sh: &PassShared)
+        -> anyhow::Result<Vec<u8>> {
+        let n_tiers = src.tiers().len();
+        let mut from = 0usize;
+        loop {
+            let r = src.resolve(from)?;
+            match Self::try_fill(&r, run, src, sh) {
+                Ok(buf) => return Ok(buf),
+                Err(e) => {
+                    src.invalidate(r.tier);
+                    from = r.tier + 1;
+                    if from >= n_tiers {
+                        return Err(e);
+                    }
+                    eprintln!(
+                        "[restore] {} on {} tier: {e:#}; falling \
+                         through to a deeper tier",
+                        src.rel,
+                        r.kind.label()
+                    );
+                }
+            }
+        }
+    }
+
+    fn try_fill(r: &Resolved, run: &GatherRun, src: &Source,
+                sh: &PassShared) -> anyhow::Result<Vec<u8>> {
+        let is_async = r.reader.is_async();
+        let sem = (r.kind == TierKind::LocalFs && !is_async)
+            .then(|| sh.fs_permit(&src.tiers()[r.tier]));
+        let _guard = sem.as_ref().map(|s| s.acquire());
+        if let Some(th) = &r.throttle {
+            if !is_async {
+                th.acquire_weighted(run.span, sh.qos_weight);
+            }
+        }
+        let mut buf = vec![0u8; run.span as usize];
+        {
+            let mut dsts: Vec<&mut [u8]> = vec![&mut buf];
+            r.reader.read_gather_at(run.start, &mut dsts)?;
+        }
+        if is_async {
+            if let Some(th) = &r.throttle {
+                th.acquire_weighted(run.span, sh.qos_weight);
+            }
+        }
+        Ok(buf)
+    }
+
+    fn try_run(r: &Resolved, run: &GatherRun, src: &Source,
+               sh: &Arc<PassShared>, lane_txs: &[Sender<LaneMsg>],
                reader_idx: usize) -> anyhow::Result<()> {
         // filesystem tiers: bounded concurrent readers, per tier —
         // unless the reader is async (io_uring): the ring's completion
         // slots ARE the real concurrency bound, so a thread permit
         // would only serialize submissions behind an artificial cap
         let is_async = r.reader.is_async();
-        let sem = (r.kind == TierKind::LocalFs && !is_async).then(|| {
-            shared.fs_permit(&src.pipeline.tiers()[r.tier])
-        });
+        let sem = (r.kind == TierKind::LocalFs && !is_async)
+            .then(|| sh.fs_permit(&src.tiers()[r.tier]));
         let _guard = sem.as_ref().map(|s| s.acquire());
-        // reads charge the SAME token bucket as the tier's writes; the
-        // async path charges at completion time (after the gather
-        // lands), matching the ring's write-side discipline
+        // reads charge the SAME token bucket as the tier's writes (at
+        // the pass's QoS weight); the async path charges at completion
+        // time (after the gather lands), matching the ring's
+        // write-side discipline
         if let Some(th) = &r.throttle {
             if !is_async {
-                th.acquire(run.span);
+                th.acquire_weighted(run.span, sh.qos_weight);
             }
         }
-        let t0 = shared.timeline.now_s();
+        let t0 = sh.timeline.now_s();
         if r.kind == TierKind::HostCache && !run.overlap {
             // zero-staging fast path: the cache's backing buffer
             // scatters every window straight into the destinations
@@ -1026,19 +1328,18 @@ impl ReadEngine {
             }
             r.reader.read_gather_at(run.start, &mut dsts)?;
             drop(dsts);
-            shared.timeline.record_on_lane(Tier::Read, &src.rel,
-                                           run.span, t0,
-                                           shared.timeline.now_s(),
-                                           reader_idx);
+            sh.timeline.record_on_lane(Tier::Read, &src.rel, run.span,
+                                       t0, sh.timeline.now_s(),
+                                       reader_idx);
             for read in &run.reads {
-                shared.complete_one(&read.entry);
+                sh.complete_one(&read.entry);
             }
         } else {
             // staging path: the run's span lands in the pinned pool
             // through the vectored primitive (on LocalFs that is one
             // cursor-free `preadv` submission), then the H2D lanes
             // scatter the extents into the destinations
-            let (seg, _waited) = shared
+            let (seg, _waited) = sh
                 .staging_pool()
                 .alloc_blocking(run.span as usize)?;
             seg.with_mut(|b| {
@@ -1047,63 +1348,64 @@ impl ReadEngine {
             })?;
             if is_async {
                 if let Some(th) = &r.throttle {
-                    th.acquire(run.span);
+                    th.acquire_weighted(run.span, sh.qos_weight);
                 }
             }
-            shared.timeline.record_on_lane(Tier::Read, &src.rel,
-                                           run.span, t0,
-                                           shared.timeline.now_s(),
-                                           reader_idx);
+            sh.timeline.record_on_lane(Tier::Read, &src.rel, run.span,
+                                       t0, sh.timeline.now_s(),
+                                       reader_idx);
             for read in &run.reads {
-                let lane = shared
+                let lane = sh
                     .next_lane
                     .fetch_add(1, Ordering::Relaxed)
                     % lane_txs.len();
-                lane_txs[lane]
-                    .send(UploadJob {
-                        seg: seg.clone(),
-                        seg_off: (read.file_offset - run.start) as usize,
-                        len: read.len as usize,
-                        dst_offset: read.dst_offset as usize,
-                        entry: read.entry.clone(),
-                    })
-                    .map_err(|_| {
-                        anyhow::anyhow!("H2D upload lane died")
-                    })?;
+                let job = UploadJob {
+                    seg: seg.clone(),
+                    seg_off: (read.file_offset - run.start) as usize,
+                    len: read.len as usize,
+                    dst_offset: read.dst_offset as usize,
+                    entry: read.entry.clone(),
+                };
+                // count the lane job BEFORE sending so the pass
+                // barrier can't dip to zero with the job in flight
+                sh.add_work();
+                if lane_txs[lane].send((sh.clone(), job)).is_err() {
+                    sh.work_done();
+                    anyhow::bail!("H2D upload lane died");
+                }
             }
         }
         Ok(())
     }
 
-    fn lane_loop(rx: Receiver<UploadJob>, lane: usize,
-                 shared: &ExecShared<'_>) {
-        while let Ok(job) = rx.recv() {
-            let t0 = shared.timeline.now_s();
-            job.entry.buf.write_at(
-                job.dst_offset,
-                &job.seg.as_slice()[job.seg_off..job.seg_off + job.len],
-            );
-            shared.timeline.record_on_lane(Tier::H2D, &job.entry.name,
-                                           job.len as u64, t0,
-                                           shared.timeline.now_s(),
-                                           lane);
-            shared.complete_one(&job.entry);
-            // job.seg drops here: pool space frees, readers wake
-        }
+    /// Land one staged extent in its destination buffer. Runs on the
+    /// persistent H2D lane threads.
+    fn lane_exec(sh: &PassShared, job: UploadJob, lane: usize) {
+        let t0 = sh.timeline.now_s();
+        job.entry.buf.write_at(
+            job.dst_offset,
+            &job.seg.as_slice()[job.seg_off..job.seg_off + job.len],
+        );
+        sh.timeline.record_on_lane(Tier::H2D, &job.entry.name,
+                                   job.len as u64, t0,
+                                   sh.timeline.now_s(), lane);
+        sh.complete_one(&job.entry);
+        // job.seg drops here: pool space frees, readers wake
     }
 }
 
 /// Planner-side context: collects planned reads, seals them into
-/// coalesced gather runs and streams the runs to the reader pool.
-struct PlanCtx<'s, 'a> {
-    shared: &'s ExecShared<'a>,
-    run_tx: Sender<GatherRun>,
+/// coalesced gather runs and streams the runs to the engine's
+/// persistent reader pool, tagged with this pass's shared state.
+struct PlanCtx {
+    shared: Arc<PassShared>,
+    run_tx: Sender<RunMsg>,
     run_cap: u64,
     gap: u64,
     coalesce: bool,
 }
 
-impl PlanCtx<'_, '_> {
+impl PlanCtx {
     /// Plan one file window (a raw layout extent, or the covered part
     /// of one): split into run-cap-sized pieces and bump the sink's
     /// completion count.
@@ -1183,9 +1485,12 @@ impl PlanCtx<'_, '_> {
                 Ordering::Relaxed,
             );
             self.shared.gather_reads.fetch_add(1, Ordering::Relaxed);
-            self.run_tx
-                .send(run)
-                .map_err(|_| anyhow::anyhow!("reader pool died"))?;
+            // count before sending (see `PassShared::add_work`)
+            self.shared.add_work();
+            if self.run_tx.send((self.shared.clone(), run)).is_err() {
+                self.shared.work_done();
+                anyhow::bail!("reader pool died");
+            }
         }
         Ok(())
     }

@@ -15,7 +15,7 @@ pub mod engine;
 pub mod reshard;
 pub mod source;
 
-pub use engine::{ReadEngine, ReadEngineConfig};
+pub use engine::{PassReport, ReadEngine, ReadEngineConfig};
 pub use reshard::{plan_reshard, restore_for_topology, CheckpointWorld,
                   ReshardPlan};
 pub use source::ChunkSource;

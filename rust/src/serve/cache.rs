@@ -1,0 +1,333 @@
+//! The shared gather-run read cache of the serving plane: a bounded
+//! LRU of SEALED run images keyed by `(pipeline identity, file,
+//! extent-run range)`, with **single-flight fill dedup** — when K
+//! concurrent restore sessions request the same sealed run, exactly one
+//! performs the backing read; the rest block on the fill and scatter
+//! out of the shared image.
+//!
+//! Why runs and not files: the read planner's coalesced gather runs are
+//! deterministic for a given (version, layout, engine geometry), so
+//! concurrent readers of one checkpoint version request *identical*
+//! run keys. Caching at run granularity therefore captures all
+//! cross-session reuse while keeping entries bounded (a run is at most
+//! `coalesce_bytes`) and never holding a whole checkpoint hostage.
+//!
+//! Backpressure discipline (deadlock-freedom): fills read into plain
+//! heap buffers, never the pinned staging pool, and a run LARGER than
+//! the whole cache bypasses caching entirely (counted in
+//! [`RunCacheStats::bypasses`]) instead of waiting for space that can
+//! never appear. A full cache evicts idle entries; when everything
+//! resident is still being filled elsewhere the new image is simply
+//! served uncached. No path blocks on cache capacity.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Cache key of one sealed gather run. `ns` is the identity of the
+/// source pipeline's shared tier state (`Arc` pointer), so engines and
+/// reshard worlds wrapping the same pipeline share entries while
+/// distinct pipelines can never collide.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RunKey {
+    /// Source-pipeline namespace (shared-state identity).
+    pub ns: u64,
+    /// Tier-relative file path (e.g. `v000003/rank0_model.ckpt`).
+    pub rel: String,
+    /// Run start offset in the file.
+    pub start: u64,
+    /// Run span in bytes (gaps included).
+    pub span: u64,
+}
+
+struct Entry {
+    bytes: Arc<Vec<u8>>,
+    /// LRU clock value of the last touch.
+    last_used: u64,
+}
+
+struct Inner {
+    ready: HashMap<RunKey, Entry>,
+    /// Keys currently being filled by some thread (single-flight).
+    pending: HashSet<RunKey>,
+    /// Resident payload bytes across `ready`.
+    used: u64,
+    /// Monotonic LRU clock.
+    tick: u64,
+}
+
+/// Counter snapshot of a [`RunCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Runs too large for the cache, served uncached.
+    pub bypasses: u64,
+    pub evictions: u64,
+    pub fill_errors: u64,
+    pub resident_bytes: u64,
+    pub cap_bytes: u64,
+    pub entries: usize,
+}
+
+impl RunCacheStats {
+    /// Fraction of run requests served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Bounded single-flight LRU cache of sealed gather-run images, shared
+/// by every [`crate::restore::ReadEngine`] of a
+/// [`crate::serve::CheckpointService`].
+pub struct RunCache {
+    cap: u64,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    bypasses: AtomicU64,
+    evictions: AtomicU64,
+    fill_errors: AtomicU64,
+}
+
+impl RunCache {
+    /// A cache bounded at `cap_bytes` of resident run payload.
+    pub fn new(cap_bytes: u64) -> Arc<RunCache> {
+        Arc::new(RunCache {
+            cap: cap_bytes,
+            inner: Mutex::new(Inner {
+                ready: HashMap::new(),
+                pending: HashSet::new(),
+                used: 0,
+                tick: 0,
+            }),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            bypasses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            fill_errors: AtomicU64::new(0),
+        })
+    }
+
+    /// Serve `key`, filling via `fill` on a miss. Returns the run image
+    /// and whether it was a hit. Single-flight: concurrent callers of
+    /// one missing key block while ONE runs `fill`; on fill failure the
+    /// waiters retry as fillers themselves (the failure may be
+    /// tier-transient and is re-reported per caller if not).
+    pub fn get_or_fill(
+        &self,
+        key: RunKey,
+        fill: impl FnOnce() -> anyhow::Result<Vec<u8>>,
+    ) -> anyhow::Result<(Arc<Vec<u8>>, bool)> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            loop {
+                if inner.ready.contains_key(&key) {
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    let e = inner.ready.get_mut(&key).unwrap();
+                    e.last_used = tick;
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((e.bytes.clone(), true));
+                }
+                if inner.pending.contains(&key) {
+                    // someone is filling this key: wait, then re-check
+                    // (on their failure we fall out and fill ourselves)
+                    inner = self.cv.wait(inner).unwrap();
+                    continue;
+                }
+                break;
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            if key.span > self.cap {
+                // larger than the whole cache: serve uncached rather
+                // than wait for space that cannot exist
+                self.bypasses.fetch_add(1, Ordering::Relaxed);
+                drop(inner);
+                return Ok((Arc::new(fill()?), false));
+            }
+            inner.pending.insert(key.clone());
+        }
+        // fill OUTSIDE the lock — concurrent fills of different keys
+        // proceed in parallel
+        match fill() {
+            Ok(buf) => {
+                let bytes = Arc::new(buf);
+                let mut inner = self.inner.lock().unwrap();
+                inner.pending.remove(&key);
+                self.insert_evicting(&mut inner, key, bytes.clone());
+                self.cv.notify_all();
+                Ok((bytes, false))
+            }
+            Err(e) => {
+                self.fill_errors.fetch_add(1, Ordering::Relaxed);
+                let mut inner = self.inner.lock().unwrap();
+                inner.pending.remove(&key);
+                self.cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// Insert under LRU eviction; if eviction cannot free enough space
+    /// the image is simply not cached (callers already hold the bytes).
+    fn insert_evicting(&self, inner: &mut Inner, key: RunKey,
+                       bytes: Arc<Vec<u8>>) {
+        let span = bytes.len() as u64;
+        while inner.used + span > self.cap {
+            let victim = inner
+                .ready
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    if let Some(e) = inner.ready.remove(&k) {
+                        inner.used -= e.bytes.len() as u64;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => return, // empty cache and still no room
+            }
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.used += span;
+        inner.ready.insert(key, Entry { bytes, last_used: tick });
+    }
+
+    /// Drop every resident entry (in-flight fills are unaffected).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.ready.clear();
+        inner.used = 0;
+    }
+
+    pub fn stats(&self) -> RunCacheStats {
+        let inner = self.inner.lock().unwrap();
+        RunCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            bypasses: self.bypasses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            fill_errors: self.fill_errors.load(Ordering::Relaxed),
+            resident_bytes: inner.used,
+            cap_bytes: self.cap,
+            entries: inner.ready.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn key(rel: &str, start: u64, span: u64) -> RunKey {
+        RunKey { ns: 7, rel: rel.to_string(), start, span }
+    }
+
+    #[test]
+    fn hit_after_fill_and_stats() {
+        let c = RunCache::new(1 << 20);
+        let (b1, hit1) = c
+            .get_or_fill(key("a", 0, 4), || Ok(vec![1, 2, 3, 4]))
+            .unwrap();
+        assert!(!hit1);
+        let (b2, hit2) = c
+            .get_or_fill(key("a", 0, 4), || panic!("must not refill"))
+            .unwrap();
+        assert!(hit2);
+        assert_eq!(b1, b2);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!(s.resident_bytes, 4);
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn single_flight_dedups_concurrent_fills() {
+        let c = RunCache::new(1 << 20);
+        let fills = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            let fills = fills.clone();
+            handles.push(std::thread::spawn(move || {
+                c.get_or_fill(key("a", 0, 64), || {
+                    fills.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(20),
+                    );
+                    Ok(vec![9u8; 64])
+                })
+                .unwrap()
+                .0
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().as_slice(), &[9u8; 64][..]);
+        }
+        assert_eq!(fills.load(Ordering::SeqCst), 1,
+                   "K requests for one run must cost one backing read");
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 8);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_and_oversized_runs_bypass() {
+        let c = RunCache::new(100);
+        c.get_or_fill(key("a", 0, 60), || Ok(vec![0u8; 60])).unwrap();
+        c.get_or_fill(key("b", 0, 60), || Ok(vec![0u8; 60])).unwrap();
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 1);
+        assert!(s.resident_bytes <= 100);
+        // "a" was evicted: refill is a miss
+        let (_, hit) =
+            c.get_or_fill(key("a", 0, 60), || Ok(vec![0u8; 60]))
+                .unwrap();
+        assert!(!hit);
+        // larger than the whole cache: served, uncached, no deadlock
+        let (big, hit) = c
+            .get_or_fill(key("big", 0, 4096), || Ok(vec![7u8; 4096]))
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(big.len(), 4096);
+        assert_eq!(c.stats().bypasses, 1);
+    }
+
+    #[test]
+    fn failed_fill_wakes_waiters_and_retries() {
+        let c = RunCache::new(1 << 20);
+        assert!(c
+            .get_or_fill(key("a", 0, 8), || {
+                anyhow::bail!("torn copy")
+            })
+            .is_err());
+        assert_eq!(c.stats().fill_errors, 1);
+        // the key is not wedged: the next caller fills it
+        let (b, hit) = c
+            .get_or_fill(key("a", 0, 8), || Ok(vec![1u8; 8]))
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(b.len(), 8);
+    }
+
+    #[test]
+    fn clear_drops_entries() {
+        let c = RunCache::new(1 << 20);
+        c.get_or_fill(key("a", 0, 8), || Ok(vec![0u8; 8])).unwrap();
+        c.clear();
+        let s = c.stats();
+        assert_eq!((s.entries, s.resident_bytes), (0, 0));
+    }
+}

@@ -1,0 +1,356 @@
+//! Checkpoint serving at scale (paper §V scaled out to many
+//! concurrent consumers): a [`CheckpointService`] owns one
+//! `Arc`-shared [`TierPipeline`] per source rank and serves N
+//! concurrent writers plus M concurrent readers — restore, reshard and
+//! verify sessions — from ONE set of tier backends, so reads and
+//! checkpoint writes contend for the same modeled devices instead of
+//! each session pretending it owns the machine.
+//!
+//! Three mechanisms make that scale:
+//!
+//! - **Admission + weighted QoS** ([`Qos`], [`Admission`]): at most
+//!   `max_inflight` requests run at once (the rest queue, wait time
+//!   reported per request), and each QoS class charges the per-tier
+//!   [`crate::storage::Throttle`]s at its weight — interactive probes
+//!   slip between a background sweep's bandwidth quanta instead of
+//!   convoying behind them.
+//! - **Shared gather-run read cache** ([`RunCache`]): sealed runs are
+//!   cached across sessions with single-flight fill dedup, so K
+//!   simultaneous restores of one version cost ~one backing read per
+//!   run.
+//! - **Persistent read engines**: one lazily-built
+//!   [`crate::restore::ReadEngine`] per QoS class, reader/lane threads
+//!   and staging pool reused across every request it serves (no
+//!   per-request thread churn).
+
+mod cache;
+
+pub use cache::{RunCache, RunCacheStats, RunKey};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::restore::reshard::{CheckpointWorld, ReshardPlan};
+use crate::restore::{PassReport, ReadEngine, ReadEngineConfig};
+use crate::state::RankState;
+use crate::storage::{RestoredVersion, TierPipeline};
+
+/// Service quality classes, ordered interactive-first. The weight is
+/// the class's throttle-quantum multiplier (see
+/// [`crate::storage::Throttle::acquire_weighted`]): 16:1 between
+/// interactive and background.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Qos {
+    /// Latency-sensitive sessions (a rank waiting to resume training).
+    Interactive,
+    /// The default class.
+    Standard,
+    /// Bulk/scrub traffic (verify sweeps, migration drains).
+    Background,
+}
+
+impl Qos {
+    pub const ALL: [Qos; 3] =
+        [Qos::Interactive, Qos::Standard, Qos::Background];
+
+    /// Throttle weight of this class.
+    pub fn weight(self) -> f64 {
+        match self {
+            Qos::Interactive => 4.0,
+            Qos::Standard => 1.0,
+            Qos::Background => 0.25,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Qos::Interactive => "interactive",
+            Qos::Standard => "standard",
+            Qos::Background => "background",
+        }
+    }
+
+    /// Parse a CLI label (`--qos interactive|standard|background`).
+    pub fn parse(s: &str) -> anyhow::Result<Qos> {
+        match s {
+            "interactive" => Ok(Qos::Interactive),
+            "standard" => Ok(Qos::Standard),
+            "background" => Ok(Qos::Background),
+            other => anyhow::bail!(
+                "unknown QoS class {other:?} (want \
+                 interactive|standard|background)"
+            ),
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Qos::Interactive => 0,
+            Qos::Standard => 1,
+            Qos::Background => 2,
+        }
+    }
+}
+
+/// Serving-plane knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Read-engine geometry shared by every QoS class's engine.
+    pub read: ReadEngineConfig,
+    /// Gather-run cache capacity; `0` disables caching (ablation).
+    pub run_cache_bytes: u64,
+    /// Admission bound: requests running at once (the rest queue).
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            read: ReadEngineConfig::default(),
+            run_cache_bytes: 256 << 20,
+            max_inflight: 64,
+        }
+    }
+}
+
+/// One served read: the restored files plus the request's admission
+/// wait and its pass latency/cache report.
+#[derive(Debug)]
+pub struct ServedRead {
+    pub files: RestoredVersion,
+    /// Time queued in admission before the pass started.
+    pub wait_s: f64,
+    pub report: PassReport,
+    pub qos: Qos,
+}
+
+/// One served reshard execution (see [`ServedRead`]).
+#[derive(Debug)]
+pub struct ServedPlan {
+    pub ranks: Vec<RankState>,
+    pub wait_s: f64,
+    pub report: PassReport,
+    pub qos: Qos,
+}
+
+/// Counting-semaphore admission gate with wait-time measurement.
+struct Admission {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct AdmissionGuard<'a> {
+    gate: &'a Admission,
+}
+
+impl Admission {
+    fn new(n: usize) -> Admission {
+        Admission { permits: Mutex::new(n.max(1)), cv: Condvar::new() }
+    }
+
+    /// Block until admitted; returns the guard and the queue wait.
+    fn acquire(&self) -> (AdmissionGuard<'_>, f64) {
+        let t0 = Instant::now();
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+        (AdmissionGuard { gate: self }, t0.elapsed().as_secs_f64())
+    }
+}
+
+impl Drop for AdmissionGuard<'_> {
+    fn drop(&mut self) {
+        *self.gate.permits.lock().unwrap() += 1;
+        self.gate.cv.notify_one();
+    }
+}
+
+/// Aggregate serving counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    /// Requests per QoS class, indexed `[interactive, standard,
+    /// background]`.
+    pub by_class: [u64; 3],
+    /// Run-cache counters (`None` when serving uncached).
+    pub cache: Option<RunCacheStats>,
+}
+
+/// The shared-pipeline checkpoint service (module docs above). Cheap to
+/// share: hand `Arc<CheckpointService>` clones to every session thread.
+pub struct CheckpointService {
+    pipelines: Vec<Arc<TierPipeline>>,
+    cache: Option<Arc<RunCache>>,
+    cfg: ServeConfig,
+    admission: Admission,
+    /// One persistent engine per QoS class, built on first use.
+    engines: Mutex<HashMap<usize, Arc<ReadEngine>>>,
+    requests: AtomicU64,
+    by_class: [AtomicU64; 3],
+}
+
+impl CheckpointService {
+    /// Serve the given source-rank pipelines. The `Arc`s may (and for
+    /// live serving, should) be the same pipelines a writer engine is
+    /// checkpointing through — shared tiers mean shared throttles mean
+    /// real reader/writer contention.
+    pub fn new(pipelines: Vec<Arc<TierPipeline>>, cfg: ServeConfig)
+        -> Arc<CheckpointService> {
+        let cache = if cfg.run_cache_bytes > 0 {
+            Some(RunCache::new(cfg.run_cache_bytes))
+        } else {
+            None
+        };
+        Arc::new(CheckpointService {
+            admission: Admission::new(cfg.max_inflight),
+            pipelines,
+            cache,
+            cfg,
+            engines: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            by_class: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        })
+    }
+
+    /// Number of source ranks served.
+    pub fn ranks(&self) -> usize {
+        self.pipelines.len()
+    }
+
+    /// One source rank's pipeline.
+    pub fn pipeline(&self, rank: usize)
+        -> anyhow::Result<&Arc<TierPipeline>> {
+        self.pipelines.get(rank).ok_or_else(|| {
+            anyhow::anyhow!(
+                "service has no source rank {rank} (serving {} ranks)",
+                self.pipelines.len()
+            )
+        })
+    }
+
+    /// A reshard world over the SAME pipeline `Arc`s this service
+    /// serves — reshard sessions share run-cache namespaces (and tier
+    /// throttles) with restore sessions.
+    pub fn world(&self) -> CheckpointWorld {
+        CheckpointWorld::from_pipelines(self.pipelines.clone())
+    }
+
+    /// The run cache, if serving cached.
+    pub fn run_cache(&self) -> Option<&Arc<RunCache>> {
+        self.cache.as_ref()
+    }
+
+    /// The persistent read engine of one QoS class (built on first
+    /// use; all classes share the one run cache).
+    fn engine_for(&self, qos: Qos) -> Arc<ReadEngine> {
+        let mut engines = self.engines.lock().unwrap();
+        engines
+            .entry(qos.idx())
+            .or_insert_with(|| {
+                let mut eng = ReadEngine::new(self.cfg.read.clone())
+                    .with_qos_weight(qos.weight());
+                if let Some(cache) = &self.cache {
+                    eng = eng.with_run_cache(cache.clone());
+                }
+                Arc::new(eng)
+            })
+            .clone()
+    }
+
+    fn count(&self, qos: Qos) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.by_class[qos.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Serve one full-version restore of one source rank.
+    pub fn read_version(&self, rank: usize, version: u64, qos: Qos)
+        -> anyhow::Result<ServedRead> {
+        let pipeline = self.pipeline(rank)?.clone();
+        let engine = self.engine_for(qos);
+        let (_admitted, wait_s) = self.admission.acquire();
+        self.count(qos);
+        let (files, report) =
+            engine.read_version_report(&pipeline, version)?;
+        Ok(ServedRead { files, wait_s, report, qos })
+    }
+
+    /// Serve one reshard-plan execution across the service's ranks.
+    pub fn execute_plan(&self, version: u64, plan: &ReshardPlan,
+                        qos: Qos) -> anyhow::Result<ServedPlan> {
+        let world = self.world();
+        let engine = self.engine_for(qos);
+        let (_admitted, wait_s) = self.admission.acquire();
+        self.count(qos);
+        let (ranks, report) =
+            engine.execute_plan_report(&world, version, plan)?;
+        Ok(ServedPlan { ranks, wait_s, report, qos })
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            by_class: [
+                self.by_class[0].load(Ordering::Relaxed),
+                self.by_class[1].load(Ordering::Relaxed),
+                self.by_class[2].load(Ordering::Relaxed),
+            ],
+            cache: self.cache.as_ref().map(|c| c.stats()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qos_parses_and_orders_weights() {
+        for q in Qos::ALL {
+            assert_eq!(Qos::parse(q.label()).unwrap(), q);
+        }
+        assert!(Qos::parse("realtime").is_err());
+        assert!(Qos::Interactive.weight() > Qos::Standard.weight());
+        assert!(Qos::Standard.weight() > Qos::Background.weight());
+    }
+
+    #[test]
+    fn admission_bounds_inflight_and_measures_wait() {
+        let gate = Arc::new(Admission::new(1));
+        let (g, w) = gate.acquire();
+        assert!(w < 0.05);
+        let gate2 = gate.clone();
+        let h = std::thread::spawn(move || gate2.acquire().1);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        drop(g);
+        let waited = h.join().unwrap();
+        assert!(waited >= 0.03,
+                "second request should have queued: {waited}");
+    }
+
+    #[test]
+    fn service_rejects_unknown_rank() {
+        let svc =
+            CheckpointService::new(Vec::new(), ServeConfig::default());
+        assert!(svc.read_version(0, 0, Qos::Standard).is_err());
+        assert_eq!(svc.ranks(), 0);
+        assert!(svc.stats().cache.is_some());
+    }
+
+    #[test]
+    fn cache_off_config_serves_uncached() {
+        let svc = CheckpointService::new(
+            Vec::new(),
+            ServeConfig { run_cache_bytes: 0, ..Default::default() },
+        );
+        assert!(svc.run_cache().is_none());
+        assert!(svc.stats().cache.is_none());
+    }
+}

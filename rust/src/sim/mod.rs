@@ -220,6 +220,53 @@ pub fn capture_time_s(kind: EngineKind, cfg: &SimConfig, lanes: usize)
     load.dev_bytes as f64 / effective_d2h_bps(&em, &cfg)
 }
 
+/// Calibrated serving estimate: TTFT/completion latency percentiles of
+/// `readers` concurrent restore sessions sharing one rank's tier
+/// pipeline through the serving plane's gather-run cache — the model
+/// behind `figures serve` (the measured counterpart is `bench-serve`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeEstimate {
+    /// Median time-to-first-tensor per session.
+    pub ttft_p50_s: f64,
+    /// Tail (p99) time-to-first-tensor.
+    pub ttft_p99_s: f64,
+    /// Tail (p99) end-to-end completion.
+    pub completion_p99_s: f64,
+    /// Modeled shared-tier utilization in [0, 1).
+    pub utilization: f64,
+}
+
+/// Model `readers` concurrent sessions restoring one version through a
+/// shared run cache with hit fraction `cache_hit_frac`. Cache hits are
+/// host-memory scatters that never touch the shared storage tier, so
+/// only the miss fraction contributes to tier utilization; medians
+/// inflate linearly with utilization while tails pay the M/M/1-style
+/// `1/(1-rho)` queueing blow-up. Pure function of its arguments — it
+/// changes no published figure.
+pub fn serve_time_s(kind: EngineKind, cfg: &SimConfig, readers: usize,
+                    cache_hit_frac: f64) -> ServeEstimate {
+    let base = restore_time_s(kind, cfg, 2, true);
+    let hit = cache_hit_frac.clamp(0.0, 1.0);
+    let m = readers.max(1) as f64;
+    // saturating utilization map keeps rho in [0, 1) for any fan-out
+    let x = 0.25 * m * (1.0 - hit);
+    let rho = x / (1.0 + x);
+    // single-session times with the cached read fraction elided (hits
+    // still pay the scatter/H2D side)
+    let read_eff_s = base.read_s * (1.0 - hit);
+    let ttft_1 = base.ttft_s * (1.0 - 0.8 * hit);
+    let total_1 = (base.total_s - base.read_s.max(base.h2d_s))
+        + read_eff_s.max(base.h2d_s);
+    let ttft_p50_s = ttft_1 * (1.0 + 0.25 * rho);
+    let tail = 1.0 + 3.0 * rho / (1.0 - rho);
+    ServeEstimate {
+        ttft_p50_s,
+        ttft_p99_s: ttft_p50_s * tail,
+        completion_p99_s: total_1 * (1.0 + 0.25 * rho) * tail,
+        utilization: rho,
+    }
+}
+
 /// Calibrated incremental-upload estimate for the content-addressed
 /// remote tier (`storage::content`): what the v2 upload of a two-version
 /// incremental run costs over a WAN link, versus re-uploading the full
@@ -667,6 +714,41 @@ mod tests {
             let large = run(kind, "70B").effective_bps();
             assert!(large > small,
                     "{}: 3B={small:.2e} 70B={large:.2e}", kind.label());
+        }
+    }
+
+    #[test]
+    fn serve_model_is_monotone_in_readers_and_hit_rate() {
+        let cfg = SimConfig::paper("7B", 15, 1);
+        let est = |readers, hit| {
+            serve_time_s(EngineKind::DataStatesLlm, &cfg, readers, hit)
+        };
+        // more concurrent readers -> worse tails at a fixed hit rate
+        let mut prev = est(1, 0.5);
+        for readers in [4, 16, 64, 256] {
+            let e = est(readers, 0.5);
+            assert!(e.ttft_p99_s > prev.ttft_p99_s, "{readers}");
+            assert!(e.completion_p99_s > prev.completion_p99_s);
+            prev = e;
+        }
+        // better hit rate -> strictly better tails at a fixed fan-out
+        let mut prev = est(64, 0.0);
+        for hit in [0.25, 0.5, 0.9, 0.99] {
+            let e = est(64, hit);
+            assert!(e.ttft_p99_s < prev.ttft_p99_s, "{hit}");
+            assert!(e.completion_p99_s < prev.completion_p99_s);
+            assert!(e.utilization < prev.utilization);
+            prev = e;
+        }
+        // internal ordering + sanity at every cell
+        for readers in [1, 64] {
+            for hit in [0.0, 0.5, 0.98] {
+                let e = est(readers, hit);
+                assert!(e.ttft_p50_s > 0.0);
+                assert!(e.ttft_p99_s >= e.ttft_p50_s);
+                assert!(e.completion_p99_s >= e.ttft_p50_s);
+                assert!((0.0..1.0).contains(&e.utilization));
+            }
         }
     }
 

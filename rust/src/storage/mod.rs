@@ -33,6 +33,7 @@ pub use host_cache::HostCache;
 pub use local_fs::LocalFs;
 pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
                    VersionDrainJob};
+pub(crate) use pipeline::PipelineShared;
 pub use uring::{UringContext, UringStats};
 
 use crate::provider::Bytes;
@@ -429,10 +430,19 @@ pub trait Backend: Send + Sync {
 }
 
 /// Token-bucket-style bandwidth cap shared by every writer of one tier:
-/// each write reserves `bytes / bps` seconds on a single virtual
-/// transfer clock and sleeps until its reservation elapses, so the
-/// tier's aggregate write rate never exceeds `bps` no matter how many
-/// threads push into it.
+/// each transfer reserves time on a single virtual transfer clock and
+/// sleeps until its reservation elapses, so the tier's aggregate rate
+/// never exceeds `bps` no matter how many threads push into it.
+///
+/// Large transfers do NOT reserve their whole duration up front: an
+/// acquisition is split into bounded quanta, each reserved only after
+/// the previous one has elapsed. Between quanta the virtual clock is up
+/// for grabs, so a 4 KiB metadata read arriving mid-way through a
+/// multi-GiB gather run waits at most one in-flight quantum per
+/// competing stream instead of the whole run. QoS weights size the
+/// quanta: a weight-4 stream reserves 4x the bytes per clock grab and
+/// therefore wins a proportionally larger bandwidth share while
+/// contended, without ever locking out lighter classes.
 #[derive(Debug)]
 pub struct Throttle {
     bps: f64,
@@ -440,6 +450,10 @@ pub struct Throttle {
     /// Virtual time (seconds since epoch) when the tier is next free.
     next_free_s: Mutex<f64>,
 }
+
+/// Base quantum for throttle reservations; one clock grab never covers
+/// more than `weight * THROTTLE_QUANTUM_BYTES`.
+pub const THROTTLE_QUANTUM_BYTES: u64 = 1 << 20;
 
 impl Throttle {
     pub fn new(bps: f64) -> Throttle {
@@ -454,18 +468,36 @@ impl Throttle {
         self.bps
     }
 
-    /// Block until `bytes` may pass at the configured rate.
+    /// Block until `bytes` may pass at the configured rate
+    /// (neutral weight 1.0).
     pub fn acquire(&self, bytes: u64) {
-        let now = self.epoch.elapsed().as_secs_f64();
-        let done_at = {
-            let mut next = self.next_free_s.lock().unwrap();
-            let start = next.max(now);
-            *next = start + bytes as f64 / self.bps;
-            *next
-        };
-        let wait = done_at - now;
-        if wait > 0.0 {
-            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        self.acquire_weighted(bytes, 1.0);
+    }
+
+    /// Block until `bytes` may pass, reserving the virtual clock in
+    /// quanta of at most `weight * THROTTLE_QUANTUM_BYTES` so
+    /// concurrent acquisitions interleave at quantum granularity.
+    pub fn acquire_weighted(&self, bytes: u64, weight: f64) {
+        let w = weight.clamp(0.125, 32.0);
+        let quantum = ((THROTTLE_QUANTUM_BYTES as f64 * w) as u64).max(4096);
+        let mut left = bytes;
+        loop {
+            let take = left.min(quantum);
+            let now = self.epoch.elapsed().as_secs_f64();
+            let done_at = {
+                let mut next = self.next_free_s.lock().unwrap();
+                let start = next.max(now);
+                *next = start + take as f64 / self.bps;
+                *next
+            };
+            let wait = done_at - now;
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            left -= take;
+            if left == 0 {
+                break;
+            }
         }
     }
 }
@@ -500,6 +532,52 @@ mod tests {
         h.join().unwrap();
         assert!(t0.elapsed().as_secs_f64() >= 0.09,
                 "throttle too permissive: {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn throttle_small_read_not_convoyed_behind_bulk() {
+        // At 200 MB/s a 40 MB bulk stream occupies the tier for ~0.2 s.
+        // Pre-quantum-split, a 4 KiB read arriving mid-stream waited for
+        // the WHOLE remaining bulk reservation. With bounded quanta it
+        // waits at most ~one in-flight quantum (1 MiB / 200 MB/s = 5 ms)
+        // plus its own transfer time.
+        let th = std::sync::Arc::new(Throttle::new(200e6));
+        let bulk = {
+            let th = th.clone();
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                th.acquire(40_000_000);
+                t0.elapsed().as_secs_f64()
+            })
+        };
+        // Let the bulk stream get well underway, then time a tiny read.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t0 = Instant::now();
+        th.acquire(4096);
+        let small_s = t0.elapsed().as_secs_f64();
+        let bulk_s = bulk.join().unwrap();
+        // Aggregate rate still enforced: 40 MB at 200 MB/s >= ~0.2 s.
+        assert!(bulk_s >= 0.18, "bulk finished too fast: {bulk_s}");
+        // The small read must NOT have waited out the bulk's tail
+        // (>= ~0.15 s remained when it arrived).
+        assert!(small_s < 0.1,
+                "small read convoyed behind bulk: {small_s}s");
+    }
+
+    #[test]
+    fn throttle_weighted_quanta_preserve_rate() {
+        // Two weighted streams sharing one clock still sum to the
+        // configured aggregate rate: 1 MB total at 10 MB/s >= ~100 ms.
+        let th = std::sync::Arc::new(Throttle::new(10e6));
+        let t0 = Instant::now();
+        let h = {
+            let th = th.clone();
+            std::thread::spawn(move || th.acquire_weighted(500_000, 4.0))
+        };
+        th.acquire_weighted(500_000, 0.25);
+        h.join().unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.09,
+                "weighted throttle too permissive: {:?}", t0.elapsed());
     }
 
     #[test]

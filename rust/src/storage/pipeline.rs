@@ -243,9 +243,13 @@ impl Manifest {
     }
 }
 
-/// State shared between the pipeline handle and its drain worker (the
-/// worker must not hold the handle itself, or drop/join would cycle).
-struct PipelineShared {
+/// State shared between the pipeline handle, its drain worker, and any
+/// restore-engine pass sources holding the tier stack alive (the worker
+/// and the sources must not hold the handle itself, or drop/join would
+/// cycle). Crate-visible so `restore::engine::Source` can own the tier
+/// stack by `Arc` — gather runs then carry no pipeline borrows and can
+/// flow to the persistent serving worker threads.
+pub(crate) struct PipelineShared {
     tiers: Vec<Arc<dyn Backend>>,
     manifest: Manifest,
     timeline: Arc<Timeline>,
@@ -267,6 +271,23 @@ struct PipelineShared {
 impl PipelineShared {
     fn terminal(&self) -> &Arc<dyn Backend> {
         self.tiers.last().expect("pipeline has at least one tier")
+    }
+
+    /// The tier stack, fastest first (restore-engine source resolution).
+    pub(crate) fn tier_stack(&self) -> &[Arc<dyn Backend>] {
+        &self.tiers
+    }
+
+    /// Ring attribution summed across every tier running an io_uring
+    /// (`None` when no tier does).
+    pub(crate) fn uring_stats_agg(&self) -> Option<UringStats> {
+        let mut agg: Option<UringStats> = None;
+        for t in &self.tiers {
+            if let Some(s) = t.uring_stats() {
+                agg.get_or_insert_with(UringStats::default).merge(&s);
+            }
+        }
+        agg
     }
 
     /// Persist the manifest on the terminal tier, publishing through a
@@ -722,14 +743,15 @@ impl TierPipeline {
     /// Ring attribution summed across every tier that runs an io_uring
     /// (`None` when no tier does — probe refused or not requested).
     pub fn uring_stats(&self) -> Option<UringStats> {
-        let mut agg: Option<UringStats> = None;
-        for t in &self.shared.tiers {
-            if let Some(s) = t.uring_stats() {
-                agg.get_or_insert_with(UringStats::default)
-                    .merge(&s);
-            }
-        }
-        agg
+        self.shared.uring_stats_agg()
+    }
+
+    /// The `Arc`-shared tier state backing this pipeline — what a
+    /// restore-engine pass source holds so sealed gather runs carry no
+    /// pipeline borrows (persistent serving workers outlive any one
+    /// caller's borrow of the pipeline handle).
+    pub(crate) fn shared_state(&self) -> Arc<PipelineShared> {
+        self.shared.clone()
     }
 
     /// Offer the pinned staging slab to every tier for fixed-buffer

@@ -83,6 +83,39 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Tail-latency summary over a latency sample vec (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Percentiles {
+    pub n: usize,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// The `p`-th percentile (0..=100) of `sorted` using nearest-rank on a
+/// pre-sorted ascending slice. Returns 0.0 on an empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Sort `samples` in place and summarize its tail
+/// (p50/p95/p99/max, nearest-rank).
+pub fn percentiles(samples: &mut [f64]) -> Percentiles {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Percentiles {
+        n: samples.len(),
+        p50_s: percentile(samples, 50.0),
+        p95_s: percentile(samples, 95.0),
+        p99_s: percentile(samples, 99.0),
+        max_s: samples.last().copied().unwrap_or(0.0),
+    }
+}
+
 /// Print a result row in a stable, greppable format.
 pub fn report(r: &BenchResult) {
     println!(
@@ -113,5 +146,27 @@ mod tests {
         let r = b.run("noop", || 1 + 1);
         assert_eq!(r.iters, 5);
         assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        // 1..=100: p50 = 50, p95 = 95, p99 = 99 under nearest-rank.
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = percentiles(&mut v);
+        assert_eq!(p.n, 100);
+        assert_eq!(p.p50_s, 50.0);
+        assert_eq!(p.p95_s, 95.0);
+        assert_eq!(p.p99_s, 99.0);
+        assert_eq!(p.max_s, 100.0);
+        // ordering invariant holds on skewed samples too
+        let mut skew = vec![0.001, 0.001, 0.002, 0.5];
+        let s = percentiles(&mut skew);
+        assert!(s.p50_s <= s.p95_s && s.p95_s <= s.p99_s
+                && s.p99_s <= s.max_s);
+        // singleton and empty edge cases
+        let mut one = vec![0.25];
+        let o = percentiles(&mut one);
+        assert_eq!((o.p50_s, o.p99_s, o.max_s), (0.25, 0.25, 0.25));
+        assert_eq!(percentile(&[], 99.0), 0.0);
     }
 }

@@ -1,0 +1,255 @@
+//! PR-8 acceptance: checkpoint serving at scale.
+//!
+//! - Property: with one LIVE writer checkpointing mid-flight and
+//!   M ∈ {2, 8} concurrent served readers over random engine / cache
+//!   geometries — including a cache too small to hold a single run
+//!   (every fill bypasses) and one small enough to churn evictions —
+//!   every served restore is byte-identical to the serial oracle
+//!   (`TierPipeline::read_version_serial`), every cached pass accounts
+//!   each gather run as exactly one hit or miss, uncached passes never
+//!   touch the cache, and the sweep completes (no deadlock under
+//!   cache-full backpressure).
+//! - Dedup: with a shared warm cache, total backing reads stay strictly
+//!   below the total run demand of the overlapping readers.
+
+use std::sync::Arc;
+
+use datastates::config::EngineConfig;
+use datastates::engine::{CheckpointEngine, DataStatesEngine};
+use datastates::restore::ReadEngineConfig;
+use datastates::serve::{CheckpointService, Qos, ServeConfig};
+use datastates::state::shard::FileKind;
+use datastates::state::tensor::{DType, SimDeviceTensor, TensorShard};
+use datastates::state::{PyObj, RankState, ShardFile, StateItem};
+use datastates::storage::RestoredVersion;
+use datastates::util::{proptest, Rng, TempDir};
+
+/// A mixed multi-file state with deterministic contents.
+fn mixed_state(rng: &mut Rng) -> RankState {
+    let n_files = rng.range(1, 4);
+    let mut files = Vec::new();
+    for f in 0..n_files {
+        let n_tensors = rng.range(2, 5);
+        let mut items = Vec::new();
+        for i in 0..n_tensors {
+            let len = rng.range(1_000, 50_000);
+            let data: Vec<u8> = (0..len)
+                .map(|j| ((f * 41 + i * 97 + j * 11) % 249) as u8)
+                .collect();
+            items.push(StateItem::Tensor(if i % 2 == 0 {
+                TensorShard::device(
+                    format!("dev{f}_{i}"),
+                    DType::U8,
+                    vec![len],
+                    SimDeviceTensor::new(data),
+                )
+            } else {
+                TensorShard::host(
+                    format!("host{f}_{i}"),
+                    DType::U8,
+                    vec![len],
+                    data,
+                )
+            }));
+        }
+        items.push(StateItem::Object {
+            name: format!("meta{f}"),
+            obj: PyObj::synthetic_metadata(rng.range(200, 2_000), 29),
+        });
+        files.push(ShardFile {
+            name: format!("layer_{f:02}.pt"),
+            kind: FileKind::ParamLayer,
+            items,
+        });
+    }
+    RankState { rank: 0, files }
+}
+
+fn assert_identical(served: &RestoredVersion, oracle: &RestoredVersion)
+    -> anyhow::Result<()> {
+    anyhow::ensure!(served.len() == oracle.len(),
+                    "file count differs: {} vs {}", served.len(),
+                    oracle.len());
+    for (name, rf) in oracle {
+        anyhow::ensure!(served[name].payloads == rf.payloads,
+                        "{name} not byte-identical to the serial oracle");
+    }
+    Ok(())
+}
+
+/// Spawn `m` served readers of version `v`, write `live_version`
+/// through the SAME engine while they run, and return the summed run /
+/// hit / miss demand across the served passes.
+fn serve_readers(
+    eng: &mut DataStatesEngine,
+    svc: &Arc<CheckpointService>,
+    oracle: &Arc<RestoredVersion>,
+    state: &Arc<RankState>,
+    m: usize,
+    cached: bool,
+    live_version: u64,
+) -> anyhow::Result<(u64, u64, u64)> {
+    let handles: Vec<_> = (0..m)
+        .map(|i| {
+            let svc = svc.clone();
+            let oracle = oracle.clone();
+            std::thread::spawn(
+                move || -> anyhow::Result<(u64, u64, u64)> {
+                    let qos = Qos::ALL[i % 3];
+                    let sr = svc.read_version(0, 0, qos)?;
+                    assert_identical(&sr.files, &oracle)?;
+                    let rep = sr.report;
+                    anyhow::ensure!(rep.runs > 0, "pass ran no runs");
+                    if cached {
+                        anyhow::ensure!(
+                            rep.cache_hits + rep.cache_misses == rep.runs,
+                            "cached pass lost runs: {rep:?}"
+                        );
+                    } else {
+                        anyhow::ensure!(
+                            rep.cache_hits == 0 && rep.cache_misses == 0,
+                            "uncached pass touched the cache: {rep:?}"
+                        );
+                    }
+                    Ok((rep.runs, rep.cache_hits, rep.cache_misses))
+                },
+            )
+        })
+        .collect();
+    // the live writer lands a new version on the same shared tiers
+    // while every reader above is in flight
+    eng.begin(live_version, state)?.wait_persisted()?;
+    let mut totals = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (r, hh, mm) = h.join().unwrap()?;
+        totals.0 += r;
+        totals.1 += hh;
+        totals.2 += mm;
+    }
+    Ok(totals)
+}
+
+#[test]
+fn served_reads_match_serial_oracle_across_random_configs() {
+    proptest::check(0x5E12, 6, |rng| {
+        let state = mixed_state(rng);
+        let dir = TempDir::new("serve-prop")?;
+        let mut cfg = EngineConfig::with_dir(dir.path());
+        cfg.chunk_bytes = rng.range(512, 16_384);
+        cfg.host_cache_bytes = 16 << 20;
+        let mut eng = DataStatesEngine::new(cfg)?;
+        eng.begin(0, &state)?.wait_persisted()?;
+        let oracle = Arc::new(eng.pipeline().read_version_serial(0)?);
+        let state = Arc::new(state);
+
+        let m = *rng.choose(&[2usize, 8]);
+        // 0 = uncached ablation; 512 B = smaller than nearly every run
+        // (bypass backpressure); 24 KiB = eviction churn; 64 MiB = warm
+        let cache_bytes =
+            *rng.choose(&[0u64, 512, 24 << 10, 64 << 20]);
+        let mid_coalesce = rng.range(1 << 10, 32 << 10);
+        let svc = eng.serve(ServeConfig {
+            read: ReadEngineConfig {
+                readers: rng.range(1, 5),
+                restore_lanes: rng.range(1, 4),
+                coalesce_bytes: *rng.choose(&[0usize, mid_coalesce,
+                                              16 << 20]),
+                ..Default::default()
+            },
+            run_cache_bytes: cache_bytes,
+            max_inflight: rng.range(1, m + 1),
+        });
+
+        let cached = cache_bytes > 0;
+        let (runs, hits, misses) =
+            serve_readers(&mut eng, &svc, &oracle, &state, m, cached,
+                          1)?;
+        let stats = svc.stats();
+        anyhow::ensure!(stats.requests == m as u64,
+                        "served {} of {m} requests", stats.requests);
+        match stats.cache {
+            Some(c) => {
+                anyhow::ensure!(c.hits == hits && c.misses == misses,
+                                "cache counters diverge from pass \
+                                 reports: {c:?} vs ({hits}, {misses})");
+                anyhow::ensure!(c.hits + c.misses == runs,
+                                "cache demand != run demand: {c:?}");
+                if cache_bytes >= 64 << 20 && m >= 2 {
+                    // warm shared cache: K overlapping readers must
+                    // cost strictly fewer backing reads than runs
+                    anyhow::ensure!(
+                        c.hits > 0 && c.misses < runs,
+                        "no cross-session dedup: {c:?} over {runs} runs"
+                    );
+                }
+            }
+            None => anyhow::ensure!(!cached),
+        }
+        // the version written DURING the sweep is immediately servable
+        let after = svc.read_version(0, 1, Qos::Interactive)?;
+        datastates::restore::verify_files_against(&after.files,
+                                                  &state)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn tiny_cache_backpressure_bypasses_without_deadlock() {
+    // a cache smaller than ANY run: every fill takes the bypass path;
+    // 8 concurrent readers plus a live writer must still complete,
+    // byte-identical, with zero hits
+    let mut rng = Rng::new(0xBACC);
+    let state = mixed_state(&mut rng);
+    let dir = TempDir::new("serve-tiny").unwrap();
+    let mut cfg = EngineConfig::with_dir(dir.path());
+    cfg.chunk_bytes = 8 << 10;
+    cfg.coalesce_bytes = 1 << 20;
+    let mut eng = DataStatesEngine::new(cfg).unwrap();
+    eng.begin(0, &state).unwrap().wait_persisted().unwrap();
+    let oracle =
+        Arc::new(eng.pipeline().read_version_serial(0).unwrap());
+    let state = Arc::new(state);
+
+    let svc = eng.serve(ServeConfig {
+        run_cache_bytes: 1, // below every possible run
+        max_inflight: 4,     // queue half the readers on admission
+        ..Default::default()
+    });
+    let (runs, hits, misses) =
+        serve_readers(&mut eng, &svc, &oracle, &state, 8, true, 1)
+            .unwrap();
+    let c = svc.stats().cache.unwrap();
+    assert_eq!(hits, 0, "nothing can fit, nothing may hit");
+    assert_eq!(c.bypasses, runs, "every run must take the bypass path");
+    assert_eq!(misses, runs);
+    assert_eq!(c.entries, 0);
+}
+
+#[test]
+fn warm_cache_dedups_backing_reads_across_readers() {
+    let mut rng = Rng::new(0xD00D);
+    let state = mixed_state(&mut rng);
+    let dir = TempDir::new("serve-dedup").unwrap();
+    let mut cfg = EngineConfig::with_dir(dir.path());
+    cfg.chunk_bytes = 4 << 10;
+    let mut eng = DataStatesEngine::new(cfg).unwrap();
+    eng.begin(0, &state).unwrap().wait_persisted().unwrap();
+    let oracle =
+        Arc::new(eng.pipeline().read_version_serial(0).unwrap());
+    let state = Arc::new(state);
+
+    let svc = eng.serve(ServeConfig::default());
+    let (runs, hits, misses) =
+        serve_readers(&mut eng, &svc, &oracle, &state, 8, true, 1)
+            .unwrap();
+    let c = svc.stats().cache.unwrap();
+    assert!(c.hits > 0 && c.misses < runs,
+            "8 readers of one version must dedup backing reads: {c:?}");
+    assert_eq!(c.hits + c.misses, runs);
+    assert_eq!((hits, misses), (c.hits, c.misses));
+    assert_eq!(c.bypasses, 0);
+    // per-class accounting saw all three QoS classes
+    let by = svc.stats().by_class;
+    assert!(by.iter().all(|&n| n > 0), "QoS classes unused: {by:?}");
+    assert_eq!(by.iter().sum::<u64>(), 8);
+}
