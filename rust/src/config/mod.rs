@@ -110,7 +110,7 @@ impl Parallelism {
     }
 }
 
-use crate::storage::TierSpec;
+use crate::storage::{ReplicaSpec, TierSpec};
 
 /// Checkpoint-engine tuning knobs (the paper's single user-facing knob is
 /// the pinned host cache size; the rest are engine internals we expose for
@@ -181,6 +181,13 @@ pub struct EngineConfig {
     /// REAL queue depth bounding in-flight extents (submitters block
     /// for a completion slot, not for the I/O).
     pub uring_queue_depth: usize,
+    /// Peer-replication policy: mirror every finalized version into the
+    /// listed peer directories through the drain worker, surfacing
+    /// `wait_durable(TierKind::Replicated)`. Empty = off (the default).
+    pub replicas: ReplicaSpec,
+    /// Deterministic fault-injection hooks for the `figures faults`
+    /// matrix (`faults::FaultInjector`); `None` in production paths.
+    pub faults: Option<std::sync::Arc<crate::faults::FaultInjector>>,
 }
 
 impl Default for EngineConfig {
@@ -201,6 +208,8 @@ impl Default for EngineConfig {
             evict_fast_tier: true,
             io_uring: false,
             uring_queue_depth: 64,
+            replicas: ReplicaSpec::default(),
+            faults: None,
         }
     }
 }
@@ -223,6 +232,13 @@ impl EngineConfig {
     /// Replace the tier stack (fastest first).
     pub fn with_tiers(mut self, tiers: Vec<TierSpec>) -> Self {
         self.tiers = tiers;
+        self
+    }
+
+    /// Mirror every version into `peers` directories (replication
+    /// factor K = peers.len()); see [`ReplicaSpec`].
+    pub fn with_replicas(mut self, replicas: ReplicaSpec) -> Self {
+        self.replicas = replicas;
         self
     }
 }

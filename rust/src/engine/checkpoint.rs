@@ -433,6 +433,12 @@ impl DataStatesEngine {
         // config's restore_lanes / reader_threads knobs
         pipeline.set_restore_config(
             crate::restore::ReadEngineConfig::from_engine(&cfg));
+        // peer replication + fault hooks install before the pump can
+        // land anything, so the first version already mirrors
+        if cfg.replicas.is_active() {
+            pipeline.set_replicas(&cfg.replicas);
+        }
+        pipeline.set_fault_injector(cfg.faults.clone());
         let (pump_tx, pump_rx) = crate::util::channel::unbounded::<PumpMsg>();
         let pump_notifier = notifier.clone();
         let pump_pipeline = pipeline.clone();
@@ -512,6 +518,20 @@ impl DataStatesEngine {
             pipeline
                 .record_terminal_complete(done.session.version(), &files);
             done.session.complete(elapsed);
+            // single-tier engines with peer replication still mirror
+            // the version through the drain worker (replicate-only job)
+            if pipeline.replicas_active() > 0 {
+                let session = done.session.clone();
+                if let Err(e) = pipeline.submit_drain(VersionDrainJob {
+                    session: done.session,
+                    requested: done.requested,
+                    dir: done.dir,
+                    files,
+                    notify: Some(notifier.clone()),
+                }) {
+                    session.fail_replica(format!("replica submit: {e:#}"));
+                }
+            }
         }
     }
 
@@ -742,6 +762,9 @@ impl CheckpointEngine for DataStatesEngine {
             },
             self.pipeline.tier_kinds(),
         );
+        if self.cfg.replicas.is_active() {
+            session.expect_replicas();
+        }
         let dir = format!("v{version:06}");
         self.pump_tx
             .send(PumpMsg::Job(PumpJob {

@@ -38,6 +38,16 @@ struct SessionState {
     /// Durable on the terminal tier.
     persisted: bool,
     failed: Option<String>,
+    /// Peer replication configured for this version (`ReplicaSpec`
+    /// active on the engine): `wait_durable(Replicated)` waits for the
+    /// replica pushes instead of degrading to the terminal tier.
+    expect_replicas: bool,
+    /// Every configured peer holds this version.
+    replicated: bool,
+    /// A replica push failed. Scoped to the REPLICA durability level:
+    /// local tiers (and `wait_persisted`) are unaffected — losing a
+    /// peer copy does not un-persist the local checkpoint.
+    replica_failed: Option<String>,
 }
 
 /// Engine-side state of one checkpoint version. Shared between the
@@ -85,6 +95,9 @@ impl CkptSession {
                 durable: vec![false; n],
                 persisted: false,
                 failed: None,
+                expect_replicas: false,
+                replicated: false,
+                replica_failed: None,
             }),
             cv: Condvar::new(),
         })
@@ -186,6 +199,42 @@ impl CkptSession {
         st.metrics.dedup_bytes_skipped += dedup_bytes_skipped;
     }
 
+    /// Declare that peer replication is configured for this version:
+    /// `wait_durable(TierKind::Replicated)` will wait for the replica
+    /// pushes instead of degrading to the terminal tier. Called by the
+    /// engine at `begin` when `ReplicaSpec` is active.
+    pub fn expect_replicas(&self) {
+        self.state.lock().unwrap().expect_replicas = true;
+    }
+
+    /// Mark every configured peer as holding this version. Called by
+    /// the drain worker once all replica pushes finalized; `bytes` is
+    /// the total pushed (payload × K) and `pushes` the peer-file count.
+    pub fn replica_durable(&self, elapsed_s: f64, bytes: u64,
+                           pushes: u64) {
+        let mut st = self.state.lock().unwrap();
+        if !st.replicated {
+            st.replicated = true;
+            st.metrics.replica_durable_s = elapsed_s;
+            st.metrics.replica_bytes += bytes;
+            st.metrics.replica_pushes += pushes;
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Mark replication failed for this version. Only waiters on the
+    /// `Replicated` durability level observe the error — the local
+    /// tiers (and `wait_persisted`) are unaffected.
+    pub fn fail_replica(&self, err: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.replica_failed.is_none() {
+            st.replica_failed = Some(err);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
     /// Mark this version failed; waiters observe the error.
     pub fn fail(&self, err: String) {
         let mut st = self.state.lock().unwrap();
@@ -267,7 +316,47 @@ impl CkptSession {
     }
 
     fn wait_durable(&self, kind: TierKind) -> anyhow::Result<CkptMetrics> {
+        if kind == TierKind::Replicated {
+            return self.wait_replicated();
+        }
         self.wait_durable_at(self.tier_index(kind))
+    }
+
+    /// Block until every configured peer holds this version. Engines
+    /// without a `ReplicaSpec` degrade to the terminal tier — the same
+    /// "strongest guarantee offered" semantic as unknown tier kinds.
+    fn wait_replicated(&self) -> anyhow::Result<CkptMetrics> {
+        self.wait_captured()?;
+        let mut st = self.state.lock().unwrap();
+        if !st.expect_replicas {
+            drop(st);
+            return self.wait_durable_at(self.tiers.len() - 1);
+        }
+        loop {
+            if st.replicated {
+                return Ok(st.metrics.clone());
+            }
+            if let Some(e) = &st.replica_failed {
+                anyhow::bail!("checkpoint v{} replication: {e}",
+                              self.version);
+            }
+            if let Some(e) = &st.failed {
+                anyhow::bail!("checkpoint v{}: {e}", self.version);
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking durability probe by kind; `Replicated` consults the
+    /// replica flag when replication is configured.
+    fn is_durable_kind(&self, kind: TierKind) -> bool {
+        if kind == TierKind::Replicated {
+            let st = self.state.lock().unwrap();
+            if st.expect_replicas {
+                return st.replicated;
+            }
+        }
+        self.is_durable_at(self.tier_index(kind))
     }
 
     fn wait_persisted(&self) -> anyhow::Result<CkptMetrics> {
@@ -328,9 +417,11 @@ impl CheckpointTicket {
     }
 
     /// True once the version is durable on the named tier
-    /// (non-blocking; unknown tiers degrade to the terminal tier).
+    /// (non-blocking; unknown tiers degrade to the terminal tier;
+    /// `Replicated` reports the peer-replication level when a
+    /// `ReplicaSpec` is configured).
     pub fn is_durable(&self, tier: TierKind) -> bool {
-        self.session.is_durable_at(self.session.tier_index(tier))
+        self.session.is_durable_kind(tier)
     }
 
     /// Live transfer progress: bytes staged (D2H), serialized, flushed
@@ -466,6 +557,58 @@ mod tests {
         let e = t.wait_persisted().unwrap_err();
         assert!(e.to_string().contains("disk full"));
         assert!(!t.is_persisted());
+    }
+
+    #[test]
+    fn replica_durability_resolves_independently_of_tiers() {
+        let s = two_tier_session();
+        s.expect_replicas();
+        let t = CheckpointTicket::new(s.clone());
+        assert!(!t.is_durable(TierKind::Replicated));
+        s.tier_durable(0, 0.1);
+        s.tier_durable(1, 0.4);
+        // persisted on every local tier, yet NOT replicated
+        assert!(t.is_persisted());
+        assert!(!t.is_durable(TierKind::Replicated));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            t2.wait_durable(TierKind::Replicated).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        s.replica_durable(0.7, 20, 2);
+        let m = h.join().unwrap();
+        assert!((m.replica_durable_s - 0.7).abs() < 1e-12);
+        assert_eq!(m.replica_bytes, 20);
+        assert_eq!(m.replica_pushes, 2);
+        assert!(t.is_durable(TierKind::Replicated));
+    }
+
+    #[test]
+    fn replica_failure_spares_local_persistence() {
+        let s = two_tier_session();
+        s.expect_replicas();
+        let t = CheckpointTicket::new(s.clone());
+        s.tier_durable(0, 0.1);
+        s.tier_durable(1, 0.4);
+        s.fail_replica("peer 1 unreachable".into());
+        // the replica level errors by name...
+        let e = t.wait_durable(TierKind::Replicated).unwrap_err();
+        assert!(e.to_string().contains("replication"));
+        assert!(e.to_string().contains("peer 1 unreachable"));
+        // ...while local persistence stands
+        assert!(t.wait_persisted().is_ok());
+        assert!(t.is_persisted());
+        assert!(!t.is_durable(TierKind::Replicated));
+    }
+
+    #[test]
+    fn replicated_degrades_to_terminal_without_spec() {
+        let s = session(None); // no expect_replicas
+        let t = CheckpointTicket::new(s.clone());
+        s.complete(0.2);
+        let m = t.wait_durable(TierKind::Replicated).unwrap();
+        assert!((m.persist_s - 0.2).abs() < 1e-12);
+        assert!(t.is_durable(TierKind::Replicated));
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! Deterministic fault injection (ROADMAP open item 3).
+//!
+//! TierCheck's argument — fast-tier checkpoints are worthless if they
+//! die with the node — only holds weight if the recovery paths are
+//! *proven*: this module provides the seeded kill points the
+//! `figures faults` matrix drives through the real write/drain/
+//! replicate/restore code, so every cell of
+//! (kill point × replication on/off × torn/lost tier) either recovers
+//! the last committed version byte-identically or fails with a clean
+//! named error.
+//!
+//! Design: a [`FaultInjector`] is armed with one [`KillPoint`] and a
+//! deterministic trigger count N; the N-th crossing of that point
+//! *fires* — the hook site then simulates the failure (abort the
+//! capture, tear the half-drained file, drop the replica push, fail
+//! the tier probe). Crossings and firings are counted so the harness
+//! can assert the injection actually happened. Injectors are plumbed
+//! through `EngineConfig::faults` into the tier pipeline; production
+//! paths carry `None` and pay one `Option` check per hook.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Where in the checkpoint lifecycle the failure strikes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KillPoint {
+    /// While the version is still landing on the fastest tier: the
+    /// landing-tier file create aborts, leaving a partial version that
+    /// must never become committed.
+    MidCapture,
+    /// During a tier-to-tier drain copy: the destination file is torn
+    /// mid-copy (short write, no finalize), so the deeper tier holds a
+    /// corrupt copy the restore path must fall through.
+    MidDrain,
+    /// During a peer replica push: the peer copy is dropped mid-file,
+    /// so replica durability must NOT be reported for the version.
+    MidReplicate,
+    /// During restore's nearest-tier resolution: the first tier probe
+    /// fails once, exercising the torn-copy fall-through.
+    MidRestore,
+}
+
+impl KillPoint {
+    pub fn label(&self) -> &'static str {
+        match self {
+            KillPoint::MidCapture => "mid-capture",
+            KillPoint::MidDrain => "mid-drain",
+            KillPoint::MidReplicate => "mid-replicate",
+            KillPoint::MidRestore => "mid-restore",
+        }
+    }
+
+    /// Parse a CLI kill-point name.
+    pub fn parse(s: &str) -> Option<KillPoint> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "mid-capture" | "capture" => Some(KillPoint::MidCapture),
+            "mid-drain" | "drain" => Some(KillPoint::MidDrain),
+            "mid-replicate" | "replicate" | "mid-replica" => {
+                Some(KillPoint::MidReplicate)
+            }
+            "mid-restore" | "restore" => Some(KillPoint::MidRestore),
+            _ => None,
+        }
+    }
+
+    /// The full matrix, in lifecycle order.
+    pub fn all() -> [KillPoint; 4] {
+        [
+            KillPoint::MidCapture,
+            KillPoint::MidDrain,
+            KillPoint::MidReplicate,
+            KillPoint::MidRestore,
+        ]
+    }
+}
+
+#[derive(Debug, Default)]
+struct Armed {
+    point: Option<KillPoint>,
+    /// Fire on the N-th crossing (1 = first). Derived from the seed so
+    /// two runs with one seed kill the same file of the same version.
+    trigger: u64,
+}
+
+/// Seeded, deterministic kill-point injector.
+///
+/// One injector is armed for at most one kill point at a time; hook
+/// sites call [`FaultInjector::check`] with their point and fail when
+/// it returns `true`. All counters are monotonic across re-arms so a
+/// harness can assert per-cell firing counts.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    seed: u64,
+    armed: Mutex<Armed>,
+    crossings: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl FaultInjector {
+    /// A new, disarmed injector. The seed perturbs which crossing of
+    /// the armed point fires (`1 + seed % 2`: first or second), keeping
+    /// runs deterministic per seed while varying the torn file.
+    pub fn new(seed: u64) -> FaultInjector {
+        FaultInjector { seed, ..FaultInjector::default() }
+    }
+
+    /// Arm the injector for `point`; the N-th crossing fires, where N
+    /// is derived from the seed. Resets the crossing counter for the
+    /// new point but keeps the lifetime `fired` total.
+    pub fn arm(&self, point: KillPoint) {
+        let mut a = self.armed.lock().unwrap();
+        a.point = Some(point);
+        a.trigger = 1 + self.seed % 2;
+        self.crossings.store(0, Ordering::SeqCst);
+    }
+
+    /// Disarm without firing.
+    pub fn disarm(&self) {
+        self.armed.lock().unwrap().point = None;
+    }
+
+    /// Hook-site probe: returns `true` exactly once per arm — on the
+    /// seeded N-th crossing of the armed point — after which the
+    /// injector disarms itself (so recovery retries run clean).
+    pub fn check(&self, point: KillPoint) -> bool {
+        let mut a = self.armed.lock().unwrap();
+        if a.point != Some(point) {
+            return false;
+        }
+        let n = self.crossings.fetch_add(1, Ordering::SeqCst) + 1;
+        if n >= a.trigger {
+            a.point = None;
+            self.fired.fetch_add(1, Ordering::SeqCst);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Lifetime count of injected failures.
+    pub fn fired(&self) -> u64 {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Currently armed kill point, if any.
+    pub fn armed(&self) -> Option<KillPoint> {
+        self.armed.lock().unwrap().point
+    }
+}
+
+/// Tear a file in place on the real filesystem: truncate it to half
+/// its length (at least 1 byte short) WITHOUT touching any manifest —
+/// the torn-copy shape a crash mid-write leaves behind. Returns the
+/// bytes removed.
+pub fn tear_file(path: &std::path::Path) -> crate::Result<u64> {
+    use anyhow::Context;
+    let len = std::fs::metadata(path)
+        .with_context(|| format!("tear_file stat {path:?}"))?
+        .len();
+    let keep = (len / 2).min(len.saturating_sub(1));
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("tear_file open {path:?}"))?;
+    f.set_len(keep)
+        .with_context(|| format!("tear_file truncate {path:?}"))?;
+    Ok(len - keep)
+}
+
+/// Whole-node loss: delete a rank's ENTIRE checkpoint tree (fast tier
+/// + local FS + any deeper tier rooted under its directory), leaving
+/// only whatever peers replicated. Returns whether anything existed.
+pub fn lose_rank_dir(dir: &std::path::Path) -> crate::Result<bool> {
+    use anyhow::Context;
+    if !dir.exists() {
+        return Ok(false);
+    }
+    std::fs::remove_dir_all(dir)
+        .with_context(|| format!("lose_rank_dir {dir:?}"))?;
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_exactly_once_per_arm() {
+        let inj = FaultInjector::new(0); // trigger = 1: first crossing
+        inj.arm(KillPoint::MidDrain);
+        assert!(!inj.check(KillPoint::MidCapture)); // wrong point
+        assert!(inj.check(KillPoint::MidDrain));
+        assert!(!inj.check(KillPoint::MidDrain)); // self-disarmed
+        assert_eq!(inj.fired(), 1);
+    }
+
+    #[test]
+    fn seed_selects_crossing_deterministically() {
+        let inj = FaultInjector::new(1); // trigger = 2: second crossing
+        inj.arm(KillPoint::MidReplicate);
+        assert!(!inj.check(KillPoint::MidReplicate));
+        assert!(inj.check(KillPoint::MidReplicate));
+        assert_eq!(inj.fired(), 1);
+        // identical seed ⇒ identical firing pattern
+        let inj2 = FaultInjector::new(1);
+        inj2.arm(KillPoint::MidReplicate);
+        assert!(!inj2.check(KillPoint::MidReplicate));
+        assert!(inj2.check(KillPoint::MidReplicate));
+    }
+
+    #[test]
+    fn disarm_prevents_firing() {
+        let inj = FaultInjector::new(0);
+        inj.arm(KillPoint::MidRestore);
+        inj.disarm();
+        assert!(!inj.check(KillPoint::MidRestore));
+        assert_eq!(inj.fired(), 0);
+    }
+
+    #[test]
+    fn kill_point_labels_roundtrip() {
+        for p in KillPoint::all() {
+            assert_eq!(KillPoint::parse(p.label()), Some(p));
+        }
+        assert_eq!(KillPoint::parse("nope"), None);
+    }
+
+    #[test]
+    fn tear_file_shortens_without_deleting() {
+        let dir = crate::util::tempdir::TempDir::new("ds-faults").unwrap();
+        let p = dir.path().join("shard.bin");
+        std::fs::write(&p, vec![7u8; 1000]).unwrap();
+        let removed = tear_file(&p).unwrap();
+        assert_eq!(removed, 500);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), 500);
+    }
+
+    #[test]
+    fn lose_rank_dir_removes_everything() {
+        let dir = crate::util::tempdir::TempDir::new("ds-faults").unwrap();
+        let rank = dir.path().join("rank000");
+        std::fs::create_dir_all(rank.join("v000001")).unwrap();
+        std::fs::write(rank.join("v000001/a.bin"), b"x").unwrap();
+        assert!(lose_rank_dir(&rank).unwrap());
+        assert!(!rank.exists());
+        assert!(!lose_rank_dir(&rank).unwrap()); // idempotent
+    }
+}

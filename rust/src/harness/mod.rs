@@ -1139,6 +1139,284 @@ pub fn incremental() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One cell of the fault matrix: a fresh two-tier engine (fast host
+/// cache draining to local FS, optionally mirroring to one peer
+/// replica tree), v1 committed as the byte-identity oracle, then the
+/// armed kill point strikes the v2 attempt. Returns the human outcome
+/// row after asserting the cell's recovery contract.
+fn fault_cell(kp: crate::faults::KillPoint, replicas: usize,
+              cs: &crate::state::partition::Census)
+    -> anyhow::Result<String> {
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::faults::{FaultInjector, KillPoint};
+    use crate::state::partition::materialize;
+    use crate::storage::{ReplicaSpec, TierKind};
+    use std::sync::Arc;
+
+    let tmp = crate::util::TempDir::new("ds-fault-cell")?;
+    let root = tmp.path();
+    let state1 = materialize(&cs.ranks[0], 1e-4, 0.05, 1);
+    let state2 = materialize(&cs.ranks[0], 1e-4, 0.05, 2);
+    let inj = Arc::new(FaultInjector::new(9)); // second crossing fires
+    let mut ecfg = EngineConfig::two_tier(root.join("rank000"));
+    ecfg.chunk_bytes = 16 << 10;
+    ecfg.faults = Some(inj.clone());
+    if kp == KillPoint::MidRestore {
+        // keep the fast copies: the injected probe failure strikes the
+        // NEAREST holder, and fall-through needs a deeper intact copy
+        // (with eviction on, the drained version lives only on the
+        // terminal tier — one failed probe would leave nothing to
+        // fall through to)
+        ecfg.evict_fast_tier = false;
+    }
+    if replicas > 0 {
+        ecfg.replicas = ReplicaSpec::to_peers(vec![
+            ReplicaSpec::replica_home(root, 1, 0),
+        ]);
+    }
+    let mut eng = DataStatesEngine::new(ecfg)?;
+    let pipeline = eng.pipeline();
+
+    // the committed oracle: v1 durable on every level the cell uses
+    let t1 = eng.begin(1, &state1)?;
+    t1.wait_persisted()?;
+    t1.wait_durable(TierKind::LocalFs)?;
+    if replicas > 0 {
+        t1.wait_durable(TierKind::Replicated)?;
+    }
+
+    inj.arm(kp);
+    let attempt = eng.begin(2, &state2).and_then(|t| {
+        t.wait_persisted()?;
+        Ok(t)
+    });
+    let expect = |cond: bool, what: &str| {
+        anyhow::ensure!(cond, "{}/K={replicas}: {what}", kp.label());
+        Ok(())
+    };
+    let outcome = match kp {
+        KillPoint::MidCapture => {
+            // the landing create aborts: v2 must fail by name, and the
+            // committed v1 must survive untouched
+            let err = match attempt {
+                Ok(_) => anyhow::bail!("mid-capture did not fire"),
+                Err(e) => format!("{e:#}"),
+            };
+            expect(err.contains("mid-capture"),
+                   "error does not name the kill point")?;
+            let v1 = pipeline.read_version(1)?;
+            crate::restore::verify_files_against(&v1, &state1)?;
+            "v2 aborted clean; committed v1 byte-identical".into()
+        }
+        KillPoint::MidDrain => {
+            // the terminal copy is torn: terminal durability — and with
+            // it `wait_persisted` — must fail by name, while the intact
+            // fast copy still serves v2
+            let err = match attempt {
+                Ok(t2) => match t2.wait_durable(TierKind::LocalFs) {
+                    Ok(_) => anyhow::bail!("mid-drain did not fire"),
+                    Err(e) => format!("{e:#}"),
+                },
+                Err(e) => format!("{e:#}"),
+            };
+            expect(err.contains("mid-drain"),
+                   "error does not name the kill point")?;
+            let v2 = pipeline.read_version(2)?;
+            crate::restore::verify_files_against(&v2, &state2)?;
+            "terminal copy torn, named error; fast tier serves v2 \
+             byte-identical"
+                .into()
+        }
+        KillPoint::MidReplicate => {
+            let t2 = attempt?;
+            if replicas == 0 {
+                // no replica path exists: the kill point must never
+                // be crossed, and the run is unaffected
+                t2.wait_durable(TierKind::LocalFs)?;
+                expect(inj.fired() == 0,
+                       "fired with no replica path")?;
+                inj.disarm();
+                "no replica path; kill point never crossed".into()
+            } else {
+                // the peer push is dropped: replica durability must
+                // fail by name while LOCAL durability is unaffected
+                let err = match t2.wait_durable(TierKind::Replicated) {
+                    Ok(_) => anyhow::bail!("mid-replicate did not fire"),
+                    Err(e) => format!("{e:#}"),
+                };
+                expect(err.contains("mid-replicate"),
+                       "error does not name the kill point")?;
+                t2.wait_durable(TierKind::LocalFs)?;
+                let v2 = pipeline.read_version(2)?;
+                crate::restore::verify_files_against(&v2, &state2)?;
+                "replica level failed by name; local v2 intact \
+                 byte-identical"
+                    .into()
+            }
+        }
+        KillPoint::MidRestore => {
+            // the nearest-tier probe fails once mid-read: resolution
+            // must fall through to the deeper tier, byte-identically
+            let t2 = attempt?;
+            t2.wait_durable(TierKind::LocalFs)?;
+            let v2 = pipeline.read_version(2)?;
+            crate::restore::verify_files_against(&v2, &state2)?;
+            expect(inj.fired() == 1,
+                   "restore probe fault did not fire")?;
+            "nearest-tier probe failed once; deeper tier served v2 \
+             byte-identical"
+                .into()
+        }
+    };
+    // every cell that armed a firing path must have actually injected
+    if !(kp == KillPoint::MidReplicate && replicas == 0) {
+        anyhow::ensure!(inj.fired() == 1,
+                        "{}/K={replicas}: fired {} times", kp.label(),
+                        inj.fired());
+    }
+    Ok(outcome)
+}
+
+/// Fault matrix (tentpole of the failure-domain PR): every seeded kill
+/// point × replication on/off runs through the REAL write / drain /
+/// replicate / restore code and must either recover the committed data
+/// byte-identically or fail with a clean error naming the kill point —
+/// plus whole-node loss recovered from peer replica trees, and the
+/// MTTI-aware expected-lost-work model with its monotonicity contract.
+pub fn faults() -> anyhow::Result<()> {
+    use crate::config::EngineConfig;
+    use crate::faults::KillPoint;
+    use crate::sim::{expected_lost_work_s, TierPlacement};
+    use crate::state::index::flatten_states;
+    use crate::state::partition::{census as mk_census, materialize};
+    use crate::train::distributed::{resume_resharded_replicated,
+                                    run_world, WorldConfig};
+
+    hr("Fault matrix: kill point x replication (real plane)");
+    let model = LlmConfig::by_name("3B").unwrap();
+    let cs = mk_census(&model, &Parallelism::new(1, 1, 1));
+    println!("{:<14}{:>9}  {}", "kill point", "replicas", "outcome");
+    for kp in KillPoint::all() {
+        for replicas in [0usize, 1] {
+            let outcome = fault_cell(kp, replicas, &cs)?;
+            println!("{:<14}{:>9}  {}", kp.label(), replicas, outcome);
+        }
+    }
+
+    hr("Whole-node loss: 2-rank world, rank000 erased");
+    let par2 = Parallelism::new(2, 1, 1);
+    let cs2 = mk_census(&model, &par2);
+    let tiers = vec![crate::storage::TierSpec::local_fs()];
+    let to = Parallelism::new(1, 1, 1);
+    for replicas in [1usize, 0] {
+        let tmp = crate::util::TempDir::new("ds-fault-node")?;
+        run_world(
+            &WorldConfig {
+                world: 2,
+                iterations: 2,
+                interval: 2,
+                engine: EngineKind::DataStatesLlm,
+                ckpt_root: tmp.path().to_path_buf(),
+                engine_cfg: EngineConfig::default(),
+                replicas,
+            },
+            |rank, it| materialize(&cs2.ranks[rank], 1e-4, 0.05,
+                                   ((rank as u64) << 32) | it),
+            |_, _| {},
+        )?;
+        // the whole failure domain goes: rank000's fast tier, local
+        // FS, and the replica copies it held FOR ITS PEER
+        anyhow::ensure!(
+            crate::faults::lose_rank_dir(&tmp.path().join("rank000"))?,
+            "rank000 should have existed"
+        );
+        if replicas > 0 {
+            let (v, restored) = resume_resharded_replicated(
+                tmp.path(), &tiers, replicas, &model, &to,
+            )?
+            .ok_or_else(|| {
+                anyhow::anyhow!("no version recovered via peers")
+            })?;
+            let src: Vec<crate::state::RankState> = (0..2)
+                .map(|r| materialize(&cs2.ranks[r], 1e-4, 0.05,
+                                     ((r as u64) << 32) | (v - 1)))
+                .collect();
+            anyhow::ensure!(
+                flatten_states(&src)? == flatten_states(&restored)?,
+                "peer-recovered state differs from source"
+            );
+            println!("replicas=1: v{v} rebuilt from the surviving \
+                      peer's replica tree, byte-identical");
+        } else {
+            let err = crate::restore::reshard::CheckpointWorld::
+                open_replicated(tmp.path(), 2, &tiers, 0)
+                .err()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "unreplicated lost rank should not resolve"))?;
+            let msg = format!("{err:#}");
+            anyhow::ensure!(
+                msg.contains("rank 0")
+                    && msg.contains("unrecoverable"),
+                "error should name the lost rank: {msg}"
+            );
+            // and the commit-marker fallback cleanly resumes nothing
+            anyhow::ensure!(
+                resume_resharded_replicated(tmp.path(), &tiers, 0,
+                                            &model, &to)?
+                    .is_none(),
+                "unreplicated loss must not resume"
+            );
+            println!("replicas=0: clean named error — {msg}");
+        }
+    }
+
+    hr("MTTI-aware expected lost work (s lost per training hour)");
+    let m7 = LlmConfig::by_name("7B").unwrap();
+    let p7 = Parallelism::paper_default(&m7);
+    let bytes = mk_census(&m7, &p7).ranks[0].total_bytes();
+    let placements = [
+        ("peer fast tier", TierPlacement {
+            latency_s: 0.0005, read_bps: 12e9, bytes }),
+        ("local disk", TierPlacement {
+            latency_s: 0.002, read_bps: 2e9, bytes }),
+        ("remote object", TierPlacement {
+            latency_s: 0.020, read_bps: 0.5e9, bytes }),
+    ];
+    let mtti_s = 6.0 * 3600.0;
+    println!("{:<16}{:>12}{:>12}{:>12}   (MTTI 6h)", "surviving copy",
+             "ckpt 60s", "ckpt 300s", "ckpt 900s");
+    for (name, p) in &placements {
+        let row: Vec<f64> = [60.0, 300.0, 900.0]
+            .iter()
+            .map(|i| expected_lost_work_s(mtti_s, *i, p))
+            .collect();
+        println!("{name:<16}{:>12.1}{:>12.1}{:>12.1}", row[0], row[1],
+                 row[2]);
+        // shorter interval => strictly less lost work
+        anyhow::ensure!(row[0] < row[1] && row[1] < row[2],
+                        "lost work not monotone in interval");
+    }
+    for interval in [60.0, 300.0, 900.0] {
+        // faster surviving tier => less lost work
+        let peer = expected_lost_work_s(mtti_s, interval,
+                                        &placements[0].1);
+        let remote = expected_lost_work_s(mtti_s, interval,
+                                          &placements[2].1);
+        anyhow::ensure!(peer < remote,
+                        "lost work not monotone in tier speed");
+        // larger MTTI => less lost work
+        anyhow::ensure!(
+            expected_lost_work_s(4.0 * mtti_s, interval,
+                                 &placements[0].1) < peer,
+            "lost work not monotone in MTTI"
+        );
+    }
+    println!("monotonicity: interval down / tier faster / MTTI up \
+              all reduce expected lost work — asserted");
+    Ok(())
+}
+
 /// File census summary used in §II / Fig 1 discussion.
 pub fn files_summary() {
     hr("File census per model (global)");
@@ -1182,6 +1460,7 @@ pub fn all() -> anyhow::Result<()> {
     uring()?;
     serve()?;
     incremental()?;
+    faults()?;
     files_summary();
     ablations();
     Ok(())

@@ -57,6 +57,11 @@
 //!   admission control, weighted QoS throttle charging, a
 //!   single-flight gather-run read cache ([`serve::RunCache`]) and
 //!   persistent per-class read engines.
+//! - [`faults`] — deterministic failure injection: seeded kill points
+//!   (mid-capture, mid-drain, mid-replicate, mid-restore), torn files
+//!   on every tier and whole-node loss, driving the `figures faults`
+//!   recovery matrix against the peer-replication layer
+//!   ([`storage::ReplicaSpec`]).
 //! - [`metrics`] — throughput/blocked-time accounting and the per-tensor
 //!   multi-tier timelines of Fig 15.
 //! - [`harness`] — one driver per paper table/figure.
@@ -65,6 +70,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod faults;
 pub mod harness;
 pub mod metrics;
 pub mod provider;

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            restore|incremental|uring|serve|files>
+//!            restore|incremental|uring|serve|faults|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
@@ -62,6 +62,18 @@
 //!                               at M MB/s (I/O-contention studies)
 //!   --durability hostcache      train: drain the run tail only to this
 //!                               tier (background drain continues)
+//!
+//! Failure-domain knobs (peer replication, see DESIGN.md "Failure
+//! domains & replication"; accepted by world and reshard):
+//!   --replicas K                mirror each rank's fast-tier copy to
+//!                               its K ring-successor peers through the
+//!                               drain worker; the global commit vote
+//!                               additionally requires replica
+//!                               durability, and restore falls through
+//!                               to peer copies when a rank's own
+//!                               directory is torn or lost
+//!                               (`figures faults` drives the
+//!                               kill-point x replication matrix)
 //!
 //! Async I/O knobs (io_uring backend, see DESIGN.md "Async I/O
 //! backend"; accepted by train, bench-io and bench-restore):
@@ -170,6 +182,11 @@ fn parse_tier(part: &str) -> anyhow::Result<TierSpec> {
         TierKind::HostCache => TierSpec::host_cache(),
         TierKind::LocalFs => TierSpec::local_fs(),
         TierKind::Remote => TierSpec::remote(0.0),
+        TierKind::Replicated => anyhow::bail!(
+            "`replicated` is a durability level, not a storable tier \
+             — use `--replicas K` to mirror each rank's fast tier to \
+             K peers"
+        ),
     };
     if kind == TierKind::Remote {
         if let Some(ms) = fields.next() {
@@ -305,6 +322,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "incremental" => harness::incremental()?,
         "uring" => harness::uring()?,
         "serve" => harness::serve()?,
+        "faults" => harness::faults()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -1083,8 +1101,8 @@ fn reshard(args: &Args) -> anyhow::Result<()> {
     use datastates::state::index::flatten_states;
     use datastates::state::partition::{census, materialize};
     use datastates::state::RankState;
-    use datastates::train::distributed::{resume_resharded, run_world,
-                                         WorldConfig};
+    use datastates::train::distributed::{resume_resharded_replicated,
+                                         run_world, WorldConfig};
     let model_name = args.get("model").unwrap_or("3B");
     let model = LlmConfig::by_name(model_name)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
@@ -1097,6 +1115,7 @@ fn reshard(args: &Args) -> anyhow::Result<()> {
     let steps: u64 = args.num("steps", 2);
     let interval: u64 = args.num("interval", 2);
     let scale: f64 = args.num("scale", 1e-5);
+    let replicas: usize = args.num("replicas", 0);
     let user_dir = args.get("ckpt-dir");
     let root = std::path::PathBuf::from(
         user_dir.unwrap_or("/tmp/datastates-reshard"));
@@ -1137,6 +1156,7 @@ fn reshard(args: &Args) -> anyhow::Result<()> {
             engine: EngineKind::DataStatesLlm,
             ckpt_root: root.clone(),
             engine_cfg: engine_cfg.clone(),
+            replicas,
         },
         |rank, it| materialize(&cs.ranks[rank], scale, 0.05,
                                ((rank as u64) << 32) | it),
@@ -1144,9 +1164,11 @@ fn reshard(args: &Args) -> anyhow::Result<()> {
     )?;
     println!("  committed versions: {:?}", report.committed_versions);
 
-    // phase 2: reshard-restore at topology B
+    // phase 2: reshard-restore at topology B (peer replica trees join
+    // the resolution stack when the run was written with --replicas)
     let Some((v, restored)) =
-        resume_resharded(&root, &tiers, &model, &to)?
+        resume_resharded_replicated(&root, &tiers, replicas, &model,
+                                    &to)?
     else {
         anyhow::bail!("no committed version to reshard from");
     };
@@ -1175,6 +1197,7 @@ fn reshard(args: &Args) -> anyhow::Result<()> {
             engine: EngineKind::DataStatesLlm,
             ckpt_root: restart_root.clone(),
             engine_cfg,
+            replicas,
         },
         |rank, _it| restored[rank].clone(),
         |_, _| {},
@@ -1194,6 +1217,7 @@ fn world(args: &Args) -> anyhow::Result<()> {
     let world_size: usize = args.num("ranks", 4);
     let iterations: u64 = args.num("steps", 6);
     let interval: u64 = args.num("interval", 2);
+    let replicas: usize = args.num("replicas", 0);
     let root = std::path::PathBuf::from(
         args.get("ckpt-dir").unwrap_or("/tmp/datastates-world"));
     let _ = std::fs::remove_dir_all(&root);
@@ -1219,6 +1243,7 @@ fn world(args: &Args) -> anyhow::Result<()> {
             engine: kind,
             ckpt_root: root.clone(),
             engine_cfg,
+            replicas,
         },
         |rank, it| {
             materialize(&cs.ranks[rank % cs.ranks.len()], 5e-5, 0.05,

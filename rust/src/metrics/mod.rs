@@ -251,6 +251,14 @@ pub struct CkptMetrics {
     /// Bytes deduplication kept off the remote tier (clean chunks whose
     /// content was already stored).
     pub dedup_bytes_skipped: u64,
+    /// Wall seconds until every configured peer replica held this
+    /// version (0.0 when replication is off or not yet achieved — see
+    /// `ReplicaSpec`).
+    pub replica_durable_s: f64,
+    /// Payload bytes pushed to peer replicas (bytes × K for K peers).
+    pub replica_bytes: u64,
+    /// Peer copies completed (files × peers).
+    pub replica_pushes: u64,
 }
 
 impl CkptMetrics {

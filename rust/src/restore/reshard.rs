@@ -36,7 +36,8 @@ use crate::state::index::{LogicalIndex, LogicalIndexBuilder,
 use crate::state::partition::census;
 use crate::state::shard::{FileKind, RankState, ShardFile, StateItem};
 use crate::state::tensor::{DType, LogicalRef, TensorShard};
-use crate::storage::{TierPipeline, TierSpec};
+use crate::storage::{Backend, LocalFs, ReplicaSpec, TierPipeline,
+                     TierSpec};
 
 /// The saved side of a reshard: every source rank's tier pipeline,
 /// resolved from a distributed checkpoint root (`rank000/`,
@@ -69,10 +70,75 @@ impl CheckpointWorld {
         Ok(CheckpointWorld { pipelines })
     }
 
+    /// Like [`CheckpointWorld::open`], but failure-domain aware: each
+    /// rank's pipeline gains its peers' replica directories
+    /// (`rank{p}/replica/rank{r}` for the K ring-successor peers) as
+    /// its DEEPEST tiers, so nearest-tier resolution falls through to a
+    /// peer copy when the rank's own tiers are torn or gone. A rank
+    /// whose entire directory was lost (whole-node loss) is resolved
+    /// purely from peers; a rank with neither a directory nor any peer
+    /// copy is a clean named error listing every location tried.
+    pub fn open_replicated(root: &Path, world: usize,
+                           tiers: &[TierSpec], replicas: usize)
+        -> anyhow::Result<CheckpointWorld> {
+        anyhow::ensure!(world > 0, "world must be > 0");
+        let mut pipelines = Vec::with_capacity(world);
+        for r in 0..world {
+            let dir = root.join(format!("rank{r:03}"));
+            // the peers that push r's shards are its ring successors —
+            // mirror of `ReplicaSpec::for_rank` on the write side
+            let k = replicas.min(world.saturating_sub(1));
+            let peer_dirs: Vec<std::path::PathBuf> = (1..=k)
+                .map(|i| {
+                    ReplicaSpec::replica_home(root, (r + i) % world, r)
+                })
+                .collect();
+            let peer_backends: Vec<Arc<dyn Backend>> = peer_dirs
+                .iter()
+                .filter(|d| d.is_dir())
+                .map(|d| Arc::new(LocalFs::new(d)) as Arc<dyn Backend>)
+                .collect();
+            let mut stack: Vec<Arc<dyn Backend>> = Vec::new();
+            if dir.is_dir() {
+                // the rank's own tiers stay nearest; drop the
+                // spec-built pipeline handle, keeping only its backends
+                let own = TierPipeline::from_specs(
+                    tiers,
+                    &dir,
+                    false,
+                    4 << 20,
+                    None,
+                    Arc::new(Timeline::new()),
+                )?;
+                stack.extend(own.tiers().iter().cloned());
+            }
+            stack.extend(peer_backends);
+            anyhow::ensure!(
+                !stack.is_empty(),
+                "rank {r}: no checkpoint directory {dir:?} and no peer \
+                 replica copies (tried {peer_dirs:?}) — the rank's \
+                 shards are unrecoverable without replication",
+            );
+            pipelines.push(TierPipeline::new(
+                stack,
+                false,
+                4 << 20,
+                Arc::new(Timeline::new()),
+            ));
+        }
+        Ok(CheckpointWorld { pipelines })
+    }
+
     /// Wrap live pipelines (e.g. `engine.pipeline()` of each rank).
     pub fn from_pipelines(pipelines: Vec<Arc<TierPipeline>>)
         -> CheckpointWorld {
         CheckpointWorld { pipelines }
+    }
+
+    /// The per-source-rank pipeline handles (a serving fleet wraps
+    /// these in one `serve::CheckpointService` over the whole world).
+    pub fn pipelines(&self) -> Vec<Arc<TierPipeline>> {
+        self.pipelines.clone()
     }
 
     pub fn n_ranks(&self) -> usize {

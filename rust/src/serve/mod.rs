@@ -220,6 +220,16 @@ impl CheckpointService {
         })
     }
 
+    /// Serve a resolved [`CheckpointWorld`] — including one opened
+    /// with `CheckpointWorld::open_replicated`, whose per-rank
+    /// pipelines fall through to peer replica copies: served reads
+    /// survive a lost or torn source rank exactly like restores do,
+    /// under the same QoS admission and run cache.
+    pub fn from_world(world: &CheckpointWorld, cfg: ServeConfig)
+        -> Arc<CheckpointService> {
+        Self::new(world.pipelines(), cfg)
+    }
+
     /// Number of source ranks served.
     pub fn ranks(&self) -> usize {
         self.pipelines.len()

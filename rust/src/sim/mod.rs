@@ -640,6 +640,54 @@ fn simulate_core(kind: EngineKind, em: EngineModel, cfg: &SimConfig)
     }
 }
 
+/// Where a restart reads a lost rank's shards from: the nearest tier
+/// (or peer replica copy) that survives the failure domain, described
+/// by its access characteristics. Used by the MTTI-aware lost-work
+/// model ([`expected_lost_work_s`]) to weigh checkpoint interval
+/// against restore depth.
+#[derive(Debug, Clone, Copy)]
+pub struct TierPlacement {
+    /// Per-request access latency of the surviving copy's tier
+    /// (0 for node-local tiers; RPC/object-store latency for remote;
+    /// network hop for a peer replica).
+    pub latency_s: f64,
+    /// Sustained read bandwidth of that tier, bytes/s.
+    pub read_bps: f64,
+    /// Checkpoint bytes the restart must read back (per rank).
+    pub bytes: u64,
+}
+
+impl TierPlacement {
+    /// Seconds to re-read the checkpoint from this placement.
+    pub fn restore_s(&self) -> f64 {
+        self.latency_s + self.bytes as f64 / self.read_bps.max(1.0)
+    }
+}
+
+/// Expected training seconds lost per HOUR of wall-clock training,
+/// under mean-time-to-interrupt `mtti_s`, checkpointing every
+/// `interval_s`, restoring from `placement` after each failure.
+///
+/// Per failure the run loses the progress since the last checkpoint
+/// (uniform failure arrival ⇒ `interval_s / 2` in expectation) plus
+/// the restore time of the surviving copy (`placement.restore_s()`);
+/// failures arrive at rate `1 / mtti_s`, so the hourly expectation is
+/// `3600 / mtti_s × (interval_s / 2 + restore_s)`. Monotone the way a
+/// placement decision needs: shorter interval ⇒ less lost work,
+/// faster/nearer surviving tier ⇒ less, larger MTTI ⇒ less — the
+/// quantitative backbone of the replication trade-off (`--replicas K`
+/// keeps the surviving copy on a PEER's fast tier instead of the deep
+/// remote tier, shrinking `restore_s` at the cost of replica pushes).
+pub fn expected_lost_work_s(mtti_s: f64, interval_s: f64,
+                            placement: &TierPlacement) -> f64 {
+    assert!(mtti_s > 0.0 && mtti_s.is_finite(),
+            "mtti_s must be positive, got {mtti_s}");
+    assert!(interval_s >= 0.0 && interval_s.is_finite(),
+            "interval_s must be >= 0, got {interval_s}");
+    let per_failure = interval_s / 2.0 + placement.restore_s();
+    3600.0 / mtti_s * per_failure
+}
+
 /// Aggregate Table-I-style census numbers used by figure drivers.
 pub fn global_files(cfg: &SimConfig) -> u64 {
     census(&cfg.model, &cfg.par)
@@ -672,6 +720,40 @@ mod tests {
 
     fn run(kind: EngineKind, model: &str) -> SimResult {
         simulate(kind, &SimConfig::paper(model, 15, 1))
+    }
+
+    #[test]
+    fn expected_lost_work_is_monotone() {
+        let fast = TierPlacement {
+            latency_s: 0.0,
+            read_bps: 10e9,
+            bytes: 20 << 30,
+        };
+        let slow = TierPlacement {
+            latency_s: 0.020,
+            read_bps: 1e9,
+            bytes: 20 << 30,
+        };
+        let mtti = 6.0 * 3600.0;
+        // shorter interval => less lost work
+        assert!(expected_lost_work_s(mtti, 60.0, &fast)
+                < expected_lost_work_s(mtti, 600.0, &fast));
+        // faster surviving tier => less lost work
+        assert!(expected_lost_work_s(mtti, 60.0, &fast)
+                < expected_lost_work_s(mtti, 60.0, &slow));
+        // larger MTTI => less lost work
+        assert!(expected_lost_work_s(2.0 * mtti, 60.0, &fast)
+                < expected_lost_work_s(mtti, 60.0, &fast));
+        // and the closed form itself: 1 failure/hour, 60s interval,
+        // 2s restore => 32s lost per hour
+        let unit = TierPlacement {
+            latency_s: 1.0,
+            read_bps: 1e9,
+            bytes: 1 << 30,
+        };
+        let got = expected_lost_work_s(3600.0, 60.0, &unit);
+        assert!((got - (30.0 + 1.0 + 1.0737)).abs() < 0.01,
+                "got {got}");
     }
 
     #[test]

@@ -51,6 +51,11 @@ pub enum TierKind {
     /// Content-addressed remote store behind a simulated WAN
     /// (latency + bandwidth shim): the deepest, incremental tier.
     Remote,
+    /// Peer-replicated copies on K other ranks' fast tiers. Not a
+    /// storable tier in the local stack — a durability *level*: the
+    /// key for `wait_durable(TierKind::Replicated)` and the manifest
+    /// column recording that replica pushes completed.
+    Replicated,
 }
 
 impl TierKind {
@@ -59,6 +64,7 @@ impl TierKind {
             TierKind::HostCache => "host-cache",
             TierKind::LocalFs => "local-fs",
             TierKind::Remote => "remote",
+            TierKind::Replicated => "replicated",
         }
     }
 
@@ -71,8 +77,77 @@ impl TierKind {
             }
             "localfs" | "local-fs" | "fs" | "disk" => Some(TierKind::LocalFs),
             "remote" | "s3" | "object" => Some(TierKind::Remote),
+            "replicated" | "replica" | "peer" => Some(TierKind::Replicated),
             _ => None,
         }
+    }
+}
+
+/// Peer-replication policy for the fast tier (ROADMAP open item 3,
+/// TierCheck's cross-node redundancy argument): every finalized
+/// version is mirrored by the drain worker to each listed peer
+/// directory, so a rank whose entire node dies (fast tier + local FS)
+/// can be restored from its peers' `replica/` trees.
+///
+/// An empty `peers` list disables replication. Replica pushes are
+/// charged to `throttle_bps` when set (shared across all peers),
+/// modelling the DP-group interconnect.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaSpec {
+    /// Peer directories to mirror into, one per replica. In a
+    /// `run_world` training world these are
+    /// `ckpt_root/rank{p}/replica/rank{self}` for K distinct peers p.
+    pub peers: Vec<std::path::PathBuf>,
+    /// Optional replication-bandwidth cap in bytes/s, shared across
+    /// all peer pushes.
+    pub throttle_bps: Option<f64>,
+}
+
+impl ReplicaSpec {
+    /// Replicate into `peers` directories, unthrottled.
+    pub fn to_peers(peers: Vec<std::path::PathBuf>) -> ReplicaSpec {
+        ReplicaSpec { peers, throttle_bps: None }
+    }
+
+    /// Directory where `peer` stores `src`'s replica copies under a
+    /// distributed checkpoint root (the `train::distributed::run_world`
+    /// layout): `root/rank{peer}/replica/rank{src}`. One canonical home
+    /// shared by the write side (push targets) and the restore side
+    /// (where a lost rank's shards are found).
+    pub fn replica_home(root: &std::path::Path, peer: usize, src: usize)
+        -> std::path::PathBuf {
+        root.join(format!("rank{peer:03}"))
+            .join("replica")
+            .join(format!("rank{src:03}"))
+    }
+
+    /// Push targets for rank `rank` of a `world`-rank job with
+    /// replication factor `k`: the K ring-successor peers in its DP
+    /// group (clamped to `world - 1` — a rank cannot peer with
+    /// itself).
+    pub fn for_rank(root: &std::path::Path, rank: usize, world: usize,
+                    k: usize) -> ReplicaSpec {
+        let k = k.min(world.saturating_sub(1));
+        let peers = (1..=k)
+            .map(|i| Self::replica_home(root, (rank + i) % world, rank))
+            .collect();
+        ReplicaSpec { peers, throttle_bps: None }
+    }
+
+    /// Cap replication bandwidth at `bps` bytes/s.
+    pub fn throttled(mut self, bps: f64) -> ReplicaSpec {
+        self.throttle_bps = Some(bps);
+        self
+    }
+
+    /// Replication factor K (number of peer copies).
+    pub fn k(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// True when at least one peer copy is configured.
+    pub fn is_active(&self) -> bool {
+        !self.peers.is_empty()
     }
 }
 

@@ -26,9 +26,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::content::{RemoteStore, DEFAULT_CONTENT_CHUNK_BYTES};
-use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt, TierKind,
-            TierSpec, UringStats};
+use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt,
+            ReplicaSpec, Throttle, TierKind, TierSpec, UringStats};
 use crate::engine::ticket::CkptSession;
+use crate::faults::{FaultInjector, KillPoint};
 use crate::metrics::{Tier, Timeline};
 use crate::restore::RestoredFile;
 use crate::util::channel::{Receiver, Sender};
@@ -266,6 +267,19 @@ pub(crate) struct PipelineShared {
     /// owning engine installs its `EngineConfig`-derived settings
     /// (`restore_lanes`, `reader_threads`, coalesce/pool sizing).
     read_cfg: Mutex<crate::restore::ReadEngineConfig>,
+    /// Peer-replication targets (one backend per peer directory) and
+    /// the shared replication-bandwidth throttle. Empty = replication
+    /// off. Installed by `set_replicas` before the first drain.
+    replicas: Mutex<ReplicaTargets>,
+    /// Deterministic kill points for the `figures faults` matrix;
+    /// `None` (production) costs one `Option` check per hook.
+    faults: Mutex<Option<Arc<FaultInjector>>>,
+}
+
+#[derive(Default)]
+struct ReplicaTargets {
+    peers: Vec<Arc<dyn Backend>>,
+    throttle: Option<Arc<Throttle>>,
 }
 
 impl PipelineShared {
@@ -311,6 +325,11 @@ impl PipelineShared {
         }
     }
 
+    /// The armed fault injector, if any (cheap clone of the `Arc`).
+    fn fault_injector(&self) -> Option<Arc<FaultInjector>> {
+        self.faults.lock().unwrap().clone()
+    }
+
     /// Copy one file from tier `from` to tier `from + 1`.
     fn drain_file(&self, from: usize, rel: &str,
                   session: &CkptSession) -> anyhow::Result<u64> {
@@ -318,12 +337,25 @@ impl PipelineShared {
         let len = src.len()?;
         let dst = self.tiers[from + 1].create(rel)?;
         let start = self.timeline.now_s();
+        let fault = self.fault_injector();
         // chunk_bytes is clamped >= 1 at construction
         let mut buf = vec![0u8; self.chunk_bytes.min(len.max(1) as usize)];
         let mut off = 0u64;
         while off < len {
             let take = ((len - off) as usize).min(buf.len());
             src.read_exact_at(&mut buf[..take], off)?;
+            if let Some(inj) = &fault {
+                if inj.check(KillPoint::MidDrain) {
+                    // crash mid-copy: a SHORT write lands and the file
+                    // is never finalized — the torn-copy shape restore's
+                    // fall-through must survive
+                    dst.write_at(off, &buf[..take / 2])?;
+                    anyhow::bail!(
+                        "fault injected: mid-drain (torn {rel} on {})",
+                        self.tiers[from + 1].kind().label()
+                    );
+                }
+            }
             dst.write_at(off, &buf[..take])?;
             off += take as u64;
         }
@@ -340,10 +372,109 @@ impl PipelineShared {
         Ok(len)
     }
 
+    /// Push one file to a peer replica target, charging the shared
+    /// replication throttle chunk by chunk.
+    fn replicate_file(&self, peer: &dyn Backend, rel: &str,
+                      throttle: Option<&Throttle>)
+        -> anyhow::Result<u64> {
+        // replicate runs BEFORE the first drain hop (and before any
+        // eviction), so the nearest tier still holds the file; taking
+        // the first holder also serves replicate-only single-tier jobs
+        let src_tier = self
+            .tiers
+            .iter()
+            .find(|t| t.exists(rel))
+            .ok_or_else(|| {
+                anyhow::anyhow!("{rel}: no local tier holds a copy to \
+                                 replicate")
+            })?;
+        let src = src_tier.open(rel)?;
+        let len = src.len()?;
+        let dst = peer.create(rel)?;
+        let start = self.timeline.now_s();
+        let fault = self.fault_injector();
+        let mut buf = vec![0u8; self.chunk_bytes.min(len.max(1) as usize)];
+        let mut off = 0u64;
+        while off < len {
+            let take = ((len - off) as usize).min(buf.len());
+            src.read_exact_at(&mut buf[..take], off)?;
+            if let Some(t) = throttle {
+                t.acquire(take as u64);
+            }
+            if let Some(inj) = &fault {
+                if inj.check(KillPoint::MidReplicate) {
+                    // the peer keeps a torn, never-finalized copy
+                    dst.write_at(off, &buf[..take / 2])?;
+                    anyhow::bail!(
+                        "fault injected: mid-replicate (torn {rel} on \
+                         peer)"
+                    );
+                }
+            }
+            dst.write_at(off, &buf[..take])?;
+            off += take as u64;
+        }
+        dst.finalize()?;
+        self.timeline
+            .record(Tier::Drain, rel, len, start, self.timeline.now_s());
+        Ok(len)
+    }
+
+    /// Mirror one finalized version to every configured peer. Runs
+    /// before the drain hops (the landing copy is still resident), so
+    /// replica durability can resolve without waiting for deep tiers.
+    /// A failed push fails only the version's REPLICA durability level
+    /// — local persistence is unaffected.
+    fn replicate_version(&self, job: &VersionDrainJob) {
+        let (peers, throttle) = {
+            let st = self.replicas.lock().unwrap();
+            (st.peers.clone(), st.throttle.clone())
+        };
+        if peers.is_empty() {
+            return;
+        }
+        let version = job.session.version();
+        let mut bytes = 0u64;
+        let mut pushes = 0u64;
+        for (pi, peer) in peers.iter().enumerate() {
+            for f in &job.files {
+                let rel = format!("{}/{f}", job.dir);
+                match self.replicate_file(peer.as_ref(), &rel,
+                                          throttle.as_deref()) {
+                    Ok(n) => {
+                        bytes += n;
+                        pushes += 1;
+                        job.session.progress_counters().add_drained(n);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[storage] replica v{version} {rel} -> peer \
+                             {pi} failed: {e:#}"
+                        );
+                        job.session.fail_replica(format!(
+                            "push of {rel} to peer {pi}: {e:#}"
+                        ));
+                        return;
+                    }
+                }
+            }
+        }
+        job.session.replica_durable(
+            job.requested.elapsed().as_secs_f64(),
+            bytes,
+            pushes,
+        );
+        if let Some(n) = &job.notify {
+            n.notify();
+        }
+    }
+
     /// Drain one finalized version hop by hop until it reaches the
     /// terminal tier, marking per-tier durability as each hop lands.
+    /// Replica pushes run first, off the still-resident landing copy.
     fn drain_version(&self, job: VersionDrainJob) {
         let version = job.session.version();
+        self.replicate_version(&job);
         for from in 0..self.tiers.len() - 1 {
             let to = from + 1;
             for f in &job.files {
@@ -388,9 +519,9 @@ impl PipelineShared {
     }
 }
 
-/// The composable tier stack. Single-tier pipelines are degenerate (no
-/// drain worker, landing == terminal) and behave exactly like the old
-/// flat flush path.
+/// The composable tier stack. Single-tier pipelines are degenerate
+/// (landing == terminal, drains rejected unless peer replication is
+/// installed) and behave exactly like the old flat flush path.
 pub struct TierPipeline {
     shared: Arc<PipelineShared>,
     drain_tx: Option<Sender<VersionDrainJob>>,
@@ -414,20 +545,26 @@ impl TierPipeline {
             chunk_bytes: chunk_bytes.max(1),
             drains_pending: std::sync::atomic::AtomicUsize::new(0),
             read_cfg: Mutex::new(Default::default()),
+            replicas: Mutex::new(ReplicaTargets::default()),
+            faults: Mutex::new(None),
         });
-        let (drain_tx, worker) = if shared.tiers.len() > 1 {
-            let (tx, rx) =
-                crate::util::channel::unbounded::<VersionDrainJob>();
-            let sh = shared.clone();
-            let handle = std::thread::Builder::new()
-                .name("ds-tier-drain".into())
-                .spawn(move || Self::drain_loop(rx, sh))
-                .expect("spawn tier drain");
-            (Some(tx), Some(handle))
-        } else {
-            (None, None)
-        };
-        Arc::new(TierPipeline { shared, drain_tx, worker })
+        // the worker is spawned unconditionally (it parks on the job
+        // channel): single-tier pipelines need it too once peer
+        // replication is installed, and `set_replicas` runs after
+        // construction — `submit_drain` still rejects jobs that have
+        // nothing to do (single tier, no replicas)
+        let (tx, rx) =
+            crate::util::channel::unbounded::<VersionDrainJob>();
+        let sh = shared.clone();
+        let handle = std::thread::Builder::new()
+            .name("ds-tier-drain".into())
+            .spawn(move || Self::drain_loop(rx, sh))
+            .expect("spawn tier drain");
+        Arc::new(TierPipeline {
+            shared,
+            drain_tx: Some(tx),
+            worker: Some(handle),
+        })
     }
 
     /// Degenerate single-tier pipeline (the baselines' flat path).
@@ -502,6 +639,12 @@ impl TierPipeline {
                         spec.throttle_bps,
                     )?)
                 }
+                TierKind::Replicated => anyhow::bail!(
+                    "`replicated` is a durability level, not a \
+                     storable tier — configure peers via \
+                     `EngineConfig::replicas` (or `--replicas K`) \
+                     instead of the tier stack"
+                ),
             };
             tiers.push(tier);
         }
@@ -554,16 +697,54 @@ impl TierPipeline {
         &self.shared.manifest
     }
 
+    /// Install peer-replication targets: one `LocalFs` backend per
+    /// peer directory, plus the shared replication-bandwidth throttle.
+    /// Subsequent drain jobs mirror their version to every peer before
+    /// the first tier hop. An empty spec switches replication off.
+    pub fn set_replicas(&self, spec: &ReplicaSpec) {
+        let mut st = self.shared.replicas.lock().unwrap();
+        st.peers = spec
+            .peers
+            .iter()
+            .map(|p| Arc::new(LocalFs::new(p)) as Arc<dyn Backend>)
+            .collect();
+        st.throttle =
+            spec.throttle_bps.map(|bps| Arc::new(Throttle::new(bps)));
+    }
+
+    /// Replication factor K currently installed (0 = off).
+    pub fn replicas_active(&self) -> usize {
+        self.shared.replicas.lock().unwrap().peers.len()
+    }
+
+    /// Arm the pipeline's fault-injection hooks (`figures faults`);
+    /// `None` removes them.
+    pub fn set_fault_injector(&self,
+                              inj: Option<Arc<FaultInjector>>) {
+        *self.shared.faults.lock().unwrap() = inj;
+    }
+
     /// Create a file on the landing tier (the engine flush path).
     pub fn create_landing(&self, rel: &str)
         -> anyhow::Result<Box<dyn BackendFile>> {
+        if let Some(inj) = self.shared.fault_injector() {
+            if inj.check(KillPoint::MidCapture) {
+                anyhow::bail!(
+                    "fault injected: mid-capture (landing create of \
+                     {rel} aborted)"
+                );
+            }
+        }
         self.landing().create(rel)
     }
 
     /// Submit a version whose landing-tier copy is finalized for
-    /// background tier-to-tier draining.
+    /// background tier-to-tier draining (and/or peer replication).
     pub fn submit_drain(&self, job: VersionDrainJob) -> anyhow::Result<()> {
         use std::sync::atomic::Ordering;
+        if !self.is_multi() && self.replicas_active() == 0 {
+            anyhow::bail!("single-tier pipeline");
+        }
         let tx = self
             .drain_tx
             .as_ref()
@@ -664,9 +845,22 @@ impl TierPipeline {
         // file, each failing tier, and the offending chunk id, instead
         // of whichever tier happened to fail last.
         let mut errs: Vec<String> = Vec::new();
+        let fault = self.shared.fault_injector();
         for tier in &self.shared.tiers {
             if !tier.exists(rel) {
                 continue;
+            }
+            if let Some(inj) = &fault {
+                // fires ONCE per arm: the nearest holder's probe fails
+                // and resolution must fall through to a deeper tier or
+                // peer copy
+                if inj.check(KillPoint::MidRestore) {
+                    errs.push(format!(
+                        "on {} tier: fault injected: mid-restore",
+                        tier.kind().label()
+                    ));
+                    continue;
+                }
             }
             match tier.open(rel).and_then(&parse) {
                 Ok(v) => return Ok(v),
@@ -903,13 +1097,14 @@ mod tests {
     }
 
     #[test]
-    fn single_tier_pipeline_has_no_worker() {
+    fn single_tier_pipeline_rejects_drains_without_replicas() {
         let dir = crate::util::TempDir::new("pipe-single").unwrap();
         let tl = Arc::new(Timeline::new());
         let p = TierPipeline::single(
             Arc::new(LocalFs::new(dir.path())), tl);
         assert!(!p.is_multi());
         assert_eq!(p.tier_kinds(), vec![TierKind::LocalFs]);
+        assert_eq!(p.replicas_active(), 0);
         assert!(p
             .submit_drain(VersionDrainJob {
                 session: CkptSession::new(
@@ -925,6 +1120,85 @@ mod tests {
                 notify: None,
             })
             .is_err());
+    }
+
+    fn replica_session(version: u64) -> Arc<CkptSession> {
+        let s = CkptSession::new(
+            version,
+            None,
+            Arc::new(crate::metrics::ProgressCounters::default()),
+            Default::default(),
+            vec![TierKind::LocalFs],
+        );
+        s.expect_replicas();
+        s
+    }
+
+    #[test]
+    fn replicas_mirror_versions_to_peers_byte_identically() {
+        let dir = crate::util::TempDir::new("pipe-replica").unwrap();
+        let peer = crate::util::TempDir::new("pipe-peer").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::single(
+            Arc::new(LocalFs::new(dir.path())), tl);
+        p.set_replicas(&ReplicaSpec::to_peers(vec![
+            peer.path().to_path_buf()
+        ]));
+        assert_eq!(p.replicas_active(), 1);
+        let payload = vec![42u8; 10_000];
+        let f = p.create_landing("v000001/x").unwrap();
+        f.write_at(0, &payload).unwrap();
+        f.finalize().unwrap();
+        let s = replica_session(1);
+        p.submit_drain(VersionDrainJob {
+            session: s.clone(),
+            requested: Instant::now(),
+            dir: "v000001".into(),
+            files: vec!["x".into()],
+            notify: None,
+        })
+        .unwrap();
+        let t = crate::CheckpointTicket::new(s);
+        let m = t.wait_durable(TierKind::Replicated).unwrap();
+        assert_eq!(m.replica_pushes, 1);
+        assert_eq!(m.replica_bytes, 10_000);
+        assert!(t.is_durable(TierKind::Replicated));
+        assert_eq!(std::fs::read(peer.path().join("v000001/x")).unwrap(),
+                   payload);
+    }
+
+    #[test]
+    fn mid_replicate_fault_fails_only_the_replica_level() {
+        let dir = crate::util::TempDir::new("pipe-repfault").unwrap();
+        let peer = crate::util::TempDir::new("pipe-repfault-peer").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::single(
+            Arc::new(LocalFs::new(dir.path())), tl);
+        p.set_replicas(&ReplicaSpec::to_peers(vec![
+            peer.path().to_path_buf()
+        ]));
+        let inj = Arc::new(FaultInjector::new(0));
+        inj.arm(KillPoint::MidReplicate);
+        p.set_fault_injector(Some(inj.clone()));
+        let f = p.create_landing("v000002/x").unwrap();
+        f.write_at(0, &vec![7u8; 4096]).unwrap();
+        f.finalize().unwrap();
+        let s = replica_session(2);
+        p.submit_drain(VersionDrainJob {
+            session: s.clone(),
+            requested: Instant::now(),
+            dir: "v000002".into(),
+            files: vec!["x".into()],
+            notify: None,
+        })
+        .unwrap();
+        let t = crate::CheckpointTicket::new(s.clone());
+        let e = t.wait_durable(TierKind::Replicated).unwrap_err();
+        assert!(e.to_string().contains("mid-replicate"), "{e:#}");
+        assert_eq!(inj.fired(), 1);
+        // the local copy is untouched — only the replica level failed
+        assert!(dir.path().join("v000002/x").is_file());
+        assert!(!t.is_durable(TierKind::Replicated));
     }
 
     #[test]

@@ -80,6 +80,11 @@ pub struct WorldConfig {
     pub ckpt_root: PathBuf,
     /// Per-rank engine tuning.
     pub engine_cfg: EngineConfig,
+    /// Peer-replication factor K: every rank mirrors its versions to
+    /// its K ring-successor peers' `replica/` trees through the drain
+    /// worker, and the commit vote additionally requires replica
+    /// durability (`wait_durable(Replicated)`). 0 = off.
+    pub replicas: usize,
 }
 
 /// Run a synchronized multi-rank training loop.
@@ -107,6 +112,20 @@ where
                     let mut ecfg = cfg.engine_cfg.clone();
                     ecfg.ckpt_dir =
                         cfg.ckpt_root.join(format!("rank{rank:03}"));
+                    if cfg.replicas > 0 {
+                        // push targets: the K ring-successor peers'
+                        // replica trees, keeping any configured
+                        // replication-bandwidth cap
+                        let mut spec = crate::storage::ReplicaSpec::for_rank(
+                            &cfg.ckpt_root,
+                            rank,
+                            cfg.world,
+                            cfg.replicas,
+                        );
+                        spec.throttle_bps =
+                            cfg.engine_cfg.replicas.throttle_bps;
+                        ecfg.replicas = spec;
+                    }
                     let mut engine = cfg.engine.build(ecfg)?;
                     let mut report =
                         RankReport { rank, ..Default::default() };
@@ -151,9 +170,20 @@ where
                     // trailer-parse only, no payload re-reads
                     let pipeline = engine.pipeline();
                     for ticket in &tickets {
-                        if pipeline
-                            .version_readable(ticket.version())
-                            .is_ok()
+                        // with replication on, the vote additionally
+                        // requires replica durability — a version whose
+                        // peer pushes failed must not become the commit
+                        // other ranks restore a lost node from
+                        let replica_ok = cfg.replicas == 0
+                            || ticket
+                                .wait_durable(
+                                    crate::storage::TierKind::Replicated,
+                                )
+                                .is_ok();
+                        if replica_ok
+                            && pipeline
+                                .version_readable(ticket.version())
+                                .is_ok()
                         {
                             report
                                 .verified_versions
@@ -188,10 +218,20 @@ where
                 .iter()
                 .all(|r| r.verified_versions.contains(&v));
             if all {
-                std::fs::write(
-                    cfg.ckpt_root.join(format!("global_commit_v{v:06}")),
-                    format!("{}\n", cfg.world),
-                )?;
+                // tmp + atomic rename (the MANIFEST.tmp pattern): a
+                // crash mid-write must not leave a torn marker that a
+                // restart could misparse as a commit — the `.tmp`
+                // suffix also keeps `committed_versions` from parsing
+                // the in-flight file (its version suffix is not
+                // numeric)
+                let marker = cfg
+                    .ckpt_root
+                    .join(format!("global_commit_v{v:06}"));
+                let tmp = cfg
+                    .ckpt_root
+                    .join(format!("global_commit_v{v:06}.tmp"));
+                std::fs::write(&tmp, format!("{}\n", cfg.world))?;
+                std::fs::rename(&tmp, &marker)?;
                 world.committed_versions.push(v);
             }
             v += cfg.interval;
@@ -218,12 +258,34 @@ pub fn resume_resharded(
     model: &LlmConfig,
     target: &Parallelism,
 ) -> anyhow::Result<Option<(u64, Vec<RankState>)>> {
+    resume_resharded_replicated(root, tiers, 0, model, target)
+}
+
+/// [`resume_resharded`] for runs written with peer replication
+/// (`WorldConfig::replicas` = K > 0): each source rank's pipeline
+/// additionally resolves through its K ring-successor peers' replica
+/// trees, so a rank whose directory was lost outright (whole-node
+/// failure) still restores — from the peer copies — as long as one
+/// peer survives. With `replicas = 0` this is exactly
+/// `resume_resharded`.
+pub fn resume_resharded_replicated(
+    root: &std::path::Path,
+    tiers: &[TierSpec],
+    replicas: usize,
+    model: &LlmConfig,
+    target: &Parallelism,
+) -> anyhow::Result<Option<(u64, Vec<RankState>)>> {
     for v in committed_versions(root)?.into_iter().rev() {
         // resolution failures (missing rank dirs, unreadable/torn
         // files, unbuildable index) mean THIS version's data is gone:
         // fall back to an older commit
         let resolved = committed_world(root, v).and_then(|w| {
-            let world = CheckpointWorld::open(root, w, tiers)?;
+            let world = if replicas > 0 {
+                CheckpointWorld::open_replicated(root, w, tiers,
+                                                 replicas)?
+            } else {
+                CheckpointWorld::open(root, w, tiers)?
+            };
             let index = world.index(v)?;
             Ok((world, index))
         });
@@ -246,7 +308,11 @@ pub fn resume_resharded(
     Ok(None)
 }
 
-/// All globally-committed versions under `root`, ascending.
+/// All globally-committed versions under `root`, ascending. A marker
+/// whose body is not a parsable world size (garbage bytes, torn
+/// leftovers from pre-atomic-rename writers) must not vouch for a
+/// version: it is skipped with a warning instead of surfacing later as
+/// a confusing resolution failure.
 pub fn committed_versions(root: &std::path::Path)
     -> anyhow::Result<Vec<u64>> {
     let mut vs = Vec::new();
@@ -254,26 +320,44 @@ pub fn committed_versions(root: &std::path::Path)
         return Ok(vs);
     }
     for entry in std::fs::read_dir(root)? {
-        let name = entry?.file_name().to_string_lossy().into_owned();
-        if let Some(v) = name
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(v) = name
             .strip_prefix("global_commit_v")
             .and_then(|s| s.parse::<u64>().ok())
-        {
-            vs.push(v);
+        else {
+            continue;
+        };
+        match marker_world(&entry.path()) {
+            Ok(_) => vs.push(v),
+            Err(e) => eprintln!(
+                "[train] skipping corrupt commit marker {name}: {e:#}"
+            ),
         }
     }
     vs.sort_unstable();
     Ok(vs)
 }
 
+/// Parse a commit marker's body: a single decimal world size. Garbage
+/// (non-UTF-8, empty, non-numeric) is an error the callers skip.
+fn marker_world(path: &std::path::Path) -> anyhow::Result<usize> {
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("unreadable body: {e}"))?;
+    let w: usize = body.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad world size {:?}",
+                        body.chars().take(32).collect::<String>())
+    })?;
+    anyhow::ensure!(w > 0, "world size 0");
+    Ok(w)
+}
+
 /// World size recorded in version `v`'s commit marker.
 fn committed_world(root: &std::path::Path, v: u64)
     -> anyhow::Result<usize> {
     let path = root.join(format!("global_commit_v{v:06}"));
-    let body = std::fs::read_to_string(&path)?;
-    body.trim().parse().map_err(|_| {
-        anyhow::anyhow!("{path:?}: bad world size {body:?}")
-    })
+    marker_world(&path)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e:#}"))
 }
 
 /// Latest globally-committed version (restart entry point).
@@ -298,6 +382,7 @@ mod tests {
             engine: EngineKind::DataStatesLlm,
             ckpt_root: dir.to_path_buf(),
             engine_cfg: EngineConfig::default(),
+            replicas: 0,
         }
     }
 
@@ -436,5 +521,28 @@ mod tests {
         std::fs::remove_file(dir.path().join("global_commit_v000004"))
             .unwrap();
         assert_eq!(latest_committed(dir.path()).unwrap(), Some(2));
+    }
+
+    #[test]
+    fn corrupt_commit_marker_is_skipped_with_warning() {
+        // garbage bytes (a torn marker from a pre-atomic-rename
+        // writer, or disk corruption) must not vouch for a version
+        let dir = TempDir::new("world-marker").unwrap();
+        std::fs::write(dir.path().join("global_commit_v000002"), "2\n")
+            .unwrap();
+        std::fs::write(dir.path().join("global_commit_v000004"),
+                       [0xffu8, 0xfe, 0x00, 0x37])
+            .unwrap();
+        std::fs::write(dir.path().join("global_commit_v000006"), "0\n")
+            .unwrap();
+        // an in-flight tmp marker is not a commit either
+        std::fs::write(dir.path().join("global_commit_v000008.tmp"),
+                       "2\n")
+            .unwrap();
+        assert_eq!(committed_versions(dir.path()).unwrap(), vec![2]);
+        assert_eq!(latest_committed(dir.path()).unwrap(), Some(2));
+        // the readable marker still parses its world size
+        assert_eq!(committed_world(dir.path(), 2).unwrap(), 2);
+        assert!(committed_world(dir.path(), 4).is_err());
     }
 }

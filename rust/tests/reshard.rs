@@ -147,3 +147,93 @@ fn engine_run_over_3b_census_coalesces_writes_contents_unchanged() {
     // and the engine-level metrics view agrees with the ticket's
     assert_eq!(eng.metrics()[0].coalesced_writes, m.coalesced_writes);
 }
+
+#[test]
+fn whole_rank_loss_recovers_from_peer_replicas() {
+    // 2-rank world written with --replicas 1 semantics: every version
+    // is mirrored to the ring-successor peer. Erasing rank000's ENTIRE
+    // tree (fast tier + local FS + the replica copies it held for its
+    // peer) must still reshard-restore the committed version, byte-
+    // identically, from rank001's replica tree.
+    use datastates::train::distributed::{resume_resharded_replicated,
+                                         run_world, WorldConfig};
+    let model = LlmConfig::by_name("3B").unwrap();
+    let from = Parallelism::new(2, 1, 1);
+    let cs = census(&model, &from);
+    let tmp = TempDir::new("reshard-node-loss").unwrap();
+    let report = run_world(
+        &WorldConfig {
+            world: 2,
+            iterations: 2,
+            interval: 2,
+            engine: datastates::baselines::EngineKind::DataStatesLlm,
+            ckpt_root: tmp.path().to_path_buf(),
+            engine_cfg: EngineConfig::default(),
+            replicas: 1,
+        },
+        |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.05,
+                               ((rank as u64) << 32) | it),
+        |_, _| {},
+    )
+    .unwrap();
+    assert_eq!(report.committed_versions, vec![2]);
+    assert!(datastates::faults::lose_rank_dir(
+        &tmp.path().join("rank000"))
+        .unwrap());
+    let tiers = vec![datastates::storage::TierSpec::local_fs()];
+    let to = Parallelism::new(1, 1, 1);
+    let (v, restored) = resume_resharded_replicated(
+        tmp.path(), &tiers, 1, &model, &to)
+        .unwrap()
+        .expect("peer replicas should resolve the committed version");
+    assert_eq!(v, 2);
+    let src: Vec<RankState> = (0..2)
+        .map(|r| materialize(&cs.ranks[r], 1e-5, 0.05,
+                             ((r as u64) << 32) | (v - 1)))
+        .collect();
+    assert_eq!(flatten_states(&src).unwrap(),
+               flatten_states(&restored).unwrap());
+}
+
+#[test]
+fn whole_rank_loss_without_replication_is_a_clean_named_error() {
+    use datastates::train::distributed::{resume_resharded, run_world,
+                                         WorldConfig};
+    let model = LlmConfig::by_name("3B").unwrap();
+    let from = Parallelism::new(2, 1, 1);
+    let cs = census(&model, &from);
+    let tmp = TempDir::new("reshard-node-loss-bare").unwrap();
+    run_world(
+        &WorldConfig {
+            world: 2,
+            iterations: 2,
+            interval: 2,
+            engine: datastates::baselines::EngineKind::DataStatesLlm,
+            ckpt_root: tmp.path().to_path_buf(),
+            engine_cfg: EngineConfig::default(),
+            replicas: 0,
+        },
+        |rank, it| materialize(&cs.ranks[rank], 1e-5, 0.05,
+                               ((rank as u64) << 32) | it),
+        |_, _| {},
+    )
+    .unwrap();
+    assert!(datastates::faults::lose_rank_dir(
+        &tmp.path().join("rank000"))
+        .unwrap());
+    let tiers = vec![datastates::storage::TierSpec::local_fs()];
+    // the failure-domain-aware open names the lost rank, its missing
+    // directory, and the (empty) peer list it tried
+    let err = CheckpointWorld::open_replicated(tmp.path(), 2, &tiers, 0)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 0"), "{msg}");
+    assert!(msg.contains("rank000"), "{msg}");
+    assert!(msg.contains("unrecoverable"), "{msg}");
+    // and the resume entry point cleanly resumes nothing rather than
+    // resurrecting a half-world
+    assert!(resume_resharded(tmp.path(), &tiers, &model,
+                             &Parallelism::new(1, 1, 1))
+        .unwrap()
+        .is_none());
+}

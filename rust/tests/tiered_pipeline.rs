@@ -315,3 +315,55 @@ fn manifest_survives_engine_restart() {
     let restored = pipeline.read_version(8).unwrap();
     datastates::restore::verify_files_against(&restored, &state).unwrap();
 }
+
+/// Whole-node loss with peer replication: the engine mirrors every
+/// version to a peer's replica tree; after BOTH local tiers are erased
+/// (fast host cache died with the process, local FS deleted), a
+/// pipeline over the peer copy alone restores byte-identically.
+#[test]
+fn replicated_engine_survives_total_local_loss() {
+    use datastates::storage::{ReplicaSpec, TierPipeline};
+    let dir = TempDir::new("tier-replica-loss").unwrap();
+    let rank_dir = dir.path().join("rank000");
+    let peer_dir = ReplicaSpec::replica_home(dir.path(), 1, 0);
+    let mut cfg = EngineConfig::two_tier(&rank_dir);
+    cfg.replicas = ReplicaSpec::to_peers(vec![peer_dir.clone()]);
+    let mut eng = DataStatesEngine::new(cfg).unwrap();
+    let state = device_state(1 << 20, 7);
+    let ticket = eng.begin(1, &state).unwrap();
+    ticket.wait_persisted().unwrap();
+    // replica durability is its own level, above terminal persistence
+    let m = ticket.wait_durable(TierKind::Replicated).unwrap();
+    assert!(m.replica_pushes > 0);
+    assert!(m.replica_bytes > 0);
+    drop(eng); // the node dies...
+    assert!(datastates::faults::lose_rank_dir(&rank_dir).unwrap());
+    // ...and the peer's replica tree alone serves the version
+    let peer = TierPipeline::from_specs(
+        &[TierSpec::local_fs()],
+        &peer_dir,
+        false,
+        4 << 20,
+        None,
+        std::sync::Arc::new(datastates::metrics::Timeline::new()),
+    )
+    .unwrap();
+    let restored = peer.read_version(1).unwrap();
+    datastates::restore::verify_files_against(&restored, &state)
+        .unwrap();
+}
+
+/// Losing an unreplicated rank is a clean, named error — not a panic,
+/// not a silent empty restore.
+#[test]
+fn unreplicated_loss_is_a_clean_error_naming_the_rank() {
+    use datastates::restore::reshard::CheckpointWorld;
+    let dir = TempDir::new("tier-unreplicated-loss").unwrap();
+    let err = CheckpointWorld::open_replicated(
+        dir.path(), 1, &[TierSpec::local_fs()], 0)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank 0"), "{msg}");
+    assert!(msg.contains("rank000"), "{msg}");
+    assert!(msg.contains("unrecoverable"), "{msg}");
+}
