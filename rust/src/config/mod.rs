@@ -188,6 +188,23 @@ pub struct EngineConfig {
     /// Deterministic fault-injection hooks for the `figures faults`
     /// matrix (`faults::FaultInjector`); `None` in production paths.
     pub faults: Option<std::sync::Arc<crate::faults::FaultInjector>>,
+    /// In-place retries after the first attempt for TRANSIENT I/O
+    /// faults (EINTR/EAGAIN/timeouts) on every tier op — flush writes,
+    /// drain hops, restore opens/reads (the `--retry-max` knob; see
+    /// `storage::health::RetryPolicy`). Permanent errors never retry.
+    pub retry_max: usize,
+    /// Seed of the deterministic retry-backoff jitter (and, combined
+    /// with per-op keys, of every health-related random draw).
+    pub retry_seed: u64,
+    /// Hedged-read latency budget in MILLISECONDS for restore gather
+    /// runs: past the budget, the run is re-issued on the next-nearest
+    /// tier and the first completion wins (the `--hedge-ms` knob).
+    /// `0` disables hedging (the default).
+    pub hedge_ms: u64,
+    /// Run the scrub-and-repair verifier on the drain worker after
+    /// every drained version (the `--scrub` knob): re-verify every
+    /// tier's copy, rebuild torn/bit-rotted ones from deeper tiers.
+    pub scrub: bool,
 }
 
 impl Default for EngineConfig {
@@ -210,6 +227,10 @@ impl Default for EngineConfig {
             uring_queue_depth: 64,
             replicas: ReplicaSpec::default(),
             faults: None,
+            retry_max: 3,
+            retry_seed: 0,
+            hedge_ms: 0,
+            scrub: false,
         }
     }
 }

@@ -439,6 +439,22 @@ impl DataStatesEngine {
             pipeline.set_replicas(&cfg.replicas);
         }
         pipeline.set_fault_injector(cfg.faults.clone());
+        // tier-health knobs: the transient-fault retry budget covers
+        // the flush pool, the drain worker and every restore path of
+        // this pipeline; `--scrub` re-verifies each drained version
+        let policy = crate::storage::RetryPolicy::with_retries(
+            cfg.retry_max, cfg.retry_seed);
+        pipeline.set_retry_policy(policy.clone());
+        pipeline.set_scrub(cfg.scrub);
+        flush.set_retry_policy(policy);
+        if cfg.faults.is_some() {
+            let landing = cfg
+                .tiers
+                .first()
+                .map(|t| t.kind.label())
+                .unwrap_or("local-fs");
+            flush.set_fault_injector(cfg.faults.clone(), landing);
+        }
         let (pump_tx, pump_rx) = crate::util::channel::unbounded::<PumpMsg>();
         let pump_notifier = notifier.clone();
         let pump_pipeline = pipeline.clone();

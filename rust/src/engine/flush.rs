@@ -211,20 +211,35 @@ enum Msg {
     Stop,
 }
 
+/// Shared health hooks of the flush pool: the transient-fault retry
+/// budget applied around the blocking gather writes, plus the optional
+/// landing-tier fault-injection hooks of the `figures flaky` matrix.
+struct FlushHooks {
+    policy: crate::storage::RetryPolicy,
+    injector:
+        Option<(Arc<crate::faults::FaultInjector>, &'static str)>,
+}
+
 /// The writer-thread pool, shared across checkpoints of a rank.
 pub struct FlushPool {
     tx: Sender<Msg>,
     workers: Vec<JoinHandle<()>>,
+    hooks: Arc<Mutex<FlushHooks>>,
 }
 
 impl FlushPool {
     pub fn new(threads: usize, timeline: Arc<Timeline>) -> Arc<Self> {
         let (tx, rx) = crate::util::channel::unbounded::<Msg>();
         let rx = Arc::new(rx);
+        let hooks = Arc::new(Mutex::new(FlushHooks {
+            policy: crate::storage::RetryPolicy::default(),
+            injector: None,
+        }));
         let workers = (0..threads.max(1))
             .map(|i| {
                 let rx: Arc<Receiver<Msg>> = rx.clone();
                 let tl = timeline.clone();
+                let hooks = hooks.clone();
                 std::thread::Builder::new()
                     .name(format!("ds-flush-{i}"))
                     .spawn(move || {
@@ -287,8 +302,45 @@ impl FlushPool {
                                         .iter()
                                         .map(|b| b.as_slice())
                                         .collect();
-                                    done(file.file.write_gather_at(
-                                        offset, &slices));
+                                    // positioned writes are idempotent
+                                    // (same offset, same bytes), so a
+                                    // transient fault retries in place
+                                    // under the pool's policy (the
+                                    // ring path surfaces its errors
+                                    // through the reaper as before)
+                                    let (hk_policy, hk_inj) = {
+                                        let h = hooks.lock().unwrap();
+                                        (h.policy.clone(),
+                                         h.injector.clone())
+                                    };
+                                    let key =
+                                        crate::storage::health::fnv1a(
+                                            file.name.as_bytes())
+                                            ^ offset;
+                                    let (res, _retries) = hk_policy
+                                        .run(key, || {
+                                        if let Some((inj, label)) =
+                                            &hk_inj
+                                        {
+                                            let d = inj
+                                                .slow_delay_s(label);
+                                            if d > 0.0 {
+                                                std::thread::sleep(
+                                                    std::time::Duration
+                                                    ::from_secs_f64(d));
+                                            }
+                                            if let Some(e) = inj
+                                                .transient_error(
+                                                    "flush write",
+                                                    label)
+                                            {
+                                                return Err(e);
+                                            }
+                                        }
+                                        file.file.write_gather_at(
+                                            offset, &slices)
+                                    });
+                                    done(res);
                                 }
                             }
                         }
@@ -296,7 +348,7 @@ impl FlushPool {
                     .expect("spawn flusher")
             })
             .collect();
-        Arc::new(FlushPool { tx, workers })
+        Arc::new(FlushPool { tx, workers, hooks })
     }
 
     /// Enqueue a chunk write. The file's issued counter is bumped here so
@@ -304,6 +356,24 @@ impl FlushPool {
     pub fn submit(&self, job: WriteJob) {
         job.file.record_issued();
         self.tx.send(Msg::Job(job)).expect("flush pool alive");
+    }
+
+    /// Install the transient-fault retry budget applied around the
+    /// pool's blocking writes (the `--retry-max` knob).
+    pub fn set_retry_policy(&self,
+                            policy: crate::storage::RetryPolicy) {
+        self.hooks.lock().unwrap().policy = policy;
+    }
+
+    /// Arm the landing-tier fault-injection hooks (seeded transient
+    /// write faults + slow-tier stalls) on the pool's blocking writes.
+    pub fn set_fault_injector(
+        &self,
+        inj: Option<Arc<crate::faults::FaultInjector>>,
+        tier_label: &'static str,
+    ) {
+        self.hooks.lock().unwrap().injector =
+            inj.map(|i| (i, tier_label));
     }
 }
 

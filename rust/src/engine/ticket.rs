@@ -35,6 +35,12 @@ struct SessionState {
     gate_failed: bool,
     /// Per-tier durability, fastest tier first.
     durable: Vec<bool>,
+    /// Per-tier DEGRADED state (ISSUE 10): the drain worker skipped
+    /// this hop (tier quarantined) or permanently failed it while
+    /// deeper tiers kept draining. Scoped to its tier's waiters —
+    /// `wait_durable` on the skipped tier errors with the reason
+    /// instead of hanging, while other levels resolve normally.
+    tier_failed: Vec<Option<String>>,
     /// Durable on the terminal tier.
     persisted: bool,
     failed: Option<String>,
@@ -93,6 +99,7 @@ impl CkptSession {
                 gate_resolved: false,
                 gate_failed: false,
                 durable: vec![false; n],
+                tier_failed: vec![None; n],
                 persisted: false,
                 failed: None,
                 expect_replicas: false,
@@ -223,6 +230,24 @@ impl CkptSession {
         self.cv.notify_all();
     }
 
+    /// Mark ONE tier's durability level degraded for this version
+    /// (ISSUE 10): the drain worker skipped the hop because the tier is
+    /// quarantined (or the hop permanently failed while deeper tiers
+    /// continued). Only waiters on tier `idx` observe the error — an
+    /// already-durable level stays durable, and deeper tiers still
+    /// resolve (or degrade) on their own.
+    pub fn tier_degraded(&self, idx: usize, reason: String) {
+        let mut st = self.state.lock().unwrap();
+        if idx < st.tier_failed.len()
+            && !st.durable[idx]
+            && st.tier_failed[idx].is_none()
+        {
+            st.tier_failed[idx] = Some(reason);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
     /// Mark replication failed for this version. Only waiters on the
     /// `Replicated` durability level observe the error — the local
     /// tiers (and `wait_persisted`) are unaffected.
@@ -307,6 +332,11 @@ impl CkptSession {
         loop {
             if idx < st.durable.len() && st.durable[idx] {
                 return Ok(st.metrics.clone());
+            }
+            if let Some(e) =
+                st.tier_failed.get(idx).and_then(|e| e.as_ref())
+            {
+                anyhow::bail!("checkpoint v{}: {e}", self.version);
             }
             if let Some(e) = &st.failed {
                 anyhow::bail!("checkpoint v{}: {e}", self.version);
@@ -557,6 +587,39 @@ mod tests {
         let e = t.wait_persisted().unwrap_err();
         assert!(e.to_string().contains("disk full"));
         assert!(!t.is_persisted());
+    }
+
+    #[test]
+    fn degraded_tier_errors_its_waiters_but_deeper_tiers_resolve() {
+        // [host-cache, local-fs, remote]: the middle hop is skipped
+        // (quarantined) while the drain continues to the terminal tier.
+        let s = CkptSession::new(
+            11,
+            None,
+            Arc::new(ProgressCounters::default()),
+            CkptMetrics { version: 11, bytes: 10, ..Default::default() },
+            vec![TierKind::HostCache, TierKind::LocalFs,
+                 TierKind::Remote],
+        );
+        let t = CheckpointTicket::new(s.clone());
+        s.tier_durable(0, 0.1);
+        s.tier_degraded(
+            1,
+            "local-fs tier quarantined; drain hop skipped".into(),
+        );
+        s.tier_durable(2, 0.5);
+        // the skipped tier's waiters error by name instead of hanging
+        let e = t.wait_durable(TierKind::LocalFs).unwrap_err();
+        assert!(e.to_string().contains("quarantined"));
+        assert!(e.to_string().contains("local-fs"));
+        // ...while faster and deeper levels (and persistence) resolve
+        assert!(t.wait_durable(TierKind::HostCache).is_ok());
+        assert!(t.wait_durable(TierKind::Remote).is_ok());
+        assert!(t.wait_persisted().is_ok());
+        assert!(t.is_persisted());
+        // degrading an already-durable tier is a no-op
+        s.tier_degraded(0, "late".into());
+        assert!(t.wait_durable(TierKind::HostCache).is_ok());
     }
 
     #[test]

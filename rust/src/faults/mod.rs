@@ -94,6 +94,25 @@ pub struct FaultInjector {
     armed: Mutex<Armed>,
     crossings: AtomicU64,
     fired: AtomicU64,
+    /// Transient-fault mode: probability (in parts-per-million) that
+    /// any hook-site op fails with an injected EIO/EAGAIN. 0 = off.
+    transient_ppm: AtomicU64,
+    /// xorshift64* state for the per-op transient draw, seeded from
+    /// `seed` so a given seed reproduces the same fault pattern for a
+    /// serial op sequence.
+    rng: AtomicU64,
+    /// Lifetime injected transient errors.
+    transient_fired: AtomicU64,
+    /// Optional transient-mode target: when set, only hooked ops on
+    /// this tier label draw faults — other tiers run clean. `None`
+    /// injects everywhere (the property-test default).
+    transient_tier: Mutex<Option<String>>,
+    /// Slow-tier mode: (tier label, injected latency) — every hooked op
+    /// on that tier pays the latency, modeling a stalled-but-healthy
+    /// device.
+    slow: Mutex<Option<(String, f64)>>,
+    /// Lifetime slow-tier delays served.
+    slow_fired: AtomicU64,
 }
 
 impl FaultInjector {
@@ -145,6 +164,121 @@ impl FaultInjector {
     /// Currently armed kill point, if any.
     pub fn armed(&self) -> Option<KillPoint> {
         self.armed.lock().unwrap().point
+    }
+
+    // ---- transient-error mode (ISSUE 10) --------------------------------
+
+    /// Enable (or, with `rate <= 0`, disable) the seeded transient-error
+    /// mode: each hooked op independently fails with probability `rate`
+    /// (clamped to [0, 1]), alternating EIO/EAGAIN flavors. Orthogonal
+    /// to the armed kill point — both can be live at once.
+    pub fn set_transient_rate(&self, rate: f64) {
+        let ppm = (rate.clamp(0.0, 1.0) * 1_000_000.0) as u64;
+        self.transient_ppm.store(ppm, Ordering::SeqCst);
+        // (re)seed the draw stream so each activation is reproducible
+        self.rng.store(
+            self.seed.wrapping_mul(0x9E3779B97F4A7C15) | 1,
+            Ordering::SeqCst,
+        );
+    }
+
+    /// Active transient fault probability.
+    pub fn transient_rate(&self) -> f64 {
+        self.transient_ppm.load(Ordering::SeqCst) as f64 / 1e6
+    }
+
+    /// Aim the transient mode at one tier label (`None` = every tier).
+    /// Lets a harness break exactly one tier — e.g. a dead terminal
+    /// tier whose breaker must quarantine while the landing tier keeps
+    /// accepting checkpoints.
+    pub fn set_transient_tier(&self, tier: Option<&str>) {
+        *self.transient_tier.lock().unwrap() =
+            tier.map(|t| t.to_string());
+    }
+
+    /// One xorshift64* draw from the injector's stream.
+    fn draw(&self) -> u64 {
+        let mut x = self.rng.load(Ordering::Relaxed);
+        loop {
+            let mut y = x;
+            y ^= y << 13;
+            y ^= y >> 7;
+            y ^= y << 17;
+            match self.rng.compare_exchange_weak(
+                x, y, Ordering::Relaxed, Ordering::Relaxed,
+            ) {
+                Ok(_) => return y.wrapping_mul(0x2545F4914F6CDD1D),
+                Err(cur) => x = cur,
+            }
+        }
+    }
+
+    /// Hook-site probe for the transient mode: with the configured
+    /// probability, returns an injected transient error naming the op,
+    /// tier, and errno flavor (the `transient fault` marker is what
+    /// `IoErrorClass` classifies as retryable).
+    pub fn transient_error(
+        &self,
+        what: &str,
+        tier: &str,
+    ) -> Option<anyhow::Error> {
+        let ppm = self.transient_ppm.load(Ordering::Relaxed);
+        if ppm == 0 {
+            return None;
+        }
+        if let Some(t) = &*self.transient_tier.lock().unwrap() {
+            if t.as_str() != tier {
+                return None;
+            }
+        }
+        let v = self.draw();
+        if v % 1_000_000 >= ppm {
+            return None;
+        }
+        self.transient_fired.fetch_add(1, Ordering::SeqCst);
+        let errno = if v & (1 << 32) == 0 { "EIO" } else { "EAGAIN" };
+        Some(anyhow::anyhow!(
+            "transient fault injected ({errno}) during {what} on \
+             {tier} tier"
+        ))
+    }
+
+    /// Lifetime injected transient errors.
+    pub fn transient_fired(&self) -> u64 {
+        self.transient_fired.load(Ordering::SeqCst)
+    }
+
+    // ---- slow-tier mode (ISSUE 10) --------------------------------------
+
+    /// Make every hooked op on the tier labeled `tier` pay `latency_s`
+    /// of injected delay (`latency_s <= 0` clears the mode). Models a
+    /// stalled-but-healthy device for the hedged-read matrix.
+    pub fn set_slow_tier(&self, tier: &str, latency_s: f64) {
+        let mut s = self.slow.lock().unwrap();
+        *s = if latency_s > 0.0 {
+            Some((tier.to_string(), latency_s))
+        } else {
+            None
+        };
+    }
+
+    /// Injected delay owed by an op on tier `tier` (0 when the mode is
+    /// off or aimed elsewhere). Counts a firing when non-zero; the hook
+    /// site performs the sleep so async paths can charge it their way.
+    pub fn slow_delay_s(&self, tier: &str) -> f64 {
+        let s = self.slow.lock().unwrap();
+        match &*s {
+            Some((t, d)) if t.as_str() == tier => {
+                self.slow_fired.fetch_add(1, Ordering::SeqCst);
+                *d
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Lifetime slow-tier delays served.
+    pub fn slow_fired(&self) -> u64 {
+        self.slow_fired.load(Ordering::SeqCst)
     }
 }
 
@@ -233,6 +367,70 @@ mod tests {
         let removed = tear_file(&p).unwrap();
         assert_eq!(removed, 500);
         assert_eq!(std::fs::metadata(&p).unwrap().len(), 500);
+    }
+
+    #[test]
+    fn transient_mode_is_seeded_and_rate_bounded() {
+        let inj = FaultInjector::new(77);
+        // off by default: no draws, no fires
+        assert!(inj.transient_error("read", "local-fs").is_none());
+        inj.set_transient_rate(0.5);
+        let fires: Vec<bool> = (0..200)
+            .map(|_| inj.transient_error("read", "local-fs").is_some())
+            .collect();
+        let n = fires.iter().filter(|f| **f).count();
+        assert!(n > 50 && n < 150, "rate 0.5 fired {n}/200");
+        assert_eq!(inj.transient_fired(), n as u64);
+        // same seed reproduces the exact pattern
+        let inj2 = FaultInjector::new(77);
+        inj2.set_transient_rate(0.5);
+        let fires2: Vec<bool> = (0..200)
+            .map(|_| inj2.transient_error("read", "local-fs").is_some())
+            .collect();
+        assert_eq!(fires, fires2);
+        // errors carry op + tier + the transient marker
+        inj.set_transient_rate(1.0);
+        let e = inj.transient_error("drain write", "remote").unwrap();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("transient fault injected"));
+        assert!(msg.contains("drain write"));
+        assert!(msg.contains("remote tier"));
+        // rate 0 switches it back off
+        inj.set_transient_rate(0.0);
+        assert!(inj.transient_error("read", "remote").is_none());
+    }
+
+    #[test]
+    fn transient_tier_filter_scopes_the_faults() {
+        let inj = FaultInjector::new(3);
+        inj.set_transient_rate(1.0);
+        inj.set_transient_tier(Some("local-fs"));
+        assert!(inj.transient_error("drain write", "local-fs").is_some());
+        assert!(inj.transient_error("flush write", "host-cache").is_none());
+        inj.set_transient_tier(None); // back to everywhere
+        assert!(inj.transient_error("flush write", "host-cache").is_some());
+    }
+
+    #[test]
+    fn slow_tier_mode_targets_one_tier() {
+        let inj = FaultInjector::new(0);
+        assert_eq!(inj.slow_delay_s("host-cache"), 0.0);
+        inj.set_slow_tier("host-cache", 0.25);
+        assert_eq!(inj.slow_delay_s("host-cache"), 0.25);
+        assert_eq!(inj.slow_delay_s("local-fs"), 0.0);
+        assert_eq!(inj.slow_fired(), 1);
+        inj.set_slow_tier("host-cache", 0.0); // clears
+        assert_eq!(inj.slow_delay_s("host-cache"), 0.0);
+    }
+
+    #[test]
+    fn transient_mode_is_orthogonal_to_kill_points() {
+        let inj = FaultInjector::new(0);
+        inj.set_transient_rate(1.0);
+        inj.arm(KillPoint::MidDrain);
+        assert!(inj.transient_error("read", "local-fs").is_some());
+        assert!(inj.check(KillPoint::MidDrain));
+        assert_eq!(inj.fired(), 1);
     }
 
     #[test]

@@ -1417,6 +1417,254 @@ pub fn faults() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Tier health under flaky I/O (real plane + calibrated model):
+/// seeded transient-fault matrix (fault rate × retry budget) with
+/// byte-identity or a clean named error per cell, the circuit-breaker
+/// quarantine/reintegration round trip, and the hedged-read slow-tier
+/// cell where hedging strictly reduces p99 TTFT.
+pub fn flaky() -> anyhow::Result<()> {
+    use crate::config::EngineConfig;
+    use crate::engine::{CheckpointEngine, DataStatesEngine};
+    use crate::faults::FaultInjector;
+    use crate::restore::{ReadEngine, ReadEngineConfig};
+    use crate::sim::flaky_restore_time_s;
+    use crate::storage::TierKind;
+    use std::sync::Arc;
+
+    let model = LlmConfig::by_name("3B").unwrap();
+    let cs = census(&model, &Parallelism::new(1, 1, 1));
+    let mk = |seed: u64| {
+        crate::state::partition::materialize(&cs.ranks[0], 1e-4,
+                                             0.05, seed)
+    };
+
+    hr("Flaky tiers: fault rate × retry budget (real plane)");
+    println!("{:<12}{:>10}  {}", "fault rate", "retries", "outcome");
+    for (rate, label) in [(0.0, "0%"), (0.02, "2%"), (0.10, "10%")] {
+        for retry_max in [0usize, 3] {
+            let tmp = crate::util::TempDir::new("ds-flaky-cell")?;
+            let inj = Arc::new(FaultInjector::new(
+                0xF1A2 ^ (rate * 1e3) as u64 ^ retry_max as u64,
+            ));
+            inj.set_transient_rate(rate);
+            let mut ecfg = EngineConfig::two_tier(tmp.path());
+            ecfg.chunk_bytes = 16 << 10;
+            ecfg.evict_fast_tier = false;
+            ecfg.retry_max = retry_max;
+            ecfg.faults = Some(inj.clone());
+            let mut eng = DataStatesEngine::new(ecfg)?;
+            let state = mk(7 ^ (rate * 1e3) as u64);
+            let written = eng.begin(1, &state).and_then(|t| {
+                t.wait_persisted()?;
+                t.wait_durable(TierKind::LocalFs)
+            });
+            let outcome = match written {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    anyhow::ensure!(
+                        msg.contains("tier"),
+                        "drain error must name the tier: {msg}");
+                    format!("drain failed clean: {msg}")
+                }
+                Ok(_) => {
+                    let rd =
+                        ReadEngine::new(ReadEngineConfig::default());
+                    match rd.read_version(eng.pipeline().as_ref(), 1) {
+                        Ok(v) => {
+                            crate::restore::verify_files_against(
+                                &v, &state)?;
+                            let m = rd.metrics();
+                            format!("byte-identical \
+                                     (in-place retries: {})",
+                                    m.retries)
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            anyhow::ensure!(
+                                msg.contains("tier"),
+                                "restore error must name the \
+                                 tier: {msg}");
+                            format!("restore failed clean: {msg}")
+                        }
+                    }
+                }
+            };
+            println!("{:<12}{:>10}  {}", label, retry_max, outcome);
+        }
+    }
+
+    hr("Circuit breaker: quarantine, bypass, reintegrate");
+    {
+        let tmp = crate::util::TempDir::new("ds-flaky-breaker")?;
+        let inj = Arc::new(FaultInjector::new(17));
+        let mut ecfg = EngineConfig::two_tier(tmp.path());
+        ecfg.chunk_bytes = 16 << 10;
+        ecfg.evict_fast_tier = false;
+        ecfg.retry_max = 1;
+        ecfg.faults = Some(inj.clone());
+        let mut eng = DataStatesEngine::new(ecfg)?;
+        let pipeline = eng.pipeline();
+        // a dead terminal tier: every drain write to local-fs fails,
+        // while the landing tier keeps accepting checkpoints
+        inj.set_transient_rate(1.0);
+        inj.set_transient_tier(Some("local-fs"));
+        // the breaker counts one consecutive error per failed drain:
+        // the first versions fail the historical way...
+        let before_trip =
+            crate::storage::health::QUARANTINE_AFTER as u64 - 1;
+        for v in 1..=before_trip {
+            let state = mk(100 + v);
+            let err = eng
+                .begin(v, &state)
+                .and_then(|t| t.wait_persisted().map(|_| ()))
+                .err()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "v{v} must not persist on a dead terminal tier"))?;
+            let msg = format!("{err:#}");
+            anyhow::ensure!(msg.contains("tier"),
+                            "v{v} error must name the tier: {msg}");
+        }
+        // ...then the trip: the version DEGRADES instead of failing —
+        // landing persistence resolves, the dead level errors by name,
+        // and the skipped hop queues for recovery
+        for v in before_trip + 1..=before_trip + 2 {
+            let state = mk(100 + v);
+            let t = eng.begin(v, &state)?;
+            t.wait_persisted()?;
+            let e = t
+                .wait_durable(TierKind::LocalFs)
+                .err()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "v{v} durability must degrade on the dead tier"))?;
+            anyhow::ensure!(e.to_string().contains("quarantined"),
+                            "v{v}: {e:#}");
+        }
+        anyhow::ensure!(
+            pipeline.health().quarantine_events_total() >= 1,
+            "the breaker never tripped");
+        // the queue must not wedge behind the quarantined tier
+        for _ in 0..200 {
+            if pipeline.drains_pending() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        anyhow::ensure!(pipeline.drains_pending() == 0,
+                        "drain queue wedged behind the quarantine");
+        anyhow::ensure!(pipeline.pending_hops() >= 1,
+                        "the skipped hops never queued for recovery");
+        println!("rate 100% on local-fs: breaker tripped after {} \
+                  consecutive failures; later versions bypassed the \
+                  quarantined tier without wedging the queue \
+                  (pending hops: {})",
+                 crate::storage::health::QUARANTINE_AFTER,
+                 pipeline.pending_hops());
+        // the tier heals: half-open probes reintegrate it, and the
+        // skipped hops are resumed by the worker/scrubber
+        inj.set_transient_rate(0.0);
+        for v in before_trip + 3..=before_trip + 4 {
+            // outlive the breaker's probe backoff so the drain's
+            // admit() draws a half-open probe, not a Deny
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            let state = mk(100 + v);
+            let t = eng.begin(v, &state)?;
+            t.wait_persisted()?;
+            let _ = t.wait_durable(TierKind::LocalFs); // settle drain
+        }
+        let rep = pipeline.scrub_repair()?;
+        anyhow::ensure!(
+            pipeline.health().reintegrations_total() >= 1,
+            "the quarantined tier never reintegrated");
+        anyhow::ensure!(pipeline.pending_hops() == 0,
+                        "skipped hops were not resumed");
+        let vq = before_trip + 2; // a version whose hop was skipped
+        let v4 = pipeline.read_version(vq)?;
+        crate::restore::verify_files_against(&v4, &mk(100 + vq))?;
+        println!("rate 0%: reintegrated after half-open probes \
+                  (reintegrations: {}); skipped hops resumed \
+                  (by scrub: {}); v{vq} byte-identical from the \
+                  healed tier",
+                 pipeline.health().reintegrations_total(),
+                 rep.hops_resumed);
+    }
+
+    hr("Hedged reads on a slow tier (real plane, p99 TTFT)");
+    {
+        let tmp = crate::util::TempDir::new("ds-flaky-hedge")?;
+        let inj = Arc::new(FaultInjector::new(0));
+        let mut ecfg = EngineConfig::two_tier(tmp.path());
+        ecfg.chunk_bytes = 16 << 10;
+        ecfg.evict_fast_tier = false; // both tiers hold the version
+        ecfg.faults = Some(inj.clone());
+        let mut eng = DataStatesEngine::new(ecfg)?;
+        let state = mk(4242);
+        let t = eng.begin(1, &state)?;
+        t.wait_persisted()?;
+        t.wait_durable(TierKind::LocalFs)?;
+        // the nearest (host-cache) tier stalls every read 8 ms
+        inj.set_slow_tier("host-cache", 0.008);
+        let passes = 8;
+        let mut p99 = [0.0f64; 2]; // [unhedged, hedged]
+        for (i, hedge_s) in [0.0, 0.002].iter().enumerate() {
+            let rd = ReadEngine::new(ReadEngineConfig {
+                hedge_s: *hedge_s,
+                ..Default::default()
+            });
+            let mut worst = 0.0f64;
+            for _ in 0..passes {
+                let (v, rep) = rd.read_version_report(
+                    eng.pipeline().as_ref(), 1)?;
+                crate::restore::verify_files_against(&v, &state)?;
+                worst = worst.max(rep.time_to_first_tensor_s);
+            }
+            p99[i] = worst;
+            let m = rd.metrics();
+            println!("hedge {:>5.1} ms: p99 TTFT {:>8.2} ms \
+                      (hedges issued {}, won {})",
+                     hedge_s * 1e3, worst * 1e3,
+                     m.hedges_issued, m.hedges_won);
+            if *hedge_s > 0.0 {
+                anyhow::ensure!(m.hedges_issued > 0,
+                                "slow tier never triggered a hedge");
+            }
+        }
+        anyhow::ensure!(
+            p99[1] < p99[0],
+            "hedging must strictly reduce p99 TTFT on the slow-tier \
+             cell ({} vs {})", p99[1], p99[0]);
+        println!("hedging cut p99 TTFT {:.2}x on the slow-tier cell",
+                 p99[0] / p99[1]);
+    }
+
+    hr("Calibrated flaky-restore model (sim plane)");
+    let cfg = SimConfig::paper("7B", 15, 1);
+    let k = EngineKind::DataStatesLlm;
+    println!("{:<12}{:>12}{:>12}{:>14}{:>16}", "fault rate",
+             "stall ms", "hedge ms", "mean (s)", "p99 TTFT (ms)");
+    for p in [0.0, 0.02, 0.10] {
+        for (stall, hedge) in [(0.0, 0.0), (0.020, 0.0),
+                               (0.020, 0.002)]
+        {
+            let est =
+                flaky_restore_time_s(k, &cfg, p, stall, hedge, true);
+            println!("{:<12}{:>12.1}{:>12.1}{:>14.3}{:>16.2}",
+                     format!("{:.0}%", p * 100.0), stall * 1e3,
+                     hedge * 1e3, est.mean_s, est.ttft_p99_s * 1e3);
+        }
+    }
+    // the model's contracts, asserted where the figure shows them
+    let slow = flaky_restore_time_s(k, &cfg, 0.0, 0.020, 0.0, true);
+    let hedged = flaky_restore_time_s(k, &cfg, 0.0, 0.020, 0.002, true);
+    anyhow::ensure!(hedged.ttft_p99_s < slow.ttft_p99_s,
+                    "model: hedging must cut the stalled p99 TTFT");
+    anyhow::ensure!(
+        flaky_restore_time_s(k, &cfg, 0.10, 0.0, 0.0, true).mean_s
+            <= flaky_restore_time_s(k, &cfg, 0.10, 0.0, 0.0, false)
+                .mean_s,
+        "model: quarantine must not increase the mean");
+    Ok(())
+}
+
 /// File census summary used in §II / Fig 1 discussion.
 pub fn files_summary() {
     hr("File census per model (global)");
@@ -1461,6 +1709,7 @@ pub fn all() -> anyhow::Result<()> {
     serve()?;
     incremental()?;
     faults()?;
+    flaky()?;
     files_summary();
     ablations();
     Ok(())

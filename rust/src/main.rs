@@ -3,11 +3,17 @@
 //! Subcommands:
 //!   figures <all|table1|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|
 //!            fig12|fig13|table3|fig14|fig15|tiers|reshard|gather|
-//!            restore|incremental|uring|serve|faults|files>
+//!            restore|incremental|uring|serve|faults|flaky|files>
 //!   train [--steps N] [--interval K] [--engine E] [--artifacts DIR]
 //!         [--ckpt-dir DIR] [--seed S] [--resume]
 //!         [--tiers T1,T2] [--throttle-mbps M] [--durability TIER]
 //!   fsck <checkpoint-file>
+//!   fsck <version-dir> [--repair --from DONOR-DIR]
+//!                                  (verify every file of a version
+//!                                   directory; with --repair, rebuild
+//!                                   torn/rotted files byte-identically
+//!                                   from the donor directory — a deeper
+//!                                   tier's copy or a peer replica tree)
 //!   partition <model> [--dp D]     (print one rank's composition)
 //!   bench-io [--dir DIR] [--tiers T1,T2] [--throttle-mbps M]
 //!            [--json PATH]         (quick real-plane flush sweep;
@@ -74,6 +80,31 @@
 //!                               directory is torn or lost
 //!                               (`figures faults` drives the
 //!                               kill-point x replication matrix)
+//!
+//! Tier-health knobs (self-healing I/O, see DESIGN.md "Tier health &
+//! self-healing"; accepted by train and the bench-* commands):
+//!   --retry-max N               in-place retries per transient I/O
+//!                               failure before it surfaces (default 3;
+//!                               0 disables retries)
+//!   --retry-seed S              seed of the deterministic retry-backoff
+//!                               jitter (default 0)
+//!   --hedge-ms MS               restore-side hedged reads: if the
+//!                               nearest tier has not produced a gather
+//!                               run's bytes within MS, race the same
+//!                               read against the next tier and take the
+//!                               first completion (default 0 = off)
+//!   --scrub                     run the scrub-and-repair pass on the
+//!                               drain worker after each drained version
+//!
+//! Fault-injection flags (deterministic, for experiments; same sites
+//! the `figures flaky` matrix drives):
+//!   --fault-rate P              every hooked I/O op independently fails
+//!                               with probability P (0..=1) with an
+//!                               injected transient EIO/EAGAIN
+//!   --fault-seed S              seed of the injected fault pattern
+//!   --slow-tier TIER:MS         every hooked op on TIER (hostcache|
+//!                               localfs|remote) pays MS of extra
+//!                               latency — the hedged-read testbed
 //!
 //! Async I/O knobs (io_uring backend, see DESIGN.md "Async I/O
 //! backend"; accepted by train, bench-io and bench-restore):
@@ -275,6 +306,49 @@ fn uring_flags(args: &Args, cfg: &mut EngineConfig) {
         args.num("uring-depth", cfg.uring_queue_depth);
 }
 
+/// Apply the tier-health knobs (`--retry-max`, `--retry-seed`,
+/// `--hedge-ms`, `--scrub`) and the deterministic fault-injection
+/// flags (`--fault-rate`, `--fault-seed`, `--slow-tier TIER:MS`) to an
+/// engine config.
+fn health_flags(args: &Args, cfg: &mut EngineConfig)
+    -> anyhow::Result<()> {
+    cfg.retry_max = args.num("retry-max", cfg.retry_max);
+    cfg.retry_seed = args.num("retry-seed", cfg.retry_seed);
+    cfg.hedge_ms = args.num("hedge-ms", cfg.hedge_ms);
+    if args.get("scrub").is_some() {
+        cfg.scrub = true;
+    }
+    let rate: f64 = args.num("fault-rate", 0.0);
+    anyhow::ensure!((0.0..=1.0).contains(&rate),
+                    "--fault-rate must be in [0, 1], got {rate}");
+    let slow = args.get("slow-tier");
+    if rate > 0.0 || slow.is_some() {
+        let inj = std::sync::Arc::new(
+            datastates::faults::FaultInjector::new(
+                args.num("fault-seed", 0)));
+        if rate > 0.0 {
+            inj.set_transient_rate(rate);
+        }
+        if let Some(spec) = slow {
+            let (tier, ms) = spec.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--slow-tier takes TIER:MS, e.g. hostcache:5")
+            })?;
+            let kind = TierKind::parse(tier).ok_or_else(|| {
+                anyhow::anyhow!("unknown tier in --slow-tier {spec:?}")
+            })?;
+            let ms: f64 = ms.parse().map_err(|_| {
+                anyhow::anyhow!("bad latency in --slow-tier {spec:?}")
+            })?;
+            anyhow::ensure!(ms >= 0.0 && ms.is_finite(),
+                            "--slow-tier latency must be >= 0");
+            inj.set_slow_tier(kind.label(), ms / 1e3);
+        }
+        cfg.faults = Some(inj);
+    }
+    Ok(())
+}
+
 /// Per-transfer-tier `{bytes, busy_s, bps}` JSON for one timeline.
 fn tier_throughput_json(tl: &Timeline) -> String {
     let entry = |tier: Tier| {
@@ -323,6 +397,7 @@ fn figures(args: &Args) -> anyhow::Result<()> {
         "uring" => harness::uring()?,
         "serve" => harness::serve()?,
         "faults" => harness::faults()?,
+        "flaky" => harness::flaky()?,
         "files" => harness::files_summary(),
         "ablation" => harness::ablations(),
         other => anyhow::bail!("unknown figure {other}"),
@@ -360,6 +435,7 @@ fn train(args: &Args) -> anyhow::Result<()> {
         cfg.tiers = tiers;
     }
     uring_flags(args, &mut cfg);
+    health_flags(args, &mut cfg)?;
 
     if args.get("resume").is_some() {
         if let Some((v, dir)) =
@@ -434,12 +510,40 @@ fn train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn fsck(args: &Args) -> anyhow::Result<()> {
-    let path = args
-        .positional
-        .get(1)
-        .ok_or_else(|| anyhow::anyhow!("usage: fsck <file>"))?;
-    let n = datastates::restore::fsck(std::path::Path::new(path))?;
-    println!("{path}: OK ({n} entries)");
+    let path = args.positional.get(1).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: fsck <file> | fsck <version-dir> \
+             [--repair --from DONOR-DIR]")
+    })?;
+    let path = std::path::Path::new(path);
+    if path.is_file() {
+        let n = datastates::restore::fsck(path)?;
+        println!("{}: OK ({n} entries)", path.display());
+        return Ok(());
+    }
+    anyhow::ensure!(path.is_dir(), "{path:?}: no such file or directory");
+    // directory mode: verify every file; with --repair, rebuild torn
+    // copies byte-identically from the donor directory
+    let donor = match (args.get("repair").is_some(), args.get("from")) {
+        (true, Some(d)) => Some(std::path::PathBuf::from(d)),
+        (true, None) => anyhow::bail!(
+            "fsck --repair needs --from DONOR-DIR (a deeper tier's \
+             copy of the version, or a peer replica tree)"),
+        (false, _) => None,
+    };
+    let rep = datastates::restore::fsck_dir_repair(
+        path, donor.as_deref())?;
+    println!(
+        "{}: {} files checked, {} OK, {} repaired, {} unrepairable",
+        path.display(), rep.files_checked, rep.files_ok,
+        rep.files_repaired, rep.unrepairable.len()
+    );
+    for u in &rep.unrepairable {
+        eprintln!("[fsck] UNREPAIRABLE {u}");
+    }
+    anyhow::ensure!(rep.unrepairable.is_empty(),
+                    "{} file(s) failed verification",
+                    rep.unrepairable.len());
     Ok(())
 }
 
@@ -508,6 +612,7 @@ fn bench_io(args: &Args) -> anyhow::Result<()> {
             ecfg.tiers = t.clone();
         }
         uring_flags(args, &mut ecfg);
+        health_flags(args, &mut ecfg)?;
         let mut eng = kind.build(ecfg)?;
         let ticket = eng.begin(0, &state)?;
         ticket.wait_captured()?;
@@ -781,8 +886,10 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
     ecfg.chunk_bytes = BENCH_CHUNK_BYTES;
     ecfg.coalesce_bytes = BENCH_COALESCE_BYTES;
     uring_flags(args, &mut ecfg);
+    health_flags(args, &mut ecfg)?;
     let uring_requested = ecfg.io_uring;
     let uring_depth = ecfg.uring_queue_depth;
+    let hedge_s = ecfg.hedge_ms as f64 / 1e3;
     let mut eng = DataStatesEngine::new(ecfg)?;
     let ticket = eng.begin(0, &state)?;
     ticket.wait_persisted()?;
@@ -805,6 +912,7 @@ fn bench_restore(args: &Args) -> anyhow::Result<()> {
                 } else {
                     0
                 },
+                hedge_s,
                 ..Default::default()
             });
             let (restored, rep0) =
@@ -977,6 +1085,7 @@ fn bench_serve(args: &Args) -> anyhow::Result<()> {
         ecfg.tiers = tiers;
     }
     uring_flags(args, &mut ecfg);
+    health_flags(args, &mut ecfg)?;
     let mut eng = DataStatesEngine::new(ecfg)?;
     eng.begin(0, &state)?.wait_persisted()?;
 

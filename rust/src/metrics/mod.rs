@@ -329,6 +329,19 @@ pub struct RestoreMetrics {
     /// Gather runs that performed the backing read (single-flight
     /// fills and cache bypasses included).
     pub run_cache_misses: u64,
+    /// Transient-fault retries the pass's reads consumed (in-place
+    /// same-tier retries under the pipeline's `RetryPolicy`).
+    pub retries: u64,
+    /// Hedged reads issued: the primary tier's read exceeded the hedge
+    /// latency budget, so a duplicate read was dispatched to the
+    /// next-nearest tier (first completion wins).
+    pub hedges_issued: u64,
+    /// Hedged reads the HEDGE won (the deeper tier finished first).
+    pub hedges_won: u64,
+    /// Tier quarantine entries observed on the source pipelines during
+    /// the pass (circuit breaker Healthy/Degraded → Quarantined
+    /// transitions).
+    pub quarantine_events: u64,
 }
 
 /// Live byte counters for one checkpoint session, updated by the D2H

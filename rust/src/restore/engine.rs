@@ -54,8 +54,8 @@ use crate::restore::RestoredFile;
 use crate::serve::{RunCache, RunKey};
 use crate::state::shard::{RankState, ShardFile, StateItem};
 use crate::state::tensor::{DType, TensorShard};
-use crate::storage::{Backend, LocalFs, PipelineShared, ReadAt,
-                     RestoredVersion, TierKind, TierPipeline};
+use crate::storage::{Backend, IoErrorClass, LocalFs, PipelineShared,
+                     ReadAt, RestoredVersion, TierKind, TierPipeline};
 use crate::util::channel::Sender;
 
 /// Fallback piece granularity when coalescing is off (matches the
@@ -106,6 +106,14 @@ pub struct ReadEngineConfig {
     /// Concurrent-read cap per FILESYSTEM tier (host-cache reads are
     /// uncapped). Clamped >= 1.
     pub fs_readers: usize,
+    /// Hedged-read latency budget in seconds (the `--hedge-ms` knob):
+    /// when a gather run's nearest-tier fill exceeds this budget, a
+    /// second fill is issued against the next-nearest tier holding a
+    /// copy and the FIRST completion serves the run. `0` disables
+    /// hedging (the default — hedges double-charge the slow tier's
+    /// bandwidth, so they are opt-in for tail-latency-sensitive
+    /// restores).
+    pub hedge_s: f64,
 }
 
 impl Default for ReadEngineConfig {
@@ -117,6 +125,7 @@ impl Default for ReadEngineConfig {
             gap_bytes: 4096,
             pool_bytes: 32 << 20,
             fs_readers: 4,
+            hedge_s: 0.0,
         }
     }
 }
@@ -135,6 +144,7 @@ impl ReadEngineConfig {
             // restore staging needs a few runs in flight, not the full
             // checkpoint cache (the pool is also allocated lazily)
             pool_bytes: cfg.host_cache_bytes.clamp(1 << 20, 64 << 20),
+            hedge_s: cfg.hedge_ms as f64 / 1e3,
             ..Default::default()
         }
     }
@@ -274,14 +284,31 @@ impl Source {
     }
 
     /// Open the nearest tier >= `from` holding a copy, caching the
-    /// resolution so concurrent runs share one reader handle.
-    fn resolve(&self, from: usize) -> anyhow::Result<Resolved> {
+    /// resolution so concurrent runs share one reader handle. In-place
+    /// retries consumed by transient open faults accumulate on
+    /// `retries` when given.
+    fn resolve(&self, from: usize, retries: Option<&AtomicU64>)
+        -> anyhow::Result<Resolved> {
         let mut slot = self.resolved.lock().unwrap();
         if let Some(r) = slot.as_ref() {
             if r.tier >= from {
                 return Ok(r.clone());
             }
         }
+        let res = self.resolve_uncached(from, retries)?;
+        *slot = Some(res.clone());
+        Ok(res)
+    }
+
+    /// The nearest-tier scan WITHOUT the shared resolution cache.
+    /// Hedged reads resolve their deeper target through this so the
+    /// cached (nearest) resolution is never poisoned onto the slower
+    /// hedge tier.
+    fn resolve_uncached(&self, from: usize,
+                        retries: Option<&AtomicU64>)
+        -> anyhow::Result<Resolved> {
+        let policy = self.shared.health().policy();
+        let inj = self.shared.injector();
         // accumulate EVERY tier's failure — the final error must name
         // each failing tier (and, on remote tiers, the torn chunk id),
         // not just whichever tier failed last
@@ -290,20 +317,40 @@ impl Source {
             if !tier.exists(&self.rel) {
                 continue;
             }
-            match tier.open(&self.rel) {
+            let label = tier.kind().label();
+            // a transient open fault (EINTR/EAGAIN) retries IN PLACE
+            // on this tier — it must not demote the read to a slower
+            // tier the way a torn copy does
+            let (opened, used) = policy.run(
+                crate::storage::health::fnv1a(self.rel.as_bytes())
+                    ^ i as u64,
+                || {
+                    if let Some(inj) = &inj {
+                        if let Some(e) =
+                            inj.transient_error("open", label)
+                        {
+                            return Err(e);
+                        }
+                    }
+                    tier.open(&self.rel)
+                },
+            );
+            if let Some(ctr) = retries {
+                ctr.fetch_add(used, Ordering::Relaxed);
+            }
+            match opened {
                 Ok(r) => {
-                    let res = Resolved {
+                    self.shared.health().tier(i).record_ok(0.0);
+                    return Ok(Resolved {
                         tier: i,
                         kind: tier.kind(),
                         reader: Arc::from(r),
                         throttle: tier.throttle(),
-                    };
-                    *slot = Some(res.clone());
-                    return Ok(res);
+                    });
                 }
                 Err(e) => {
-                    errs.push(format!("on {} tier: {e:#}",
-                                      tier.kind().label()));
+                    self.shared.health().tier(i).record_err();
+                    errs.push(format!("on {} tier: {e:#}", label));
                 }
             }
         }
@@ -396,6 +443,15 @@ struct PassShared {
     gap_bytes: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    /// In-place transient-fault retries consumed by this pass's
+    /// resolves and gather reads (see `storage::health::RetryPolicy`).
+    retries: AtomicU64,
+    /// Hedged reads issued (primary fill exceeded `hedge_s`) and won
+    /// (the hedge's fill served the run).
+    hedges_issued: AtomicU64,
+    hedges_won: AtomicU64,
+    /// Hedged-read latency budget (seconds); 0 disables hedging.
+    hedge_s: f64,
     /// QoS weight charged on tier throttles (quantum sizing — see
     /// `storage::Throttle::acquire_weighted`).
     qos_weight: f64,
@@ -1037,6 +1093,22 @@ impl ReadEngine {
         total
     }
 
+    /// Sum quarantine trips across every DISTINCT source pipeline
+    /// (same dedup as [`Self::uring_snapshot`]).
+    fn quarantine_snapshot(sources: &[Source]) -> u64 {
+        let mut seen: Vec<*const PipelineShared> = Vec::new();
+        let mut total = 0u64;
+        for s in sources {
+            let p: *const PipelineShared = Arc::as_ptr(&s.shared);
+            if seen.contains(&p) {
+                continue;
+            }
+            seen.push(p);
+            total += s.shared.health().quarantine_events_total();
+        }
+        total
+    }
+
     /// Run one restore pass: run `feed` (the planner) on the calling
     /// thread, streaming sealed gather runs to the engine's persistent
     /// reader pool while earlier runs execute, then wait on the pass's
@@ -1048,6 +1120,7 @@ impl ReadEngine {
         F: FnOnce(&mut PlanCtx) -> anyhow::Result<()>,
     {
         let uring0 = Self::uring_snapshot(&sources);
+        let quarantines0 = Self::quarantine_snapshot(&sources);
         let shared = Arc::new(PassShared {
             timeline: self.timeline.clone(),
             t0: self.timeline.now_s(),
@@ -1066,6 +1139,10 @@ impl ReadEngine {
             gap_bytes: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            hedges_issued: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
+            hedge_s: self.cfg.hedge_s.max(0.0),
             qos_weight: self.qos_weight,
             run_cache: self.run_cache.clone(),
             sources,
@@ -1121,6 +1198,15 @@ impl ReadEngine {
         m.run_cache_hits += shared.cache_hits.load(Ordering::Acquire);
         m.run_cache_misses +=
             shared.cache_misses.load(Ordering::Acquire);
+        m.retries += shared.retries.load(Ordering::Acquire);
+        m.hedges_issued +=
+            shared.hedges_issued.load(Ordering::Acquire);
+        m.hedges_won += shared.hedges_won.load(Ordering::Acquire);
+        // quarantine trips attributable to this pass (delta across the
+        // pass, like the ring counters below)
+        m.quarantine_events +=
+            Self::quarantine_snapshot(&shared.sources)
+                .saturating_sub(quarantines0);
         // ring traffic attributable to this pass (delta across the
         // pass; includes concurrent same-ring readers/writers, if any —
         // the benches restore from quiescent engines)
@@ -1155,13 +1241,41 @@ impl ReadEngine {
                                          reader_idx);
         }
         let n_tiers = src.tiers().len();
+        let policy = src.shared.health().policy();
+        let op_key = crate::storage::health::fnv1a(src.rel.as_bytes())
+            ^ run.start;
         let mut from = 0usize;
+        let mut attempt = 0usize;
         loop {
-            let r = src.resolve(from)?;
-            match Self::try_run(&r, run, src, sh, lane_txs, reader_idx)
-            {
-                Ok(()) => return Ok(()),
+            let r = src.resolve(from, Some(&sh.retries))?;
+            let t0 = sh.timeline.now_s();
+            let res = if sh.hedge_s > 0.0 && r.tier + 1 < n_tiers {
+                Self::run_hedged(&r, run, src, sh, reader_idx)
+            } else {
+                Self::try_run(&r, run, src, sh, lane_txs, reader_idx)
+            };
+            match res {
+                Ok(()) => {
+                    src.shared.health().tier(r.tier)
+                        .record_ok(sh.timeline.now_s() - t0);
+                    return Ok(());
+                }
                 Err(e) => {
+                    src.shared.health().tier(r.tier).record_err();
+                    // a transient fault retries IN PLACE on this tier;
+                    // only permanent errors (torn copies) or an
+                    // exhausted budget demote the run to a deeper tier
+                    if IoErrorClass::is_transient(&e)
+                        && attempt + 1 < policy.max_attempts.max(1)
+                    {
+                        attempt += 1;
+                        sh.retries.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(
+                            std::time::Duration::from_secs_f64(
+                                policy.backoff_s(attempt, op_key)));
+                        continue;
+                    }
+                    attempt = 0;
                     src.invalidate(r.tier);
                     from = r.tier + 1;
                     if from >= n_tiers {
@@ -1225,12 +1339,33 @@ impl ReadEngine {
     fn fill_run_bytes(run: &GatherRun, src: &Source, sh: &PassShared)
         -> anyhow::Result<Vec<u8>> {
         let n_tiers = src.tiers().len();
+        let policy = src.shared.health().policy();
+        let op_key = crate::storage::health::fnv1a(src.rel.as_bytes())
+            ^ run.start;
         let mut from = 0usize;
+        let mut attempt = 0usize;
         loop {
-            let r = src.resolve(from)?;
+            let r = src.resolve(from, Some(&sh.retries))?;
+            let t0 = sh.timeline.now_s();
             match Self::try_fill(&r, run, src, sh) {
-                Ok(buf) => return Ok(buf),
+                Ok(buf) => {
+                    src.shared.health().tier(r.tier)
+                        .record_ok(sh.timeline.now_s() - t0);
+                    return Ok(buf);
+                }
                 Err(e) => {
+                    src.shared.health().tier(r.tier).record_err();
+                    if IoErrorClass::is_transient(&e)
+                        && attempt + 1 < policy.max_attempts.max(1)
+                    {
+                        attempt += 1;
+                        sh.retries.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(
+                            std::time::Duration::from_secs_f64(
+                                policy.backoff_s(attempt, op_key)));
+                        continue;
+                    }
+                    attempt = 0;
                     src.invalidate(r.tier);
                     from = r.tier + 1;
                     if from >= n_tiers {
@@ -1249,31 +1384,196 @@ impl ReadEngine {
 
     fn try_fill(r: &Resolved, run: &GatherRun, src: &Source,
                 sh: &PassShared) -> anyhow::Result<Vec<u8>> {
+        Self::fill_span(r, run.start, run.span, src, sh)
+    }
+
+    /// Read one `(start, span)` window of the source into a plain heap
+    /// buffer with the tier's usual permit/throttle discipline. The
+    /// fill unit of the run cache AND of hedged reads (both must land
+    /// in private buffers, never the shared destination windows).
+    fn fill_span(r: &Resolved, start: u64, span: u64, src: &Source,
+                 sh: &PassShared) -> anyhow::Result<Vec<u8>> {
+        if let Some(inj) = src.shared.injector() {
+            let d = inj.slow_delay_s(r.kind.label());
+            if d > 0.0 {
+                std::thread::sleep(
+                    std::time::Duration::from_secs_f64(d));
+            }
+            if let Some(e) =
+                inj.transient_error("gather read", r.kind.label())
+            {
+                return Err(e.context(format!("read of {}", src.rel)));
+            }
+        }
         let is_async = r.reader.is_async();
         let sem = (r.kind == TierKind::LocalFs && !is_async)
             .then(|| sh.fs_permit(&src.tiers()[r.tier]));
         let _guard = sem.as_ref().map(|s| s.acquire());
         if let Some(th) = &r.throttle {
             if !is_async {
-                th.acquire_weighted(run.span, sh.qos_weight);
+                th.acquire_weighted(span, sh.qos_weight);
             }
         }
-        let mut buf = vec![0u8; run.span as usize];
+        let mut buf = vec![0u8; span as usize];
         {
             let mut dsts: Vec<&mut [u8]> = vec![&mut buf];
-            r.reader.read_gather_at(run.start, &mut dsts)?;
+            r.reader.read_gather_at(start, &mut dsts)?;
         }
         if is_async {
             if let Some(th) = &r.throttle {
-                th.acquire_weighted(run.span, sh.qos_weight);
+                th.acquire_weighted(span, sh.qos_weight);
             }
         }
         Ok(buf)
     }
 
+    /// Execute one gather run as a HEDGED read: the nearest tier's fill
+    /// runs on a helper thread under the pass's latency budget; when
+    /// the budget lapses the run is re-issued against the next-nearest
+    /// tier holding a copy and the FIRST completion wins. Both fills
+    /// land in private heap buffers and only the winner scatters into
+    /// the destination windows, preserving the single-writer discipline
+    /// of [`SharedBuf`]. The losing fill finishes (or fails) harmlessly
+    /// on its own thread; its result is discarded.
+    fn run_hedged(r: &Resolved, run: &GatherRun, src: &Source,
+                  sh: &Arc<PassShared>, reader_idx: usize)
+        -> anyhow::Result<()> {
+        type Slot =
+            (Mutex<Option<Result<Vec<u8>, String>>>, Condvar);
+        let t0 = sh.timeline.now_s();
+        let slot: Arc<Slot> =
+            Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let sh2 = sh.clone();
+            let r2 = r.clone();
+            let slot2 = slot.clone();
+            let (src_idx, start, span) =
+                (run.src, run.start, run.span);
+            std::thread::spawn(move || {
+                let src = &sh2.sources[src_idx];
+                let res =
+                    Self::fill_span(&r2, start, span, src, &sh2)
+                        .map_err(|e| format!("{e:#}"));
+                let (mx, cv) = &*slot2;
+                *mx.lock().unwrap() = Some(res);
+                cv.notify_all();
+            });
+        }
+        let (mx, cv) = &*slot;
+        let mut g = mx.lock().unwrap();
+        let (g2, _timed_out) = cv
+            .wait_timeout_while(
+                g,
+                std::time::Duration::from_secs_f64(sh.hedge_s),
+                |s| s.is_none(),
+            )
+            .unwrap();
+        g = g2;
+        let primary = g.take();
+        drop(g);
+        let bytes: Vec<u8> = match primary {
+            Some(Ok(buf)) => buf,
+            Some(Err(e)) => {
+                // the primary failed WITHIN budget: no hedge — surface
+                // the failure so exec_run retries or falls through
+                anyhow::bail!("{e}");
+            }
+            None => {
+                // over budget: hedge to the next-nearest tier; resolve
+                // UNCACHED so later runs still prefer the nearest tier
+                sh.hedges_issued.fetch_add(1, Ordering::Relaxed);
+                let hedge = src
+                    .resolve_uncached(r.tier + 1, Some(&sh.retries))
+                    .and_then(|r2| {
+                        Self::fill_span(&r2, run.start, run.span,
+                                        src, sh)
+                    });
+                let mut g = mx.lock().unwrap();
+                match (hedge, g.take()) {
+                    // the hedge landed while the primary was still in
+                    // flight: the hedge won the race
+                    (Ok(buf), None) => {
+                        sh.hedges_won
+                            .fetch_add(1, Ordering::Relaxed);
+                        buf
+                    }
+                    // both landed by now — the bytes are identical, so
+                    // serve either; the hedge is credited only when it
+                    // rescued a failed primary
+                    (Ok(buf), Some(primary)) => match primary {
+                        Ok(pbuf) => pbuf,
+                        Err(_) => {
+                            sh.hedges_won
+                                .fetch_add(1, Ordering::Relaxed);
+                            buf
+                        }
+                    },
+                    (Err(_he), Some(Ok(pbuf))) => pbuf,
+                    (Err(he), Some(Err(pe))) => {
+                        anyhow::bail!(
+                            "{}: hedged read failed on both tiers: \
+                             {} tier: {pe}; hedge: {he:#}",
+                            src.rel,
+                            r.kind.label()
+                        );
+                    }
+                    (Err(he), None) => {
+                        // the hedge failed and the primary is still in
+                        // flight: nothing else can serve — block for
+                        // the primary
+                        loop {
+                            if let Some(res) = g.take() {
+                                match res {
+                                    Ok(buf) => break buf,
+                                    Err(pe) => anyhow::bail!(
+                                        "{}: hedged read failed on \
+                                         both tiers: {} tier: {pe}; \
+                                         hedge: {he:#}",
+                                        src.rel,
+                                        r.kind.label()
+                                    ),
+                                }
+                            }
+                            g = cv.wait(g).unwrap();
+                        }
+                    }
+                }
+            }
+        };
+        // the winner scatters sequentially out of its private buffer —
+        // overlapping destination source ranges are fine (read-only on
+        // the run side, same as the cached-run scatter)
+        for read in &run.reads {
+            let off = (read.file_offset - run.start) as usize;
+            read.entry.buf.write_at(
+                read.dst_offset as usize,
+                &bytes[off..off + read.len as usize],
+            );
+        }
+        sh.timeline.record_on_lane(Tier::Read, &src.rel, run.span,
+                                   t0, sh.timeline.now_s(),
+                                   reader_idx);
+        for read in &run.reads {
+            sh.complete_one(&read.entry);
+        }
+        Ok(())
+    }
+
     fn try_run(r: &Resolved, run: &GatherRun, src: &Source,
                sh: &Arc<PassShared>, lane_txs: &[Sender<LaneMsg>],
                reader_idx: usize) -> anyhow::Result<()> {
+        if let Some(inj) = src.shared.injector() {
+            let d = inj.slow_delay_s(r.kind.label());
+            if d > 0.0 {
+                std::thread::sleep(
+                    std::time::Duration::from_secs_f64(d));
+            }
+            if let Some(e) =
+                inj.transient_error("gather read", r.kind.label())
+            {
+                return Err(e.context(format!("read of {}", src.rel)));
+            }
+        }
         // filesystem tiers: bounded concurrent readers, per tier —
         // unless the reader is async (io_uring): the ring's completion
         // slots ARE the real concurrency bound, so a thread permit

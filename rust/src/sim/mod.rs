@@ -267,6 +267,86 @@ pub fn serve_time_s(kind: EngineKind, cfg: &SimConfig, readers: usize,
     }
 }
 
+/// Calibrated expected-restore-latency estimate under FLAKY-tier
+/// parameters — the analytic companion of `figures flaky` (the
+/// measured counterpart is the harness's fault matrix).
+#[derive(Debug, Clone, Copy)]
+pub struct FlakyEstimate {
+    /// Expected end-to-end restore under faults/stalls/retries.
+    pub mean_s: f64,
+    /// Tail (p99) time-to-first-tensor.
+    pub ttft_p99_s: f64,
+    /// Expected in-place transient retries per gather read.
+    pub retries_per_read: f64,
+}
+
+/// Model one rank's restore when the fastest tier misbehaves.
+/// Transient faults hit each gather read independently with
+/// probability `fault_rate` and retry IN PLACE (geometric attempts,
+/// mean `1/(1-p)`, each retry paying a ~1 ms backoff plus the re-read);
+/// a slow fastest tier adds `stall_s` to every read it serves, which a
+/// hedge budget `hedge_s > 0` caps near `hedge_s` + one deeper-tier
+/// read; with `quarantine` on, a persistently faulty tier trips its
+/// breaker after [`crate::storage::health::QUARANTINE_AFTER`]
+/// consecutive errors and later reads bypass it entirely. Pure
+/// function of its arguments — it changes no published figure.
+pub fn flaky_restore_time_s(kind: EngineKind, cfg: &SimConfig,
+                            fault_rate: f64, stall_s: f64,
+                            hedge_s: f64, quarantine: bool)
+    -> FlakyEstimate {
+    /// Mean retry backoff of `storage::health::RetryPolicy`'s default
+    /// capped-exponential schedule (0.5 ms base, 20 ms cap, ~4 tries).
+    const MEAN_BACKOFF_S: f64 = 1e-3;
+    let base = restore_time_s(kind, cfg, 2, true);
+    let p = fault_rate.clamp(0.0, 0.5);
+    let stall = stall_s.max(0.0);
+    let hedge = hedge_s.max(0.0);
+    // the coalesced gather-read count of `restore_time_s`
+    let cs = census(&cfg.model, &cfg.par);
+    let rc = cs
+        .ranks
+        .iter()
+        .max_by_key(|r| r.total_bytes())
+        .expect("ranks");
+    let load = rank_load(rc);
+    let payload =
+        load.dev_bytes + load.host_tensor_bytes + load.obj_bytes;
+    let reads =
+        payload.div_ceil(16 << 20).max(load.n_files).max(1) as f64;
+    let per_read_s = base.read_s / reads;
+    // geometric retry tail per read; with the breaker on, only the
+    // reads BEFORE the quarantine trip pay it (the trip needs
+    // ~QUARANTINE_AFTER consecutive faults, expected after about
+    // QUARANTINE_AFTER / p reads), later reads resolve directly on
+    // the healthy deeper tier
+    let retries_per_read = p / (1.0 - p);
+    let faulty_reads = if quarantine && p > 0.0 {
+        (crate::storage::health::QUARANTINE_AFTER as f64 / p)
+            .min(reads)
+    } else {
+        reads
+    };
+    let retry_s = faulty_reads
+        * retries_per_read
+        * (MEAN_BACKOFF_S + per_read_s);
+    // slow-tier stall per read: hedging caps it at the hedge budget
+    // plus one deeper-tier read (modeled at 2x the per-read cost —
+    // the next tier is slower, that is why it was not nearest)
+    let stall_per_read = if hedge > 0.0 && stall > hedge {
+        hedge + 2.0 * per_read_s
+    } else {
+        stall
+    };
+    let stall_total_s = reads * stall_per_read;
+    let mean_s = base.total_s + retry_s + stall_total_s;
+    // the first tensor waits on the first read: its stall (hedged or
+    // not) plus a fault-tail inflation
+    let ttft_p99_s =
+        (base.ttft_s + stall_per_read) * (1.0 + 3.0 * p)
+            + retries_per_read * (MEAN_BACKOFF_S + per_read_s);
+    FlakyEstimate { mean_s, ttft_p99_s, retries_per_read }
+}
+
 /// Calibrated incremental-upload estimate for the content-addressed
 /// remote tier (`storage::content`): what the v2 upload of a two-version
 /// incremental run costs over a WAN link, versus re-uploading the full
@@ -720,6 +800,38 @@ mod tests {
 
     fn run(kind: EngineKind, model: &str) -> SimResult {
         simulate(kind, &SimConfig::paper(model, 15, 1))
+    }
+
+    #[test]
+    fn flaky_restore_model_is_monotone_and_hedging_cuts_the_tail() {
+        let cfg = SimConfig::paper("3B", 15, 1);
+        let k = EngineKind::DataStatesLlm;
+        let at = |p, stall, hedge, q| {
+            flaky_restore_time_s(k, &cfg, p, stall, hedge, q)
+        };
+        // no faults, no stall => the plain restore estimate
+        let base = restore_time_s(k, &cfg, 2, true);
+        let clean = at(0.0, 0.0, 0.0, false);
+        assert!((clean.mean_s - base.total_s).abs() < 1e-9);
+        assert_eq!(clean.retries_per_read, 0.0);
+        // mean latency grows with the fault rate
+        assert!(at(0.02, 0.0, 0.0, false).mean_s
+                < at(0.05, 0.0, 0.0, false).mean_s);
+        assert!(at(0.05, 0.0, 0.0, false).mean_s
+                < at(0.10, 0.0, 0.0, false).mean_s);
+        // quarantine caps the fault tax on a persistently flaky tier
+        assert!(at(0.10, 0.0, 0.0, true).mean_s
+                <= at(0.10, 0.0, 0.0, false).mean_s);
+        // hedging strictly cuts the p99 TTFT when the stall exceeds
+        // the hedge budget...
+        let stalled = at(0.0, 0.050, 0.0, false);
+        let hedged = at(0.0, 0.050, 0.002, false);
+        assert!(hedged.ttft_p99_s < stalled.ttft_p99_s,
+                "hedged {} vs stalled {}",
+                hedged.ttft_p99_s, stalled.ttft_p99_s);
+        // ...and is a no-op when the primary beats the budget
+        let fast = at(0.0, 0.0, 0.002, false);
+        assert!((fast.ttft_p99_s - clean.ttft_p99_s).abs() < 1e-9);
     }
 
     #[test]

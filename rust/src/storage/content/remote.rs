@@ -49,10 +49,17 @@ struct Shared {
     /// Per-handle chunk-LRU capacity; sized from the restore engine's
     /// reader concurrency via `Backend::set_read_concurrency`.
     read_lru: AtomicUsize,
+    /// WAN round trips charged, FAILED requests included. The retry
+    /// model is per-attempt: every attempt of an op pays exactly one
+    /// round trip (a retry is a new attempt and pays again), and no
+    /// single attempt ever pays twice — asserted by the WAN-model
+    /// unit test below.
+    requests: std::sync::atomic::AtomicU64,
 }
 
 impl Shared {
     fn request_latency(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
         if self.latency_s > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(
                 self.latency_s));
@@ -132,8 +139,38 @@ impl RemoteStore {
                 latency_s: latency_s.max(0.0),
                 throttle: throttle_bps.map(|b| Arc::new(Throttle::new(b))),
                 read_lru: AtomicUsize::new(DEFAULT_READ_LRU),
+                requests: std::sync::atomic::AtomicU64::new(0),
             }),
         })
+    }
+
+    /// WAN round trips charged so far, failed requests included (the
+    /// per-attempt charge contract — see `Shared::requests`).
+    pub fn wan_requests(&self) -> u64 {
+        self.shared.requests.load(Ordering::Relaxed)
+    }
+
+    /// Plan a read WITHOUT charging a round trip — the caller charges
+    /// once per op attempt (`open`, `truncate`), so composite ops can
+    /// never double-charge one attempt.
+    fn plan_read(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
+        let entry = self.shared.manifest.get(rel).ok_or_else(|| {
+            anyhow::anyhow!("{rel}: not on remote tier")
+        })?;
+        let mut chunks = Vec::with_capacity(entry.chunks.len());
+        let mut off = 0u64;
+        for id in entry.chunks {
+            chunks.push((off, id));
+            off += id.len as u64;
+        }
+        Ok(Box::new(RemoteReader {
+            shared: self.shared.clone(),
+            rel: rel.to_string(),
+            len: entry.len,
+            chunks,
+            cache: Mutex::new(ChunkLru::new(
+                self.shared.read_lru.load(Ordering::Acquire))),
+        }))
     }
 
     /// The underlying chunk store (GC tests, dedupe accounting).
@@ -344,25 +381,12 @@ impl Backend for RemoteStore {
     }
 
     fn open(&self, rel: &str) -> anyhow::Result<Box<dyn ReadAt>> {
-        // one simulated round trip to plan the read
+        // one simulated round trip to plan the read — charged BEFORE
+        // the manifest lookup, so a failed request still pays exactly
+        // one round trip (and a caller-level retry pays one more:
+        // per-attempt, never twice within one attempt)
         self.shared.request_latency();
-        let entry = self.shared.manifest.get(rel).ok_or_else(|| {
-            anyhow::anyhow!("{rel}: not on remote tier")
-        })?;
-        let mut chunks = Vec::with_capacity(entry.chunks.len());
-        let mut off = 0u64;
-        for id in entry.chunks {
-            chunks.push((off, id));
-            off += id.len as u64;
-        }
-        Ok(Box::new(RemoteReader {
-            shared: self.shared.clone(),
-            rel: rel.to_string(),
-            len: entry.len,
-            chunks,
-            cache: Mutex::new(ChunkLru::new(
-                self.shared.read_lru.load(Ordering::Acquire))),
-        }))
+        self.plan_read(rel)
     }
 
     fn list(&self, rel_dir: &str) -> anyhow::Result<Vec<String>> {
@@ -428,7 +452,11 @@ impl Backend for RemoteStore {
     }
 
     fn truncate(&self, rel: &str, len: u64) -> anyhow::Result<()> {
-        let reader = self.open(rel)?;
+        // one round trip for the WHOLE read-modify-commit attempt (it
+        // used to ride on `open`'s charge; made explicit here so the
+        // composite op charges once per attempt, fail or succeed)
+        self.shared.request_latency();
+        let reader = self.plan_read(rel)?;
         let keep = len.min(reader.len()?) as usize;
         let mut bytes = vec![0u8; keep];
         reader.read_exact_at(&mut bytes, 0)?;
@@ -458,6 +486,50 @@ mod tests {
 
     fn open_store(dir: &Path, chunk_bytes: usize) -> RemoteStore {
         RemoteStore::open(dir, chunk_bytes, 0.0, None).unwrap()
+    }
+
+    /// WAN charge model: every request attempt pays exactly one round
+    /// trip — failed requests included, retries pay again as new
+    /// attempts, and no composite op (truncate = plan + commit)
+    /// double-charges a single attempt.
+    #[test]
+    fn wan_requests_charge_once_per_attempt() {
+        let dir = TempDir::new("remote-wan").unwrap();
+        let rs = open_store(dir.path(), 256);
+        assert_eq!(rs.wan_requests(), 0);
+
+        // a FAILED open still pays its round trip...
+        assert!(rs.open("missing").is_err());
+        assert_eq!(rs.wan_requests(), 1);
+        // ...and a retry is a new attempt: one more charge, not two
+        assert!(rs.open("missing").is_err());
+        assert_eq!(rs.wan_requests(), 2);
+
+        // create is local (the buffer lives rank-side until commit)
+        let f = rs.create("v000001/a.ds").unwrap();
+        f.write_at(0, &[7u8; 700]).unwrap();
+        assert_eq!(rs.wan_requests(), 2);
+        // finalize = one commit round trip
+        f.finalize().unwrap();
+        assert_eq!(rs.wan_requests(), 3);
+
+        // truncate is a composite read-modify-commit op: ONE round
+        // trip per attempt (the regression was riding on open's
+        // charge, leaving the commit half unmetered)
+        rs.truncate("v000001/a.ds", 100).unwrap();
+        assert_eq!(rs.wan_requests(), 4);
+        // failed truncate of a missing file pays too
+        assert!(rs.truncate("v000001/gone", 10).is_err());
+        assert_eq!(rs.wan_requests(), 5);
+
+        // a successful open charges the same as a failed one
+        let r = rs.open("v000001/a.ds").unwrap();
+        assert_eq!(r.len().unwrap(), 100);
+        assert_eq!(rs.wan_requests(), 6);
+        // reads of planned chunks are NOT round trips in this model
+        let mut buf = [0u8; 100];
+        r.read_exact_at(&mut buf, 0).unwrap();
+        assert_eq!(rs.wan_requests(), 6);
     }
 
     /// The cross-module contract the chunker relies on: the delta

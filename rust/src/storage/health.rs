@@ -1,0 +1,593 @@
+//! Tier health & self-healing I/O (ISSUE 10): transient-fault retry,
+//! per-tier circuit breakers, and the error taxonomy they share.
+//!
+//! The tier pipeline's failure model used to be binary — any I/O error
+//! was terminal for its path (a drain hop gave up, a restore read fell
+//! through to a deeper tier). Real NVMe / parallel-FS / WAN tiers fail
+//! *transiently*: EINTR/EAGAIN under load, stalls, flaky remote
+//! requests. This module supplies the three pieces every I/O path now
+//! threads through:
+//!
+//! - [`IoErrorClass`] — transient-vs-permanent classification of an
+//!   `anyhow` error chain. Transient errors are retried IN PLACE (same
+//!   tier); only permanent errors demote a read to a deeper tier or
+//!   fail a drain hop.
+//! - [`RetryPolicy`] — seeded-deterministic capped exponential backoff
+//!   with jitter and a per-op deadline. The same seed produces the same
+//!   backoff schedule, keeping the fault-injection matrices
+//!   reproducible.
+//! - [`TierHealth`] — a per-tier circuit breaker driven by error-rate
+//!   and latency EWMAs: Healthy → Degraded → Quarantined → half-open
+//!   probe → reintegrated. The drain worker consults
+//!   [`TierHealth::admit`] before each hop and SKIPS a quarantined tier
+//!   (continuing to deeper tiers) instead of wedging the queue behind
+//!   it; [`HealthRegistry`] holds one breaker per pipeline tier.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---- error classification ------------------------------------------------
+
+/// Whether an I/O failure is worth retrying on the SAME tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoErrorClass {
+    /// Interrupted/again/timeout-shaped failures (and injected
+    /// transient faults): retry in place with backoff.
+    Transient,
+    /// Everything else (torn trailer, missing file, bad chunk hash):
+    /// retrying the same tier cannot help — fall through or fail.
+    Permanent,
+}
+
+impl IoErrorClass {
+    /// Classify an error chain. Any `std::io::Error` link with an
+    /// interrupted/would-block/timed-out kind is transient, as is any
+    /// message carrying the injector's `transient fault` marker or a
+    /// literal EINTR/EAGAIN errno name.
+    pub fn of(e: &anyhow::Error) -> IoErrorClass {
+        for cause in e.chain() {
+            if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+                match io.kind() {
+                    std::io::ErrorKind::Interrupted
+                    | std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut => {
+                        return IoErrorClass::Transient;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let msg = format!("{e:#}");
+        if msg.contains("transient fault")
+            || msg.contains("EINTR")
+            || msg.contains("EAGAIN")
+        {
+            IoErrorClass::Transient
+        } else {
+            IoErrorClass::Permanent
+        }
+    }
+
+    pub fn is_transient(e: &anyhow::Error) -> bool {
+        IoErrorClass::of(e) == IoErrorClass::Transient
+    }
+}
+
+// ---- retry policy --------------------------------------------------------
+
+/// Seeded-deterministic retry schedule: up to `max_attempts` tries,
+/// capped exponential backoff with multiplicative jitter, bounded by a
+/// per-op deadline. Only TRANSIENT errors consume retries — a permanent
+/// error returns immediately.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (clamped >= 1).
+    pub max_attempts: usize,
+    /// Backoff before the first retry, seconds.
+    pub base_backoff_s: f64,
+    /// Backoff ceiling, seconds.
+    pub max_backoff_s: f64,
+    /// Per-op wall-clock budget: once elapsed, no further retries.
+    pub deadline_s: f64,
+    /// Jitter seed — the same seed reproduces the same schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4, // 1 try + 3 retries (`--retry-max 3`)
+            base_backoff_s: 0.0005,
+            max_backoff_s: 0.02,
+            deadline_s: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+/// splitmix64 — the deterministic jitter generator.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+impl RetryPolicy {
+    /// Policy with `retries` retries after the first attempt (the
+    /// `--retry-max` knob) and deterministic jitter from `seed`.
+    pub fn with_retries(retries: usize, seed: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: retries + 1,
+            seed,
+            ..RetryPolicy::default()
+        }
+    }
+
+    /// Backoff before retry number `retry` (1-based) of the op keyed by
+    /// `op_key`: capped exponential with jitter in [0.5, 1.5).
+    pub fn backoff_s(&self, retry: usize, op_key: u64) -> f64 {
+        let exp = self.base_backoff_s
+            * (1u64 << (retry - 1).min(20)) as f64;
+        let capped = exp.min(self.max_backoff_s);
+        let j = splitmix64(self.seed ^ op_key ^ retry as u64);
+        let frac = 0.5 + (j >> 11) as f64 / (1u64 << 53) as f64;
+        capped * frac
+    }
+
+    /// Run `op` under this policy: transient errors retry in place
+    /// (with backoff, up to the attempt/deadline budget); permanent
+    /// errors and the final transient error return as-is. `op_key`
+    /// seeds the jitter so distinct files of one version don't retry in
+    /// lockstep. Returns the result plus the retry count consumed.
+    pub fn run<T>(
+        &self,
+        op_key: u64,
+        mut op: impl FnMut() -> anyhow::Result<T>,
+    ) -> (anyhow::Result<T>, u64) {
+        let attempts = self.max_attempts.max(1);
+        let t0 = Instant::now();
+        let mut retries = 0u64;
+        loop {
+            match op() {
+                Ok(v) => return (Ok(v), retries),
+                Err(e) => {
+                    let attempt = retries as usize + 1;
+                    if !IoErrorClass::is_transient(&e)
+                        || attempt >= attempts
+                        || t0.elapsed().as_secs_f64() >= self.deadline_s
+                    {
+                        return (Err(e), retries);
+                    }
+                    retries += 1;
+                    let wait = self.backoff_s(retries as usize, op_key);
+                    if wait > 0.0 {
+                        std::thread::sleep(
+                            std::time::Duration::from_secs_f64(wait));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cheap FNV-1a key for retry jitter (and the scrubber's cross-tier
+/// copy comparison).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---- per-tier circuit breaker --------------------------------------------
+
+/// Breaker state of one tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Normal operation.
+    Healthy,
+    /// Elevated error EWMA — still admitted, but callers may prefer
+    /// hedging to a deeper tier.
+    Degraded,
+    /// Too many consecutive failures: ops are SKIPPED (not attempted)
+    /// except for periodic half-open probes.
+    Quarantined,
+}
+
+impl HealthState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// What [`TierHealth::admit`] allows right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Tier is open for business.
+    Allow,
+    /// Tier is quarantined but the probe window elapsed: the caller may
+    /// run ONE op as a half-open probe (its outcome decides
+    /// reintegration).
+    Probe,
+    /// Tier is quarantined and inside the probe backoff: skip it.
+    Deny,
+}
+
+#[derive(Debug)]
+struct BreakerInner {
+    state: HealthState,
+    /// Error-rate EWMA in [0, 1] (1 = every op failing).
+    err_ewma: f64,
+    /// Latency EWMA of successful ops, seconds.
+    lat_ewma_s: f64,
+    consecutive_errs: u32,
+    /// Successful half-open probes so far this quarantine.
+    probes_ok: u32,
+    /// When the last quarantine probe was admitted (backoff anchor).
+    last_probe: Option<Instant>,
+}
+
+/// Circuit breaker for one storage tier. Every I/O path records its
+/// outcomes ([`TierHealth::record_ok`] / [`TierHealth::record_err`]);
+/// consumers ask [`TierHealth::admit`] before committing work to the
+/// tier. Transitions:
+///
+/// ```text
+/// Healthy --err EWMA > 0.25--> Degraded --N consecutive errs--> Quarantined
+///    ^                            |                                 |
+///    |<------- EWMA decays -------+          probe window elapses   |
+///    |                                            v                 |
+///    +<---- PROBES_TO_REINTEGRATE ok probes -- half-open probe <----+
+/// ```
+#[derive(Debug)]
+pub struct TierHealth {
+    inner: Mutex<BreakerInner>,
+    /// Lifetime Healthy/Degraded → Quarantined transitions.
+    quarantines: AtomicU64,
+    /// Lifetime Quarantined → Healthy reintegrations.
+    reintegrations: AtomicU64,
+    /// Lifetime error count (diagnostics).
+    errors: AtomicU64,
+}
+
+/// Consecutive failures that trip quarantine.
+pub const QUARANTINE_AFTER: u32 = 3;
+/// Error-EWMA level that marks a tier Degraded.
+const DEGRADE_EWMA: f64 = 0.25;
+/// EWMA smoothing factor per recorded op.
+const EWMA_ALPHA: f64 = 0.3;
+/// Half-open probe backoff: one probe admitted per window.
+const PROBE_BACKOFF_S: f64 = 0.02;
+/// Successful probes required to reintegrate.
+const PROBES_TO_REINTEGRATE: u32 = 2;
+
+impl Default for TierHealth {
+    fn default() -> Self {
+        TierHealth {
+            inner: Mutex::new(BreakerInner {
+                state: HealthState::Healthy,
+                err_ewma: 0.0,
+                lat_ewma_s: 0.0,
+                consecutive_errs: 0,
+                probes_ok: 0,
+                last_probe: None,
+            }),
+            quarantines: AtomicU64::new(0),
+            reintegrations: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+}
+
+impl TierHealth {
+    pub fn new() -> TierHealth {
+        TierHealth::default()
+    }
+
+    /// May the caller commit an op to this tier right now?
+    pub fn admit(&self) -> Admission {
+        let mut st = self.inner.lock().unwrap();
+        match st.state {
+            HealthState::Healthy | HealthState::Degraded => {
+                Admission::Allow
+            }
+            HealthState::Quarantined => {
+                let due = st
+                    .last_probe
+                    .map(|t| {
+                        t.elapsed().as_secs_f64() >= PROBE_BACKOFF_S
+                    })
+                    .unwrap_or(true);
+                if due {
+                    st.last_probe = Some(Instant::now());
+                    Admission::Probe
+                } else {
+                    Admission::Deny
+                }
+            }
+        }
+    }
+
+    /// Record a successful op (with its latency). In quarantine this is
+    /// a probe success; enough of them reintegrate the tier.
+    pub fn record_ok(&self, latency_s: f64) {
+        let mut st = self.inner.lock().unwrap();
+        st.consecutive_errs = 0;
+        st.err_ewma *= 1.0 - EWMA_ALPHA;
+        st.lat_ewma_s = if st.lat_ewma_s == 0.0 {
+            latency_s
+        } else {
+            st.lat_ewma_s * (1.0 - EWMA_ALPHA)
+                + latency_s * EWMA_ALPHA
+        };
+        match st.state {
+            HealthState::Quarantined => {
+                st.probes_ok += 1;
+                if st.probes_ok >= PROBES_TO_REINTEGRATE {
+                    st.state = HealthState::Healthy;
+                    st.err_ewma = 0.0;
+                    st.probes_ok = 0;
+                    st.last_probe = None;
+                    self.reintegrations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            HealthState::Degraded => {
+                if st.err_ewma < DEGRADE_EWMA {
+                    st.state = HealthState::Healthy;
+                }
+            }
+            HealthState::Healthy => {}
+        }
+    }
+
+    /// Record a failed op.
+    pub fn record_err(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.inner.lock().unwrap();
+        st.consecutive_errs += 1;
+        st.err_ewma =
+            st.err_ewma * (1.0 - EWMA_ALPHA) + EWMA_ALPHA;
+        match st.state {
+            HealthState::Quarantined => {
+                // a failed probe re-anchors the backoff
+                st.probes_ok = 0;
+            }
+            _ => {
+                if st.consecutive_errs >= QUARANTINE_AFTER {
+                    st.state = HealthState::Quarantined;
+                    st.probes_ok = 0;
+                    st.last_probe = None;
+                    self.quarantines.fetch_add(1, Ordering::Relaxed);
+                } else if st.err_ewma >= DEGRADE_EWMA {
+                    st.state = HealthState::Degraded;
+                }
+            }
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.inner.lock().unwrap().state
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        self.state() == HealthState::Quarantined
+    }
+
+    /// Latency EWMA of successful ops, seconds.
+    pub fn latency_ewma_s(&self) -> f64 {
+        self.inner.lock().unwrap().lat_ewma_s
+    }
+
+    /// Lifetime quarantine entries.
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime quarantine exits (successful reintegrations).
+    pub fn reintegrations(&self) -> u64 {
+        self.reintegrations.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime recorded errors.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+}
+
+// ---- per-pipeline registry -----------------------------------------------
+
+/// One circuit breaker per pipeline tier plus the pipeline's retry
+/// policy — the health state `PipelineShared` owns and every I/O path
+/// (drain worker, replicate path, restore engine sources, serial
+/// `open_nearest`) consults.
+#[derive(Debug)]
+pub struct HealthRegistry {
+    tiers: Vec<TierHealth>,
+    policy: Mutex<RetryPolicy>,
+}
+
+impl HealthRegistry {
+    pub fn new(n_tiers: usize) -> HealthRegistry {
+        HealthRegistry {
+            tiers: (0..n_tiers.max(1)).map(|_| TierHealth::new())
+                .collect(),
+            policy: Mutex::new(RetryPolicy::default()),
+        }
+    }
+
+    /// Breaker of tier `idx` (clamped to the registry — callers index
+    /// by pipeline tier position).
+    pub fn tier(&self, idx: usize) -> &TierHealth {
+        &self.tiers[idx.min(self.tiers.len() - 1)]
+    }
+
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Snapshot of the active retry policy.
+    pub fn policy(&self) -> RetryPolicy {
+        self.policy.lock().unwrap().clone()
+    }
+
+    /// Install a new retry policy (the `--retry-max` knob).
+    pub fn set_policy(&self, policy: RetryPolicy) {
+        *self.policy.lock().unwrap() = policy;
+    }
+
+    /// Total quarantine entries across all tiers.
+    pub fn quarantine_events_total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.quarantine_events()).sum()
+    }
+
+    /// Total reintegrations across all tiers.
+    pub fn reintegrations_total(&self) -> u64 {
+        self.tiers.iter().map(|t| t.reintegrations()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn transient_err() -> anyhow::Error {
+        anyhow::Error::from(std::io::Error::from(
+            std::io::ErrorKind::Interrupted,
+        ))
+    }
+
+    #[test]
+    fn classifies_io_kinds_and_markers() {
+        assert_eq!(IoErrorClass::of(&transient_err()),
+                   IoErrorClass::Transient);
+        let again = anyhow::anyhow!(
+            "transient fault injected (EAGAIN) during read on \
+             local-fs tier");
+        assert_eq!(IoErrorClass::of(&again), IoErrorClass::Transient);
+        // wrapped chains keep their class
+        let wrapped = transient_err().context("drain v3 layer_00.pt");
+        assert_eq!(IoErrorClass::of(&wrapped),
+                   IoErrorClass::Transient);
+        let perm = anyhow::anyhow!("trailer magic mismatch");
+        assert_eq!(IoErrorClass::of(&perm), IoErrorClass::Permanent);
+        let notfound = anyhow::Error::from(std::io::Error::from(
+            std::io::ErrorKind::NotFound,
+        ));
+        assert_eq!(IoErrorClass::of(&notfound),
+                   IoErrorClass::Permanent);
+    }
+
+    #[test]
+    fn retry_recovers_transient_and_respects_budget() {
+        let p = RetryPolicy::with_retries(3, 42);
+        let mut fails = 2;
+        let (res, retries) = p.run(7, || {
+            if fails > 0 {
+                fails -= 1;
+                Err(transient_err())
+            } else {
+                Ok(99u32)
+            }
+        });
+        assert_eq!(res.unwrap(), 99);
+        assert_eq!(retries, 2);
+
+        // permanent errors never retry
+        let (res, retries) =
+            p.run(7, || -> anyhow::Result<()> {
+                anyhow::bail!("torn trailer")
+            });
+        assert!(res.is_err());
+        assert_eq!(retries, 0);
+
+        // transient errors exhaust the attempt budget then surface
+        let (res, retries) =
+            p.run(7, || -> anyhow::Result<()> { Err(transient_err()) });
+        assert!(res.is_err());
+        assert_eq!(retries, 3);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let p = RetryPolicy::with_retries(8, 1234);
+        let q = RetryPolicy::with_retries(8, 1234);
+        for retry in 1..=8 {
+            let a = p.backoff_s(retry, 5);
+            assert!((a - q.backoff_s(retry, 5)).abs() < 1e-15,
+                    "same seed must reproduce the schedule");
+            // jitter stays within [0.5, 1.5) of the capped exponential
+            assert!(a <= p.max_backoff_s * 1.5);
+            assert!(a >= p.base_backoff_s * 0.5);
+        }
+        // different op keys decorrelate
+        assert_ne!(p.backoff_s(1, 5), p.backoff_s(1, 6));
+    }
+
+    #[test]
+    fn breaker_quarantines_probes_and_reintegrates() {
+        let h = TierHealth::new();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.admit(), Admission::Allow);
+        h.record_err();
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.record_err();
+        h.record_err();
+        assert_eq!(h.state(), HealthState::Quarantined);
+        assert_eq!(h.quarantine_events(), 1);
+        // first probe admits immediately; the next is denied until the
+        // backoff window elapses
+        assert_eq!(h.admit(), Admission::Probe);
+        assert_eq!(h.admit(), Admission::Deny);
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            PROBE_BACKOFF_S * 1.5,
+        ));
+        // two successful probes reintegrate
+        h.record_ok(0.001);
+        assert_eq!(h.admit(), Admission::Probe);
+        h.record_ok(0.001);
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.reintegrations(), 1);
+        assert_eq!(h.admit(), Admission::Allow);
+    }
+
+    #[test]
+    fn breaker_recovers_from_degraded_on_successes() {
+        let h = TierHealth::new();
+        h.record_err();
+        assert_eq!(h.state(), HealthState::Degraded);
+        for _ in 0..8 {
+            h.record_ok(0.001);
+        }
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(h.latency_ewma_s() > 0.0);
+        assert_eq!(h.quarantine_events(), 0);
+    }
+
+    #[test]
+    fn registry_clamps_and_counts() {
+        let r = HealthRegistry::new(2);
+        assert_eq!(r.n_tiers(), 2);
+        r.tier(1).record_err();
+        r.tier(1).record_err();
+        r.tier(1).record_err();
+        // out-of-range indices clamp to the last tier
+        assert!(r.tier(99).is_quarantined());
+        assert_eq!(r.quarantine_events_total(), 1);
+        r.set_policy(RetryPolicy::with_retries(7, 9));
+        assert_eq!(r.policy().max_attempts, 8);
+    }
+
+    #[test]
+    fn fnv1a_distinguishes_payloads() {
+        assert_ne!(fnv1a(b"abc"), fnv1a(b"abd"));
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+    }
+}

@@ -23,16 +23,19 @@
 //!   the newest complete copy from the nearest tier.
 
 pub mod content;
+pub mod health;
 pub mod host_cache;
 pub mod local_fs;
 pub mod pipeline;
 pub mod uring;
 
 pub use content::RemoteStore;
+pub use health::{Admission, HealthRegistry, HealthState, IoErrorClass,
+                 RetryPolicy, TierHealth};
 pub use host_cache::HostCache;
 pub use local_fs::LocalFs;
-pub use pipeline::{Manifest, RestoredVersion, TierPipeline,
-                   VersionDrainJob};
+pub use pipeline::{Manifest, RestoredVersion, ScrubReport,
+                   TierPipeline, VersionDrainJob};
 pub(crate) use pipeline::PipelineShared;
 pub use uring::{UringContext, UringStats};
 

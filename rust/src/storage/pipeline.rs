@@ -26,6 +26,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::content::{RemoteStore, DEFAULT_CONTENT_CHUNK_BYTES};
+use super::health::{fnv1a, Admission, HealthRegistry, RetryPolicy};
 use super::{Backend, BackendFile, HostCache, LocalFs, ReadAt,
             ReplicaSpec, Throttle, TierKind, TierSpec, UringStats};
 use crate::engine::ticket::CkptSession;
@@ -274,6 +275,28 @@ pub(crate) struct PipelineShared {
     /// Deterministic kill points for the `figures faults` matrix;
     /// `None` (production) costs one `Option` check per hook.
     faults: Mutex<Option<Arc<FaultInjector>>>,
+    /// Tier health (ISSUE 10): one circuit breaker per tier plus the
+    /// pipeline's transient-retry policy. Every I/O path records its
+    /// outcomes here; the drain worker consults it to SKIP quarantined
+    /// tiers instead of wedging the queue behind them.
+    health: HealthRegistry,
+    /// Drain hops skipped because their destination tier was
+    /// quarantined; the drain worker (and the scrubber) retries them
+    /// once the tier's half-open probes readmit it.
+    pending_hops: Mutex<Vec<PendingHop>>,
+    /// Run the scrubber on the drain worker after each drained version
+    /// (the `--scrub` knob): re-verify that version's copies and
+    /// rebuild torn ones from a surviving tier or peer.
+    scrub: std::sync::atomic::AtomicBool,
+}
+
+/// A skipped drain hop awaiting the destination tier's recovery.
+struct PendingHop {
+    version: u64,
+    dir: String,
+    files: Vec<String>,
+    /// Destination tier index of the skipped hop.
+    to: usize,
 }
 
 #[derive(Default)]
@@ -330,14 +353,25 @@ impl PipelineShared {
         self.faults.lock().unwrap().clone()
     }
 
-    /// Copy one file from tier `from` to tier `from + 1`.
-    fn drain_file(&self, from: usize, rel: &str,
-                  session: &CkptSession) -> anyhow::Result<u64> {
+    /// Copy one file from tier `from` to tier `to` (normally adjacent,
+    /// but a quarantined middle tier makes the drain hop over it). One
+    /// call is ONE attempt — the caller wraps it in the retry policy.
+    fn drain_file(&self, from: usize, to: usize, rel: &str,
+                  session: Option<&CkptSession>) -> anyhow::Result<u64> {
+        let fault = self.fault_injector();
+        let dst_label = self.tiers[to].kind().label();
+        if let Some(inj) = &fault {
+            // slow-tier mode: the whole-file copy pays the injected
+            // stall once (a stalled-but-healthy destination device)
+            let d = inj.slow_delay_s(dst_label);
+            if d > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(d));
+            }
+        }
         let src = self.tiers[from].open(rel)?;
         let len = src.len()?;
-        let dst = self.tiers[from + 1].create(rel)?;
+        let dst = self.tiers[to].create(rel)?;
         let start = self.timeline.now_s();
-        let fault = self.fault_injector();
         // chunk_bytes is clamped >= 1 at construction
         let mut buf = vec![0u8; self.chunk_bytes.min(len.max(1) as usize)];
         let mut off = 0u64;
@@ -351,9 +385,14 @@ impl PipelineShared {
                     // fall-through must survive
                     dst.write_at(off, &buf[..take / 2])?;
                     anyhow::bail!(
-                        "fault injected: mid-drain (torn {rel} on {})",
-                        self.tiers[from + 1].kind().label()
+                        "fault injected: mid-drain (torn {rel} on \
+                         {dst_label})"
                     );
+                }
+                if let Some(e) =
+                    inj.transient_error("drain write", dst_label)
+                {
+                    return Err(e.context(format!("drain of {rel}")));
                 }
             }
             dst.write_at(off, &buf[..take])?;
@@ -363,13 +402,37 @@ impl PipelineShared {
         // content-addressed tiers report how much of the file actually
         // moved — the incremental-checkpoint attribution
         if let Some(st) = dst.upload_stats() {
-            session.add_content(st.chunks_total, st.chunks_uploaded,
-                                st.dedup_bytes_skipped);
+            if let Some(s) = session {
+                s.add_content(st.chunks_total, st.chunks_uploaded,
+                              st.dedup_bytes_skipped);
+            }
         }
         self.timeline
             .record(Tier::Drain, rel, len, start, self.timeline.now_s());
-        session.progress_counters().add_drained(len);
+        if let Some(s) = session {
+            s.progress_counters().add_drained(len);
+        }
         Ok(len)
+    }
+
+    /// Drain one file under the pipeline's retry policy, recording the
+    /// outcome on the destination tier's circuit breaker. Transient
+    /// errors (EINTR/EAGAIN-shaped, injected transients) retry in
+    /// place; permanent errors surface immediately.
+    fn drain_file_retry(&self, from: usize, to: usize, rel: &str,
+                        session: Option<&CkptSession>)
+        -> anyhow::Result<u64> {
+        let policy = self.health.policy();
+        let breaker = self.health.tier(to);
+        let t0 = Instant::now();
+        let (res, _retries) = policy.run(fnv1a(rel.as_bytes()), || {
+            self.drain_file(from, to, rel, session)
+        });
+        match &res {
+            Ok(_) => breaker.record_ok(t0.elapsed().as_secs_f64()),
+            Err(_) => breaker.record_err(),
+        }
+        res
     }
 
     /// Push one file to a peer replica target, charging the shared
@@ -410,6 +473,11 @@ impl PipelineShared {
                          peer)"
                     );
                 }
+                if let Some(e) =
+                    inj.transient_error("replica push", "peer")
+                {
+                    return Err(e.context(format!("replica of {rel}")));
+                }
             }
             dst.write_at(off, &buf[..take])?;
             off += take as u64;
@@ -436,11 +504,19 @@ impl PipelineShared {
         let version = job.session.version();
         let mut bytes = 0u64;
         let mut pushes = 0u64;
+        let policy = self.health.policy();
         for (pi, peer) in peers.iter().enumerate() {
             for f in &job.files {
                 let rel = format!("{}/{f}", job.dir);
-                match self.replicate_file(peer.as_ref(), &rel,
-                                          throttle.as_deref()) {
+                // transient push failures retry in place under the
+                // pipeline's policy; the per-attempt torn peer copy is
+                // overwritten by the retried `create`
+                let (res, _retries) = policy
+                    .run(fnv1a(rel.as_bytes()) ^ pi as u64, || {
+                        self.replicate_file(peer.as_ref(), &rel,
+                                            throttle.as_deref())
+                    });
+                match res {
                     Ok(n) => {
                         bytes += n;
                         pushes += 1;
@@ -472,36 +548,87 @@ impl PipelineShared {
     /// Drain one finalized version hop by hop until it reaches the
     /// terminal tier, marking per-tier durability as each hop lands.
     /// Replica pushes run first, off the still-resident landing copy.
+    ///
+    /// Circuit-breaker semantics (ISSUE 10): a QUARANTINED destination
+    /// tier is skipped — its durability level degrades (waiters error by
+    /// name instead of hanging), the hop is queued for retry on
+    /// recovery, and the drain continues from the last landed tier to
+    /// the next deeper one, so a single sick tier can never wedge the
+    /// queue or block terminal persistence. Permanent copy failures on
+    /// an admitted tier keep the pre-existing fail-the-version
+    /// semantics.
     fn drain_version(&self, job: VersionDrainJob) {
         let version = job.session.version();
         self.replicate_version(&job);
-        for from in 0..self.tiers.len() - 1 {
-            let to = from + 1;
+        // the tier currently holding the newest landed copy: hops that
+        // skip a quarantined tier drain from here to the next one
+        let mut src = 0usize;
+        for to in 1..self.tiers.len() {
+            let to_label = self.tiers[to].kind().label();
+            if self.health.tier(to).admit() == Admission::Deny {
+                let reason = format!(
+                    "{to_label} tier quarantined; drain hop skipped \
+                     (queued for retry on recovery)"
+                );
+                eprintln!("[storage] drain v{version}: {reason}");
+                job.session.tier_degraded(to, reason);
+                self.pending_hops.lock().unwrap().push(PendingHop {
+                    version,
+                    dir: job.dir.clone(),
+                    files: job.files.clone(),
+                    to,
+                });
+                continue;
+            }
+            let mut hop_err: Option<anyhow::Error> = None;
             for f in &job.files {
                 let rel = format!("{}/{f}", job.dir);
-                if let Err(e) = self.drain_file(from, &rel, &job.session) {
+                if let Err(e) = self
+                    .drain_file_retry(src, to, &rel, Some(&job.session))
+                {
                     eprintln!(
-                        "[storage] drain v{version} {} -> {} failed: {e:#}",
-                        self.tiers[from].kind().label(),
-                        self.tiers[to].kind().label()
+                        "[storage] drain v{version} {} -> {} failed: \
+                         {e:#}",
+                        self.tiers[src].kind().label(),
+                        to_label
                     );
-                    job.session.fail(format!(
-                        "tier drain to {}: {e:#}",
-                        self.tiers[to].kind().label()
-                    ));
-                    return;
+                    hop_err = Some(e);
+                    break;
                 }
+            }
+            if let Some(e) = hop_err {
+                // the breaker recorded the failures; if they just
+                // tripped quarantine, degrade only this level and keep
+                // draining deeper — otherwise preserve the historical
+                // fail-the-version semantics
+                if self.health.tier(to).is_quarantined() {
+                    job.session.tier_degraded(
+                        to,
+                        format!("{to_label} tier quarantined mid-hop: \
+                                 {e:#}"),
+                    );
+                    self.pending_hops.lock().unwrap().push(PendingHop {
+                        version,
+                        dir: job.dir.clone(),
+                        files: job.files.clone(),
+                        to,
+                    });
+                    continue;
+                }
+                job.session
+                    .fail(format!("tier drain to {to_label}: {e:#}"));
+                return;
             }
             // the hop is complete: evict the volatile copy, record
             // residency, then resolve this tier's durability future
             if self.evict_fast
-                && self.tiers[from].kind() == TierKind::HostCache
+                && self.tiers[src].kind() == TierKind::HostCache
             {
                 for f in &job.files {
                     let rel = format!("{}/{f}", job.dir);
-                    let _ = self.tiers[from].remove(&rel);
+                    let _ = self.tiers[src].remove(&rel);
                 }
-                self.manifest.set(version, &job.files, from, false);
+                self.manifest.set(version, &job.files, src, false);
             }
             self.manifest.set(version, &job.files, to, true);
             // resolve the durability future FIRST — the payload is
@@ -515,8 +642,290 @@ impl PipelineShared {
                 n.notify();
             }
             self.persist_manifest();
+            src = to;
         }
     }
+
+    /// Retry drain hops skipped while their destination tier was
+    /// quarantined. Runs on the drain worker between jobs (and from the
+    /// scrubber): each hop whose tier readmits (half-open probe) is
+    /// copied from the nearest tier still holding the version; success
+    /// feeds the breaker toward reintegration and records residency.
+    /// Returns how many hops landed.
+    fn retry_pending_hops(&self) -> u64 {
+        let hops: Vec<PendingHop> = {
+            let mut g = self.pending_hops.lock().unwrap();
+            std::mem::take(&mut *g)
+        };
+        if hops.is_empty() {
+            return 0;
+        }
+        let mut landed = 0u64;
+        let mut keep: Vec<PendingHop> = Vec::new();
+        for hop in hops {
+            if self.health.tier(hop.to).admit() == Admission::Deny {
+                keep.push(hop);
+                continue;
+            }
+            let mut ok = true;
+            for f in &hop.files {
+                let rel = format!("{}/{f}", hop.dir);
+                // nearest tier (excluding the destination) holding the
+                // file serves as the rebuild source
+                let src = self
+                    .tiers
+                    .iter()
+                    .position(|t| t.exists(&rel))
+                    .filter(|&i| i != hop.to);
+                let res = match src {
+                    Some(i) => {
+                        self.drain_file_retry(i, hop.to, &rel, None)
+                    }
+                    None => Err(anyhow::anyhow!(
+                        "{rel}: no tier holds a copy to resume the \
+                         skipped hop from"
+                    )),
+                };
+                if let Err(e) = res {
+                    eprintln!(
+                        "[storage] resume of skipped hop v{} -> {} \
+                         failed: {e:#}",
+                        hop.version,
+                        self.tiers[hop.to].kind().label()
+                    );
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                eprintln!(
+                    "[storage] resumed skipped drain hop: v{} now on \
+                     {} tier",
+                    hop.version,
+                    self.tiers[hop.to].kind().label()
+                );
+                self.manifest
+                    .set(hop.version, &hop.files, hop.to, true);
+                self.persist_manifest();
+                landed += 1;
+            } else {
+                keep.push(hop);
+            }
+        }
+        if !keep.is_empty() {
+            let mut g = self.pending_hops.lock().unwrap();
+            // hops queued while we were retrying stay behind the ones
+            // we put back
+            keep.extend(g.drain(..));
+            *g = keep;
+        }
+        landed
+    }
+
+    /// Tier-health registry (restore-engine sources consult it too).
+    pub(crate) fn health(&self) -> &HealthRegistry {
+        &self.health
+    }
+
+    /// The armed fault injector, cloned — restore-side hooks
+    /// (transient-read and slow-tier injection) share the pipeline's.
+    pub(crate) fn injector(&self) -> Option<Arc<FaultInjector>> {
+        self.fault_injector()
+    }
+
+    /// File set of a version (see `TierPipeline::version_files`).
+    fn version_files_impl(&self, version: u64, dir: &str)
+        -> anyhow::Result<Vec<String>> {
+        if let Some(files) = self.manifest.files(version) {
+            let all_present = !files.is_empty()
+                && files.iter().all(|f| {
+                    let rel = format!("{dir}/{f}");
+                    self.tiers.iter().any(|t| t.exists(&rel))
+                });
+            if all_present {
+                return Ok(files);
+            }
+        }
+        let mut files: Vec<String> = Vec::new();
+        for tier in &self.tiers {
+            for f in tier.list(dir)? {
+                if !files.contains(&f) {
+                    files.push(f);
+                }
+            }
+        }
+        files.sort();
+        Ok(files)
+    }
+
+    // ---- scrub-and-repair (ISSUE 10) ------------------------------------
+
+    /// Scrub one version's copies across all tiers: structurally verify
+    /// each copy (trailer parse + full payload read) and checksum it
+    /// (FNV over the raw bytes — the trailer-level integrity check for
+    /// local/host tiers; remote copies additionally re-hash every chunk
+    /// inside their content-addressed reader). Torn or bit-rotted
+    /// copies are rebuilt from the deepest verified tier copy, or from
+    /// a peer replica tree when no local tier holds a good one.
+    fn scrub_version(&self, version: u64, dir: &str, files: &[String],
+                     rep: &mut ScrubReport) {
+        for f in files {
+            let rel = format!("{dir}/{f}");
+            rep.files_checked += 1;
+            let mut good: Vec<(usize, u64)> = Vec::new();
+            let mut bad: Vec<usize> = Vec::new();
+            for (i, tier) in self.tiers.iter().enumerate() {
+                if !tier.exists(&rel) {
+                    continue;
+                }
+                match verify_copy(tier.as_ref(), &rel) {
+                    Ok(h) => good.push((i, h)),
+                    Err(e) => {
+                        eprintln!(
+                            "[scrub] v{version} {rel} torn on {} tier: \
+                             {e:#}",
+                            tier.kind().label()
+                        );
+                        bad.push(i);
+                    }
+                }
+            }
+            // bit-rot: a structurally-valid copy whose checksum
+            // disagrees with the DEEPEST verified copy is rotted
+            if let Some(&(_, ref_hash)) = good.last() {
+                let (keep, rot): (Vec<_>, Vec<_>) = good
+                    .into_iter()
+                    .partition(|&(_, h)| h == ref_hash);
+                for (i, _) in rot {
+                    eprintln!(
+                        "[scrub] v{version} {rel}: checksum mismatch \
+                         on {} tier (bit rot)",
+                        self.tiers[i].kind().label()
+                    );
+                    bad.push(i);
+                }
+                good = keep;
+            }
+            rep.copies_verified += good.len() as u64;
+            for &i in &bad {
+                match self.rebuild_copy(i, &rel, &good) {
+                    Ok(()) => {
+                        eprintln!(
+                            "[scrub] v{version} {rel}: rebuilt on {} \
+                             tier",
+                            self.tiers[i].kind().label()
+                        );
+                        rep.copies_repaired += 1;
+                    }
+                    Err(e) => rep.unrepairable.push(format!(
+                        "{rel} on {} tier: {e:#}",
+                        self.tiers[i].kind().label()
+                    )),
+                }
+            }
+        }
+    }
+
+    /// Rebuild tier `to`'s copy of `rel` from the deepest verified tier
+    /// copy, falling back to peer replica trees; the rebuilt copy is
+    /// re-verified (and checksum-matched when a reference exists).
+    fn rebuild_copy(&self, to: usize, rel: &str,
+                    good: &[(usize, u64)]) -> anyhow::Result<()> {
+        if let Some(&(src, want)) = good.last() {
+            self.drain_file_retry(src, to, rel, None)?;
+            let h = verify_copy(self.tiers[to].as_ref(), rel)?;
+            anyhow::ensure!(
+                h == want,
+                "{rel}: rebuilt copy checksum mismatch on {} tier",
+                self.tiers[to].kind().label()
+            );
+            return Ok(());
+        }
+        let peers = self.replicas.lock().unwrap().peers.clone();
+        for (pi, peer) in peers.iter().enumerate() {
+            if !peer.exists(rel) {
+                continue;
+            }
+            let res = self
+                .copy_from_backend(peer.as_ref(), to, rel)
+                .and_then(|_| {
+                    verify_copy(self.tiers[to].as_ref(), rel)
+                        .map(|_| ())
+                });
+            match res {
+                Ok(()) => return Ok(()),
+                Err(e) => eprintln!(
+                    "[scrub] rebuild of {rel} from peer {pi} failed: \
+                     {e:#}"
+                ),
+            }
+        }
+        anyhow::bail!(
+            "no verified copy on any tier or peer to rebuild from"
+        )
+    }
+
+    /// Raw chunked copy from an arbitrary backend (a peer replica tree)
+    /// into tier `to`.
+    fn copy_from_backend(&self, src: &dyn Backend, to: usize,
+                         rel: &str) -> anyhow::Result<u64> {
+        let s = src.open(rel)?;
+        let len = s.len()?;
+        let d = self.tiers[to].create(rel)?;
+        let mut buf =
+            vec![0u8; self.chunk_bytes.min(len.max(1) as usize)];
+        let mut off = 0u64;
+        while off < len {
+            let take = ((len - off) as usize).min(buf.len());
+            s.read_exact_at(&mut buf[..take], off)?;
+            d.write_at(off, &buf[..take])?;
+            off += take as u64;
+        }
+        d.finalize()?;
+        Ok(len)
+    }
+
+    /// Full scrub sweep: resume skipped drain hops, then verify (and
+    /// repair) every manifest-recorded version.
+    fn scrub_all(&self) -> anyhow::Result<ScrubReport> {
+        let mut rep = ScrubReport::default();
+        rep.hops_resumed = self.retry_pending_hops();
+        for version in self.manifest.versions() {
+            let dir = format!("v{version:06}");
+            let files = self.version_files_impl(version, &dir)?;
+            self.scrub_version(version, &dir, &files, &mut rep);
+        }
+        Ok(rep)
+    }
+}
+
+/// Verify one tier copy end to end: structural validation (footer,
+/// trailer, every extent and object via `restore::read_from`) plus an
+/// FNV-1a checksum over the raw bytes for cross-tier comparison.
+fn verify_copy(tier: &dyn Backend, rel: &str) -> anyhow::Result<u64> {
+    let r = tier.open(rel)?;
+    let len = r.len()? as usize;
+    let mut buf = vec![0u8; len];
+    r.read_exact_at(&mut buf, 0)?;
+    let hash = fnv1a(&buf);
+    crate::restore::read_from(tier.open(rel)?)?;
+    Ok(hash)
+}
+
+/// What a scrub pass found and fixed.
+#[derive(Debug, Default, Clone)]
+pub struct ScrubReport {
+    /// Version files walked.
+    pub files_checked: u64,
+    /// Tier copies that verified clean (parse + checksum).
+    pub copies_verified: u64,
+    /// Torn/bit-rotted copies rebuilt (and re-verified) from a
+    /// surviving tier or peer.
+    pub copies_repaired: u64,
+    /// Quarantine-skipped drain hops landed by this pass.
+    pub hops_resumed: u64,
+    /// Copies with no verified source to rebuild from.
+    pub unrepairable: Vec<String>,
 }
 
 /// The composable tier stack. Single-tier pipelines are degenerate
@@ -537,6 +946,7 @@ impl TierPipeline {
             tiers.iter().map(|t| t.kind()).collect();
         let manifest =
             Manifest::load(tiers.last().unwrap().as_ref(), kinds);
+        let n_tiers = tiers.len();
         let shared = Arc::new(PipelineShared {
             tiers,
             manifest,
@@ -547,6 +957,9 @@ impl TierPipeline {
             read_cfg: Mutex::new(Default::default()),
             replicas: Mutex::new(ReplicaTargets::default()),
             faults: Mutex::new(None),
+            health: HealthRegistry::new(n_tiers),
+            pending_hops: Mutex::new(Vec::new()),
+            scrub: std::sync::atomic::AtomicBool::new(false),
         });
         // the worker is spawned unconditionally (it parks on the job
         // channel): single-tier pipelines need it too once peer
@@ -657,10 +1070,33 @@ impl TierPipeline {
         // after draining every queued version
         while let Ok(job) = rx.recv() {
             let notify = job.notify.clone();
+            let (version, dir, files) = (
+                job.session.version(),
+                job.dir.clone(),
+                job.files.clone(),
+            );
             shared.drain_version(job);
             shared.drains_pending.fetch_sub(1, Ordering::AcqRel);
             if let Some(n) = notify {
                 n.notify();
+            }
+            // self-healing between jobs: land any drain hops skipped
+            // while their tier was quarantined, and (when the scrubber
+            // is on) re-verify the version just drained
+            shared.retry_pending_hops();
+            if shared.scrub.load(Ordering::Relaxed) {
+                let mut rep = ScrubReport::default();
+                shared.scrub_version(version, &dir, &files, &mut rep);
+                if rep.copies_repaired > 0
+                    || !rep.unrepairable.is_empty()
+                {
+                    eprintln!(
+                        "[scrub] v{version}: {} repaired, {} \
+                         unrepairable",
+                        rep.copies_repaired,
+                        rep.unrepairable.len()
+                    );
+                }
             }
         }
     }
@@ -722,6 +1158,42 @@ impl TierPipeline {
     pub fn set_fault_injector(&self,
                               inj: Option<Arc<FaultInjector>>) {
         *self.shared.faults.lock().unwrap() = inj;
+    }
+
+    /// Tier-health registry: per-tier circuit breakers + retry policy.
+    pub fn health(&self) -> &HealthRegistry {
+        self.shared.health()
+    }
+
+    /// Install the transient-retry policy every I/O path of this
+    /// pipeline runs under (the `--retry-max` knob).
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        self.shared.health.set_policy(policy);
+    }
+
+    /// Toggle the background scrubber: when on, the drain worker
+    /// re-verifies each version after draining it and rebuilds torn or
+    /// bit-rotted copies (the `--scrub` knob).
+    pub fn set_scrub(&self, on: bool) {
+        self.shared
+            .scrub
+            .store(on, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// One full scrub-and-repair sweep over every manifest-recorded
+    /// version (the `fsck --repair`-style at-rest pass): resume skipped
+    /// drain hops, verify each tier copy (trailer parse + payload
+    /// checksum; remote chunks re-hash in their reader), rebuild torn
+    /// or rotted copies from the deepest verified tier or a peer
+    /// replica tree.
+    pub fn scrub_repair(&self) -> anyhow::Result<ScrubReport> {
+        self.shared.scrub_all()
+    }
+
+    /// Drain hops currently queued awaiting a quarantined tier's
+    /// recovery.
+    pub fn pending_hops(&self) -> usize {
+        self.shared.pending_hops.lock().unwrap().len()
     }
 
     /// Create a file on the landing tier (the engine flush path).
@@ -800,26 +1272,7 @@ impl TierPipeline {
     /// per-tier directory listings.
     fn version_files(&self, version: u64, dir: &str)
         -> anyhow::Result<Vec<String>> {
-        if let Some(files) = self.shared.manifest.files(version) {
-            let all_present = !files.is_empty()
-                && files.iter().all(|f| {
-                    let rel = format!("{dir}/{f}");
-                    self.shared.tiers.iter().any(|t| t.exists(&rel))
-                });
-            if all_present {
-                return Ok(files);
-            }
-        }
-        let mut files: Vec<String> = Vec::new();
-        for tier in &self.shared.tiers {
-            for f in tier.list(dir)? {
-                if !files.contains(&f) {
-                    files.push(f);
-                }
-            }
-        }
-        files.sort();
-        Ok(files)
+        self.shared.version_files_impl(version, dir)
     }
 
     /// File names of a version (manifest when trustworthy, else the
@@ -846,7 +1299,8 @@ impl TierPipeline {
         // of whichever tier happened to fail last.
         let mut errs: Vec<String> = Vec::new();
         let fault = self.shared.fault_injector();
-        for tier in &self.shared.tiers {
+        let policy = self.shared.health.policy();
+        for (i, tier) in self.shared.tiers.iter().enumerate() {
             if !tier.exists(rel) {
                 continue;
             }
@@ -862,12 +1316,33 @@ impl TierPipeline {
                     continue;
                 }
             }
-            match tier.open(rel).and_then(&parse) {
-                Ok(v) => return Ok(v),
+            // transient open/parse failures (EINTR/EAGAIN-shaped)
+            // retry IN PLACE under the pipeline's policy — only
+            // permanent errors (torn/truncated copies) demote the read
+            // to a deeper tier
+            let label = tier.kind().label();
+            let breaker = self.shared.health.tier(i);
+            let t0 = Instant::now();
+            let (res, _retries) =
+                policy.run(fnv1a(rel.as_bytes()), || {
+                    if let Some(inj) = &fault {
+                        if let Some(e) =
+                            inj.transient_error("open", label)
+                        {
+                            return Err(e);
+                        }
+                    }
+                    tier.open(rel).and_then(&parse)
+                });
+            match res {
+                Ok(v) => {
+                    breaker.record_ok(t0.elapsed().as_secs_f64());
+                    return Ok(v);
+                }
                 Err(e) => {
                     // torn/truncated on this tier: try the next one
-                    errs.push(format!("on {} tier: {e:#}",
-                                      tier.kind().label()));
+                    breaker.record_err();
+                    errs.push(format!("on {label} tier: {e:#}"));
                 }
             }
         }
@@ -1261,5 +1736,131 @@ mod tests {
         f.write_at(0, b"z").unwrap();
         f.finalize().unwrap();
         assert!(dir.path().join("v000001/x").is_file());
+    }
+
+    #[test]
+    fn open_nearest_retries_transient_errors_in_place() {
+        // ISSUE 10 satellite: a transient EINTR on the fast tier must
+        // retry IN PLACE, not demote the read to the slower tier.
+        let a = crate::util::TempDir::new("pipe-near-a").unwrap();
+        let b = crate::util::TempDir::new("pipe-near-b").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::new(
+            vec![Arc::new(LocalFs::new(a.path())),
+                 Arc::new(LocalFs::new(b.path()))],
+            false,
+            1 << 20,
+            tl,
+        );
+        // DIFFERENT content per tier so the winning tier is observable
+        std::fs::create_dir_all(a.path().join("v000001")).unwrap();
+        std::fs::create_dir_all(b.path().join("v000001")).unwrap();
+        std::fs::write(a.path().join("v000001/x"), b"fast").unwrap();
+        std::fs::write(b.path().join("v000001/x"), b"deep").unwrap();
+
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let got = p
+            .open_nearest("v000001/x", |r| {
+                use std::sync::atomic::Ordering;
+                // the FIRST attempt fails transiently — a retried read
+                // must come back to this same (fast) tier
+                if calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                    return Err(anyhow::Error::from(
+                        std::io::Error::from(
+                            std::io::ErrorKind::Interrupted,
+                        ),
+                    ));
+                }
+                let mut buf = vec![0u8; r.len()? as usize];
+                r.read_exact_at(&mut buf, 0)?;
+                Ok(String::from_utf8(buf).unwrap())
+            })
+            .unwrap();
+        assert_eq!(got, "fast",
+                   "transient error demoted the read to a deeper tier");
+        assert_eq!(
+            calls.load(std::sync::atomic::Ordering::SeqCst), 2);
+
+        // permanent errors still fall through to the deeper tier
+        let calls2 = std::sync::atomic::AtomicUsize::new(0);
+        let got = p
+            .open_nearest("v000001/x", |r| {
+                use std::sync::atomic::Ordering;
+                if calls2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    anyhow::bail!("trailer magic mismatch");
+                }
+                let mut buf = vec![0u8; r.len()? as usize];
+                r.read_exact_at(&mut buf, 0)?;
+                Ok(String::from_utf8(buf).unwrap())
+            })
+            .unwrap();
+        assert_eq!(got, "deep");
+    }
+
+    #[test]
+    fn quarantined_tier_is_skipped_without_wedging_the_queue() {
+        // middle tier permanently broken (its root is a FILE, so every
+        // create fails): the first hops fail the version the historical
+        // way; once the breaker quarantines the tier, later versions
+        // skip the hop, land on the terminal tier, and report the
+        // skipped level degraded instead of hanging.
+        let broken = crate::util::TempDir::new("pipe-q-b").unwrap();
+        let c = crate::util::TempDir::new("pipe-q-c").unwrap();
+        let broken_root = broken.path().join("not-a-dir");
+        std::fs::write(&broken_root, b"occupied").unwrap();
+        let tl = Arc::new(Timeline::new());
+        let p = TierPipeline::new(
+            vec![Arc::new(HostCache::new()),
+                 Arc::new(LocalFs::new(&broken_root)),
+                 Arc::new(LocalFs::new(c.path()))],
+            false,
+            1 << 20,
+            tl,
+        );
+        let submit = |v: u64| {
+            let rel = format!("v{v:06}/x");
+            let f = p.create_landing(&rel).unwrap();
+            f.write_at(0, &vec![v as u8; 2048]).unwrap();
+            f.finalize().unwrap();
+            let s = CkptSession::new(
+                v,
+                None,
+                Arc::new(crate::metrics::ProgressCounters::default()),
+                Default::default(),
+                p.tier_kinds(),
+            );
+            p.submit_drain(VersionDrainJob {
+                session: s.clone(),
+                requested: Instant::now(),
+                dir: format!("v{v:06}"),
+                files: vec!["x".into()],
+                notify: None,
+            })
+            .unwrap();
+            crate::CheckpointTicket::new(s)
+        };
+        // three failing hops trip the breaker (QUARANTINE_AFTER = 3)
+        for v in 1..=3 {
+            let e = submit(v).wait_persisted().unwrap_err();
+            assert!(e.to_string().contains("tier drain to"), "{e:#}");
+        }
+        assert!(p.health().tier(1).is_quarantined());
+        assert_eq!(p.health().quarantine_events_total(), 1);
+        // the next versions SKIP the quarantined hop: terminal
+        // persistence resolves, the skipped level errors by name, the
+        // queue never wedges
+        for v in 4..=5 {
+            let t = submit(v);
+            t.wait_persisted().unwrap();
+            let e = t.wait_durable(TierKind::LocalFs).unwrap_err();
+            assert!(e.to_string().contains("quarantined"), "{e:#}");
+            assert!(
+                c.path().join(format!("v{v:06}/x")).is_file(),
+                "terminal copy must land despite the skipped hop"
+            );
+        }
+        assert_eq!(p.drains_pending(), 0);
+        assert!(p.pending_hops() >= 1,
+                "skipped hops must queue for recovery");
     }
 }

@@ -1,0 +1,225 @@
+//! Flaky-tier acceptance tests (tier health & self-healing I/O):
+//!
+//! - seeded per-op transient fault rates up to 10% over varying tier
+//!   stacks: every run either restores byte-identically to the serial
+//!   oracle or fails with a clean error naming the tier;
+//! - a persistently dead terminal tier trips the circuit breaker:
+//!   later versions bypass the quarantined hop without wedging the
+//!   drain queue, and once the tier heals, half-open probes reintegrate
+//!   it and the skipped hops are resumed;
+//! - the scrubber rebuilds a torn tier copy byte-identically from a
+//!   surviving tier, and a second pass finds nothing left to repair.
+
+use std::sync::Arc;
+
+use datastates::config::EngineConfig;
+use datastates::engine::{CheckpointEngine, DataStatesEngine};
+use datastates::faults::FaultInjector;
+use datastates::restore::{ReadEngine, ReadEngineConfig};
+use datastates::state::tensor::{DType, SimDeviceTensor, TensorShard};
+use datastates::state::{FileKind, PyObj, RankState, ShardFile, StateItem};
+use datastates::storage::{TierKind, TierSpec};
+use datastates::util::TempDir;
+
+/// A rank state of `n_files` device-tensor files (multiple files per
+/// version so breaker counters and drain hops see real file loops).
+fn multi_file_state(n_files: usize, bytes: usize, seed: u64) -> RankState {
+    let files = (0..n_files)
+        .map(|i| {
+            let payload: Vec<u8> = (0..bytes)
+                .map(|j| {
+                    ((j as u64)
+                        .wrapping_mul(31)
+                        .wrapping_add(seed ^ i as u64)
+                        % 251) as u8
+                })
+                .collect();
+            ShardFile {
+                name: format!("layer{i}.pt"),
+                kind: FileKind::ParamLayer,
+                items: vec![
+                    StateItem::Tensor(TensorShard::device(
+                        "w", DType::U8, vec![bytes],
+                        SimDeviceTensor::new(payload))),
+                    StateItem::Object {
+                        name: "meta".into(),
+                        obj: PyObj::synthetic_metadata(300, seed ^ 0xAB),
+                    },
+                ],
+            }
+        })
+        .collect();
+    RankState { rank: 0, files }
+}
+
+/// Seeded fault sweep: rates up to 10% across two tier stacks. Each
+/// cell must either (a) commit and restore byte-identically through
+/// BOTH the parallel read engine and the serial oracle, or (b) fail
+/// with an error that names the tier — never corrupt data, never hang.
+#[test]
+fn seeded_transient_faults_restore_byte_identical_or_fail_clean() {
+    for seed in [1u64, 2, 3] {
+        for rate in [0.02f64, 0.10] {
+            let dir = TempDir::new("flaky-sweep").unwrap();
+            let inj = Arc::new(FaultInjector::new(seed));
+            inj.set_transient_rate(rate);
+            let mut cfg = EngineConfig::with_dir(dir.path());
+            cfg.chunk_bytes = 8 << 10;
+            cfg.evict_fast_tier = false;
+            cfg.retry_max = 3;
+            cfg.faults = Some(inj.clone());
+            // seeded stack variation: every other cell drains through
+            // a zero-latency content-addressed remote tier too
+            cfg.tiers = if seed % 2 == 0 {
+                vec![TierSpec::host_cache(), TierSpec::local_fs()]
+            } else {
+                vec![
+                    TierSpec::host_cache(),
+                    TierSpec::local_fs(),
+                    TierSpec::remote(0.0),
+                ]
+            };
+            let mut eng = DataStatesEngine::new(cfg).unwrap();
+            let state = multi_file_state(3, 96 << 10, seed);
+            let committed = eng
+                .begin(1, &state)
+                .and_then(|t| t.wait_persisted().map(|_| ()));
+            match committed {
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("tier"),
+                            "seed {seed} rate {rate}: error must name \
+                             the tier: {msg}");
+                    continue;
+                }
+                Ok(()) => {}
+            }
+            let pipeline = eng.pipeline();
+            // parallel engine vs serial oracle, both under live faults
+            let rd = ReadEngine::new(ReadEngineConfig::default());
+            match rd.read_version(pipeline.as_ref(), 1) {
+                Ok(v) => datastates::restore::verify_files_against(
+                             &v, &state)
+                         .unwrap(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("tier"),
+                            "seed {seed} rate {rate}: restore error \
+                             must name the tier: {msg}");
+                }
+            }
+            // the oracle runs clean: disarm and prove the bytes
+            inj.set_transient_rate(0.0);
+            let serial = pipeline.read_version_serial(1).unwrap();
+            datastates::restore::verify_files_against(&serial, &state)
+                .unwrap();
+        }
+    }
+}
+
+/// A dead terminal tier: the breaker quarantines it after consecutive
+/// drain failures, later versions bypass the hop (landing persistence
+/// resolves, the dead level degrades by name) without wedging the
+/// queue; once the tier heals, half-open probes reintegrate it and the
+/// skipped hops are resumed and readable byte-identically.
+#[test]
+fn quarantine_engages_bypasses_and_reintegrates() {
+    let dir = TempDir::new("flaky-breaker").unwrap();
+    let inj = Arc::new(FaultInjector::new(17));
+    let mut cfg = EngineConfig::two_tier(dir.path());
+    cfg.chunk_bytes = 8 << 10;
+    cfg.evict_fast_tier = false;
+    cfg.retry_max = 1;
+    cfg.faults = Some(inj.clone());
+    let mut eng = DataStatesEngine::new(cfg).unwrap();
+    let pipeline = eng.pipeline();
+    // every drain write to the terminal tier fails; the landing tier
+    // stays healthy
+    inj.set_transient_rate(1.0);
+    inj.set_transient_tier(Some("local-fs"));
+
+    let trip = datastates::storage::health::QUARANTINE_AFTER as u64;
+    // pre-trip versions fail the historical way, naming the tier
+    for v in 1..trip {
+        let state = multi_file_state(2, 32 << 10, 100 + v);
+        let e = eng
+            .begin(v, &state)
+            .and_then(|t| t.wait_persisted().map(|_| ()))
+            .unwrap_err();
+        assert!(e.to_string().contains("tier"), "v{v}: {e:#}");
+    }
+    // the trip and the version after it DEGRADE instead of failing
+    for v in trip..=trip + 1 {
+        let state = multi_file_state(2, 32 << 10, 100 + v);
+        let t = eng.begin(v, &state).unwrap();
+        t.wait_persisted().unwrap();
+        let e = t.wait_durable(TierKind::LocalFs).unwrap_err();
+        assert!(e.to_string().contains("quarantined"), "v{v}: {e:#}");
+    }
+    assert!(pipeline.health().quarantine_events_total() >= 1);
+    assert!(pipeline.pending_hops() >= 1,
+            "skipped hops must queue for recovery");
+    // the drain queue must not wedge behind the quarantined tier
+    for _ in 0..200 {
+        if pipeline.drains_pending() == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert_eq!(pipeline.drains_pending(), 0, "drain queue wedged");
+
+    // the tier heals: probes reintegrate, skipped hops resume
+    inj.set_transient_rate(0.0);
+    for v in trip + 2..=trip + 3 {
+        // outlive the probe backoff so admit() draws a half-open probe
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        let state = multi_file_state(2, 32 << 10, 100 + v);
+        let t = eng.begin(v, &state).unwrap();
+        t.wait_persisted().unwrap();
+        let _ = t.wait_durable(TierKind::LocalFs); // settle the drain
+    }
+    pipeline.scrub_repair().unwrap();
+    assert!(pipeline.health().reintegrations_total() >= 1,
+            "the quarantined tier never reintegrated");
+    assert_eq!(pipeline.pending_hops(), 0,
+               "skipped hops were not resumed");
+    // a version whose terminal hop was skipped is byte-identical now
+    let v = pipeline.read_version(trip + 1).unwrap();
+    datastates::restore::verify_files_against(
+        &v, &multi_file_state(2, 32 << 10, 100 + trip + 1))
+        .unwrap();
+}
+
+/// Scrub-and-repair: tear the terminal copy of a committed version on
+/// disk; `scrub_repair` rebuilds it byte-identically from the intact
+/// fast-tier copy, and a second pass verifies everything clean.
+#[test]
+fn scrubber_rebuilds_torn_tier_copy_byte_identically() {
+    let dir = TempDir::new("flaky-scrub").unwrap();
+    let mut cfg = EngineConfig::two_tier(dir.path());
+    cfg.chunk_bytes = 8 << 10;
+    cfg.evict_fast_tier = false; // keep the donor copy resident
+    let mut eng = DataStatesEngine::new(cfg).unwrap();
+    let state = multi_file_state(2, 48 << 10, 9);
+    let t = eng.begin(1, &state).unwrap();
+    t.wait_persisted().unwrap();
+    t.wait_durable(TierKind::LocalFs).unwrap();
+    let pipeline = eng.pipeline();
+
+    // tear one terminal (local-fs) copy in place, manifest untouched
+    let torn = dir.path().join("v000001/layer0.pt");
+    assert!(torn.is_file(), "expected terminal copy at {torn:?}");
+    datastates::faults::tear_file(&torn).unwrap();
+
+    let rep = pipeline.scrub_repair().unwrap();
+    assert!(rep.copies_repaired >= 1,
+            "scrub must rebuild the torn copy: {rep:?}");
+    assert!(rep.unrepairable.is_empty(), "{rep:?}");
+    // the rebuilt copy is byte-identical through the whole version
+    let v = pipeline.read_version(1).unwrap();
+    datastates::restore::verify_files_against(&v, &state).unwrap();
+    // and a second pass has nothing left to do
+    let rep2 = pipeline.scrub_repair().unwrap();
+    assert_eq!(rep2.copies_repaired, 0, "{rep2:?}");
+    assert!(rep2.unrepairable.is_empty(), "{rep2:?}");
+}

@@ -113,6 +113,7 @@ fn engine_output_is_byte_identical_to_serial_across_random_configs() {
             gap_bytes: *rng.choose(&[0usize, 64, 4096]),
             pool_bytes: rng.range(256 << 10, 4 << 20),
             fs_readers: rng.range(1, 5),
+            ..Default::default()
         };
         let eng = ReadEngine::new(cfg.clone());
         let par = eng.read_dir(&vdir)?;
